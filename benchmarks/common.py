@@ -1,0 +1,53 @@
+"""Shared benchmark fixtures: the wafer-like database (or real UCR via
+REPRO_UCR_PATH), query workload, and CSV emission helpers."""
+from __future__ import annotations
+
+import functools
+import time
+
+import numpy as np
+
+from repro.core.fastsax import FastSAXConfig, build_index, represent_query
+from repro.data.timeseries import benchmark_database, make_queries
+
+EPSILONS = (1.0, 2.0, 3.0, 4.0)          # paper Table 1: ε = 1:4
+ALPHABETS = (3, 10, 20)                  # paper Table 1: α = 3, 10, 20
+LEVELS = (8, 16)                         # FAST_SAX cascade (coarse→fine)
+SAX_SEGMENTS = 16                        # the standalone-SAX representation
+N_QUERIES = 20
+
+
+@functools.lru_cache(maxsize=None)
+def database() -> np.ndarray:
+    return benchmark_database()
+
+
+@functools.lru_cache(maxsize=None)
+def queries() -> np.ndarray:
+    return make_queries(database(), N_QUERIES, seed=1)
+
+
+@functools.lru_cache(maxsize=None)
+def index_for(alphabet: int):
+    cfg = FastSAXConfig(n_segments=LEVELS, alphabet=alphabet)
+    return cfg, build_index(database(), cfg, normalize=False)
+
+
+@functools.lru_cache(maxsize=None)
+def query_reprs(alphabet: int):
+    cfg, _ = index_for(alphabet)
+    return [represent_query(q, cfg, normalize=False) for q in queries()]
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """The run.py contract: ``name,us_per_call,derived`` CSV lines."""
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+class WallTimer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.seconds = time.perf_counter() - self.t0

@@ -1,0 +1,87 @@
+"""Beyond-paper: wall-clock throughput of the execution engines.
+
+Compares, on this host (CPU; TPU numbers come from the roofline analysis):
+  * the faithful op-counted sequential engine (numpy, per-query),
+  * the vectorised XLA engine (single query),
+  * the vectorised XLA engine (batched queries — MXU-shaped verify),
+  * the Pallas fused-prune cascade in interpret mode (semantics check; its
+    TPU performance is modelled in EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import (device_index_from_host, range_query,
+                               represent_queries)
+from repro.core.fastsax import represent_query
+from repro.core.search import fastsax_range_query
+
+from .common import emit, index_for, queries
+
+
+def _time(f, *args, repeats=5):
+    f(*args)  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = f(*args)
+    jax.block_until_ready(out) if hasattr(out, "block_until_ready") or isinstance(
+        out, (tuple, list)) else None
+    return (time.perf_counter() - t0) / repeats
+
+
+def main() -> None:
+    alpha, eps = 10, 2.0
+    cfg, idx = index_for(alpha)
+    qs = np.asarray(queries(), np.float32)
+    dev = device_index_from_host(idx)
+
+    # 1. faithful sequential engine (one query)
+    qr0 = represent_query(qs[0], cfg, normalize=False)
+    t0 = time.perf_counter()
+    for _ in range(5):
+        fastsax_range_query(idx, qr0, eps)
+    t_seq = (time.perf_counter() - t0) / 5
+    emit("engine/opcount_seq_1q", t_seq * 1e6, "")
+
+    # 2. XLA engine, single query
+    qr1 = represent_queries(jnp.asarray(qs[:1]), dev.levels, dev.alphabet,
+                            normalize=False)
+    f = jax.jit(lambda i, r: range_query(i, r, eps))
+    jax.block_until_ready(f(dev, qr1))
+    t0 = time.perf_counter()
+    for _ in range(20):
+        out = f(dev, qr1)
+    jax.block_until_ready(out)
+    t_xla1 = (time.perf_counter() - t0) / 20
+    emit("engine/xla_1q", t_xla1 * 1e6, f"vs_seq={t_seq / t_xla1:.1f}x")
+
+    # 3. XLA engine, batched queries
+    qrb = represent_queries(jnp.asarray(qs), dev.levels, dev.alphabet,
+                            normalize=False)
+    jax.block_until_ready(f(dev, qrb))
+    t0 = time.perf_counter()
+    for _ in range(20):
+        out = f(dev, qrb)
+    jax.block_until_ready(out)
+    t_xlab = (time.perf_counter() - t0) / 20 / len(qs)
+    emit("engine/xla_batched_perq", t_xlab * 1e6,
+         f"batch_amortise={t_xla1 / t_xlab:.1f}x")
+
+    # 4. Pallas fused cascade (interpret mode – correctness path on CPU)
+    from repro.kernels import ops
+    t0 = time.perf_counter()
+    out = ops.fused_cascade((dev.words, dev.residuals),
+                            tuple(w[0] for w in qrb.words),
+                            tuple(r[0] for r in qrb.residuals),
+                            eps, dev.n, dev.alphabet, dev.levels)
+    jax.block_until_ready(out)
+    t_pallas = time.perf_counter() - t0
+    emit("engine/pallas_interpret_1q", t_pallas * 1e6, "semantics-only")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Paper Figure 2: latency-time curves over ε for each alphabet size.
+
+Emits the same measurements as Table 1 but organised as per-α curves
+(ε on the x-axis), the format of the paper's three plots.
+"""
+from __future__ import annotations
+
+from .common import ALPHABETS, EPSILONS, emit
+from .table1_latency import run
+
+
+def main() -> None:
+    results = run(verbose=False)
+    for alpha in ALPHABETS:
+        print(f"\n# Figure 2 (alphabet size = {alpha})")
+        print("eps,fastsax_latency,sax_latency")
+        for eps in EPSILONS:
+            lat_f, lat_s = results[(eps, alpha)]
+            print(f"{eps:.0f},{lat_f:.4E},{lat_s:.4E}")
+        # Monotonicity note (the paper's visual claim): FAST_SAX under SAX.
+        below = all(results[(e, alpha)][0] <= results[(e, alpha)][1]
+                    for e in EPSILONS)
+        emit(f"figure2/a{alpha}/fastsax_below_sax", 0.0, str(below))
+
+
+if __name__ == "__main__":
+    main()

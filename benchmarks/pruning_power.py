@@ -1,0 +1,65 @@
+"""Beyond-paper ablation: where does the exclusion power come from?
+
+Per (ε, α): fraction of the database excluded by
+  * C9 alone (eq. 9, the paper's new condition),
+  * C10 alone (eq. 10, classical SAX MINDIST),
+  * the full cascade (C9 → C10 per level),
+plus a level-count sweep showing the marginal value of each level.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.fastsax import FastSAXConfig, build_index, represent_query
+from repro.core.search import fastsax_range_query
+
+from .common import ALPHABETS, EPSILONS, database, emit, queries
+
+
+def main() -> None:
+    db = database()
+    qs = queries()
+    B = db.shape[0]
+
+    print("# exclusion fractions (mean over queries)")
+    print("eps,alphabet,c9_only,c10_only,cascade,candidates")
+    for eps in EPSILONS:
+        for alpha in ALPHABETS:
+            cfg = FastSAXConfig(n_segments=(8, 16), alphabet=alpha)
+            idx = build_index(db, cfg, normalize=False)
+            c9f, c10f, casc, cand = [], [], [], []
+            for q in qs:
+                qr = represent_query(q, cfg, normalize=False)
+                # C9 alone across all levels
+                killed9 = np.zeros(B, dtype=bool)
+                killed10 = np.zeros(B, dtype=bool)
+                for li, lv in enumerate(idx.levels):
+                    killed9 |= np.abs(lv.residuals - qr.residuals[li]) > eps
+                    from repro.core.search import _mindist_sq_np
+                    md = _mindist_sq_np(lv.words, qr.words[li], idx.n, alpha)
+                    killed10 |= md > eps * eps
+                r = fastsax_range_query(idx, qr, eps)
+                c9f.append(killed9.mean())
+                c10f.append(killed10.mean())
+                casc.append(1.0 - r.candidates / B)
+                cand.append(r.candidates)
+            print(f"{eps:.0f},{alpha},{np.mean(c9f):.3f},{np.mean(c10f):.3f},"
+                  f"{np.mean(casc):.3f},{np.mean(cand):.1f}")
+            emit(f"pruning/eps{eps:.0f}/a{alpha}", 0.0,
+                 f"c9={np.mean(c9f):.3f};c10={np.mean(c10f):.3f}")
+
+    print("\n# level-count sweep (alphabet=10, eps=1): latency vs levels")
+    print("levels,latency")
+    for levels in [(16,), (8, 16), (4, 8, 16), (2, 4, 8, 16)]:
+        cfg = FastSAXConfig(n_segments=levels, alphabet=10)
+        idx = build_index(db, cfg, normalize=False)
+        lat = 0.0
+        for q in qs:
+            qr = represent_query(q, cfg, normalize=False)
+            lat += fastsax_range_query(idx, qr, 1.0).latency
+        print(f"\"{levels}\",{lat:.4E}")
+        emit(f"pruning/levels{len(levels)}", lat, "")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark driver: runs every paper-table benchmark plus the beyond-paper
+ablations.  ``python -m benchmarks.run [--only table1,...]``."""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+SUITES = ("table1", "figure2", "tightness", "pruning", "engine")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=",".join(SUITES),
+                    help="comma-separated subset of: " + ",".join(SUITES))
+    args = ap.parse_args()
+    chosen = [s.strip() for s in args.only.split(",") if s.strip()]
+
+    from . import (engine_throughput, figure2_curves, pruning_power,
+                   table1_latency, tightness)
+    mains = {"table1": table1_latency.main, "figure2": figure2_curves.main,
+             "tightness": tightness.main, "pruning": pruning_power.main,
+             "engine": engine_throughput.main}
+    for name in chosen:
+        if name not in mains:
+            print(f"unknown suite {name!r}", file=sys.stderr)
+            sys.exit(2)
+        print(f"\n===== {name} =====")
+        t0 = time.perf_counter()
+        mains[name]()
+        print(f"# {name} done in {time.perf_counter() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

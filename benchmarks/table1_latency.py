@@ -1,0 +1,53 @@
+"""Paper Table 1: latency time of SAX vs FAST_SAX, ε = 1..4, α ∈ {3,10,20}.
+
+The paper's metric is *latency time* (weighted op counts, Schulte et al.
+2005) summed over the query workload; the weight table is printed with the
+results (the paper omits its own).  Output: one table per ε, mirroring
+Table 1(a)–(d), plus the FAST_SAX/SAX speedup grid.
+"""
+from __future__ import annotations
+
+from repro.core.cost_model import DEFAULT_WEIGHTS
+from repro.core.search import fastsax_range_query, sax_range_query
+
+from .common import ALPHABETS, EPSILONS, SAX_SEGMENTS, emit, index_for, query_reprs
+
+
+def run(verbose: bool = True) -> dict:
+    """Returns {(eps, alphabet): (latency_fastsax, latency_sax)}."""
+    results = {}
+    for eps in EPSILONS:
+        for alpha in ALPHABETS:
+            _, idx = index_for(alpha)
+            lat_s = lat_f = 0.0
+            for qr in query_reprs(alpha):
+                lat_s += sax_range_query(
+                    idx, qr, eps, n_segments=SAX_SEGMENTS).latency
+                lat_f += fastsax_range_query(idx, qr, eps).latency
+            results[(eps, alpha)] = (lat_f, lat_s)
+    if verbose:
+        print(f"# latency-time weights: {DEFAULT_WEIGHTS}")
+        for eps in EPSILONS:
+            print(f"\n# Table 1 (ε={eps:.0f})")
+            print("method    " + "".join(f"  α={a:<10d}" for a in ALPHABETS))
+            for name, sel in (("FAST_SAX", 0), ("SAX", 1)):
+                row = "".join(f"  {results[(eps, a)][sel]:<12.4E}"
+                              for a in ALPHABETS)
+                print(f"{name:<10s}{row}")
+            spd = "".join(
+                f"  {results[(eps, a)][1] / results[(eps, a)][0]:<12.2f}"
+                for a in ALPHABETS)
+            print(f"{'speedup':<10s}{spd}")
+    return results
+
+
+def main() -> None:
+    results = run(verbose=True)
+    for (eps, alpha), (lat_f, lat_s) in results.items():
+        emit(f"table1/fastsax/eps{eps:.0f}/a{alpha}", lat_f,
+             f"speedup={lat_s / lat_f:.2f}")
+        emit(f"table1/sax/eps{eps:.0f}/a{alpha}", lat_s, "")
+
+
+if __name__ == "__main__":
+    main()

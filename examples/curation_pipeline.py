@@ -1,0 +1,44 @@
+"""Data-curation consumer: FAST_SAX near-duplicate filtering inside a
+streaming ingestion pipeline (the production integration of the paper's
+engine described in DESIGN.md §2).
+
+  PYTHONPATH=src python examples/curation_pipeline.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np  # noqa: E402
+
+from repro.data.curation import NearDuplicateFilter  # noqa: E402
+from repro.data.timeseries import make_wafer_like  # noqa: E402
+
+
+def main():
+    filt = NearDuplicateFilter(length=128, epsilon=1.0, levels=(8, 16),
+                               alphabet=10)
+    rng = np.random.default_rng(0)
+    total_in = total_kept = 0
+    for batch_idx in range(8):
+        # Stream: fresh process runs + re-ingested duplicates of old ones.
+        fresh = make_wafer_like(256, 128, seed=100 + batch_idx)
+        if filt.pool_size:
+            dup_rows = rng.integers(0, filt.pool_size, size=64)
+            dups = filt._pool[dup_rows] + 0.001 * rng.standard_normal(
+                (64, 128)).astype(np.float32)
+            batch = np.concatenate([fresh, dups])
+        else:
+            batch = fresh
+        keep = filt.admit(batch)
+        total_in += len(batch)
+        total_kept += int(keep.sum())
+        print(f"batch {batch_idx}: admitted {keep.sum():3d}/{len(batch)} "
+              f"(pool={filt.pool_size})")
+    st = filt.stats
+    print(f"\ningested {total_in}, kept {total_kept}, "
+          f"rejected {st.rejected_duplicates} near-duplicates "
+          f"({st.rejected_duplicates / total_in:.0%})")
+
+
+if __name__ == "__main__":
+    main()

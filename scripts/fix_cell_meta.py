@@ -1,0 +1,49 @@
+"""Recompute params/active/model_flops/roofline fields for already-written
+dry-run JSONs (fixes the int32-overflow param counts recorded before the
+ModelConfig.param_count fix) — uses stored flops/bytes/collectives, no
+recompile."""
+import glob
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+from repro import configs  # noqa: E402
+from repro.configs.shapes import SHAPES  # noqa: E402
+from repro.runtime import roofline as rl  # noqa: E402
+
+
+def main():
+    for f in glob.glob("experiments/dryrun/*.json"):
+        r = json.load(open(f))
+        if r.get("status") != "ok":
+            continue
+        arch, shape = r["arch"], r["shape"]
+        cfg = configs.get(arch)
+        sh = SHAPES[shape]
+        n_tokens = sh.global_batch * sh.seq_len
+        if sh.step == "train":
+            mf = rl.model_flops_train(cfg, n_tokens)
+        elif sh.step == "prefill":
+            mf = rl.model_flops_prefill(cfg, n_tokens)
+        else:
+            mf = rl.model_flops_decode(cfg, sh.global_batch)
+        chips = r["chips"]
+        an = r.get("analysis", {})
+        if "flops_global" in an:
+            per_dev = {"flops": an["flops_global"] / chips,
+                       "bytes accessed": an["bytes_global"] / chips}
+        else:
+            per_dev = r.get("cost_raw_scanned", {})
+        coll = r["collectives_raw_scanned"]["total_bytes"]
+        terms = rl.terms_from_analysis(per_dev, coll, chips, mf)
+        r["params"] = cfg.param_count()
+        r["active_params"] = cfg.active_param_count()
+        r["model_flops"] = mf
+        r["roofline"] = terms.as_dict()
+        json.dump(r, open(f, "w"), indent=2)
+        print("fixed", r["cell"])
+
+
+if __name__ == "__main__":
+    main()

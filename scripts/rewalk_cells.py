@@ -1,0 +1,48 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Re-run the jaxpr cost walker over every recorded dry-run cell (no
+recompiles — tracing only) and refresh analysis + roofline fields.
+Used after walker fixes (e.g. the ragged_dot_general flop counting)."""
+import glob
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.dryrun import walk_cell  # noqa: E402
+from repro.runtime import roofline as rl  # noqa: E402
+
+
+def main():
+    only = sys.argv[1] if len(sys.argv) > 1 else ""
+    for f in sorted(glob.glob("experiments/dryrun/*.json")):
+        if only and only not in f:
+            continue
+        r = json.load(open(f))
+        if r.get("status") != "ok":
+            continue
+        try:
+            c = walk_cell(r["arch"], r["shape"], r["mesh"] != "16x16")
+        except Exception as e:  # noqa: BLE001
+            print("walk failed", r["cell"], repr(e))
+            continue
+        r.setdefault("analysis", {})
+        r["analysis"].update({
+            "flops_global": c.flops, "bytes_global": c.bytes,
+            "explicit_collective_bytes_global": c.collective_bytes,
+            "method": "jaxpr-walk (trip-count aware) + HLO collective "
+                      "parse (trip-count aware)"})
+        per_dev = {"flops": c.flops / r["chips"],
+                   "bytes accessed": c.bytes / r["chips"]}
+        coll = r["collectives_raw_scanned"]["total_bytes"]
+        terms = rl.terms_from_analysis(per_dev, coll, r["chips"],
+                                       r["model_flops"])
+        r["roofline"] = terms.as_dict()
+        json.dump(r, open(f, "w"), indent=2)
+        print("rewalked", r["cell"],
+              f"useful={terms.useful_ratio:.2f} "
+              f"frac={terms.roofline_fraction:.3f} dom={terms.dominant}")
+
+
+if __name__ == "__main__":
+    main()

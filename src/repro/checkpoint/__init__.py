@@ -1,0 +1,4 @@
+"""Sharded checkpointing: per-host shard files + JSON manifest, async
+writer, integrity hashes, atomic commit, cross-mesh resharding restore."""
+from .manager import (CheckpointManager, latest_step, restore_pytree,
+                      save_pytree)

@@ -1,0 +1,127 @@
+"""Latency-time cost model (paper §4, after Schulte et al. 2005).
+
+The paper compares SAX and FAST_SAX by *latency time*: every arithmetic
+operation is weighted by its hardware latency and the weighted counts are
+summed.  The paper does not print its weight table, so we make ours explicit
+here and report it alongside every benchmark.  The qualitative conclusions
+(FAST_SAX < SAX; the gap shrinks as epsilon grows and as alphabet size grows)
+are insensitive to the exact weights because FAST_SAX strictly removes
+operations relative to SAX for the series its first condition excludes.
+
+Weights (relative to one ALU op):
+    CMP / ADD / SUB / ABS / LOOKUP : 1
+    MUL                            : 1   (fused multiply-add era)
+    DIV                            : 4
+    SQRT                           : 8
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class OpWeights:
+    cmp: float = 1.0
+    add: float = 1.0
+    sub: float = 1.0
+    abs: float = 1.0
+    mul: float = 1.0
+    div: float = 4.0
+    sqrt: float = 8.0
+    lookup: float = 1.0
+
+
+DEFAULT_WEIGHTS = OpWeights()
+
+
+@dataclasses.dataclass
+class OpCounter:
+    """Accumulates raw op counts; ``latency()`` applies the weight table."""
+
+    weights: OpWeights = DEFAULT_WEIGHTS
+    cmp: int = 0
+    add: int = 0
+    sub: int = 0
+    abs: int = 0
+    mul: int = 0
+    div: int = 0
+    sqrt: int = 0
+    lookup: int = 0
+
+    def count(self, **ops: int) -> None:
+        for name, k in ops.items():
+            setattr(self, name, getattr(self, name) + int(k))
+
+    def latency(self) -> float:
+        w = self.weights
+        return (
+            self.cmp * w.cmp
+            + self.add * w.add
+            + self.sub * w.sub
+            + self.abs * w.abs
+            + self.mul * w.mul
+            + self.div * w.div
+            + self.sqrt * w.sqrt
+            + self.lookup * w.lookup
+        )
+
+    def total_ops(self) -> int:
+        return (
+            self.cmp + self.add + self.sub + self.abs
+            + self.mul + self.div + self.sqrt + self.lookup
+        )
+
+    def merge(self, other: "OpCounter") -> None:
+        for f in ("cmp", "add", "sub", "abs", "mul", "div", "sqrt", "lookup"):
+            setattr(self, f, getattr(self, f) + getattr(other, f))
+
+    def as_dict(self) -> dict:
+        return {
+            f: getattr(self, f)
+            for f in ("cmp", "add", "sub", "abs", "mul", "div", "sqrt", "lookup")
+        }
+
+
+# ---------------------------------------------------------------------------
+# Closed-form op counts for the primitive computations used by both engines.
+# Centralising them keeps search.py honest and makes the benchmark auditable.
+# ---------------------------------------------------------------------------
+
+def euclidean_cost(n: int) -> dict:
+    """Full Euclidean distance between two length-n series + threshold test."""
+    return dict(sub=n, mul=n, add=n - 1, sqrt=1, cmp=1)
+
+
+def mindist_cost(N: int) -> dict:
+    """MINDIST between two N-symbol words + threshold test (eq. 3).
+
+    Per symbol pair: one table lookup + one square; then N-1 adds, the
+    sqrt(n/N) scale (1 mul after a cached sqrt), one sqrt, one compare.
+    """
+    return dict(lookup=N, mul=N + 1, add=N - 1, sqrt=1, cmp=1)
+
+
+def c9_cost() -> dict:
+    """FAST_SAX first exclusion condition |d(u,ū) − d(q,q̄)| > ε (eq. 9)."""
+    return dict(sub=1, abs=1, cmp=1)
+
+
+def paa_cost(n: int, N: int) -> dict:
+    """PAA of a length-n series into N segments (query-side, online)."""
+    return dict(add=n - N, mul=N)  # segment sums + scale by 1/L
+
+
+def discretize_cost(N: int, alphabet: int) -> dict:
+    """Binary-search discretisation of N PAA values over alphabet-1 breakpoints."""
+    import math
+
+    return dict(cmp=N * max(1, math.ceil(math.log2(max(2, alphabet)))))
+
+
+def linfit_residual_cost(n: int, N: int) -> dict:
+    """Closed-form per-segment first-degree LS residual for the query.
+
+    Per segment of length L: sums Σy, Σxc·y, Σy² (3L-ish adds, 2L muls),
+    then slope/intercept/residual combination (constant ops).
+    """
+    return dict(add=3 * n, mul=2 * n + 6 * N, div=N, sqrt=1)

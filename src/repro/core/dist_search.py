@@ -1,0 +1,169 @@
+"""Distributed FAST_SAX: the database sharded over a mesh axis (shard_map).
+
+The paper's sequential database scan becomes, on a TPU pod:
+
+  * the series database (and every per-level representation) is sharded over
+    the mesh ``data`` axis — each device owns B/P contiguous rows;
+  * queries are replicated; each shard runs the vectorised masked cascade of
+    ``core/engine.py`` on its rows (embarrassingly parallel — zero
+    collectives in the hot path);
+  * each shard compacts its survivors into a fixed-capacity (idx, d²) buffer;
+    the buffers concatenate across shards via the output sharding (an
+    all-gather only when the caller materialises the replicated result);
+  * a global survivor count (``psum``) drives the host-side early-exit
+    across cascade levels (two-phase: cheap count, then compaction).
+
+Padding rows (added to make B divisible by the shard count) carry a huge
+sentinel residual at level 0, so exclusion condition C9 kills them for any
+finite ε — they can never reach the answer set.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from .engine import (DeviceIndex, QueryReprDev, build_device_index,
+                     cascade_mask, range_query_compact, represent_queries)
+
+_PAD_RESIDUAL = 1e30  # sentinel: C9 kills padded rows for any finite epsilon
+
+
+def pad_database(series: np.ndarray, shards: int):
+    """Pad B up to a multiple of ``shards``.  Returns (padded, n_valid)."""
+    B = series.shape[0]
+    Bp = (B + shards - 1) // shards * shards
+    if Bp == B:
+        return series, B
+    pad = np.zeros((Bp - B, series.shape[1]), dtype=series.dtype)
+    # Any finite content works — the sentinel residual guarantees exclusion.
+    pad[:] = np.linspace(-1.0, 1.0, series.shape[1])[None, :]
+    return np.concatenate([series, pad], axis=0), B
+
+
+def distributed_build(
+    series,
+    levels: Sequence[int],
+    alphabet: int,
+    mesh: Mesh,
+    axis: str = "data",
+    n_valid: int | None = None,
+) -> DeviceIndex:
+    """Offline phase on the mesh: every shard indexes its own rows."""
+    levels = tuple(int(N) for N in levels)
+    P_sh = mesh.shape[axis]
+    B = series.shape[0]
+    if B % P_sh != 0:
+        raise ValueError(f"pad first: B={B} not divisible by shards={P_sh}")
+    n_valid = B if n_valid is None else int(n_valid)
+    b_loc = B // P_sh
+
+    def build_local(s):
+        idx = build_device_index(s, levels, alphabet)
+        shard = jax.lax.axis_index(axis)
+        rows = shard * b_loc + jnp.arange(b_loc)
+        res0 = jnp.where(rows < n_valid, idx.residuals[0], _PAD_RESIDUAL)
+        return (idx.series, idx.norms_sq,
+                (res0,) + tuple(idx.residuals[1:]), idx.words)
+
+    out_specs = (P(axis, None), P(axis),
+                 tuple(P(axis) for _ in levels),
+                 tuple(P(axis, None) for _ in levels))
+    built = shard_map(
+        build_local, mesh=mesh,
+        in_specs=P(axis, None), out_specs=out_specs, check_rep=False,
+    )(jnp.asarray(series, dtype=jnp.float32))
+    s, norms, residuals, words = built
+    return DeviceIndex(series=s, norms_sq=norms, words=words,
+                       residuals=residuals, levels=levels, alphabet=alphabet)
+
+
+def distributed_range_query(
+    index: DeviceIndex,
+    queries,
+    epsilon,
+    mesh: Mesh,
+    axis: str = "data",
+    capacity_per_shard: int = 128,
+    normalize_queries: bool = True,
+):
+    """Range query over the sharded database.
+
+    Returns (global_idx (Q, P·C), is_answer (Q, P·C), d2 (Q, P·C),
+    overflow (Q, P)): every shard contributes ``capacity_per_shard``
+    candidate slots; ``overflow[q, p]`` flags a shard whose survivors did
+    not fit (re-run with larger capacity — soundness is never silently
+    lost).
+    """
+    levels, alphabet = index.levels, index.alphabet
+    P_sh = mesh.shape[axis]
+    b_loc = index.series.shape[0] // P_sh
+    qr = represent_queries(jnp.asarray(queries, dtype=jnp.float32),
+                           levels, alphabet, normalize=normalize_queries)
+    eps = jnp.asarray(epsilon, dtype=jnp.float32)
+
+    def local(series, norms, residuals, words, q, qws, qrs, eps_):
+        lidx = DeviceIndex(series=series, norms_sq=norms, words=words,
+                           residuals=residuals, levels=levels,
+                           alphabet=alphabet)
+        lqr = QueryReprDev(q=q, words=qws, residuals=qrs)
+        idx, ans, d2, overflow = range_query_compact(
+            lidx, lqr, eps_, capacity_per_shard)
+        gidx = idx + jax.lax.axis_index(axis) * b_loc
+        return gidx, ans, d2, overflow[:, None]
+
+    in_specs = (P(axis, None), P(axis),
+                tuple(P(axis) for _ in levels),
+                tuple(P(axis, None) for _ in levels),
+                P(), (P(),) * len(levels), (P(),) * len(levels), P())
+    out_specs = (P(None, axis), P(None, axis), P(None, axis), P(None, axis))
+    return shard_map(
+        local, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=False,
+    )(index.series, index.norms_sq, index.residuals, index.words,
+      qr.q, qr.words, qr.residuals, eps)
+
+
+def distributed_survivor_count(
+    index: DeviceIndex,
+    queries,
+    epsilon,
+    mesh: Mesh,
+    axis: str = "data",
+    normalize_queries: bool = True,
+):
+    """Phase-1 global survivor count per query (one psum) — used to size the
+    compaction capacity and for the host-side level early-exit."""
+    levels, alphabet = index.levels, index.alphabet
+    qr = represent_queries(jnp.asarray(queries, dtype=jnp.float32),
+                           levels, alphabet, normalize=normalize_queries)
+    eps = jnp.asarray(epsilon, dtype=jnp.float32)
+
+    def local(series, norms, residuals, words, q, qws, qrs, eps_):
+        lidx = DeviceIndex(series=series, norms_sq=norms, words=words,
+                           residuals=residuals, levels=levels,
+                           alphabet=alphabet)
+        lqr = QueryReprDev(q=q, words=qws, residuals=qrs)
+        alive = cascade_mask(lidx, lqr, eps_)
+        return jax.lax.psum(alive.sum(axis=-1), axis)
+
+    in_specs = (P(axis, None), P(axis),
+                tuple(P(axis) for _ in levels),
+                tuple(P(axis, None) for _ in levels),
+                P(), (P(),) * len(levels), (P(),) * len(levels), P())
+    return shard_map(
+        local, mesh=mesh, in_specs=in_specs, out_specs=P(), check_rep=False,
+    )(index.series, index.norms_sq, index.residuals, index.words,
+      qr.q, qr.words, qr.residuals, eps)
+
+
+def make_data_mesh(n_devices: int | None = None, axis: str = "data") -> Mesh:
+    """A 1-D device mesh over the available devices (CPU test helper)."""
+    devs = jax.devices()
+    n = n_devices or len(devs)
+    return Mesh(np.asarray(devs[:n]), (axis,))

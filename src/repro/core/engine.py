@@ -1,0 +1,233 @@
+"""Vectorised JAX engine for FAST_SAX — the TPU-native execution model.
+
+The 2013 paper is CPU-sequential (per-series early exit).  On TPU the same
+cascade is executed as a *masked dataflow* over the whole database shard:
+
+  * C9 (eq. 9) is a vector compare over the precomputed residuals,
+  * C10 (MINDIST, eq. 10) is evaluated under the C9 survivor mask — lanes
+    already excluded contribute no useful work but keep the VPU dense,
+  * the final Euclidean verification is computed for survivors via the
+    ‖u‖² − 2·u·q + ‖q‖² form (the database norms are precomputed offline, so
+    the verify is a single matvec over the shard — MXU work).
+
+The returned answer set is *identical* to ``core/search.py`` (tested); only
+the execution model differs.  ``core/dist_search.py`` wraps this per-shard
+engine in ``shard_map`` for the multi-device database.
+
+Batched-query variants (``*_batch``) amortise the database pass over Q
+queries — the matvec becomes a matmul, which is how the engine reaches MXU
+roofline instead of being memory-bound (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .fastsax import FastSAXIndex
+from .paa import paa, znormalize
+from .polyfit import linfit_residual
+from .sax import discretize, mindist_table
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DeviceIndex:
+    """Device-resident FAST_SAX index (pytree).  Leaves are jnp arrays.
+
+    ``words[l]``: (B, N_l) int32, ``residuals[l]``: (B,) f32, ``series``:
+    (B, n) f32, ``norms_sq``: (B,) f32 precomputed ‖u‖².
+    """
+
+    series: jnp.ndarray
+    norms_sq: jnp.ndarray
+    words: tuple
+    residuals: tuple
+    # static:
+    levels: tuple = dataclasses.field(default=())
+    alphabet: int = 10
+
+    def tree_flatten(self):
+        children = (self.series, self.norms_sq, self.words, self.residuals)
+        aux = (self.levels, self.alphabet)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        series, norms_sq, words, residuals = children
+        return cls(series=series, norms_sq=norms_sq, words=words,
+                   residuals=residuals, levels=aux[0], alphabet=aux[1])
+
+    @property
+    def n(self) -> int:
+        return self.series.shape[-1]
+
+
+def device_index_from_host(index: FastSAXIndex, dtype=jnp.float32) -> DeviceIndex:
+    series = jnp.asarray(index.series, dtype=dtype)
+    return DeviceIndex(
+        series=series,
+        norms_sq=jnp.sum(series * series, axis=-1),
+        words=tuple(jnp.asarray(lv.words, dtype=jnp.int32) for lv in index.levels),
+        residuals=tuple(jnp.asarray(lv.residuals, dtype=dtype)
+                        for lv in index.levels),
+        levels=tuple(lv.n_segments for lv in index.levels),
+        alphabet=index.config.alphabet,
+    )
+
+
+def build_device_index(
+    series: jnp.ndarray,
+    levels: Sequence[int],
+    alphabet: int,
+    normalize: bool = True,
+) -> DeviceIndex:
+    """Offline phase, fully on device (jit-able) — used by the distributed
+    builder in ``dist_search.py`` where each shard indexes its own slice."""
+    if normalize:
+        series = znormalize(series)
+    series = series.astype(jnp.float32)
+    words, residuals = [], []
+    for N in levels:
+        words.append(discretize(paa(series, N), alphabet))
+        residuals.append(linfit_residual(series, N).astype(jnp.float32))
+    return DeviceIndex(
+        series=series,
+        norms_sq=jnp.sum(series * series, axis=-1),
+        words=tuple(words),
+        residuals=tuple(residuals),
+        levels=tuple(int(N) for N in levels),
+        alphabet=alphabet,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryReprDev:
+    """Device query representation (pytree via dataclass fields order)."""
+
+    q: jnp.ndarray
+    words: tuple
+    residuals: tuple
+
+
+jax.tree_util.register_pytree_node(
+    QueryReprDev,
+    lambda r: ((r.q, r.words, r.residuals), None),
+    lambda _, c: QueryReprDev(*c),
+)
+
+
+def represent_queries(
+    q: jnp.ndarray, levels: Sequence[int], alphabet: int, normalize: bool = True
+) -> QueryReprDev:
+    """Represent a batch of queries (Q, n) at every level (jit-able)."""
+    if normalize:
+        q = znormalize(q)
+    q = q.astype(jnp.float32)
+    words = tuple(discretize(paa(q, N), alphabet) for N in levels)
+    residuals = tuple(linfit_residual(q, N).astype(jnp.float32) for N in levels)
+    return QueryReprDev(q=q, words=words, residuals=residuals)
+
+
+def _mindist_sq_tab(alphabet: int) -> jnp.ndarray:
+    return jnp.asarray(mindist_table(alphabet), dtype=jnp.float32)
+
+
+def _eps_qcol(epsilon, Q: int) -> jnp.ndarray:
+    """Normalise epsilon (scalar or per-query (Q,)) to a (Q, 1) column."""
+    eps = jnp.asarray(epsilon, dtype=jnp.float32)
+    if eps.ndim == 0:
+        eps = jnp.broadcast_to(eps, (Q,))
+    return eps.reshape(Q, 1)
+
+
+def cascade_mask(
+    index: DeviceIndex, qr: QueryReprDev, epsilon: jnp.ndarray
+) -> jnp.ndarray:
+    """Masked exclusion cascade for a batch of queries.
+
+    qr leaves carry a leading query dim Q.  Returns alive mask (Q, B): True =
+    candidate (must be Euclidean-verified).  Pure dataflow — no early exit;
+    level count is static so the loop unrolls into one fused HLO region.
+    """
+    n = index.n
+    Q = qr.q.shape[0]
+    # eps: scalar or per-query (Q,) — broadcast to (Q, 1) against (Q, B).
+    eps = _eps_qcol(epsilon, Q)
+    eps2 = eps * eps
+    alive = jnp.ones((Q, index.series.shape[0]), dtype=bool)
+    tab = _mindist_sq_tab(index.alphabet)
+    for li, N in enumerate(index.levels):
+        # C9: |d(u,ū) − d(q,q̄)| > ε  → kill.
+        gap = jnp.abs(index.residuals[li][None, :] - qr.residuals[li][:, None])
+        alive &= gap <= eps
+        # C10 under mask: MINDIST²(q̃,ũ) > ε² → kill.  (lookup-table gather;
+        # the Pallas kernel variant uses a per-query (α, N) slice, see
+        # kernels/fused_prune.py.)
+        cell = tab[index.words[li][None, :, :], qr.words[li][:, None, :]]
+        md_sq = (n / N) * jnp.sum(cell * cell, axis=-1)
+        alive &= md_sq <= eps2
+    return alive
+
+
+def verify_distances(
+    index: DeviceIndex, qr: QueryReprDev
+) -> jnp.ndarray:
+    """Squared Euclidean distances (Q, B) via the matmul form (MXU work)."""
+    qn = jnp.sum(qr.q * qr.q, axis=-1)
+    cross = qr.q @ index.series.T  # (Q, B)
+    d2 = qn[:, None] - 2.0 * cross + index.norms_sq[None, :]
+    return jnp.maximum(d2, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def range_query(
+    index: DeviceIndex, qr: QueryReprDev, epsilon: jnp.ndarray
+):
+    """Full FAST_SAX range query for a batch of queries.
+
+    Returns (answer_mask (Q, B), d2 (Q, B)): ``answer_mask`` is the exact
+    answer set; d2 is only meaningful where the cascade survived (excluded
+    lanes still compute in the verify matmul — dense > sparse on TPU until
+    survivor fraction is tiny; see two-phase variant below).
+    """
+    Q = qr.q.shape[0]
+    eps = _eps_qcol(epsilon, Q)
+    alive = cascade_mask(index, qr, eps)
+    d2 = verify_distances(index, qr)
+    answers = alive & (d2 <= eps * eps)
+    return answers, jnp.where(answers, d2, jnp.inf)
+
+
+@functools.partial(jax.jit, static_argnames=("capacity",))
+def range_query_compact(
+    index: DeviceIndex, qr: QueryReprDev, epsilon: jnp.ndarray, capacity: int
+):
+    """Two-phase variant: cascade → compact survivors → verify only those.
+
+    Survivors are compacted to a fixed ``capacity`` with top-k on the alive
+    mask (ties broken by index), then only ``capacity`` rows of the database
+    are gathered for the Euclidean verify.  Sound as long as the true
+    survivor count ≤ capacity; the returned ``overflow`` flag reports
+    violations so callers can fall back to the dense verify.
+    """
+    Q = qr.q.shape[0]
+    eps = _eps_qcol(epsilon, Q)
+    alive = cascade_mask(index, qr, eps)                      # (Q, B)
+    B = alive.shape[-1]
+    capacity = min(int(capacity), B)
+    # Prefer-low-index compaction keys: alive lanes get key B - i, dead 0.
+    keys = jnp.where(alive, B - jnp.arange(B, dtype=jnp.int32)[None, :], 0)
+    top, idx = jax.lax.top_k(keys, capacity)                  # (Q, C)
+    valid = top > 0
+    rows = index.series[idx]                                  # (Q, C, n)
+    diff = rows - qr.q[:, None, :]
+    d2 = jnp.sum(diff * diff, axis=-1)
+    answers = valid & (d2 <= eps * eps)
+    n_alive = alive.sum(axis=-1)
+    overflow = n_alive > capacity
+    return idx, answers, jnp.where(answers, d2, jnp.inf), overflow

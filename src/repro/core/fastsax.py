@@ -1,0 +1,146 @@
+"""FAST_SAX multi-level index (paper §3, "The Offline Phase").
+
+The offline phase builds, for every series ``u`` in the database and every
+representation *level* (a segment count ``N_l``):
+
+  * the SAX word  ``sax_l(u)``            — for exclusion condition C10,
+  * the residual  ``d(u, ū_l)``           — distance to the optimal
+    per-segment first-degree approximation, for exclusion condition C9.
+
+Both are computed once and stored.  The online phase (``core/search.py`` for
+the faithful op-counted engine, ``core/engine.py`` for the vectorised TPU
+engine) walks the levels applying C9 (eq. 9, O(1)/candidate) then C10
+(eq. 10, MINDIST, O(N_l)/candidate) and finally verifies the surviving
+candidates with the true Euclidean distance (no false dismissals: both
+conditions are proven-sound exclusions; false alarms are filtered by the
+final scan).
+
+Level order: the paper's text says "we start with the lowest level" where
+"the shortest lengths correspond to the lowest level" — i.e. fine-first,
+which contradicts the cost argument of a cascade.  We default to
+coarse→fine (``level_order="coarse_first"``) and keep the paper's literal
+order behind ``level_order="paper"`` (see DESIGN.md §1.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from .paa import paa_np, znormalize_np
+from .polyfit import linfit_residual_np
+from .sax import MAX_ALPHABET, MIN_ALPHABET, discretize_np
+
+
+@dataclasses.dataclass(frozen=True)
+class FastSAXConfig:
+    """Static configuration of a FAST_SAX index.
+
+    ``n_segments`` is listed coarse→fine (fewest segments first); each entry
+    is one representation level and must divide the series length.
+    """
+
+    n_segments: tuple
+    alphabet: int = 10
+    level_order: str = "coarse_first"  # "coarse_first" | "paper" (fine first)
+
+    def __post_init__(self):
+        if not MIN_ALPHABET <= self.alphabet <= MAX_ALPHABET:
+            raise ValueError(
+                f"alphabet must be in [{MIN_ALPHABET}, {MAX_ALPHABET}]")
+        if len(self.n_segments) == 0:
+            raise ValueError("need at least one level")
+        if list(self.n_segments) != sorted(self.n_segments):
+            raise ValueError("n_segments must be listed coarse→fine (ascending)")
+        if self.level_order not in ("coarse_first", "paper"):
+            raise ValueError(f"bad level_order {self.level_order!r}")
+
+    @property
+    def levels(self) -> tuple:
+        """Level segment counts in *visit order* for the online cascade."""
+        if self.level_order == "coarse_first":
+            return tuple(self.n_segments)
+        return tuple(reversed(self.n_segments))  # paper literal: fine first
+
+
+@dataclasses.dataclass
+class LevelData:
+    """Per-level precomputed representations for a batch of series."""
+
+    n_segments: int
+    words: np.ndarray      # (B, N_l) int32 SAX symbols
+    residuals: np.ndarray  # (B,) float64 d(u, ū_l)
+
+
+@dataclasses.dataclass
+class FastSAXIndex:
+    """The offline-built index over a database of z-normalised series."""
+
+    config: FastSAXConfig
+    series: np.ndarray         # (B, n) float64, z-normalised
+    levels: list               # [LevelData] in cascade visit order
+
+    @property
+    def n(self) -> int:
+        return self.series.shape[-1]
+
+    @property
+    def size(self) -> int:
+        return self.series.shape[0]
+
+    def level_for(self, n_segments: int) -> LevelData:
+        for lv in self.levels:
+            if lv.n_segments == n_segments:
+                return lv
+        raise KeyError(f"no level with N={n_segments}")
+
+
+def _represent(series: np.ndarray, n_segments: int, alphabet: int) -> LevelData:
+    p = paa_np(series, n_segments)
+    words = discretize_np(p, alphabet)
+    residuals = linfit_residual_np(series, n_segments).astype(np.float64)
+    return LevelData(n_segments=n_segments, words=words, residuals=residuals)
+
+
+def build_index(
+    series: np.ndarray,
+    config: FastSAXConfig,
+    normalize: bool = True,
+) -> FastSAXIndex:
+    """Offline phase: z-normalise and precompute every level's words+residuals."""
+    series = np.asarray(series, dtype=np.float64)
+    if series.ndim != 2:
+        raise ValueError(f"series must be (B, n), got {series.shape}")
+    n = series.shape[-1]
+    for N in config.n_segments:
+        if n % N != 0:
+            raise ValueError(f"level N={N} does not divide series length n={n}")
+    if normalize:
+        series = znormalize_np(series)
+    levels = [_represent(series, N, config.alphabet) for N in config.levels]
+    return FastSAXIndex(config=config, series=series, levels=levels)
+
+
+@dataclasses.dataclass
+class QueryRepr:
+    """The online representation of one query, mirroring the index levels."""
+
+    q: np.ndarray            # (n,) z-normalised query
+    words: list              # per level: (N_l,) int32
+    residuals: list          # per level: scalar d(q, q̄_l)
+
+
+def represent_query(
+    q: np.ndarray, config: FastSAXConfig, normalize: bool = True
+) -> QueryRepr:
+    q = np.asarray(q, dtype=np.float64)
+    if q.ndim != 1:
+        raise ValueError("query must be a single (n,) series")
+    if normalize:
+        q = znormalize_np(q)
+    words, residuals = [], []
+    for N in config.levels:
+        words.append(discretize_np(paa_np(q, N), config.alphabet))
+        residuals.append(float(linfit_residual_np(q, N)))
+    return QueryRepr(q=q, words=words, residuals=residuals)

@@ -1,0 +1,46 @@
+"""Piecewise Aggregate Approximation (Keogh et al. 2000; Yi & Faloutsos 2000).
+
+PAA divides a length-n series into N equal frames and keeps the frame means.
+The PAA distance (paper eq. 4) lower-bounds the Euclidean distance, which is
+what makes every downstream SAX/MINDIST bound sound.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def paa(x: jnp.ndarray, n_segments: int) -> jnp.ndarray:
+    """PAA transform.  x: (..., n) -> (..., N).  Requires N | n."""
+    n = x.shape[-1]
+    if n % n_segments != 0:
+        raise ValueError(f"PAA needs n_segments | n, got n={n}, N={n_segments}")
+    seg = n // n_segments
+    return x.reshape(*x.shape[:-1], n_segments, seg).mean(axis=-1)
+
+
+def paa_np(x: np.ndarray, n_segments: int) -> np.ndarray:
+    n = x.shape[-1]
+    if n % n_segments != 0:
+        raise ValueError(f"PAA needs n_segments | n, got n={n}, N={n_segments}")
+    seg = n // n_segments
+    return x.reshape(*x.shape[:-1], n_segments, seg).mean(axis=-1)
+
+
+def paa_dist(px: jnp.ndarray, py: jnp.ndarray, n: int) -> jnp.ndarray:
+    """PAA lower-bound distance (paper eq. 4): sqrt(n/N)·||px − py||₂."""
+    N = px.shape[-1]
+    return jnp.sqrt(n / N) * jnp.sqrt(jnp.sum((px - py) ** 2, axis=-1))
+
+
+def znormalize(x: jnp.ndarray, eps: float = 1e-8) -> jnp.ndarray:
+    """Z-normalise along the last axis (SAX step 1)."""
+    mu = x.mean(axis=-1, keepdims=True)
+    sd = x.std(axis=-1, keepdims=True)
+    return (x - mu) / jnp.maximum(sd, eps)
+
+
+def znormalize_np(x: np.ndarray, eps: float = 1e-8) -> np.ndarray:
+    mu = x.mean(axis=-1, keepdims=True)
+    sd = x.std(axis=-1, keepdims=True)
+    return (x - mu) / np.maximum(sd, eps)

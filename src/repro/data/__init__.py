@@ -1,0 +1,3 @@
+"""Data pipelines: synthetic wafer-like time series (UCR stand-in), the UCR
+text-format reader, the deterministic sharded token pipeline for LM training,
+and the FAST_SAX-backed near-duplicate curation pass."""

@@ -1,0 +1,100 @@
+"""FAST_SAX-backed data curation: near-duplicate detection for pipelines.
+
+A production consumer of the paper's engine inside the training stack:
+series-shaped artefacts (token-embedding traces, telemetry curves, windowed
+loss signals) are deduplicated against an accepted pool using FAST_SAX
+range queries — the pruning cascade makes the O(pool × batch) dedup pass
+cheap, exactly the paper's speed argument applied to dataset hygiene.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.engine import (DeviceIndex, build_device_index, range_query,
+                           represent_queries)
+from ..core.paa import znormalize_np
+
+
+@dataclasses.dataclass
+class CurationStats:
+    accepted: int = 0
+    rejected_duplicates: int = 0
+
+
+class NearDuplicateFilter:
+    """Grow-only dedup pool.  ``admit(batch)`` returns the boolean keep-mask
+    and adds the kept rows to the pool.
+
+    ``epsilon`` is the dedup radius in z-normalised Euclidean distance —
+    series within ε of an accepted member are rejected.  The pool index is
+    rebuilt geometrically (amortised O(1) per admit) since FAST_SAX's
+    offline phase is itself one vectorised pass.
+    """
+
+    def __init__(self, length: int, epsilon: float = 1.0,
+                 levels=(8, 16), alphabet: int = 10,
+                 rebuild_factor: float = 2.0):
+        self.length = length
+        self.epsilon = float(epsilon)
+        self.levels = tuple(levels)
+        self.alphabet = alphabet
+        self.rebuild_factor = rebuild_factor
+        self._pool = np.zeros((0, length), dtype=np.float32)
+        self._index: DeviceIndex | None = None
+        self._indexed_rows = 0
+        self.stats = CurationStats()
+
+    def _maybe_rebuild(self):
+        if self._pool.shape[0] == 0:
+            return
+        if (self._index is None
+                or self._pool.shape[0]
+                >= self.rebuild_factor * max(1, self._indexed_rows)):
+            self._index = build_device_index(
+                jnp.asarray(self._pool), self.levels, self.alphabet,
+                normalize=False)
+            self._indexed_rows = self._pool.shape[0]
+
+    def _is_dup(self, batch_z: np.ndarray) -> np.ndarray:
+        dup = np.zeros(batch_z.shape[0], dtype=bool)
+        if self._index is not None:
+            qr = represent_queries(jnp.asarray(batch_z), self.levels,
+                                   self.alphabet, normalize=False)
+            answers, _ = range_query(self._index, qr, self.epsilon)
+            dup |= np.asarray(answers).any(axis=-1)
+        # Tail rows admitted since the last index rebuild: brute force.
+        tail = self._pool[self._indexed_rows:]
+        if tail.shape[0]:
+            d2 = ((batch_z[:, None, :] - tail[None, :, :]) ** 2).sum(-1)
+            dup |= (d2 <= self.epsilon ** 2).any(axis=1)
+        return dup
+
+    def admit(self, batch: np.ndarray) -> np.ndarray:
+        """batch: (Q, length) raw series.  Returns keep-mask (Q,)."""
+        batch_z = znormalize_np(np.asarray(batch, dtype=np.float64)).astype(
+            np.float32)
+        self._maybe_rebuild()
+        keep = np.ones(batch_z.shape[0], dtype=bool)
+        dup = self._is_dup(batch_z)
+        keep &= ~dup
+        # In-batch dedup (sequential — batch rows may duplicate each other).
+        kept_rows = []
+        for i in np.nonzero(keep)[0]:
+            row = batch_z[i]
+            for j in kept_rows:
+                if ((row - batch_z[j]) ** 2).sum() <= self.epsilon ** 2:
+                    keep[i] = False
+                    break
+            if keep[i]:
+                kept_rows.append(i)
+        self._pool = np.concatenate([self._pool, batch_z[keep]], axis=0)
+        self.stats.accepted += int(keep.sum())
+        self.stats.rejected_duplicates += int((~keep).sum())
+        return keep
+
+    @property
+    def pool_size(self) -> int:
+        return self._pool.shape[0]

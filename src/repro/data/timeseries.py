@@ -1,0 +1,120 @@
+"""Time-series data: wafer-like synthetic generator + UCR reader.
+
+UCR is not redistributable inside this offline container, so the benchmark
+default is a synthetic stand-in for the *wafer* dataset (the paper's
+reported dataset: semiconductor process control traces, 6,164 train series,
+length 152, two classes, highly repetitive with rare anomalies).  The
+generator reproduces the properties the paper's results depend on:
+
+  * a small number of process prototypes (series cluster tightly),
+  * per-cluster Euclidean spread covering the paper's ε ∈ 1..4 range after
+    z-normalisation, so every ε is meaningfully selective,
+  * a small fraction of anomalous (transient-spike) traces.
+
+When a real UCR file is present, ``load_ucr`` reads the standard
+``label,v1,v2,...`` text format and the benchmarks use it instead
+(``REPRO_UCR_PATH`` env var).
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from ..core.paa import znormalize_np
+
+WAFER_SIZE = 6164     # largest UCR dataset at the time — paper §4
+WAFER_LENGTH = 152    # true UCR wafer length
+DEFAULT_LENGTH = 128  # synthetic default: gives power-of-two PAA levels
+
+
+def make_wafer_like(
+    n_series: int = WAFER_SIZE,
+    length: int = DEFAULT_LENGTH,
+    n_prototypes: int = 32,
+    noise_lo: float = 0.02,
+    noise_hi: float = 0.4,
+    anomaly_frac: float = 0.02,
+    seed: int = 0,
+    normalize: bool = True,
+) -> np.ndarray:
+    """Synthetic wafer-like database: (n_series, length) float64.
+
+    Per-series noise amplitude is log-uniform in [noise_lo, noise_hi]: real
+    process-control traces are heteroscedastic (smooth nominal runs, noisy
+    drifting ones), which is what gives the linear-fit residual d(u,ū) its
+    spread across the database — the property condition C9 (eq. 9) exploits.
+    """
+    rng = np.random.default_rng(seed)
+    t = np.linspace(0.0, 1.0, length)
+
+    # Prototypes: plateau/ramp/step process traces, like wafer etch signals,
+    # with varying high-frequency texture (ripple) between process recipes.
+    protos = np.empty((n_prototypes, length))
+    for k in range(n_prototypes):
+        ramp_at = rng.uniform(0.1, 0.4)
+        drop_at = rng.uniform(0.6, 0.9)
+        level = rng.uniform(0.5, 2.0)
+        slope = rng.uniform(-0.5, 0.5)
+        sig = level / (1 + np.exp(-40 * (t - ramp_at)))
+        sig -= level / (1 + np.exp(-40 * (t - drop_at)))
+        sig += slope * t
+        ripple_amp = rng.uniform(0.0, 0.35)
+        sig += ripple_amp * np.sin(
+            2 * np.pi * rng.integers(4, 16) * t + rng.uniform(0, 2 * np.pi))
+        protos[k] = sig
+
+    assign = rng.integers(0, n_prototypes, size=n_series)
+    noise = np.exp(rng.uniform(np.log(noise_lo), np.log(noise_hi),
+                               size=(n_series, 1)))
+    x = protos[assign] + noise * rng.standard_normal((n_series, length))
+
+    # Transient anomalies: short spikes on a small fraction of traces.
+    n_anom = int(anomaly_frac * n_series)
+    if n_anom:
+        rows = rng.choice(n_series, size=n_anom, replace=False)
+        for r in rows:
+            pos = rng.integers(5, length - 5)
+            width = rng.integers(2, 6)
+            x[r, pos:pos + width] += rng.uniform(1.0, 3.0) * rng.choice([-1, 1])
+
+    return znormalize_np(x) if normalize else x
+
+
+def make_queries(
+    database: np.ndarray,
+    n_queries: int,
+    noise: float = 0.05,
+    seed: int = 1,
+) -> np.ndarray:
+    """Queries near database members (the paper's range-query regime)."""
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(0, database.shape[0], size=n_queries)
+    q = database[rows] + noise * rng.standard_normal(
+        (n_queries, database.shape[1]))
+    return znormalize_np(q)
+
+
+def load_ucr(path: str) -> tuple[np.ndarray, np.ndarray]:
+    """Read the standard UCR text format: one series per line,
+    ``label, v1, v2, ...`` (comma or whitespace separated)."""
+    rows = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            parts = line.replace(",", " ").split()
+            rows.append([float(p) for p in parts])
+    arr = np.asarray(rows, dtype=np.float64)
+    return arr[:, 0].astype(np.int64), arr[:, 1:]
+
+
+def benchmark_database(length: int = DEFAULT_LENGTH, seed: int = 0) -> np.ndarray:
+    """The database benchmarks use: real UCR wafer when REPRO_UCR_PATH is
+    set, else the synthetic wafer-like stand-in (see module docstring)."""
+    path = os.environ.get("REPRO_UCR_PATH", "")
+    if path and os.path.exists(path):
+        _, series = load_ucr(path)
+        return znormalize_np(series)
+    return make_wafer_like(length=length, seed=seed)

@@ -1,0 +1,74 @@
+"""Deterministic, sharded synthetic token pipeline for LM training.
+
+Production constraints honoured:
+  * **stateless**: the batch for step ``s`` is a pure function of
+    (seed, s) — restart/elastic-rescale replays identically with no
+    iterator state in the checkpoint (the checkpoint stores only the step);
+  * **sharded**: generation happens on-device under the batch sharding
+    (out_shardings), so no host→device broadcast of global batches;
+  * **structured**: tokens follow a Zipf marginal with short-range
+    repetition structure, so cross-entropy actually decreases during the
+    smoke-training runs (a pure-uniform stream has nothing to learn).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenPipelineConfig:
+    vocab_size: int
+    global_batch: int
+    seq_len: int
+    seed: int = 0
+    zipf_a: float = 1.1       # Zipf exponent for the unigram marginal
+    repeat_p: float = 0.35    # P(copy a recent token) — learnable structure
+    repeat_window: int = 8
+
+
+def _zipf_inverse_cdf(u: jnp.ndarray, vocab: int, a: float) -> jnp.ndarray:
+    """Map U(0,1) to Zipf-ish ranks: continuous truncated-Pareto quantile
+    for p(k) ∝ (k+1)^(−a) — rank = (1 + u·((V+1)^(1−a) − 1))^(1/(1−a)) − 1.
+    Cheap, fully vectorised, rank 0 most frequent."""
+    one_m_a = 1.0 - a
+    top = (vocab + 1.0) ** one_m_a - 1.0
+    r = (1.0 + u * top) ** (1.0 / one_m_a) - 1.0
+    return jnp.clip(r.astype(jnp.int32), 0, vocab - 1)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _gen_batch(key: jax.Array, cfg: TokenPipelineConfig) -> jnp.ndarray:
+    B, S, V = cfg.global_batch, cfg.seq_len, cfg.vocab_size
+    k1, k2, k3 = jax.random.split(key, 3)
+    base = _zipf_inverse_cdf(jax.random.uniform(k1, (B, S)), V, cfg.zipf_a)
+    # Repetition structure: with prob repeat_p, copy the token `lag` back.
+    lag = jax.random.randint(k2, (B, S), 1, cfg.repeat_window + 1)
+    do_rep = jax.random.uniform(k3, (B, S)) < cfg.repeat_p
+    pos = jnp.arange(S)[None, :]
+    src = jnp.clip(pos - lag, 0)
+    copied = jnp.take_along_axis(base, src, axis=1)
+    return jnp.where(do_rep & (pos > 0), copied, base)
+
+
+class TokenPipeline:
+    """batch_at(step) -> {"tokens": (B, S) int32}; labels are tokens shifted
+    by one inside the loss (standard next-token objective)."""
+
+    def __init__(self, cfg: TokenPipelineConfig, sharding=None):
+        self.cfg = cfg
+        self._root = jax.random.PRNGKey(cfg.seed)
+        self._sharding = sharding
+        if sharding is not None:
+            self._gen = jax.jit(
+                functools.partial(_gen_batch, cfg=cfg),
+                out_shardings=sharding)
+        else:
+            self._gen = functools.partial(_gen_batch, cfg=cfg)
+
+    def batch_at(self, step: int) -> dict:
+        key = jax.random.fold_in(self._root, step)
+        return {"tokens": self._gen(key)}

@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: one fused FAST_SAX cascade level (C9 + masked C10).
+
+This is the paper's online phase re-thought for a vector unit: instead of
+the CPU per-series branch "if C9 excludes, skip MINDIST", the kernel
+evaluates C9 as a vector mask and C10 underneath it in the same VMEM pass —
+one read of the residuals and words per level, one write of the alive mask.
+Fusing the two conditions removes an HBM round-trip of the (B,) mask and
+the (B, N) words between the two tests, which is what makes the cascade
+memory-roofline-optimal (the level's arithmetic intensity is too low for
+the MXU to matter; see EXPERIMENTS.md §Perf).
+
+Inputs per block:
+  alive   (block_b, 1) i32   running survivor mask
+  res     (block_b, 1) f32   precomputed d(u,ū) for this level
+  words   (block_b, N) i32   SAX words for this level
+  tq      (α, N)       f32   per-query table panel (see mindist.py)
+  scal    (1, 2)       f32   [d(q,q̄), ε]
+Output:
+  alive'  (block_b, 1) i32   alive ∧ C9-ok ∧ C10-ok
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fused_prune_kernel(alive_ref, res_ref, words_ref, tq_ref, scal_ref,
+                        o_ref, *, alphabet, scale):
+    alive = alive_ref[...] != 0              # (block_b, 1)
+    res = res_ref[...]                       # (block_b, 1)
+    qres = scal_ref[0, 0]
+    eps = scal_ref[0, 1]
+
+    # --- C9 (eq. 9): |d(u,ū) − d(q,q̄)| ≤ ε to stay alive ---
+    c9 = jnp.abs(res - qres) <= eps          # (block_b, 1)
+
+    # --- C10 (eq. 10) under the mask: MINDIST² ≤ ε² ---
+    s = words_ref[...]                       # (block_b, N)
+    acc = jnp.zeros(s.shape, dtype=jnp.float32)
+    for a in range(alphabet):                # α ≤ 20, unrolled select sweep
+        acc = jnp.where(s == a, tq_ref[a, :][None, :], acc)
+    md_sq = scale * jnp.sum(acc * acc, axis=-1, keepdims=True)
+    c10 = md_sq <= eps * eps
+
+    o_ref[...] = (alive & c9 & c10).astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "alphabet", "block_b", "interpret"))
+def fused_prune_level_pallas(
+    alive: jnp.ndarray,     # (B,) bool/int32
+    residuals: jnp.ndarray, # (B,) f32
+    words: jnp.ndarray,     # (B, N) int32
+    tq: jnp.ndarray,        # (α, N) f32
+    qres: jnp.ndarray,      # scalar
+    eps: jnp.ndarray,       # scalar
+    n: int,
+    alphabet: int,
+    block_b: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, N = words.shape
+    assert B % block_b == 0, (B, block_b)
+    scal = jnp.stack([jnp.asarray(qres, jnp.float32).reshape(()),
+                      jnp.asarray(eps, jnp.float32).reshape(())])[None, :]
+    out = pl.pallas_call(
+        functools.partial(_fused_prune_kernel, alphabet=alphabet,
+                          scale=float(n) / N),
+        grid=(B // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, N), lambda i: (i, 0)),
+            pl.BlockSpec((alphabet, N), lambda i: (0, 0)),
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        interpret=interpret,
+    )(alive.astype(jnp.int32)[:, None], residuals.astype(jnp.float32)[:, None],
+      words.astype(jnp.int32), tq.astype(jnp.float32), scal)
+    return out[:, 0] != 0

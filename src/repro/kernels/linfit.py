@@ -1,0 +1,79 @@
+"""Pallas TPU kernel: closed-form per-segment first-degree LS residuals.
+
+The offline phase of FAST_SAX computes, for every series, the squared
+distance to its optimal piecewise-linear approximation (paper eq. 6's
+precomputed d(u,ū)).  The closed form
+
+    ‖resid‖²_seg = Σy² − L·mean² − slope²·Sxx
+    mean  = (x @ M_mean)_seg,   slope = (x @ M_slope)_seg
+
+turns the whole computation into two MXU matmuls against constant (n, N)
+matrices plus one elementwise pass for Σy² — no iterative solver, no
+per-segment loop.  One database block (block_b, n) is resident in VMEM per
+grid step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .paa import averaging_matrix
+
+
+def slope_matrix(n: int, n_segments: int) -> tuple[np.ndarray, float]:
+    """(n, N) matrix S with S[j, s] = xc_j / Sxx on segment s; plus Sxx."""
+    L = n // n_segments
+    xc = np.arange(L, dtype=np.float64) - (L - 1) / 2.0
+    sxx = float(np.sum(xc * xc))
+    m = np.zeros((n, n_segments), dtype=np.float32)
+    if L >= 2:
+        for s in range(n_segments):
+            m[s * L:(s + 1) * L, s] = (xc / sxx).astype(np.float32)
+    return m, sxx
+
+
+def _linfit_kernel(x_ref, mm_ref, ms_ref, mo_ref, o_ref, *, L, sxx):
+    x = x_ref[...].astype(jnp.float32)
+    mean = jnp.dot(x, mm_ref[...], preferred_element_type=jnp.float32)
+    slope = jnp.dot(x, ms_ref[...], preferred_element_type=jnp.float32)
+    sum_y2 = jnp.dot(x * x, mo_ref[...], preferred_element_type=jnp.float32)
+    per_seg = jnp.maximum(
+        sum_y2 - L * mean * mean - sxx * slope * slope, 0.0)
+    o_ref[...] = jnp.sum(per_seg, axis=-1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("n_segments", "block_b", "interpret"))
+def linfit_residual_sq_pallas(
+    x: jnp.ndarray,
+    n_segments: int,
+    block_b: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """(B, n) -> (B,) squared residuals; B must be a multiple of block_b."""
+    B, n = x.shape
+    assert B % block_b == 0, (B, block_b)
+    L = n // n_segments
+    mm = jnp.asarray(averaging_matrix(n, n_segments))
+    ms_np, sxx = slope_matrix(n, n_segments)
+    ms = jnp.asarray(ms_np)
+    # Segment-sum matrix for Σy²: ones on the segment block.
+    mo = jnp.asarray(averaging_matrix(n, n_segments) * L)
+    out = pl.pallas_call(
+        functools.partial(_linfit_kernel, L=float(L),
+                          sxx=(sxx if L >= 2 else 1.0)),
+        grid=(B // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, n), lambda i: (i, 0)),
+            pl.BlockSpec((n, n_segments), lambda i: (0, 0)),
+            pl.BlockSpec((n, n_segments), lambda i: (0, 0)),
+            pl.BlockSpec((n, n_segments), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 1), jnp.float32),
+        interpret=interpret,
+    )(x, mm, ms, mo)
+    return out[:, 0]

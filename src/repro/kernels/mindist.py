@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: batched squared MINDIST (paper eq. 3) for one query.
+
+Hardware adaptation of the paper's "statistical lookup table": TPUs have no
+gather unit, so the 2-D table lookup ``tab[s_i, t_i]`` is restructured:
+
+  1. outside the kernel, the query word slices the (α, α) table into a
+     per-query (α, N) panel ``tq[a, i] = tab[a, q_i]`` (ops.py / ref.py
+     ``query_table``) — O(α·N) once per query;
+  2. inside the kernel, the remaining 1-D select over database symbols is
+     an unrolled compare-select sweep over the α ≤ 20 alphabet rows — pure
+     VPU work on (block_b, N) tiles, no data-dependent addressing.
+
+This keeps the MINDIST inner loop dense and branch-free, which is exactly
+the opposite of the paper's CPU early-exit but optimal on a vector unit
+(DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mindist_kernel(words_ref, tq_ref, o_ref, *, alphabet, scale):
+    s = words_ref[...]                       # (block_b, N) int32
+    acc = jnp.zeros(s.shape, dtype=jnp.float32)
+    # Unrolled compare-select over the alphabet (α ≤ 20, static).
+    for a in range(alphabet):
+        row = tq_ref[a, :]                   # (N,)
+        acc = jnp.where(s == a, row[None, :], acc)
+    o_ref[...] = scale * jnp.sum(acc * acc, axis=-1, keepdims=True)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "alphabet", "block_b", "interpret"))
+def mindist_sq_pallas(
+    words: jnp.ndarray,   # (B, N) int32 database words
+    tq: jnp.ndarray,      # (α, N) f32 per-query table panel
+    n: int,
+    alphabet: int,
+    block_b: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """(B, N) × (α, N) -> (B,) squared MINDIST, scaled by n/N."""
+    B, N = words.shape
+    assert B % block_b == 0, (B, block_b)
+    out = pl.pallas_call(
+        functools.partial(_mindist_kernel, alphabet=alphabet,
+                          scale=float(n) / N),
+        grid=(B // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, N), lambda i: (i, 0)),
+            pl.BlockSpec((alphabet, N), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 1), jnp.float32),
+        interpret=interpret,
+    )(words.astype(jnp.int32), tq.astype(jnp.float32))
+    return out[:, 0]

@@ -1,0 +1,128 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Responsibilities kept out of the kernels themselves:
+  * batch padding to the block size (and unpadding of results),
+  * the per-query (α, N) MINDIST table panel,
+  * VMEM budget checks for the chosen block shape,
+  * backend dispatch: ``interpret=None`` → interpret mode off TPU (this
+    container is CPU-only; kernels execute via the Pallas interpreter and
+    are validated against ``ref.py``), compiled Pallas on real TPU.
+
+Every wrapper has a ``ref.py`` oracle with identical semantics; the XLA
+engine (core/engine.py) uses the oracle expressions directly, so the Pallas
+path is a drop-in for serving on TPU hardware.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.sax import mindist_table
+from .fused_prune import fused_prune_level_pallas
+from .linfit import linfit_residual_sq_pallas
+from .mindist import mindist_sq_pallas
+from .paa import paa_pallas
+from .sqdist import sqdist_pallas
+
+VMEM_BYTES = 16 * 2 ** 20          # v5e VMEM per core (half, conservatively)
+
+
+def _use_interpret(interpret) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
+def _pad_rows(x: jnp.ndarray, block_b: int):
+    B = x.shape[0]
+    Bp = (B + block_b - 1) // block_b * block_b
+    if Bp == B:
+        return x, B
+    pad = [(0, Bp - B)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, pad), B
+
+
+def _check_vmem(block_b: int, n: int, extra: int = 0):
+    # database block f32 + constants + output, doubled for pipelining
+    need = 2 * (block_b * n * 4 + extra)
+    if need > VMEM_BYTES:
+        raise ValueError(
+            f"block_b={block_b}, n={n} needs ~{need/2**20:.1f} MiB VMEM "
+            f"(> {VMEM_BYTES/2**20:.0f} MiB); shrink block_b")
+
+
+def paa(x, n_segments: int, *, block_b: int = 256, interpret=None):
+    """(B, n) -> (B, N) PAA means (Pallas)."""
+    _check_vmem(block_b, x.shape[-1], extra=x.shape[-1] * n_segments * 4)
+    xp, B = _pad_rows(x, block_b)
+    out = paa_pallas(xp, n_segments, block_b=block_b,
+                     interpret=_use_interpret(interpret))
+    return out[:B]
+
+
+def linfit_residual_sq(x, n_segments: int, *, block_b: int = 256,
+                       interpret=None):
+    """(B, n) -> (B,) squared LS residuals (Pallas)."""
+    _check_vmem(block_b, x.shape[-1], extra=3 * x.shape[-1] * n_segments * 4)
+    xp, B = _pad_rows(x, block_b)
+    out = linfit_residual_sq_pallas(xp, n_segments, block_b=block_b,
+                                    interpret=_use_interpret(interpret))
+    return out[:B]
+
+
+def query_table(qword, alphabet: int) -> jnp.ndarray:
+    """(N,) query word -> (α, N) MINDIST panel tq[a, i] = tab[a, q_i]."""
+    tab = jnp.asarray(mindist_table(alphabet), dtype=jnp.float32)
+    return tab[:, qword]
+
+
+def mindist_sq(words, qword, n: int, alphabet: int, *, block_b: int = 256,
+               interpret=None):
+    """(B, N) words × (N,) query word -> (B,) squared MINDIST (Pallas)."""
+    tq = query_table(qword, alphabet)
+    wp, B = _pad_rows(words, block_b)
+    out = mindist_sq_pallas(wp, tq, n, alphabet, block_b=block_b,
+                            interpret=_use_interpret(interpret))
+    return out[:B]
+
+
+def sqdist(x, q, *, block_b: int = 256, interpret=None):
+    """(B, n) × (n,) -> (B,) squared Euclidean distances (Pallas)."""
+    _check_vmem(block_b, x.shape[-1])
+    xp, B = _pad_rows(x, block_b)
+    out = sqdist_pallas(xp, q, block_b=block_b,
+                        interpret=_use_interpret(interpret))
+    return out[:B]
+
+
+def prune_level(alive, residuals, words, qword, qres, eps, n: int,
+                alphabet: int, *, block_b: int = 256, interpret=None):
+    """One fused cascade level (C9 + masked C10) -> new alive mask."""
+    tq = query_table(qword, alphabet)
+    ap, B = _pad_rows(alive, block_b)
+    rp, _ = _pad_rows(residuals, block_b)
+    wp, _ = _pad_rows(words, block_b)
+    out = fused_prune_level_pallas(
+        ap, rp, wp, tq, qres, eps, n, alphabet, block_b=block_b,
+        interpret=_use_interpret(interpret))
+    return out[:B]
+
+
+def fused_cascade(series_norms_words_residuals, qr_words, qr_residuals,
+                  eps, n: int, alphabet: int, levels, *, block_b: int = 256,
+                  interpret=None):
+    """Full multi-level cascade for ONE query via chained fused kernels.
+
+    ``series_norms_words_residuals``: (words_per_level, residuals_per_level)
+    tuples as in ``core.engine.DeviceIndex``.  Returns the final (B,) alive
+    mask (candidates for the Euclidean verify).
+    """
+    words, residuals = series_norms_words_residuals
+    B = words[0].shape[0]
+    alive = jnp.ones((B,), dtype=bool)
+    for li, N in enumerate(levels):
+        alive = prune_level(alive, residuals[li], words[li], qr_words[li],
+                            qr_residuals[li], eps, n, alphabet,
+                            block_b=block_b, interpret=interpret)
+    return alive

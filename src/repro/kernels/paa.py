@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: batched PAA (segment means) as an MXU matmul.
+
+Hardware adaptation: a GPU/CPU PAA is a strided reduction; on TPU a
+reduction over an awkward (N, L) reshape of the lane dimension is
+VPU-hostile.  Instead PAA is expressed as ``x @ M`` where ``M`` is the
+constant (n, N) segment-averaging matrix — one dense MXU matmul per block,
+with the database block and M resident in VMEM.
+
+Block shape: (block_b, n) rows of the database per grid step; n and N stay
+whole (time-series lengths are ≤ a few thousand — far under VMEM for any
+realistic block_b; ops.py asserts the VMEM budget).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _paa_kernel(x_ref, m_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    m = m_ref[...]
+    o_ref[...] = jnp.dot(
+        x, m, preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def averaging_matrix(n: int, n_segments: int) -> np.ndarray:
+    """The (n, N) PAA matrix: M[j, s] = 1/L if j in segment s else 0."""
+    L = n // n_segments
+    m = np.zeros((n, n_segments), dtype=np.float32)
+    for s in range(n_segments):
+        m[s * L:(s + 1) * L, s] = 1.0 / L
+    return m
+
+
+@functools.partial(jax.jit, static_argnames=("n_segments", "block_b", "interpret"))
+def paa_pallas(
+    x: jnp.ndarray,
+    n_segments: int,
+    block_b: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """(B, n) -> (B, N); B must be a multiple of block_b (ops.py pads)."""
+    B, n = x.shape
+    assert B % block_b == 0, (B, block_b)
+    m = jnp.asarray(averaging_matrix(n, n_segments))
+    return pl.pallas_call(
+        _paa_kernel,
+        grid=(B // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, n), lambda i: (i, 0)),
+            pl.BlockSpec((n, n_segments), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, n_segments), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, n_segments), jnp.float32),
+        interpret=interpret,
+    )(x, m)

@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth its kernel twin is tested
+against (tests/test_kernels.py sweeps shapes × dtypes and asserts
+allclose).  They are also the implementations the XLA (non-Pallas) engine
+path uses, so oracle == production fallback.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.sax import mindist_table
+
+
+def paa_ref(x: jnp.ndarray, n_segments: int) -> jnp.ndarray:
+    """(B, n) -> (B, N) segment means."""
+    B, n = x.shape
+    L = n // n_segments
+    return x.reshape(B, n_segments, L).mean(axis=-1).astype(x.dtype)
+
+
+def linfit_residual_sq_ref(x: jnp.ndarray, n_segments: int) -> jnp.ndarray:
+    """(B, n) -> (B,) squared distance to the optimal per-segment line."""
+    B, n = x.shape
+    N = n_segments
+    L = n // N
+    xf = x.astype(jnp.float32)
+    segs = xf.reshape(B, N, L)
+    xc = jnp.arange(L, dtype=jnp.float32) - (L - 1) / 2.0
+    sxx = jnp.sum(xc * xc)
+    sum_y = segs.sum(axis=-1)
+    sum_y2 = jnp.sum(segs * segs, axis=-1)
+    mean = sum_y / L
+    if L <= 2:
+        per_seg = jnp.zeros_like(mean)
+        if L == 2:
+            sxy = jnp.einsum("bnl,l->bn", segs, xc)
+            per_seg = jnp.maximum(
+                sum_y2 - L * mean * mean - (sxy * sxy) / sxx, 0.0)
+    else:
+        sxy = jnp.einsum("bnl,l->bn", segs, xc)
+        per_seg = jnp.maximum(sum_y2 - L * mean * mean - (sxy * sxy) / sxx, 0.0)
+    return per_seg.sum(axis=-1)
+
+
+def query_table(qword: np.ndarray, alphabet: int) -> np.ndarray:
+    """Per-query (α, N) slice of the MINDIST table: tq[a, i] = tab[a, q_i].
+
+    Precomputing this outside the kernel turns the 2-D gather of eq. 3 into
+    a 1-D row select, which the kernel lowers as α compare-select sweeps
+    (VPU-friendly; no gather unit on TPU)."""
+    tab = mindist_table(alphabet).astype(np.float32)
+    return tab[:, np.asarray(qword)]
+
+
+def mindist_sq_ref(
+    words: jnp.ndarray, tq: jnp.ndarray, n: int
+) -> jnp.ndarray:
+    """(B, N) int words × (α, N) query table -> (B,) squared MINDIST."""
+    B, N = words.shape
+    cell = tq.astype(jnp.float32)[words, jnp.arange(N)[None, :]]
+    return (n / N) * jnp.sum(cell * cell, axis=-1)
+
+
+def sqdist_ref(x: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """(B, n) × (n,) -> (B,) squared Euclidean distance."""
+    diff = x.astype(jnp.float32) - q.astype(jnp.float32)[None, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def prune_level_ref(
+    alive: jnp.ndarray,       # (B,) bool
+    residuals: jnp.ndarray,   # (B,) f32 d(u,ū)
+    words: jnp.ndarray,       # (B, N) int32
+    tq: jnp.ndarray,          # (α, N) f32 query table slice
+    qres: jnp.ndarray,        # scalar d(q,q̄)
+    eps: jnp.ndarray,         # scalar ε
+    n: int,
+) -> jnp.ndarray:
+    """One cascade level: alive ∧ C9-ok ∧ C10-ok (eq. 9 then eq. 10)."""
+    B, N = words.shape
+    c9 = jnp.abs(residuals - qres) <= eps
+    cell = tq[words, jnp.arange(N)[None, :]]
+    md_sq = (n / N) * jnp.sum(cell * cell, axis=-1)
+    c10 = md_sq <= eps * eps
+    return alive & c9 & c10

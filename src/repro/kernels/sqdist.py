@@ -1,0 +1,45 @@
+"""Pallas TPU kernel: batched squared Euclidean distance to one query.
+
+The final verification scan of both SAX and FAST_SAX.  One database block
+(block_b, n) is streamed through VMEM per grid step; the query vector stays
+resident.  diff²-reduce is VPU work; for the batched-queries engine the
+matmul form in ``core/engine.py`` (MXU) is preferred — this kernel is the
+single-query serving path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sqdist_kernel(x_ref, q_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    q = q_ref[...].astype(jnp.float32)       # (1, n)
+    diff = x - q
+    o_ref[...] = jnp.sum(diff * diff, axis=-1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def sqdist_pallas(
+    x: jnp.ndarray,   # (B, n)
+    q: jnp.ndarray,   # (n,)
+    block_b: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, n = x.shape
+    assert B % block_b == 0, (B, block_b)
+    out = pl.pallas_call(
+        _sqdist_kernel,
+        grid=(B // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 1), jnp.float32),
+        interpret=interpret,
+    )(x, q[None, :])
+    return out[:, 0]

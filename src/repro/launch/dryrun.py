@@ -1,0 +1,437 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (architecture × input shape ×
+mesh) cell against the production mesh and record memory / cost /
+collective analysis — the proof that the distribution config is coherent
+without real hardware.
+
+The two lines above MUST run before any other import (jax locks the
+device count at first init).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k --mesh both
+  python -m repro.launch.dryrun --arch all --shape all --mesh both
+Results: one JSON per cell under --out (default experiments/dryrun/).
+"""
+import argparse
+import dataclasses
+import functools
+import json
+import pathlib
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .. import configs
+from ..configs.shapes import SHAPES, applicable, input_specs
+from ..launch.mesh import make_parallelism
+from ..models.transformer import (ModelConfig, cache_spec, decode_step,
+                                  init_params, prefill)
+from ..runtime import hlo as hlo_lib
+from ..runtime import roofline as rl
+from ..runtime.jaxpr_cost import Cost, jaxpr_cost
+from ..runtime.sharding import Parallelism, param_shardings
+from ..training.optimizer import AdamWConfig, init_state
+from ..training.step import make_train_step, opt_shardings
+
+# Archs whose optimizer state must be int8-quantised to fit 16 GB/chip.
+_INT8_OPT = {"qwen3-moe-235b-a22b", "mixtral-8x22b", "qwen3-32b"}
+
+
+def _key_spec():
+    return jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+
+def cache_shardings(cfg: ModelConfig, cache_shape, batch: int,
+                    par: Parallelism):
+    """Sharding policy for decode caches (see DESIGN.md §4 SP notes):
+    batch over the data axes when it divides; KV heads over model when they
+    divide, otherwise the cache sequence dim goes over model (flash-decode
+    style sharded-KV attention); batch=1 long-context shards the sequence
+    over every axis."""
+    dp = par.data_spec
+    heads_div = cfg.n_kv_heads % par.model_size == 0
+    b_div = batch % par.data_size == 0 and batch >= par.data_size
+
+    def kv_spec(ndim):
+        # (L, B, S, K, Dh)
+        if batch == 1:
+            return P(None, None, tuple(par.all_axes), None, None)
+        bs = dp if b_div else None
+        if heads_div:
+            return P(None, bs, None, par.model_axis, None)
+        return P(None, bs, par.model_axis, None, None)
+
+    def spec_for(path, leaf):
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        nd = len(leaf.shape)
+        if name == "pos":
+            return P()
+        if name == "kv_positions":
+            bs = dp if b_div else None
+            if batch == 1:
+                return P(None, tuple(par.all_axes))
+            return P(bs, None if heads_div else par.model_axis)
+        if "cross_kv" in name:
+            bs = dp if b_div else None
+            return P(None, bs, None,
+                     par.model_axis if heads_div else None, None)
+        if "self_kv" in name or "shared_kv" in name:
+            return kv_spec(nd)
+        if name.endswith("ssm/ssm"):      # (L, B, H, P, N)
+            bs = dp if b_div else None
+            return P(None, bs, par.model_axis, None, None)
+        if name.endswith("ssm/conv"):     # (L, B, k-1, conv_dim)
+            bs = dp if b_div else None
+            return P(None, bs, None, par.model_axis)
+        return P(*([None] * nd))
+
+    specs = jax.tree_util.tree_map_with_path(spec_for, cache_shape)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(par.mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_shardings(cfg, specs: dict, par: Parallelism, batch: int):
+    dp = par.data_spec
+    b_div = batch % par.data_size == 0 and batch >= par.data_size
+    bs = dp if b_div else None
+    out = {}
+    for k, v in specs.items():
+        if k == "tokens":
+            out[k] = NamedSharding(par.mesh, P(bs, None))
+        elif k == "memory":
+            out[k] = NamedSharding(par.mesh, P(bs, None, None))
+        elif k == "cache":
+            out[k] = cache_shardings(cfg, v, batch, par)
+        else:
+            raise KeyError(k)
+    return out
+
+
+def default_grad_accum(cfg: ModelConfig, sh, par: Parallelism,
+                       budget_bytes: float = 3e9) -> int:
+    """Microbatch count sizing the per-chip live-activation footprint (the
+    layer-scan carries one (B_micro, S, d) residual per layer) to ~3 GB."""
+    tokens_chip = sh.global_batch * sh.seq_len // par.data_size
+    mult = 3 if cfg.kind in ("ssm", "hybrid") else 1
+    total = (cfg.n_layers + cfg.enc_layers) * cfg.d_model * 2 * \
+        tokens_chip * mult
+    a = 1
+    a_max = max(1, sh.global_batch // par.data_size)
+    while total / a > budget_bytes and a < a_max:
+        a *= 2
+    return a
+
+
+_CFG_TWEAKS: dict = {}   # set by --causal-skip / --q-chunk CLI flags
+
+
+def _tweaked(cfg: ModelConfig) -> ModelConfig:
+    return dataclasses.replace(cfg, **_CFG_TWEAKS) if _CFG_TWEAKS else cfg
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               remat: str | None = None, grad_accum: int | None = None,
+               cfg_override: ModelConfig | None = None):
+    """Build and lower one dry-run cell.  Returns (lowered, meta)."""
+    cfg = _tweaked(cfg_override if cfg_override is not None
+                   else configs.get(arch))
+    sh = SHAPES[shape_name]
+    par = make_parallelism(multi_pod=multi_pod)
+    chips = 512 if multi_pod else 256
+    if sh.step == "train":
+        cfg = dataclasses.replace(cfg, remat=remat or "full")
+    specs = input_specs(cfg, shape_name)
+    params_shape = jax.eval_shape(
+        functools.partial(init_params, cfg=cfg), _key_spec())
+    pshard = param_shardings(params_shape, par)
+    bshard = batch_shardings(cfg, specs, par, sh.global_batch)
+    n_tokens = sh.global_batch * sh.seq_len
+
+    if sh.step == "train":
+        ocfg = AdamWConfig(int8_moments=arch in _INT8_OPT)
+        opt_shape = jax.eval_shape(
+            functools.partial(init_state, ocfg), params_shape)
+        oshard = opt_shardings(params_shape, opt_shape, par)
+        accum = grad_accum or default_grad_accum(configs.get(arch), sh, par)
+        step = make_train_step(cfg, par, ocfg, grad_accum=accum)
+        fn = jax.jit(step,
+                     in_shardings=(pshard, oshard, bshard),
+                     out_shardings=(pshard, oshard, None),
+                     donate_argnums=(0, 1))
+        lowered = fn.lower(params_shape, opt_shape, specs)
+        model_flops = rl.model_flops_train(cfg, n_tokens)
+    elif sh.step == "prefill":
+        def prefill_fn(params, batch):
+            return prefill(cfg, par, params, batch["tokens"],
+                           memory=batch.get("memory"),
+                           max_seq=sh.seq_len)
+        cshape = cache_spec(cfg, sh.global_batch, sh.seq_len)
+        cshard = cache_shardings(cfg, cshape, sh.global_batch, par)
+        logit_shard = NamedSharding(par.mesh, P(
+            par.data_spec if sh.global_batch % par.data_size == 0 else None,
+            par.model_axis if cfg.vocab_size % par.model_size == 0
+            else None))
+        fn = jax.jit(prefill_fn, in_shardings=(pshard, bshard),
+                     out_shardings=(logit_shard, cshard))
+        lowered = fn.lower(params_shape, specs)
+        model_flops = rl.model_flops_prefill(cfg, n_tokens)
+    else:  # decode
+        def decode_fn(params, batch):
+            return decode_step(cfg, par, params, batch["cache"],
+                               batch["tokens"])
+        fn = jax.jit(decode_fn, in_shardings=(pshard, bshard),
+                     donate_argnums=())
+        lowered = fn.lower(params_shape, specs)
+        model_flops = rl.model_flops_decode(cfg, sh.global_batch)
+
+    meta = {"arch": arch, "shape": shape_name,
+            "mesh": "pod2x16x16" if multi_pod else "16x16",
+            "chips": chips, "step": sh.step,
+            "params": cfg.param_count(),
+            "active_params": cfg.active_param_count(),
+            "model_flops": model_flops}
+    if sh.step == "train":
+        meta["grad_accum"] = accum
+        meta["remat"] = cfg.remat
+    return lowered, meta
+
+
+def walk_cell(arch: str, shape_name: str, multi_pod: bool,
+              remat: str | None = None, grad_accum: int | None = None,
+              cfg_override: ModelConfig | None = None) -> Cost:
+    """Exact trip-count-aware cost (global flops / bytes) of the same
+    step function the cell lowers — via the jaxpr walker."""
+    cfg = _tweaked(cfg_override if cfg_override is not None
+                   else configs.get(arch))
+    sh = SHAPES[shape_name]
+    par = make_parallelism(multi_pod=multi_pod)
+    if sh.step == "train":
+        cfg = dataclasses.replace(cfg, remat=remat or "full")
+    specs = input_specs(cfg, shape_name)
+    params_shape = jax.eval_shape(
+        functools.partial(init_params, cfg=cfg), _key_spec())
+    if sh.step == "train":
+        ocfg = AdamWConfig(int8_moments=arch in _INT8_OPT)
+        opt_shape = jax.eval_shape(
+            functools.partial(init_state, ocfg), params_shape)
+        accum = grad_accum or default_grad_accum(configs.get(arch), sh, par)
+        step = make_train_step(cfg, par, ocfg, grad_accum=accum)
+        return jaxpr_cost(step, params_shape, opt_shape, specs)
+    if sh.step == "prefill":
+        def prefill_fn(params, batch):
+            return prefill(cfg, par, params, batch["tokens"],
+                           memory=batch.get("memory"), max_seq=sh.seq_len)
+        return jaxpr_cost(prefill_fn, params_shape, specs)
+    def decode_fn(params, batch):
+        return decode_step(cfg, par, params, batch["cache"],
+                           batch["tokens"])
+    return jaxpr_cost(decode_fn, params_shape, specs)
+
+
+# ---------------------------------------------------------------------------
+# Analysis pass: XLA's cost_analysis counts while-loop bodies ONCE, so the
+# scanned full-depth compile under-reports FLOPs/bytes/collectives.  We
+# compile two REDUCED-DEPTH, fully-unrolled variants of the same cell and
+# extrapolate linearly in depth units (layers; groups for hybrid/vlm;
+# enc+dec layer pairs for enc-dec).  The full-depth scanned compile remains
+# the memory/compile-success artifact.
+# ---------------------------------------------------------------------------
+
+
+def _depth_units(cfg: ModelConfig):
+    """(unit-size-in-layers, full-unit-count, [L1, L2])."""
+    if cfg.kind == "hybrid":
+        e = cfg.hybrid_attn_every
+        return e, cfg.n_layers / e, [e, 2 * e]
+    if cfg.kind == "vlm":
+        e = cfg.cross_attn_every
+        return e, cfg.n_layers / e, [e, 2 * e]
+    return 1, float(cfg.n_layers), [2, 4]
+
+
+def _reduced_cfg(cfg: ModelConfig, n_layers: int) -> ModelConfig:
+    repl = dict(n_layers=n_layers, unroll_scans=True,
+                attn_kv_chunk=8192, attn_q_chunk=32768)
+    if cfg.kind == "encdec":
+        repl["enc_layers"] = n_layers
+    return dataclasses.replace(cfg, **repl)
+
+
+def analysis_metrics(arch: str, shape_name: str, multi_pod: bool,
+                     remat: str | None = None,
+                     grad_accum: int | None = None,
+                     cfg_base: ModelConfig | None = None) -> dict:
+    cfg_full = cfg_base if cfg_base is not None else configs.get(arch)
+    _, full_units, depths = _depth_units(cfg_full)
+    sh = SHAPES[shape_name]
+    par = make_parallelism(multi_pod=multi_pod)
+    accum = grad_accum
+    if sh.step == "train" and accum is None:
+        accum = default_grad_accum(cfg_full, sh, par)
+    points = []
+    for L in depths:
+        cfg_r = _reduced_cfg(cfg_full, L)
+        lowered, _ = lower_cell(arch, shape_name, multi_pod, remat=remat,
+                                grad_accum=accum, cfg_override=cfg_r)
+        compiled = lowered.compile()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        coll = hlo_lib.parse_collectives(compiled.as_text())
+        points.append({"flops": float(cost.get("flops", 0.0)),
+                       "bytes": float(cost.get("bytes accessed", 0.0)),
+                       "coll": coll.total_bytes,
+                       "coll_by_kind": coll.bytes_by_kind})
+    u1, u2 = 1.0, 2.0   # depths are [unit, 2·unit]
+    if points[0] and depths == [2, 4]:
+        u1, u2 = 2.0, 4.0
+    out = {}
+    for k in ("flops", "bytes", "coll"):
+        m1, m2 = points[0][k], points[1][k]
+        slope = (m2 - m1) / (u2 - u1)
+        out[k] = m1 + slope * (full_units - u1)
+    # per-kind collective split, extrapolated the same way
+    kinds = set(points[0]["coll_by_kind"]) | set(points[1]["coll_by_kind"])
+    out["coll_by_kind"] = {}
+    for kk in kinds:
+        m1 = points[0]["coll_by_kind"].get(kk, 0.0)
+        m2 = points[1]["coll_by_kind"].get(kk, 0.0)
+        out["coll_by_kind"][kk] = m1 + (m2 - m1) / (u2 - u1) * (
+            full_units - u1)
+    out["depth_points"] = {str(d): p for d, p in zip(depths, points)}
+    return out
+
+
+def _mem_dict(mem) -> dict:
+    out = {}
+    for attr in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "alias_size_in_bytes",
+                 "temp_size_in_bytes"):
+        if hasattr(mem, attr):
+            out[attr] = int(getattr(mem, attr))
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: pathlib.Path):
+    mesh_name = "multi" if multi_pod else "single"
+    cell = f"{arch}__{shape_name}__{mesh_name}"
+    out_path = out_dir / f"{cell}.json"
+    cfg = configs.get(arch)
+    ok, reason = applicable(cfg, shape_name)
+    if not ok:
+        out_path.write_text(json.dumps(
+            {"cell": cell, "status": "skipped", "reason": reason}, indent=2))
+        print(f"[dryrun] {cell}: SKIP ({reason})")
+        return "skipped"
+    t0 = time.time()
+    try:
+        lowered, meta = lower_cell(arch, shape_name, multi_pod)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        print(mem)                       # proves it fits (per spec)
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        print({k: cost.get(k) for k in ("flops", "bytes accessed")})
+        # The compiled module is the per-device SPMD program (shard shapes),
+        # so parsed collective bytes are already per-chip link traffic.
+        coll = hlo_lib.parse_collectives(compiled.as_text())
+        # Scan-corrected metrics: (a) exact trip-count-aware jaxpr walk
+        # of the SAME lowered step for FLOPs / HBM-byte estimates (XLA's
+        # cost_analysis counts while bodies ONCE — see runtime/jaxpr_cost),
+        # (b) the collective parse above already multiplies while-body
+        # collectives by their known_trip_count.
+        t1 = time.time()
+        try:
+            walked = walk_cell(arch, shape_name, multi_pod)
+            analysis = {"flops_global": walked.flops,
+                        "bytes_global": walked.bytes,
+                        "explicit_collective_bytes_global":
+                            walked.collective_bytes,
+                        "method": "jaxpr-walk (trip-count aware) + "
+                                  "HLO collective parse (trip-count aware)",
+                        "seconds": round(time.time() - t1, 1)}
+            per_dev = {"flops": walked.flops / meta["chips"],
+                       "bytes accessed": walked.bytes / meta["chips"]}
+            terms = rl.terms_from_analysis(per_dev, coll.total_bytes,
+                                           meta["chips"],
+                                           meta["model_flops"])
+        except Exception as ae:  # noqa: BLE001 — fall back to raw numbers
+            analysis = {"method": "raw-scanned (walker failed)",
+                        "error": repr(ae),
+                        "traceback": traceback.format_exc()[-2000:]}
+            terms = rl.terms_from_analysis(cost, coll.total_bytes,
+                                           meta["chips"],
+                                           meta["model_flops"])
+        result = {
+            "cell": cell, "status": "ok", **meta,
+            "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+            "memory": _mem_dict(mem),
+            "cost_raw_scanned": {k: float(v) for k, v in cost.items()
+                                 if isinstance(v, (int, float))},
+            "collectives_raw_scanned": coll.summary(),
+            "analysis": analysis,
+            "roofline": terms.as_dict(),
+        }
+        out_path.write_text(json.dumps(result, indent=2))
+        print(f"[dryrun] {cell}: OK lower={t_lower:.0f}s "
+              f"compile={t_compile:.0f}s dominant={terms.dominant} "
+              f"frac={terms.roofline_fraction:.3f}")
+        return "ok"
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        out_path.write_text(json.dumps(
+            {"cell": cell, "status": "error", "error": repr(e),
+             "traceback": traceback.format_exc()[-4000:]}, indent=2))
+        print(f"[dryrun] {cell}: ERROR {e!r}")
+        return "error"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--causal-skip", action="store_true",
+                    help="enable flash-attention causal block skipping")
+    ap.add_argument("--q-chunk", type=int, default=0)
+    args = ap.parse_args()
+    if args.causal_skip:
+        _CFG_TWEAKS["attn_causal_skip"] = True
+    if args.q_chunk:
+        _CFG_TWEAKS["attn_q_chunk"] = args.q_chunk
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    archs = configs.list_archs() if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    statuses = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                cell = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+                if args.skip_existing and (out_dir / f"{cell}.json").exists():
+                    prev = json.loads((out_dir / f"{cell}.json").read_text())
+                    if prev.get("status") in ("ok", "skipped"):
+                        statuses.append(prev["status"])
+                        continue
+                statuses.append(run_cell(arch, shape, mp, out_dir))
+    n_err = statuses.count("error")
+    print(f"[dryrun] done: {statuses.count('ok')} ok, "
+          f"{statuses.count('skipped')} skipped, {n_err} errors")
+    sys.exit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

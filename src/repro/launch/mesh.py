@@ -1,0 +1,37 @@
+"""Production mesh definitions.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module never touches jax device state — the dry-run sets the 512-device
+XLA flag before any jax initialisation, and smoke tests must keep seeing
+the container's single real device.
+"""
+from __future__ import annotations
+
+import jax
+
+from ..runtime.sharding import Parallelism
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_parallelism(*, multi_pod: bool = False,
+                     fsdp: bool = True) -> Parallelism:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    return Parallelism(
+        mesh=mesh,
+        data_axes=("pod", "data") if multi_pod else ("data",),
+        model_axis="model",
+        fsdp_axis="data" if fsdp else None,
+    )
+
+
+def make_test_parallelism(data: int = 2, model: int = 2,
+                          fsdp: bool = True) -> Parallelism:
+    """Small mesh over host devices for CPU integration tests."""
+    mesh = jax.make_mesh((data, model), ("data", "model"))
+    return Parallelism(mesh=mesh, data_axes=("data",), model_axis="model",
+                       fsdp_axis="data" if fsdp else None)

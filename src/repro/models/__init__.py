@@ -1,0 +1,3 @@
+"""Model zoo for the assigned architectures: composable JAX transformer
+stack (dense GQA / MoE / Mamba2-SSD / hybrid / enc-dec / cross-attn VLM)
+with pjit-friendly stacked-layer parameters and scan-based execution."""

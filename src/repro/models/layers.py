@@ -1,0 +1,273 @@
+"""Shared layer library: norms, RoPE, attention (GQA / qk-norm / sliding
+window / cross), SwiGLU MLP.  Pure functions over explicit param pytrees;
+all layers accept stacked (scan-ready) or single-layer params.
+
+Attention is flash-style when S is large: an online-softmax lax.scan over
+KV chunks (optionally also over Q chunks), so the (S, S) score matrix never
+materialises — the activation-memory behaviour the 32k/500k shapes need.
+Causal masking is applied inside each chunk pair; fully-masked chunk pairs
+are still computed (dense-but-masked: XLA cannot skip data-dependent work;
+the roofline's useful-FLOP ratio accounts for this, see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dtype)
+
+
+def init_rms_norm(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(d_head: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32)
+                            / d_head))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, Dh); positions: (B, S) or (S,)."""
+    d_head = x.shape[-1]
+    freqs = rope_frequencies(d_head, theta)            # (Dh/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, Dh/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def _attn_chunk(q, k, v, mask, scale):
+    """One (Q-chunk, KV-chunk) tile: returns (out_unnorm, lse-like stats)."""
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask, s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)                       # (B,H,Q,1)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o, m[..., 0], l[..., 0]                               # (B,H,Q)
+
+
+def flash_attention(q, k, v, *, causal: bool, q_positions, kv_positions,
+                    sliding_window: int | None = None,
+                    kv_chunk: int = 1024, q_chunk: int = 4096,
+                    unroll: bool = False, causal_skip: bool = False):
+    """Online-softmax attention.  q: (B, Sq, H, Dh); k/v: (B, Sk, K, Dh)
+    with K | H (GQA: K heads repeated H/K times).  Positions drive the
+    causal/sliding-window mask (decode passes absolute positions)."""
+    B, Sq, H, Dh = q.shape
+    _, Sk, K, _ = k.shape
+    if K != H:
+        rep = H // K
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    scale = 1.0 / math.sqrt(Dh)
+    if q_positions.ndim == 1:
+        q_positions = jnp.broadcast_to(q_positions[None, :], (B, Sq))
+    if kv_positions.ndim == 1:
+        kv_positions = jnp.broadcast_to(kv_positions[None, :], (B, Sk))
+
+    kv_chunk = min(kv_chunk, Sk)
+    while Sk % kv_chunk != 0:
+        kv_chunk //= 2
+    if kv_chunk < 128:        # awkward lengths (1500/1601): single chunk
+        kv_chunk = Sk
+    q_chunk = min(q_chunk, Sq)
+    while Sq % q_chunk != 0:
+        q_chunk //= 2
+    if q_chunk < 128:
+        q_chunk = Sq
+    n_kv = Sk // kv_chunk
+    n_q = Sq // q_chunk
+
+    def mask_for(qp, kp):
+        m = jnp.ones((B, 1, qp.shape[1], kp.shape[1]), bool)
+        if causal:
+            m &= kp[:, None, None, :] <= qp[:, None, :, None]
+        if sliding_window is not None:
+            m &= kp[:, None, None, :] > (qp[:, None, :, None] - sliding_window)
+        return m
+
+    def q_block(qi, n_kv_visible=None):
+        qb = jax.lax.dynamic_slice_in_dim(q, qi * q_chunk, q_chunk, axis=1)
+        qp = jax.lax.dynamic_slice_in_dim(q_positions, qi * q_chunk, q_chunk,
+                                          axis=1)
+
+        def kv_step(carry, ki):
+            o_acc, m_acc, l_acc = carry
+            kb = jax.lax.dynamic_slice_in_dim(k, ki * kv_chunk, kv_chunk, 1)
+            vb = jax.lax.dynamic_slice_in_dim(v, ki * kv_chunk, kv_chunk, 1)
+            kp = jax.lax.dynamic_slice_in_dim(kv_positions, ki * kv_chunk,
+                                              kv_chunk, 1)
+            o, m, l = _attn_chunk(qb, kb, vb, mask_for(qp, kp), scale)
+            m_new = jnp.maximum(m_acc, m)
+            c_old = jnp.exp(m_acc - m_new)
+            c_new = jnp.exp(m - m_new)
+            o_acc = o_acc * c_old[..., None].transpose(0, 2, 1, 3) \
+                + o * c_new[..., None].transpose(0, 2, 1, 3)
+            l_acc = l_acc * c_old + l * c_new
+            return (o_acc, m_new, l_acc), None
+
+        o0 = jnp.zeros((B, q_chunk, H, Dh), jnp.float32)
+        m0 = jnp.full((B, H, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, H, q_chunk), jnp.float32)
+        (o, m, l), _ = jax.lax.scan(
+            kv_step, (o0, m0, l0),
+            jnp.arange(n_kv if n_kv_visible is None else n_kv_visible),
+            unroll=unroll)
+        o = o / jnp.maximum(l, 1e-30)[..., None].transpose(0, 2, 1, 3)
+        return o.astype(q.dtype)
+
+    if n_q == 1:
+        return q_block(0)
+    # Causal block-skipping: with contiguous ascending positions (the
+    # full-sequence train/prefill path), q block i only sees kv chunks
+    # 0..ceil((i+1)·qc / kc) — skipping the fully-masked upper-diagonal
+    # chunk pairs removes ~half the attention FLOPs structurally (python
+    # loop: per-block scan lengths are static; HLO grows with n_q only).
+    if causal and causal_skip and sliding_window is None and n_q <= 32:
+        outs = []
+        for qi in range(n_q):
+            n_vis = min(n_kv, -(-((qi + 1) * q_chunk) // kv_chunk))
+            outs.append(q_block(qi, n_vis))
+        return jnp.concatenate(outs, axis=1)
+    _, outs = jax.lax.scan(lambda c, qi: (c, q_block(qi)), None,
+                           jnp.arange(n_q), unroll=unroll)  # (n_q,B,qc,H,Dh)
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, H, Dh)
+
+
+def naive_attention(q, k, v, *, causal, q_positions, kv_positions,
+                    sliding_window=None):
+    """Reference attention (materialised scores) — oracle for tests."""
+    B, Sq, H, Dh = q.shape
+    _, Sk, K, _ = k.shape
+    if K != H:
+        k = jnp.repeat(k, H // K, axis=2)
+        v = jnp.repeat(v, H // K, axis=2)
+    if q_positions.ndim == 1:
+        q_positions = jnp.broadcast_to(q_positions[None, :], (B, Sq))
+    if kv_positions.ndim == 1:
+        kv_positions = jnp.broadcast_to(kv_positions[None, :], (B, Sk))
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) / math.sqrt(Dh)
+    mask = jnp.ones((B, 1, Sq, Sk), bool)
+    if causal:
+        mask &= kv_positions[:, None, None, :] <= q_positions[:, None, :, None]
+    if sliding_window is not None:
+        mask &= kv_positions[:, None, None, :] > (
+            q_positions[:, None, :, None] - sliding_window)
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (params + apply)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, d_model, n_heads, n_kv, d_head, qk_norm=False,
+                   dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 4)
+    sd = 1.0 / math.sqrt(d_model)
+    p = {
+        "wq": jax.random.normal(ks[0], (d_model, n_heads * d_head), dtype) * sd,
+        "wk": jax.random.normal(ks[1], (d_model, n_kv * d_head), dtype) * sd,
+        "wv": jax.random.normal(ks[2], (d_model, n_kv * d_head), dtype) * sd,
+        "wo": jax.random.normal(ks[3], (n_heads * d_head, d_model), dtype)
+        * (1.0 / math.sqrt(n_heads * d_head)),
+    }
+    if qk_norm:
+        p["q_norm"] = jnp.ones((d_head,), jnp.float32)
+        p["k_norm"] = jnp.ones((d_head,), jnp.float32)
+    return p
+
+
+def attention_qkv(p, x, n_heads, n_kv, d_head, positions, rope_theta,
+                  qk_norm=False):
+    """Project + RoPE; returns q (B,S,H,Dh), k/v (B,S,K,Dh)."""
+    B, S, _ = x.shape
+    q = (x @ p["wq"]).reshape(B, S, n_heads, d_head)
+    k = (x @ p["wk"]).reshape(B, S, n_kv, d_head)
+    v = (x @ p["wv"]).reshape(B, S, n_kv, d_head)
+    if qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    if rope_theta:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def attention_out(p, o):
+    B, S, H, Dh = o.shape
+    return o.reshape(B, S, H * Dh) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model, d_ff, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 3)
+    sd_in = 1.0 / math.sqrt(d_model)
+    sd_out = 1.0 / math.sqrt(d_ff)
+    return {
+        "w_gate": jax.random.normal(ks[0], (d_model, d_ff), dtype) * sd_in,
+        "w_up": jax.random.normal(ks[1], (d_model, d_ff), dtype) * sd_in,
+        "w_down": jax.random.normal(ks[2], (d_ff, d_model), dtype) * sd_out,
+    }
+
+
+def mlp(p, x):
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# GELU MLP (whisper-style enc-dec uses the classic 2-matrix MLP)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp_gelu(key, d_model, d_ff, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 2)
+    return {
+        "w_in": jax.random.normal(ks[0], (d_model, d_ff), dtype)
+        / math.sqrt(d_model),
+        "w_out": jax.random.normal(ks[1], (d_ff, d_model), dtype)
+        / math.sqrt(d_ff),
+    }
+
+
+def mlp_gelu(p, x):
+    return jax.nn.gelu(x @ p["w_in"], approximate=True) @ p["w_out"]

@@ -1,0 +1,205 @@
+"""Mixture-of-Experts with sort-based grouped-GEMM dispatch (ragged_dot).
+
+Two parallelism modes over the mesh ``model`` axis:
+
+  * ``ep``  (qwen3-moe: 128 experts / 16 shards = 8 local experts): expert
+    weights sharded on the expert dim.  Every (data, model) device holds
+    the same token shard along ``model`` but different experts, so no
+    all_to_all is needed: each shard computes the routed subset of its
+    tokens that map to its local experts, and the per-token top-k combine
+    is the same psum over ``model`` a Megatron TP-FFN would do anyway.
+  * ``tp``  (mixtral: 8 experts < 16 shards): every expert on every shard,
+    d_ff sharded — the dispatch is identical, the psum now sums d_ff
+    partials.
+
+Dispatch is dropless: (token, expert) assignments are sorted by local
+expert id, non-local assignments sort to the end and fall outside
+Σ group_sizes, where lax.ragged_dot *defines* the output rows as zero —
+no capacity factor, no dropped tokens, no one-hot dispatch FLOPs.  Tokens
+are processed in fixed-size chunks to bound the K×-expanded activation
+footprint (the sorted gather materialises T·K rows).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int                      # per-expert hidden dim
+    mode: str = "ep"               # "ep" | "tp"
+    token_chunk: int = 8192        # dispatch chunk (bounds T·K gather)
+    aux_loss_coef: float = 0.01
+    capacity_factor: float = 2.0   # EP: local-row budget multiplier over
+                                   # the balanced load t·K·(e_loc/E);
+                                   # assignments past it drop (standard MoE
+                                   # capacity semantics — the aux loss
+                                   # drives balance)
+
+
+def init_moe(key, d_model: int, cfg: MoEConfig, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 4)
+    sd_in = 1.0 / math.sqrt(d_model)
+    sd_out = 1.0 / math.sqrt(cfg.d_ff)
+    E, F = cfg.n_experts, cfg.d_ff
+    return {
+        "router": jax.random.normal(ks[0], (d_model, E), jnp.float32) * sd_in,
+        "w_gate": jax.random.normal(ks[1], (E, d_model, F), dtype) * sd_in,
+        "w_up": jax.random.normal(ks[2], (E, d_model, F), dtype) * sd_in,
+        "w_down": jax.random.normal(ks[3], (E, F, d_model), dtype) * sd_out,
+    }
+
+
+def _route(x2d, router, cfg: MoEConfig):
+    """Returns (gates (T,K) f32, ids (T,K) i32, aux_loss scalar)."""
+    logits = (x2d.astype(jnp.float32) @ router)            # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, cfg.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss: E · Σ_e f_e · p̄_e
+    T = x2d.shape[0]
+    f = jnp.zeros((cfg.n_experts,), jnp.float32).at[ids.reshape(-1)].add(
+        1.0 / (T * cfg.top_k))
+    pbar = probs.mean(axis=0)
+    aux = cfg.n_experts * jnp.sum(f * pbar)
+    return gates, ids.astype(jnp.int32), aux
+
+
+def _expert_chunk(xc, gates, ids, w_gate, w_up, w_down, *, e0, e_local,
+                  top_k, capacity):
+    """Process one token chunk.  xc: (t, d); gates/ids: (t, K);
+    expert weights are the LOCAL slices (E_loc, d, F).
+
+    ``capacity`` bounds the rows fed to the grouped GEMMs: after the sort
+    (local assignments first) only the first ``capacity`` rows compute —
+    for EP this is the balanced local load × capacity_factor instead of
+    the full t·K, which keeps the expert FLOPs at active-parameter level.
+    Overflow under extreme imbalance drops (standard capacity
+    semantics)."""
+    t, d = xc.shape
+    flat_ids = ids.reshape(-1)                       # (t·K,)
+    flat_tok = jnp.repeat(jnp.arange(t, dtype=jnp.int32), top_k)
+    flat_gate = gates.reshape(-1)
+    local = (flat_ids >= e0) & (flat_ids < e0 + e_local)
+    lid = jnp.where(local, flat_ids - e0, e_local)   # e_local = "beyond"
+    order = jnp.argsort(lid)                         # non-local sort last
+    cap = min(int(capacity), t * top_k)
+    order = order[:cap]
+    s_lid = lid[order]
+    s_tok = flat_tok[order]
+    s_gate = jnp.where(local[order], flat_gate[order], 0.0)
+    xs = xc[s_tok]                                   # (cap, d)
+    group_sizes = jnp.bincount(s_lid, length=e_local + 1)[:e_local]
+    # Rows past Σ group_sizes (non-local) are defined-zero by ragged_dot.
+    h = (jax.nn.silu(jax.lax.ragged_dot(xs, w_gate, group_sizes)
+                     .astype(jnp.float32)).astype(xs.dtype)
+         * jax.lax.ragged_dot(xs, w_up, group_sizes))
+    y = jax.lax.ragged_dot(h, w_down, group_sizes)   # (cap, d)
+    y = y.astype(jnp.float32) * s_gate[:, None]
+    return jax.ops.segment_sum(y, s_tok, num_segments=t)  # (t, d)
+
+
+def _moe_local(x2d, router, w_gate, w_up, w_down, cfg: MoEConfig,
+               e0: int, e_local: int, unroll: bool = False):
+    """Token-chunked local MoE pass; weights already the local slice."""
+    T, d = x2d.shape
+    gates, ids, aux = _route(x2d, router, cfg)
+    tc = min(cfg.token_chunk, T)
+    while T % tc:
+        tc //= 2
+    n_chunks = T // tc
+    # Balanced local load per chunk × slack (lane-aligned); EP shards see
+    # e_local/E of the assignments, TP shards see all of them.
+    balanced = tc * cfg.top_k * e_local / cfg.n_experts
+    capacity = int(-(-balanced * cfg.capacity_factor // 128) * 128)
+    body = functools.partial(_expert_chunk, e0=e0, e_local=e_local,
+                             top_k=cfg.top_k, capacity=capacity)
+    if n_chunks == 1:
+        out = body(x2d, gates, ids, w_gate, w_up, w_down)
+    else:
+        _, out = jax.lax.scan(
+            lambda c, args: (c, body(args[0], args[1], args[2], w_gate,
+                                     w_up, w_down)),
+            None,
+            (x2d.reshape(n_chunks, tc, d),
+             gates.reshape(n_chunks, tc, cfg.top_k),
+             ids.reshape(n_chunks, tc, cfg.top_k)),
+            unroll=unroll)
+        out = out.reshape(T, d)
+    return out, aux
+
+
+def moe_forward(p, x, cfg: MoEConfig, parallel=None, unroll=False):
+    """x: (B, S, d) -> (y (B, S, d), aux_loss).
+
+    ``parallel``: a ``runtime.sharding.Parallelism`` (mesh + axis names) or
+    None for the single-device path (smoke tests)."""
+    B, S, d = x.shape
+    dtype = x.dtype
+
+    if parallel is None or parallel.mesh is None:
+        y, aux = _moe_local(x.reshape(B * S, d), p["router"], p["w_gate"],
+                            p["w_up"], p["w_down"], cfg, 0, cfg.n_experts,
+                            unroll=unroll)
+        return y.reshape(B, S, d).astype(dtype), aux
+
+    mesh = parallel.mesh
+    # Batch must divide the data axes to shard over them (decode with B=1
+    # replicates over data; the model-axis psum is unaffected).
+    dp = (parallel.data_spec
+          if B % max(1, parallel.data_size) == 0 else None)
+    mp = parallel.model_axis         # 'model'
+    n_model = parallel.model_size
+
+    # Keep shard_map in_specs IDENTICAL to the stored FSDP layout (d dim
+    # sharded over the fsdp axis) and all-gather the d dim INSIDE the body,
+    # one layer at a time.  If in_specs demand an already-gathered layout,
+    # XLA hoists the reshard of the whole stacked (L,E,d,F) tensor out of
+    # the layer scan — 2.3× the full expert weights of per-chip temp
+    # (EXPERIMENTS.md §Perf iter 6).
+    fsdp = parallel.fsdp_axis
+    fsdp_ok = fsdp is not None and d % parallel.data_size == 0 and         parallel.mesh.shape.get(fsdp, 1) > 1
+    dshard = fsdp if fsdp_ok else None
+    if cfg.mode == "ep":
+        assert cfg.n_experts % n_model == 0, (cfg.n_experts, n_model)
+        e_local = cfg.n_experts // n_model
+        w_specs = (P(mp, dshard, None), P(mp, dshard, None),
+                   P(mp, None, dshard))
+    else:                            # "tp": d_ff sharded
+        assert cfg.d_ff % n_model == 0
+        e_local = cfg.n_experts
+        w_specs = (P(None, dshard, mp), P(None, dshard, mp),
+                   P(None, mp, dshard))
+
+    def local_fn(xl, router, w_gate, w_up, w_down):
+        Bl, Sl, _ = xl.shape
+        if fsdp_ok:   # stream the FSDP shard gather per layer, in-body
+            w_gate = jax.lax.all_gather(w_gate, fsdp, axis=1, tiled=True)
+            w_up = jax.lax.all_gather(w_up, fsdp, axis=1, tiled=True)
+            w_down = jax.lax.all_gather(w_down, fsdp, axis=2, tiled=True)
+        if cfg.mode == "ep":
+            e0 = jax.lax.axis_index(mp) * e_local
+        else:
+            e0 = 0
+        y, aux = _moe_local(xl.reshape(Bl * Sl, d), router, w_gate, w_up,
+                            w_down, cfg, e0, e_local, unroll=unroll)
+        y = jax.lax.psum(y.astype(jnp.float32), mp)
+        aux = jax.lax.pmean(aux, parallel.all_axes)
+        return y.reshape(Bl, Sl, d).astype(dtype), aux
+
+    y, aux = shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(dp, None, None), P(None, None)) + w_specs,
+        out_specs=(P(dp, None, None), P()),
+        check_rep=False,
+    )(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+    return y, aux

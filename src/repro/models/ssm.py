@@ -1,0 +1,223 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) in JAX.
+
+Training/prefill uses the chunked dual form: within a chunk the quadratic
+("attention-like") branch runs on the MXU; across chunks a sequential scan
+carries the (H, P, N) state.  Decode is the O(1)/token recurrence.
+
+TPU adaptation: chunk size defaults to 256 so the intra-chunk (cs × cs)
+score tile and the (cs, P)×(cs, N) outer products are MXU-shaped; the
+inter-chunk scan is over S/cs steps (tiny sequential tail).  The depthwise
+causal conv1d (k=4) is an explicit 4-tap shift-multiply — no im2col.
+
+Params follow the Mamba2 layout: fused in_proj producing
+[z, x, B, C, dt], A_log/D/dt_bias per head, gated RMSNorm, out_proj.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rms_norm
+
+
+def ssm_dims(d_model: int, head_dim: int = 64, expand: int = 2,
+             state: int = 64, n_groups: int = 1):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    conv_dim = d_inner + 2 * n_groups * state
+    return d_inner, n_heads, conv_dim
+
+
+def init_mamba2(key, d_model, *, head_dim=64, expand=2, state=64,
+                n_groups=1, d_conv=4, dtype=jnp.bfloat16):
+    d_inner, n_heads, conv_dim = ssm_dims(d_model, head_dim, expand, state,
+                                          n_groups)
+    proj_out = 2 * d_inner + 2 * n_groups * state + n_heads
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": jax.random.normal(ks[0], (d_model, proj_out), dtype)
+        / math.sqrt(d_model),
+        "conv_w": jax.random.normal(ks[1], (d_conv, conv_dim), dtype) * 0.2,
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads).astype(jnp.float32)),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": jax.random.normal(ks[3], (d_inner, d_model), dtype)
+        / math.sqrt(d_inner),
+    }
+
+
+def _split_proj(zxbcdt, d_inner, n_groups, state, n_heads):
+    z, xs, Bc, Cc, dt = jnp.split(
+        zxbcdt,
+        [d_inner, 2 * d_inner, 2 * d_inner + n_groups * state,
+         2 * d_inner + 2 * n_groups * state],
+        axis=-1)
+    return z, xs, Bc, Cc, dt
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv, kernel k: x (B,S,C), w (k,C) — shift+mul."""
+    k = w.shape[0]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):
+        shift = k - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :x.shape[1], :]
+        out = out + xi.astype(jnp.float32) * w[i].astype(jnp.float32)
+    return (out + b).astype(x.dtype)
+
+
+def ssd_chunked(xh, dt, A, Bc, Cc, chunk: int, initial_state=None,
+                unroll: bool = False):
+    """SSD dual form.
+
+    xh: (B,S,H,P) inputs; dt: (B,S,H) post-softplus step sizes;
+    A: (H,) negative decay rates; Bc/Cc: (B,S,G,N) with G | H.
+    Returns y (B,S,H,P) and final state (B,H,P,N).
+    """
+    b, s, h, p = xh.shape
+    g, n = Bc.shape[2], Bc.shape[3]
+    cs = min(chunk, s)
+    while s % cs:
+        cs //= 2
+    nc = s // cs
+    rep = h // g
+
+    xc = xh.reshape(b, nc, cs, h, p)
+    dtc = dt.reshape(b, nc, cs, h)
+    Bcc = jnp.repeat(Bc.reshape(b, nc, cs, g, n), rep, axis=3)  # (b,nc,cs,h,n)
+    Ccc = jnp.repeat(Cc.reshape(b, nc, cs, g, n), rep, axis=3)
+
+    a = dtc * A[None, None, None, :]                   # (b,nc,cs,h) ≤ 0
+    a_cum = jnp.cumsum(a, axis=2)                      # within-chunk
+    a_tot = a_cum[:, :, -1, :]                         # (b,nc,h)
+
+    # --- intra-chunk (quadratic, MXU): y_ij = C_i·B_j (i≥j) decays ---
+    scores = jnp.einsum("bzihn,bzjhn->bzhij", Ccc, Bcc,
+                        preferred_element_type=jnp.float32)
+    a_h = a_cum.transpose(0, 1, 3, 2)                  # (b,nc,h,cs)
+    ii = jnp.arange(cs)
+    causal = (ii[:, None] >= ii[None, :])[None, None, None]
+    # decay[b,z,h,i,j] = exp(a_cum_i − a_cum_j) for i ≥ j (≤ 1, stable);
+    # masked pairs get exp(−inf) = 0 — no overflow anywhere.
+    expo = jnp.where(causal, a_h[..., :, None] - a_h[..., None, :], -jnp.inf)
+    w = scores * jnp.exp(expo)
+    xdt = xc * dtc[..., None]                          # (b,nc,cs,h,p)
+    y_intra = jnp.einsum("bzhij,bzjhp->bzihp", w.astype(xh.dtype), xdt,
+                         preferred_element_type=jnp.float32)
+
+    # --- chunk boundary states: S_z = Σ_j exp(a_tot − a_cum_j)·B_j⊗(dt_j x_j)
+    decay_to_end = jnp.exp(a_tot[:, :, None, :] - a_cum)   # (b,nc,cs,h)
+    states = jnp.einsum("bzjhn,bzjhp->bzhpn",
+                        (Bcc * decay_to_end[..., None]).astype(xh.dtype), xdt,
+                        preferred_element_type=jnp.float32)
+
+    # --- inter-chunk recurrence (sequential over nc) ---
+    def step(carry, inp):
+        s_z, a_z = inp                                  # (b,h,p,n), (b,h)
+        new = carry * jnp.exp(a_z)[:, :, None, None] + s_z
+        return new, carry                               # emit state BEFORE z
+
+    init = (jnp.zeros((b, h, p, n), jnp.float32) if initial_state is None
+            else initial_state.astype(jnp.float32))
+    final, prev_states = jax.lax.scan(
+        step, init,
+        (states.transpose(1, 0, 2, 3, 4), a_tot.transpose(1, 0, 2)),
+        unroll=unroll)
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (b,nc,h,p,n)
+
+    # --- inter-chunk contribution: y_i += C_i · prev_state · exp(a_cum_i)
+    y_inter = jnp.einsum("bzihn,bzhpn->bzihp", Ccc,
+                         prev_states.astype(Ccc.dtype),
+                         preferred_element_type=jnp.float32)
+    y_inter = y_inter * jnp.exp(a_cum)[..., None]
+
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y, final
+
+
+def mamba2_forward(p, x, *, head_dim=64, expand=2, state=64, n_groups=1,
+                   chunk=256, return_cache=False, unroll=False):
+    """Full Mamba2 block (training/prefill).  x: (B,S,d) -> (B,S,d).
+
+    ``return_cache``: also return the decode cache {'ssm', 'conv'} (final
+    state + conv tail) from the SAME pass — no recompute at prefill."""
+    b, s, d = x.shape
+    d_inner, n_heads, conv_dim = ssm_dims(d, head_dim, expand, state, n_groups)
+    zxbcdt = x @ p["in_proj"]
+    z, xs, Bc, Cc, dt = _split_proj(zxbcdt, d_inner, n_groups, state, n_heads)
+    xBC_pre = jnp.concatenate([xs, Bc, Cc], axis=-1)
+    xBC = _causal_conv(xBC_pre, p["conv_w"], p["conv_b"])
+    xBC = jax.nn.silu(xBC.astype(jnp.float32)).astype(x.dtype)
+    xs, Bc, Cc = jnp.split(xBC, [d_inner, d_inner + n_groups * state], -1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(b, s, n_heads, head_dim)
+    y, final = ssd_chunked(xh, dt, A,
+                           Bc.reshape(b, s, n_groups, state),
+                           Cc.reshape(b, s, n_groups, state), chunk,
+                           unroll=unroll)
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 p["norm"])
+    out = y @ p["out_proj"]
+    if return_cache:
+        k = p["conv_w"].shape[0]
+        cache = {"ssm": final,
+                 "conv": xBC_pre[:, -(k - 1):, :].astype(jnp.float32)}
+        return out, cache
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode (recurrent) path
+# ---------------------------------------------------------------------------
+
+
+def mamba2_init_cache(batch, d_model, *, head_dim=64, expand=2, state=64,
+                      n_groups=1, d_conv=4, dtype=jnp.float32):
+    d_inner, n_heads, conv_dim = ssm_dims(d_model, head_dim, expand, state,
+                                          n_groups)
+    return {
+        "ssm": jnp.zeros((batch, n_heads, head_dim, state), dtype),
+        "conv": jnp.zeros((batch, d_conv - 1, conv_dim), dtype),
+    }
+
+
+def mamba2_decode_step(p, x, cache, *, head_dim=64, expand=2, state=64,
+                       n_groups=1):
+    """One-token step.  x: (B, 1, d); cache: {'ssm', 'conv'}."""
+    b, _, d = x.shape
+    d_inner, n_heads, conv_dim = ssm_dims(d, head_dim, expand, state, n_groups)
+    zxbcdt = x[:, 0, :] @ p["in_proj"]
+    z, xs, Bc, Cc, dt = _split_proj(zxbcdt, d_inner, n_groups, state, n_heads)
+    xBC_new = jnp.concatenate([xs, Bc, Cc], axis=-1)       # (B, conv_dim)
+    conv_buf = jnp.concatenate(
+        [cache["conv"].astype(x.dtype), xBC_new[:, None, :]], axis=1)
+    k = p["conv_w"].shape[0]
+    xBC = jnp.einsum("bkc,kc->bc", conv_buf.astype(jnp.float32),
+                     p["conv_w"].astype(jnp.float32)) + p["conv_b"]
+    xBC = jax.nn.silu(xBC).astype(x.dtype)
+    xs, Bc, Cc = jnp.split(xBC, [d_inner, d_inner + n_groups * state], -1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(b, n_heads, head_dim).astype(jnp.float32)
+    Bh = jnp.repeat(Bc.reshape(b, n_groups, state), n_heads // n_groups, 1)
+    Ch = jnp.repeat(Cc.reshape(b, n_groups, state), n_heads // n_groups, 1)
+    decay = jnp.exp(dt * A[None, :])                       # (B,H)
+    s_new = (cache["ssm"] * decay[:, :, None, None]
+             + jnp.einsum("bhp,bhn->bhpn", xh * dt[..., None],
+                          Bh.astype(jnp.float32)))
+    y = jnp.einsum("bhpn,bhn->bhp", s_new, Ch.astype(jnp.float32))
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(b, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 p["norm"])
+    out = (y @ p["out_proj"])[:, None, :]
+    new_cache = {"ssm": s_new, "conv": conv_buf[:, 1:, :].astype(
+        cache["conv"].dtype)}
+    return out, new_cache

@@ -1,0 +1,857 @@
+"""Composable transformer stack covering all assigned architectures.
+
+One ``ModelConfig`` describes dense GQA (qwen3/phi3/granite), MoE
+(mixtral/qwen3-moe), pure SSM (mamba2), hybrid (zamba2: Mamba2 backbone +
+one *shared* attention block applied periodically), enc-dec (whisper), and
+cross-attention VLM (llama-3.2-vision).  Execution styles:
+
+  * homogeneous stacks (dense/moe/ssm) run as one ``lax.scan`` over stacked
+    layer params — HLO size independent of depth, FSDP all-gathers pipeline
+    per scan step;
+  * heterogeneous stacks (hybrid, vlm) run as a python loop over *groups*
+    (interleaved block + a scan over the group's homogeneous layers);
+  * enc-dec runs two scans (encoder, decoder w/ cross-attention).
+
+Modality frontends are stubs per the assignment: whisper takes precomputed
+mel-frame embeddings, the VLM takes precomputed image-patch embeddings
+(``input_specs`` provides them).
+
+Train path = full-seq forward + chunked cross-entropy.  Serve paths:
+``prefill`` (full-seq, emits KV/SSM caches) and ``decode_step`` (one token
+against the cache; ring-buffer writes support sliding-window caches).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import moe as moe_lib
+from . import ssm as ssm_lib
+from ..runtime.sharding import Parallelism, single_device
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    head_dim: int = 64
+    expand: int = 2
+    state: int = 64
+    n_groups: int = 1
+    chunk: int = 256
+    d_conv: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    kind: str                       # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    d_head: int = 128
+    d_ff: int = 0
+    vocab_size: int = 32000
+    qk_norm: bool = False
+    rope_theta: float = 1e6
+    sliding_window: Optional[int] = None
+    moe: Optional[moe_lib.MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    hybrid_attn_every: int = 6      # hybrid: shared attn before every k-th
+    enc_layers: int = 0             # encdec: encoder depth
+    enc_seq: int = 1500             # encdec: stub frame count
+    cross_attn_every: int = 0       # vlm: cross block before every k-th
+    img_tokens: int = 1601          # vlm: stub patch count
+    dtype: str = "bfloat16"
+    remat: str = "selective"        # none | selective | full
+    unroll_scans: bool = False      # analysis mode: unroll every lax.scan
+                                    # so cost_analysis counts loop bodies
+                                    # (XLA counts while-bodies ONCE)
+    attn_kv_chunk: int = 1024       # flash-attention KV tile
+    attn_q_chunk: int = 4096        # flash-attention Q tile
+    attn_causal_skip: bool = False  # skip fully-masked (q,kv) chunk pairs
+                                    # (§Perf iteration 5)
+
+    @property
+    def jdtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+    @property
+    def moe_key(self) -> str:
+        return f"moe_{self.moe.mode}" if self.moe else "mlp"
+
+    @property
+    def n_cross(self) -> int:
+        if self.kind != "vlm":
+            return 0
+        return math.ceil(self.n_layers / self.cross_attn_every)
+
+    @property
+    def n_shared(self) -> int:
+        if self.kind != "hybrid":
+            return 0
+        return math.ceil(self.n_layers / self.hybrid_attn_every)
+
+    def param_count(self) -> int:
+        """Exact parameter count from abstract shapes."""
+        shapes = jax.eval_shape(lambda k: init_params(k, self),
+                                jax.ShapeDtypeStruct((2,), jnp.uint32))
+        return sum(math.prod(l.shape)
+                   for l in jax.tree_util.tree_leaves(shapes))
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top-k experts only)."""
+        total = self.param_count()
+        if not self.moe:
+            return total
+        per_expert = (2 * self.d_model * self.moe.d_ff
+                      + self.moe.d_ff * self.d_model)
+        inactive = (self.n_experts_total - self.moe.top_k) * per_expert \
+            * self.n_layers
+        return total - inactive
+
+    @property
+    def n_experts_total(self) -> int:
+        return self.moe.n_experts if self.moe else 0
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_dense_layer(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": L.init_rms_norm(cfg.d_model),
+         "attn": L.init_attention(k1, cfg.d_model, cfg.n_heads,
+                                  cfg.n_kv_heads, cfg.d_head,
+                                  qk_norm=cfg.qk_norm, dtype=cfg.jdtype),
+         "ln2": L.init_rms_norm(cfg.d_model)}
+    if cfg.moe:
+        p[cfg.moe_key] = moe_lib.init_moe(k2, cfg.d_model, cfg.moe,
+                                          dtype=cfg.jdtype)
+    else:
+        p["mlp"] = L.init_mlp(k2, cfg.d_model, cfg.d_ff, dtype=cfg.jdtype)
+    return p
+
+
+def _init_ssm_layer(key, cfg: ModelConfig):
+    s = cfg.ssm
+    return {"ln1": L.init_rms_norm(cfg.d_model),
+            "ssm": ssm_lib.init_mamba2(
+                key, cfg.d_model, head_dim=s.head_dim, expand=s.expand,
+                state=s.state, n_groups=s.n_groups, d_conv=s.d_conv,
+                dtype=cfg.jdtype)}
+
+
+def _init_cross_layer(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": L.init_rms_norm(cfg.d_model),
+            "cross": L.init_attention(k1, cfg.d_model, cfg.n_heads,
+                                      cfg.n_kv_heads, cfg.d_head,
+                                      qk_norm=cfg.qk_norm, dtype=cfg.jdtype),
+            "ln2": L.init_rms_norm(cfg.d_model),
+            "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff, dtype=cfg.jdtype),
+            "gate_attn": jnp.zeros((), jnp.float32),
+            "gate_mlp": jnp.zeros((), jnp.float32)}
+
+
+def _init_encdec_dec_layer(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": L.init_rms_norm(cfg.d_model),
+            "attn": L.init_attention(k1, cfg.d_model, cfg.n_heads,
+                                     cfg.n_kv_heads, cfg.d_head,
+                                     dtype=cfg.jdtype),
+            "ln2": L.init_rms_norm(cfg.d_model),
+            "cross": L.init_attention(k2, cfg.d_model, cfg.n_heads,
+                                      cfg.n_kv_heads, cfg.d_head,
+                                      dtype=cfg.jdtype),
+            "ln3": L.init_rms_norm(cfg.d_model),
+            "mlp": L.init_mlp_gelu(k3, cfg.d_model, cfg.d_ff,
+                                   dtype=cfg.jdtype)}
+
+
+def _stack_init(fn, key, n):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def init_params(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 8)
+    sd = 1.0 / math.sqrt(cfg.d_model)
+    params: dict = {
+        "embed": {"table": jax.random.normal(
+            ks[0], (cfg.vocab_size, cfg.d_model), cfg.jdtype) * sd},
+        "final_norm": L.init_rms_norm(cfg.d_model),
+        "lm_head": jax.random.normal(
+            ks[1], (cfg.d_model, cfg.vocab_size), cfg.jdtype) * sd,
+    }
+    if cfg.kind in ("dense", "moe", "vlm"):
+        params["layers"] = _stack_init(
+            lambda k: _init_dense_layer(k, cfg), ks[2], cfg.n_layers)
+    elif cfg.kind in ("ssm", "hybrid"):
+        params["layers"] = _stack_init(
+            lambda k: _init_ssm_layer(k, cfg), ks[2], cfg.n_layers)
+    elif cfg.kind == "encdec":
+        params["layers"] = _stack_init(
+            lambda k: _init_encdec_dec_layer(k, cfg), ks[2], cfg.n_layers)
+        params["encoder"] = _stack_init(
+            lambda k: {"ln1": L.init_rms_norm(cfg.d_model),
+                       "attn": L.init_attention(
+                           k, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                           cfg.d_head, dtype=cfg.jdtype),
+                       "ln2": L.init_rms_norm(cfg.d_model),
+                       "mlp": L.init_mlp_gelu(jax.random.fold_in(k, 1),
+                                              cfg.d_model, cfg.d_ff,
+                                              dtype=cfg.jdtype)},
+            ks[3], cfg.enc_layers)
+    else:
+        raise ValueError(cfg.kind)
+    if cfg.kind == "hybrid":
+        k1, k2 = jax.random.split(ks[4])
+        params["shared_attn"] = {
+            "ln1": L.init_rms_norm(cfg.d_model),
+            "attn": L.init_attention(k1, cfg.d_model, cfg.n_heads,
+                                     cfg.n_kv_heads, cfg.d_head,
+                                     dtype=cfg.jdtype),
+            "ln2": L.init_rms_norm(cfg.d_model),
+            "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff, dtype=cfg.jdtype)}
+    if cfg.kind == "vlm":
+        params["cross_layers"] = _stack_init(
+            lambda k: _init_cross_layer(k, cfg), ks[5], cfg.n_cross)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Blocks (full-sequence path)
+# ---------------------------------------------------------------------------
+
+
+def _constrain_heads(par: Parallelism, t, tp_ok: bool):
+    if tp_ok:
+        return par.constrain(t, par.data_spec, None, par.model_axis, None)
+    return t
+
+
+def _constrain_kv(par: Parallelism, t, kv_ok: bool):
+    """(B, S, K, Dh) K/V tensors: heads over model when they divide, else
+    sequence over model — keeps prefill-emitted KV caches sharded."""
+    if par.mesh is None:
+        return t
+    if kv_ok:
+        return par.constrain(t, par.data_spec, None, par.model_axis, None)
+    return par.constrain(t, par.data_spec, par.model_axis, None, None)
+
+
+def _self_attn_full(cfg, par, p, x, positions, *, causal=True,
+                    sliding_window=None, emit_kv=False, rope=True):
+    h = L.rms_norm(x, p["ln1"]["scale"])
+    q, k, v = L.attention_qkv(
+        p["attn"], h, cfg.n_heads, cfg.n_kv_heads, cfg.d_head, positions,
+        cfg.rope_theta if rope else 0.0, qk_norm=cfg.qk_norm)
+    tp_ok = par.mesh is not None and cfg.n_heads % par.model_size == 0
+    kv_ok = par.mesh is not None and cfg.n_kv_heads % par.model_size == 0
+    q = _constrain_heads(par, q, tp_ok)
+    if emit_kv:          # prefill: keep cache shards resident where they go
+        k = _constrain_kv(par, k, kv_ok)
+        v = _constrain_kv(par, v, kv_ok)
+    else:
+        k = _constrain_heads(par, k, kv_ok)
+        v = _constrain_heads(par, v, kv_ok)
+    o = L.flash_attention(q, k, v, causal=causal, q_positions=positions,
+                          kv_positions=positions,
+                          sliding_window=sliding_window,
+                          kv_chunk=cfg.attn_kv_chunk,
+                          q_chunk=cfg.attn_q_chunk,
+                          unroll=cfg.unroll_scans,
+                          causal_skip=cfg.attn_causal_skip)
+    o = _constrain_heads(par, o, tp_ok)
+    x = x + L.attention_out(p["attn"], o)
+    return (x, (k, v)) if emit_kv else (x, None)
+
+
+def _cross_attn_full(cfg, par, p_cross, x, memory, mem_key="cross"):
+    """Cross-attention: queries from x, kv from encoder/image memory."""
+    B, S, _ = x.shape
+    Sm = memory.shape[1]
+    q = (x @ p_cross["wq"]).reshape(B, S, cfg.n_heads, cfg.d_head)
+    k = (memory @ p_cross["wk"]).reshape(B, Sm, cfg.n_kv_heads, cfg.d_head)
+    v = (memory @ p_cross["wv"]).reshape(B, Sm, cfg.n_kv_heads, cfg.d_head)
+    if "q_norm" in p_cross:
+        q = L.rms_norm(q, p_cross["q_norm"])
+        k = L.rms_norm(k, p_cross["k_norm"])
+    o = L.flash_attention(q, k, v, causal=False,
+                          q_positions=jnp.arange(S),
+                          kv_positions=jnp.arange(Sm),
+                          kv_chunk=cfg.attn_kv_chunk,
+                          q_chunk=cfg.attn_q_chunk,
+                          unroll=cfg.unroll_scans)
+    return L.attention_out(p_cross, o)
+
+
+def _mlp_or_moe(cfg, par, p, x):
+    """Second half of a dense block.  Returns (x, aux_loss)."""
+    h = L.rms_norm(x, p["ln2"]["scale"])
+    if cfg.moe:
+        y, aux = moe_lib.moe_forward(p[cfg.moe_key], h, cfg.moe, par,
+                                     unroll=cfg.unroll_scans)
+        return x + y.astype(x.dtype), aux
+    return x + L.mlp(p["mlp"], h), jnp.float32(0.0)
+
+
+def _dense_block_full(cfg, par, p, x, positions, emit_kv=False):
+    x, kv = _self_attn_full(cfg, par, p, x, positions, causal=True,
+                            sliding_window=cfg.sliding_window,
+                            emit_kv=emit_kv)
+    x, aux = _mlp_or_moe(cfg, par, p, x)
+    return x, kv, aux
+
+
+def _ssm_block_full(cfg, par, p, x, emit_cache=False):
+    s = cfg.ssm
+    h = L.rms_norm(x, p["ln1"]["scale"])
+    out = ssm_lib.mamba2_forward(p["ssm"], h, head_dim=s.head_dim,
+                                 expand=s.expand, state=s.state,
+                                 n_groups=s.n_groups, chunk=s.chunk,
+                                 return_cache=emit_cache,
+                                 unroll=cfg.unroll_scans)
+    if emit_cache:
+        y, cache = out
+        return x + y.astype(x.dtype), cache
+    return x + out.astype(x.dtype), None
+
+
+def _shared_attn_block_full(cfg, par, p, x, positions, emit_kv=False):
+    x, kv = _self_attn_full(cfg, par, p, x, positions, causal=True,
+                            emit_kv=emit_kv)
+    x = x + L.mlp(p["mlp"], L.rms_norm(x, p["ln2"]["scale"]))
+    return x, kv
+
+
+def _remat(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    return jax.checkpoint(
+        fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train + prefill)
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(cfg, par, params, tokens):
+    x = params["embed"]["table"][tokens]
+    return par.constrain(x.astype(cfg.jdtype), par.data_spec, None, None)
+
+
+def _vlm_groups(cfg):
+    """[(cross_idx, layer_start, layer_end)] — cross block BEFORE each group."""
+    out = []
+    e = cfg.cross_attn_every
+    for g in range(cfg.n_cross):
+        out.append((g, g * e, min((g + 1) * e, cfg.n_layers)))
+    return out
+
+
+def _hybrid_groups(cfg):
+    out = []
+    e = cfg.hybrid_attn_every
+    for g in range(cfg.n_shared):
+        out.append((g, g * e, min((g + 1) * e, cfg.n_layers)))
+    return out
+
+
+def _slice_layers(stacked, s, e):
+    return jax.tree_util.tree_map(lambda a: a[s:e], stacked)
+
+
+def forward_hidden(cfg: ModelConfig, par: Parallelism, params, tokens,
+                   memory=None, collect_caches=False):
+    """tokens (B, S) -> final hidden states (B, S, d).
+
+    ``memory``: (B, Sm, d) encoder frames (encdec) or image patches (vlm).
+    ``collect_caches``: also return prefill caches (see ``prefill``)."""
+    B, S = tokens.shape
+    positions = jnp.arange(S)
+    x = embed_tokens(cfg, par, params, tokens)
+    caches: dict = {}
+    aux_total = jnp.float32(0.0)
+
+    if cfg.kind in ("dense", "moe"):
+        def body(xc, lp):
+            x, aux = xc
+            x, kv, aux_l = _dense_block_full(cfg, par, lp, x, positions,
+                                             emit_kv=collect_caches)
+            return (x, aux + aux_l), kv
+        (x, aux_total), kvs = jax.lax.scan(
+            _remat(cfg, body), (x, aux_total), params["layers"],
+            unroll=cfg.unroll_scans)
+        if collect_caches:
+            caches["self_kv"] = kvs
+
+    elif cfg.kind == "ssm":
+        def body(x, lp):
+            return _remat(cfg, lambda a, b: _ssm_block_full(
+                cfg, par, b, a, emit_cache=collect_caches))(x, lp)
+        x, ssm_caches = jax.lax.scan(body, x, params["layers"],
+                                     unroll=cfg.unroll_scans)
+        if collect_caches:
+            caches["ssm"] = ssm_caches
+
+    elif cfg.kind == "hybrid":
+        shared_kvs, ssm_caches = [], []
+        for g, s0, e0 in _hybrid_groups(cfg):
+            x, kv = _shared_attn_block_full(cfg, par, params["shared_attn"],
+                                            x, positions,
+                                            emit_kv=collect_caches)
+            if collect_caches:
+                shared_kvs.append(kv)
+            lp = _slice_layers(params["layers"], s0, e0)
+            def body(xx, lpp):
+                return _remat(cfg, lambda a, b: _ssm_block_full(
+                    cfg, par, b, a, emit_cache=collect_caches))(xx, lpp)
+            x, sc = jax.lax.scan(body, x, lp, unroll=cfg.unroll_scans)
+            if collect_caches:
+                ssm_caches.append(sc)
+        if collect_caches:
+            caches["shared_kv"] = (
+                jnp.stack([kv[0] for kv in shared_kvs]),
+                jnp.stack([kv[1] for kv in shared_kvs]))
+            caches["ssm"] = jax.tree_util.tree_map(
+                lambda *xs: jnp.concatenate(xs), *ssm_caches)
+
+    elif cfg.kind == "vlm":
+        assert memory is not None, "vlm needs image patch embeddings"
+        memory = memory.astype(cfg.jdtype)
+        for g, s0, e0 in _vlm_groups(cfg):
+            cp = jax.tree_util.tree_map(lambda a: a[g],
+                                        params["cross_layers"])
+            h = L.rms_norm(x, cp["ln1"]["scale"])
+            attn_out = _cross_attn_full(cfg, par, cp["cross"], h, memory)
+            x = x + jnp.tanh(cp["gate_attn"]) * attn_out.astype(x.dtype)
+            x = x + jnp.tanh(cp["gate_mlp"]) * L.mlp(
+                cp["mlp"], L.rms_norm(x, cp["ln2"]["scale"])).astype(x.dtype)
+            lp = _slice_layers(params["layers"], s0, e0)
+            def body(xc, lpp):
+                xx, aux = xc
+                xx, kv, aux_l = _dense_block_full(cfg, par, lpp, xx,
+                                                  positions,
+                                                  emit_kv=collect_caches)
+                return (xx, aux + aux_l), kv
+            (x, aux_total), kvs = jax.lax.scan(_remat(cfg, body),
+                                               (x, aux_total), lp,
+                                               unroll=cfg.unroll_scans)
+            if collect_caches:
+                caches.setdefault("self_kv_groups", []).append(kvs)
+        if collect_caches:
+            groups = caches.pop("self_kv_groups")
+            caches["self_kv"] = tuple(
+                jnp.concatenate([g[i] for g in groups]) for i in range(2))
+            caches["cross_kv"] = _vlm_cross_kv(cfg, params, memory)
+
+    elif cfg.kind == "encdec":
+        assert memory is not None, "encdec needs encoder frame embeddings"
+        enc = _encode(cfg, par, params, memory)
+        caches["enc_out"] = enc if collect_caches else None
+        def body(xc, lp):
+            x, aux = xc
+            x, kv = _self_attn_full(cfg, par, lp, x, positions, causal=True,
+                                    emit_kv=collect_caches)
+            h = L.rms_norm(x, lp["ln2"]["scale"])
+            x = x + _cross_attn_full(cfg, par, lp["cross"], h,
+                                     enc).astype(x.dtype)
+            x = x + L.mlp_gelu(lp["mlp"], L.rms_norm(x, lp["ln3"]["scale"]))
+            return (x, aux), kv
+        (x, aux_total), kvs = jax.lax.scan(_remat(cfg, body),
+                                           (x, aux_total), params["layers"],
+                                           unroll=cfg.unroll_scans)
+        if collect_caches:
+            caches["self_kv"] = kvs
+            caches["cross_kv"] = _encdec_cross_kv(cfg, params, enc)
+    else:
+        raise ValueError(cfg.kind)
+
+    x = L.rms_norm(x, params["final_norm"]["scale"])
+    return (x, aux_total, caches) if collect_caches else (x, aux_total)
+
+
+def _encode(cfg, par, params, frames):
+    """Whisper-style encoder over precomputed frame embeddings (stub
+    frontend): sinusoidal positions + bidirectional attention stack."""
+    frames = frames.astype(cfg.jdtype)
+    B, Sm, d = frames.shape
+    pos = jnp.arange(Sm)[:, None] / (
+        10000 ** (jnp.arange(0, d, 2)[None, :] / d))
+    pe = jnp.concatenate([jnp.sin(pos), jnp.cos(pos)], axis=-1)[None]
+    x = frames + pe.astype(cfg.jdtype)
+    positions = jnp.arange(Sm)
+
+    def body(x, lp):
+        x, _ = _self_attn_full(cfg, par, lp, x, positions, causal=False,
+                               rope=False)
+        x = x + L.mlp_gelu(lp["mlp"], L.rms_norm(x, lp["ln2"]["scale"]))
+        return x, None
+    x, _ = jax.lax.scan(_remat(cfg, body), x, params["encoder"],
+                        unroll=cfg.unroll_scans)
+    return x
+
+
+def _encdec_cross_kv(cfg, params, enc):
+    """Per-decoder-layer cross K/V over the encoder output (prefill)."""
+    B, Sm, _ = enc.shape
+    def proj(lp):
+        k = (enc @ lp["cross"]["wk"]).reshape(B, Sm, cfg.n_kv_heads,
+                                              cfg.d_head)
+        v = (enc @ lp["cross"]["wv"]).reshape(B, Sm, cfg.n_kv_heads,
+                                              cfg.d_head)
+        return k, v
+    _, kv = jax.lax.scan(lambda c, lp: (c, proj(lp)), None,
+                         params["layers"], unroll=cfg.unroll_scans)
+    return kv
+
+
+def _vlm_cross_kv(cfg, params, memory):
+    B, Sm, _ = memory.shape
+    def proj(cp):
+        k = (memory @ cp["cross"]["wk"]).reshape(B, Sm, cfg.n_kv_heads,
+                                                 cfg.d_head)
+        v = (memory @ cp["cross"]["wv"]).reshape(B, Sm, cfg.n_kv_heads,
+                                                 cfg.d_head)
+        return k, v
+    _, kv = jax.lax.scan(lambda c, cp: (c, proj(cp)), None,
+                         params["cross_layers"], unroll=cfg.unroll_scans)
+    return kv
+
+
+# ---------------------------------------------------------------------------
+# Loss (chunked cross-entropy)
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(cfg: ModelConfig, par: Parallelism, params, hidden, tokens,
+            chunk: int = 512):
+    """Next-token CE, scanned over sequence chunks so the (B, tc, V)
+    logits tensor never exceeds one chunk.  S−1 is padded (masked) up to a
+    chunk multiple — the chunk count stays small for any S (S−1 is odd!)."""
+    B, S, d = hidden.shape
+    h = hidden[:, :-1, :]
+    t = tokens[:, 1:]
+    n = S - 1
+    tc = min(chunk, n)
+    n_pad = (n + tc - 1) // tc * tc
+    if n_pad != n:
+        h = jnp.pad(h, ((0, 0), (0, n_pad - n), (0, 0)))
+        t = jnp.pad(t, ((0, 0), (0, n_pad - n)))
+    valid = (jnp.arange(n_pad) < n).astype(jnp.float32)
+    hc = h.reshape(B, n_pad // tc, tc, d).transpose(1, 0, 2, 3)
+    tt = t.reshape(B, n_pad // tc, tc).transpose(1, 0, 2)
+    vv = valid.reshape(n_pad // tc, 1, tc)
+
+    def step(acc, inp):
+        hcc, tcc, vcc = inp
+        logits = (hcc.astype(jnp.float32)
+                  @ params["lm_head"].astype(jnp.float32))
+        logits = par.constrain(logits, par.data_spec, None, par.model_axis)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, tcc[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum((lse - ll) * vcc), None
+
+    total, _ = jax.lax.scan(step, jnp.float32(0.0), (hc, tt, vv),
+                            unroll=cfg.unroll_scans)
+    return total / (B * n)
+
+
+def train_loss(cfg: ModelConfig, par: Parallelism, params, batch):
+    """Full training loss: LM CE + MoE aux."""
+    hidden, aux = forward_hidden(cfg, par, params, batch["tokens"],
+                                 memory=batch.get("memory"))
+    loss = lm_loss(cfg, par, params, hidden, batch["tokens"])
+    if cfg.moe:
+        loss = loss + cfg.moe.aux_loss_coef * aux
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+_INVALID_POS = jnp.int32(2 ** 30)   # cache-slot sentinel: always masked out
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_seq: int):
+    """Abstract cache layout (ShapeDtypeStructs) for ``input_specs``."""
+    f32 = jnp.float32
+    dt = cfg.jdtype
+    window = min(max_seq, cfg.sliding_window or max_seq)
+    c = {"pos": jax.ShapeDtypeStruct((), jnp.int32),
+         "kv_positions": jax.ShapeDtypeStruct((batch, window), jnp.int32)}
+    kv = lambda n, s: (jax.ShapeDtypeStruct(
+        (n, batch, s, cfg.n_kv_heads, cfg.d_head), dt),) * 2
+    if cfg.kind in ("dense", "moe", "vlm", "encdec"):
+        c["self_kv"] = kv(cfg.n_layers, window)
+    if cfg.kind == "vlm":
+        c["cross_kv"] = kv(cfg.n_cross, cfg.img_tokens)
+    if cfg.kind == "encdec":
+        c["cross_kv"] = kv(cfg.n_layers, cfg.enc_seq)
+    if cfg.kind in ("ssm", "hybrid"):
+        s = cfg.ssm
+        d_inner, n_heads, conv_dim = ssm_lib.ssm_dims(
+            cfg.d_model, s.head_dim, s.expand, s.state, s.n_groups)
+        c["ssm"] = {
+            "ssm": jax.ShapeDtypeStruct(
+                (cfg.n_layers, batch, n_heads, s.head_dim, s.state), f32),
+            "conv": jax.ShapeDtypeStruct(
+                (cfg.n_layers, batch, s.d_conv - 1, conv_dim), f32)}
+    if cfg.kind == "hybrid":
+        c["shared_kv"] = kv(cfg.n_shared, window)
+    return c
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    spec = cache_spec(cfg, batch, max_seq)
+    c = jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+    c["kv_positions"] = jnp.full_like(c["kv_positions"], _INVALID_POS)
+    return c
+
+
+def _attn_decode(cfg, par, p_attn, x1, k_cache, v_cache, kv_positions, pos,
+                 sliding_window=None, rope=True):
+    """One-token attention against a cache layer.  x1: (B, 1, d).
+
+    GQA is computed with grouped einsums — the KV cache is NEVER
+    head-repeated.  Repeating a sequence-sharded cache makes GSPMD
+    re-shard it onto heads (21 GB of all-gathers per layer on
+    decode_32k — EXPERIMENTS.md §Perf iter 4b); the grouped form keeps
+    every einsum batched over the true kv heads, so the cache stays in
+    its sharded layout and only the tiny (B,K,G,Dh) partials reduce."""
+    B = x1.shape[0]
+    H, K = cfg.n_heads, cfg.n_kv_heads
+    G = H // K
+    q = (x1 @ p_attn["wq"]).reshape(B, 1, H, cfg.d_head)
+    if "q_norm" in p_attn:
+        q = L.rms_norm(q, p_attn["q_norm"])
+    if rope and cfg.rope_theta:
+        q = L.apply_rope(q, jnp.full((B, 1), pos), cfg.rope_theta)
+    qg = q.reshape(B, K, G, cfg.d_head)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) / math.sqrt(cfg.d_head)
+    mask = kv_positions[:, None, None, :] <= pos
+    if sliding_window is not None:
+        mask &= kv_positions[:, None, None, :] > pos - sliding_window
+    s = jnp.where(mask, s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", pr.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32).astype(x1.dtype)
+    o = o.reshape(B, 1, H, cfg.d_head)
+    return L.attention_out(p_attn, o)
+
+
+def _write_kv(cfg, p_attn, x1, k_cache, v_cache, slot, pos, rope=True):
+    """Project current token K/V and write to cache at ``slot``.
+
+    The write is a one-hot masked select, NOT dynamic_update_slice: the
+    cache sequence dim is sharded (flash-decode SP layout) and a dynamic
+    update at a traced index forces GSPMD to all-gather the whole cache
+    (measured 43 GB/step on granite decode_32k — EXPERIMENTS.md §Perf).
+    The masked write is elementwise, so every shard updates (or leaves)
+    its own slots locally."""
+    B = x1.shape[0]
+    k = (x1 @ p_attn["wk"]).reshape(B, 1, cfg.n_kv_heads, cfg.d_head)
+    v = (x1 @ p_attn["wv"]).reshape(B, 1, cfg.n_kv_heads, cfg.d_head)
+    if "k_norm" in p_attn:
+        k = L.rms_norm(k, p_attn["k_norm"])
+    if rope and cfg.rope_theta:
+        k = L.apply_rope(k, jnp.full((B, 1), pos), cfg.rope_theta)
+    hot = (jnp.arange(k_cache.shape[1]) == slot)[None, :, None, None]
+    k_cache = jnp.where(hot, k.astype(k_cache.dtype), k_cache)
+    v_cache = jnp.where(hot, v.astype(v_cache.dtype), v_cache)
+    return k_cache, v_cache
+
+
+def decode_step(cfg: ModelConfig, par: Parallelism, params, cache, tokens):
+    """One decode step.  tokens (B, 1) — returns (logits (B, V), cache')."""
+    B = tokens.shape[0]
+    pos = cache["pos"]
+    window = cache["kv_positions"].shape[1]
+    slot = pos % window
+    x = embed_tokens(cfg, par, params, tokens)
+    kv_positions = jnp.where(
+        (jnp.arange(window) == slot)[None, :],
+        jnp.full((B, 1), pos, jnp.int32), cache["kv_positions"])
+    new_cache = dict(cache)
+    new_cache["kv_positions"] = kv_positions
+    sw = cfg.sliding_window
+
+    if cfg.kind in ("dense", "moe"):
+        def body(x, inp):
+            lp, kc, vc = inp
+            h = L.rms_norm(x, lp["ln1"]["scale"])
+            kc, vc = _write_kv(cfg, lp["attn"], h, kc, vc, slot, pos)
+            x = x + _attn_decode(cfg, par, lp["attn"], h, kc, vc,
+                                 kv_positions, pos, sliding_window=sw)
+            x, _ = _mlp_or_moe(cfg, par, lp, x)
+            return x, (kc, vc)
+        x, (kcs, vcs) = jax.lax.scan(
+            body, x, (params["layers"],) + tuple(cache["self_kv"]),
+            unroll=cfg.unroll_scans)
+        new_cache["self_kv"] = (kcs, vcs)
+
+    elif cfg.kind == "ssm":
+        s = cfg.ssm
+        def body(x, inp):
+            lp, lc = inp
+            h = L.rms_norm(x, lp["ln1"]["scale"])
+            y, nc = ssm_lib.mamba2_decode_step(
+                lp["ssm"], h, lc, head_dim=s.head_dim, expand=s.expand,
+                state=s.state, n_groups=s.n_groups)
+            return x + y.astype(x.dtype), nc
+        x, ssm_new = jax.lax.scan(body, x, (params["layers"], cache["ssm"]),
+                                  unroll=cfg.unroll_scans)
+        new_cache["ssm"] = ssm_new
+
+    elif cfg.kind == "hybrid":
+        s = cfg.ssm
+        sk, sv = cache["shared_kv"]
+        ssm_out, sk_out, sv_out = [], [], []
+        for g, s0, e0 in _hybrid_groups(cfg):
+            sp = params["shared_attn"]
+            h = L.rms_norm(x, sp["ln1"]["scale"])
+            kc, vc = _write_kv(cfg, sp["attn"], h, sk[g], sv[g], slot, pos)
+            x = x + _attn_decode(cfg, par, sp["attn"], h, kc, vc,
+                                 kv_positions, pos)
+            x = x + L.mlp(sp["mlp"], L.rms_norm(x, sp["ln2"]["scale"]))
+            sk_out.append(kc)
+            sv_out.append(vc)
+            lp = _slice_layers(params["layers"], s0, e0)
+            lc = jax.tree_util.tree_map(lambda a: a[s0:e0], cache["ssm"])
+            def body(xx, inp):
+                lpp, lcc = inp
+                h = L.rms_norm(xx, lpp["ln1"]["scale"])
+                y, nc = ssm_lib.mamba2_decode_step(
+                    lpp["ssm"], h, lcc, head_dim=s.head_dim, expand=s.expand,
+                    state=s.state, n_groups=s.n_groups)
+                return xx + y.astype(xx.dtype), nc
+            x, nc = jax.lax.scan(body, x, (lp, lc),
+                                 unroll=cfg.unroll_scans)
+            ssm_out.append(nc)
+        new_cache["shared_kv"] = (jnp.stack(sk_out), jnp.stack(sv_out))
+        new_cache["ssm"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.concatenate(xs), *ssm_out)
+
+    elif cfg.kind == "vlm":
+        ck, cv = cache["cross_kv"]
+        sk, sv = cache["self_kv"]
+        sk_out, sv_out = [], []
+        img_pos = jnp.arange(ck.shape[2])
+        for g, s0, e0 in _vlm_groups(cfg):
+            cp = jax.tree_util.tree_map(lambda a: a[g],
+                                        params["cross_layers"])
+            h = L.rms_norm(x, cp["ln1"]["scale"])
+            q = (h @ cp["cross"]["wq"]).reshape(B, 1, cfg.n_heads, cfg.d_head)
+            if "q_norm" in cp["cross"]:
+                q = L.rms_norm(q, cp["cross"]["q_norm"])
+            o = L.naive_attention(q, ck[g], cv[g], causal=False,
+                                  q_positions=jnp.zeros((B, 1), jnp.int32),
+                                  kv_positions=img_pos)
+            x = x + jnp.tanh(cp["gate_attn"]) * L.attention_out(
+                cp["cross"], o).astype(x.dtype)
+            x = x + jnp.tanh(cp["gate_mlp"]) * L.mlp(
+                cp["mlp"], L.rms_norm(x, cp["ln2"]["scale"])).astype(x.dtype)
+            lp = _slice_layers(params["layers"], s0, e0)
+            def body(xx, inp):
+                lpp, kc, vc = inp
+                h = L.rms_norm(xx, lpp["ln1"]["scale"])
+                kc, vc = _write_kv(cfg, lpp["attn"], h, kc, vc, slot, pos)
+                xx = xx + _attn_decode(cfg, par, lpp["attn"], h, kc, vc,
+                                       kv_positions, pos)
+                xx, _ = _mlp_or_moe(cfg, par, lpp, xx)
+                return xx, (kc, vc)
+            x, (kcs, vcs) = jax.lax.scan(body, x, (lp, sk[s0:e0], sv[s0:e0]),
+                                         unroll=cfg.unroll_scans)
+            sk_out.append(kcs)
+            sv_out.append(vcs)
+        new_cache["self_kv"] = (jnp.concatenate(sk_out),
+                                jnp.concatenate(sv_out))
+
+    elif cfg.kind == "encdec":
+        ck, cv = cache["cross_kv"]
+        enc_pos = jnp.arange(ck.shape[2])
+        def body(x, inp):
+            lp, kc, vc, ckl, cvl = inp
+            h = L.rms_norm(x, lp["ln1"]["scale"])
+            kc, vc = _write_kv(cfg, lp["attn"], h, kc, vc, slot, pos)
+            x = x + _attn_decode(cfg, par, lp["attn"], h, kc, vc,
+                                 kv_positions, pos)
+            h = L.rms_norm(x, lp["ln2"]["scale"])
+            q = (h @ lp["cross"]["wq"]).reshape(B, 1, cfg.n_heads, cfg.d_head)
+            o = L.naive_attention(q, ckl, cvl, causal=False,
+                                  q_positions=jnp.zeros((B, 1), jnp.int32),
+                                  kv_positions=enc_pos)
+            x = x + L.attention_out(lp["cross"], o).astype(x.dtype)
+            x = x + L.mlp_gelu(lp["mlp"], L.rms_norm(x, lp["ln3"]["scale"]))
+            return x, (kc, vc)
+        x, (kcs, vcs) = jax.lax.scan(
+            body, x, (params["layers"],) + tuple(cache["self_kv"])
+            + (ck, cv), unroll=cfg.unroll_scans)
+        new_cache["self_kv"] = (kcs, vcs)
+    else:
+        raise ValueError(cfg.kind)
+
+    x = L.rms_norm(x, params["final_norm"]["scale"])
+    logits = (x[:, 0, :] @ params["lm_head"]).astype(jnp.float32)
+    logits = par.constrain(logits, par.data_spec, par.model_axis)
+    new_cache["pos"] = pos + 1
+    return logits, new_cache
+
+
+def prefill(cfg: ModelConfig, par: Parallelism, params, tokens, memory=None,
+            max_seq: int | None = None):
+    """Full-sequence prefill: returns (last-token logits, populated cache)."""
+    B, S = tokens.shape
+    hidden, _aux, caches = forward_hidden(cfg, par, params, tokens,
+                                          memory=memory, collect_caches=True)
+    logits = (hidden[:, -1, :] @ params["lm_head"]).astype(jnp.float32)
+    max_seq = max_seq or S
+    window = min(max_seq, cfg.sliding_window or max_seq)
+    cache = init_cache(cfg, B, max_seq)
+    cache["pos"] = jnp.int32(S)
+
+    def fit_window(k):   # (L, B, S, K, Dh) -> ring slots (slot = pos % W)
+        if k.shape[2] <= window:
+            pad = window - k.shape[2]
+            return jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        # keep the last `window` positions, placed so that position p sits
+        # at slot p % window — the invariant decode's ring writes assume.
+        return jnp.roll(k[:, :, -window:], S % window, axis=2)
+
+    if S >= window:
+        kv_pos = jnp.roll(jnp.arange(S)[-window:], S % window)
+    else:
+        kv_pos = jnp.concatenate(
+            [jnp.arange(S), jnp.full((window - S,), _INVALID_POS)])
+    cache["kv_positions"] = jnp.broadcast_to(kv_pos[None, :], (B, window)
+                                             ).astype(jnp.int32)
+    if "self_kv" in caches and "self_kv" in cache:
+        cache["self_kv"] = tuple(
+            fit_window(k.astype(cfg.jdtype)) for k in caches["self_kv"])
+    if cfg.kind == "hybrid":
+        cache["shared_kv"] = tuple(
+            fit_window(k.astype(cfg.jdtype)) for k in caches["shared_kv"])
+        cache["ssm"] = caches["ssm"]
+    if cfg.kind == "ssm":
+        cache["ssm"] = caches["ssm"]
+    if cfg.kind in ("vlm", "encdec"):
+        cache["cross_kv"] = tuple(
+            k.astype(cfg.jdtype) for k in caches["cross_kv"])
+    return logits, cache

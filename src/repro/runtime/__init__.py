@@ -1,0 +1,2 @@
+"""Distributed runtime: sharding rules, parallelism descriptor, HLO
+collective parsing, roofline model, fault tolerance."""

@@ -1,0 +1,172 @@
+"""HLO-text analysis: collective-traffic extraction for the roofline.
+
+``cost_analysis()`` gives FLOPs and HBM bytes but not collective traffic —
+we parse the compiled (post-SPMD-partitioning) HLO text and sum the bytes
+every collective op moves, weighted by its ring-traffic factor:
+
+  all-gather         : result bytes        (each chip receives ≈ full result)
+  reduce-scatter     : operand bytes       (each chip sends ≈ full operand)
+  all-reduce         : 2 × operand bytes   (ring RS + AG)
+  all-to-all         : operand bytes
+  collective-permute : operand bytes
+
+This is the per-chip *link traffic* model matching the
+``collective_bytes / (chips × link_bw)`` roofline term.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+# result = OP(operands...) — HLO text: `%name = TYPE[SHAPE]{layout} opname(`
+_OP_RE = re.compile(
+    r"=\s+(\(?[\w\[\],{}\s/#*]*?\)?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+
+_WEIGHTS = {
+    "all-gather": ("result", 1.0),
+    "reduce-scatter": ("result", 1.0),   # operand ≈ result × shards; use
+                                         # result×1 per-chip *received*; the
+                                         # sent side is counted by the AG of
+                                         # the pair (AR counts both).
+    "all-reduce": ("result", 2.0),
+    "all-to-all": ("result", 1.0),
+    "collective-permute": ("result", 1.0),
+}
+
+
+def _shape_bytes(sig: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(sig):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict
+    counts_by_kind: dict
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.bytes_by_kind.values()))
+
+    def summary(self) -> dict:
+        return {"total_bytes": self.total_bytes,
+                "by_kind": dict(self.bytes_by_kind),
+                "counts": dict(self.counts_by_kind)}
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum weighted collective bytes over a compiled HLO module text,
+    multiplying ops inside while-loop bodies by the loop trip count
+    (XLA records ``known_trip_count`` in each while's backend_config —
+    scan-lowered loops always carry it).
+
+    ``-start``/``-done`` async pairs are counted once (the ``-done`` op
+    repeats the shape; we skip lines containing '-done(')."""
+    comps = _segment_computations(hlo_text)
+    mults = _computation_multipliers(comps)
+    bytes_by = defaultdict(float)
+    counts = defaultdict(int)
+    for name, comp in comps.items():
+        mult = mults.get(name, 1.0)
+        for line in comp["lines"]:
+            if "-done(" in line:
+                continue
+            m = _OP_RE.search(line)
+            if not m:
+                continue
+            sig, kind = m.group(1), m.group(2)
+            _, weight = _WEIGHTS[kind]
+            b = _shape_bytes(sig)
+            # XLA-CPU materialises bf16 all-reduces as f32 with a
+            # "*_promoted" reducer (convert → AR(f32) → convert).  The TPU
+            # target moves bf16 on the wire (f32 accumulation happens in
+            # the reducer) — count the wire width.
+            if "_promoted" in line:
+                b //= 2
+            bytes_by[kind] += weight * b * mult
+            counts[kind] += int(mult)
+    return CollectiveStats(bytes_by_kind=dict(bytes_by),
+                           counts_by_kind=dict(counts))
+
+
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\)[^\{]*)?\{\s*$")
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALL_RE = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+_BRANCH_RE = re.compile(r"branches=\{([^}]*)\}")
+
+
+def _segment_computations(hlo_text: str) -> dict:
+    comps = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        h = _HEADER_RE.match(line)
+        if h and ("->" in line or h.group(1)):
+            cur = h.group(2)
+            comps[cur] = {"lines": [], "entry": bool(h.group(1)),
+                          "children": []}
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        comps[cur]["lines"].append(line)
+        w = _WHILE_RE.search(line)
+        if w:
+            trip = _TRIP_RE.search(line)
+            t = int(trip.group(1)) if trip else 1
+            comps[cur]["children"].append((w.group(2), t))   # body × trips
+            comps[cur]["children"].append((w.group(1), t))   # condition
+            continue
+        b = _BRANCH_RE.search(line)
+        if b:
+            for br in b.group(1).split(","):
+                comps[cur]["children"].append((br.strip().lstrip("%"), 1))
+            continue
+        c = _CALL_RE.search(line)
+        if c:
+            comps[cur]["children"].append((c.group(1), 1))
+    return comps
+
+
+def _computation_multipliers(comps: dict) -> dict:
+    mults = defaultdict(float)
+    entries = [n for n, c in comps.items() if c["entry"]] or list(comps)[:1]
+    stack = [(e, 1.0) for e in entries]
+    seen_guard = 0
+    while stack:
+        name, mult = stack.pop()
+        seen_guard += 1
+        if seen_guard > 100_000:       # malformed text — bail safely
+            break
+        mults[name] += mult
+        for child, trips in comps.get(name, {}).get("children", []):
+            if child in comps:
+                stack.append((child, mult * trips))
+    return dict(mults)
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))

@@ -1,0 +1,188 @@
+"""Exact trip-count-aware cost model: walk the lowered jaxpr.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE, so any
+scanned program (layer stacks, flash-attention chunks, microbatch
+accumulation) is under-reported by orders of magnitude.  Compiling fully
+unrolled variants is exact but prohibitively slow on this container.
+
+Instead we walk the *jaxpr* of the very function the dry-run lowers —
+multiplying every ``scan`` body by its trip count and every ``shard_map``
+body by its device count — and produce:
+
+  * ``flops``  (global): exact for dot_general / ragged_dot / conv;
+    elementwise ops contribute size-1 flops per output element.
+  * ``bytes``  (global HBM traffic estimate): operand+result bytes of the
+    *materialising* ops (dots, gathers/scatters, sorts, collectives, scan
+    carries); pure elementwise/layout ops are assumed fused (TPU XLA fuses
+    them into the producing/consuming op).  Validated against
+    cost_analysis on small single-device unrolled configs
+    (tests/test_jaxpr_cost.py) — agreement within tens of %, and exact on
+    pure-matmul programs.
+  * ``collective_bytes`` (global): psum/all_gather/... issued explicitly
+    (shard_map regions).  GSPMD-inserted collectives are NOT visible in
+    the jaxpr — those come from the compiled HLO parse (runtime/hlo.py)
+    with while-body trip multiplication.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import reduce
+from operator import mul
+
+import jax
+import numpy as np
+
+
+def _nbytes(aval) -> int:
+    try:
+        return int(np.dtype(aval.dtype).itemsize) * int(
+            reduce(mul, aval.shape, 1))
+    except Exception:  # noqa: BLE001 — abstract tokens etc.
+        return 0
+
+
+def _size(aval) -> int:
+    try:
+        return int(reduce(mul, aval.shape, 1))
+    except Exception:  # noqa: BLE001
+        return 0
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+
+    def __iadd__(self, o):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        self.collective_bytes += o.collective_bytes
+        return self
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(self.flops * k, self.bytes * k,
+                    self.collective_bytes * k)
+
+
+_DOTLIKE = {"dot_general", "ragged_dot", "ragged_dot_general",
+            "conv_general_dilated"}
+_MATERIALIZING = {"gather", "scatter", "scatter-add", "scatter_add",
+                  "dynamic_slice", "dynamic_update_slice", "sort",
+                  "argsort", "take", "concatenate", "cumsum", "cumlogsumexp",
+                  "reduce_sum", "reduce_max", "reduce_min", "top_k",
+                  "segment_sum", "iota"}
+_COLLECTIVES = {"psum", "all_gather", "ppermute", "all_to_all",
+                "pmax", "pmin", "reduce_scatter", "psum_scatter"}
+
+
+def _dot_flops(eqn) -> float:
+    if eqn.primitive.name == "dot_general":
+        dims = eqn.params["dimension_numbers"]
+        (lc, rc), (lb, rb) = dims
+        lhs = eqn.invars[0].aval
+        m = _size(lhs) // max(1, int(reduce(
+            mul, [lhs.shape[i] for i in lc], 1)))
+        k = int(reduce(mul, [lhs.shape[i] for i in lc], 1))
+        out = _size(eqn.outvars[0].aval)
+        # flops = 2 · (batch·m·n) · k == 2 · out_size · k
+        return 2.0 * out * k
+    if eqn.primitive.name in ("ragged_dot", "ragged_dot_general"):
+        # Every lhs row hits exactly one expert group, so
+        # flops = 2 · size(lhs) · (rhs dims excluding group+contract).
+        # Holds for the fwd and both transposes (dw / dx).
+        lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+        dn = eqn.params.get("ragged_dot_dimension_numbers")
+        if dn is None:              # plain ragged_dot: rhs (g, k, n)
+            group, contract = (0,), (1,)
+        else:
+            group = tuple(dn.rhs_group_dimensions)
+            contract = tuple(dn.dot_dimension_numbers[0][1])
+        excl = 1
+        for i in set(group) | set(contract):
+            excl *= rhs.shape[i]
+        rhs_other = _size(rhs) // max(1, excl)
+        return 2.0 * _size(lhs) * rhs_other
+    if eqn.primitive.name == "conv_general_dilated":
+        out = _size(eqn.outvars[0].aval)
+        rhs = eqn.invars[1].aval
+        k = _size(rhs) // max(1, rhs.shape[-1])
+        return 2.0 * out * k
+    return 0.0
+
+
+def _walk(jaxpr, mult: float, cost: Cost):
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "scan":
+            length = eqn.params["length"]
+            unroll_mult = mult * length
+            _walk(eqn.params["jaxpr"].jaxpr, unroll_mult, cost)
+            # carries stream through HBM each step
+            for v in eqn.params["jaxpr"].jaxpr.invars[
+                    :eqn.params["num_carry"]]:
+                cost.bytes += 2 * _nbytes(v.aval) * unroll_mult
+            continue
+        if name == "while":
+            # not emitted by this codebase directly; count body once
+            _walk(eqn.params["body_jaxpr"].jaxpr, mult, cost)
+            continue
+        if name == "cond":
+            for br in eqn.params["branches"]:
+                _walk(br.jaxpr, mult, cost)
+            continue
+        if name in ("pjit", "closed_call", "core_call", "remat2", "remat",
+                    "checkpoint", "custom_jvp_call", "custom_vjp_call",
+                    "custom_vjp_call_jaxpr"):
+            inner = (eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+                     or eqn.params.get("fun_jaxpr"))
+            if inner is not None:
+                _walk(inner.jaxpr if hasattr(inner, "jaxpr") else inner,
+                      mult, cost)
+            continue
+        if name == "shard_map":
+            inner = eqn.params.get("jaxpr")
+            mesh = eqn.params.get("mesh")
+            ndev = 1
+            try:
+                ndev = int(np.prod(list(mesh.shape.values())))
+            except Exception:  # noqa: BLE001
+                ndev = 1
+            # body shapes are PER-SHARD; run on every device
+            _walk(inner.jaxpr if hasattr(inner, "jaxpr") else inner,
+                  mult * ndev, cost)
+            continue
+        if name in _COLLECTIVES:
+            b = sum(_nbytes(v.aval) for v in eqn.invars
+                    if hasattr(v, "aval"))
+            w = 2.0 if name in ("psum", "pmax", "pmin") else 1.0
+            cost.collective_bytes += w * b * mult
+            cost.bytes += 2 * b * mult
+            continue
+        if name in _DOTLIKE:
+            cost.flops += _dot_flops(eqn) * mult
+            io = sum(_nbytes(v.aval) for v in list(eqn.invars)
+                     + list(eqn.outvars) if hasattr(v, "aval"))
+            cost.bytes += io * mult
+            continue
+        if name in _MATERIALIZING:
+            io = sum(_nbytes(v.aval) for v in list(eqn.invars)
+                     + list(eqn.outvars) if hasattr(v, "aval"))
+            cost.bytes += io * mult
+            continue
+        # elementwise / layout: ~1 flop per output element, fused (no HBM)
+        out_sz = sum(_size(v.aval) for v in eqn.outvars
+                     if hasattr(v, "aval"))
+        cost.flops += out_sz * mult
+
+
+def jaxpr_cost(fn, *args, **kwargs) -> Cost:
+    """Cost of ``fn(*args)`` (ShapeDtypeStructs fine) — global totals."""
+    closed = jax.make_jaxpr(fn, **kwargs)(*args)
+    cost = Cost()
+    _walk(closed.jaxpr, 1.0, cost)
+    # program inputs/outputs cross HBM once
+    for v in list(closed.jaxpr.invars) + list(closed.jaxpr.outvars):
+        if hasattr(v, "aval"):
+            cost.bytes += _nbytes(v.aval)
+    return cost

@@ -1,0 +1,98 @@
+"""Three-term roofline model for TPU v5e (the dry-run target).
+
+    compute    = HLO_FLOPs        / (chips × 197e12 FLOP/s bf16)
+    memory     = HLO_bytes        / (chips × 819e9  B/s HBM)
+    collective = collective_bytes / (chips × 50e9   B/s ICI per link)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()`` (whole-module,
+all chips → divide by chip count); collective_bytes comes from
+``runtime.hlo.parse_collectives`` over the post-partitioning module text
+(per-chip traffic already).  MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D
+(MoE) gives the useful-compute ratio.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    chips: int
+    model_flops: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-FLOPs time / bound time — the score we hillclimb."""
+        if self.bound_s <= 0:
+            return 0.0
+        return (self.model_flops / (self.chips * PEAK_FLOPS)) / self.bound_s
+
+    def as_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "collective_bytes": self.collective_bytes,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "chips": self.chips,
+        }
+
+
+def terms_from_analysis(cost: dict, collective_bytes: float,
+                        chips: int, model_flops: float = 0.0
+                        ) -> RooflineTerms:
+    """``cost`` is ``compiled.cost_analysis()`` of the PER-DEVICE SPMD
+    module (XLA reports per-device flops/bytes — verified empirically), and
+    ``collective_bytes`` is the per-device link traffic.  Multiplying back
+    by ``chips`` recovers the spec's global-HLO formulation:
+    global_flops / (chips × peak) == per_device_flops / peak."""
+    flops = float(cost.get("flops", 0.0))
+    b = float(cost.get("bytes accessed", 0.0))
+    return RooflineTerms(
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=b / HBM_BW,
+        collective_s=collective_bytes / ICI_BW,
+        hlo_flops=flops * chips,           # global, for the useful ratio
+        hlo_bytes=b * chips,
+        collective_bytes=collective_bytes, chips=chips,
+        model_flops=model_flops)
+
+
+def model_flops_train(cfg, n_tokens: int) -> float:
+    """6·N·D (dense) or 6·N_active·D (MoE) for one training step."""
+    return 6.0 * cfg.active_param_count() * n_tokens
+
+
+def model_flops_decode(cfg, n_tokens: int) -> float:
+    """2·N_active per generated token (forward only)."""
+    return 2.0 * cfg.active_param_count() * n_tokens
+
+
+def model_flops_prefill(cfg, n_tokens: int) -> float:
+    return 2.0 * cfg.active_param_count() * n_tokens

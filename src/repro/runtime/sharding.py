@@ -1,0 +1,195 @@
+"""Parallelism descriptor + parameter sharding rules (path → PartitionSpec).
+
+Mesh layout (launch/mesh.py):
+  single-pod: (data=16, model=16)          — 256 chips
+  multi-pod:  (pod=2, data=16, model=16)   — 512 chips
+
+Mapping:
+  * batch  → ('pod', 'data')   (DP; hierarchical gradient reduction)
+  * TP     → 'model'           (heads / d_ff / vocab, Megatron-style)
+  * FSDP   → 'data'            (params + optimizer state sharded over the
+                                in-pod data axis; per-layer all-gather
+                                inside the layer scan — ZeRO-3)
+  * EP     → 'model'           (MoE experts; see models/moe.py)
+  * SP     → 'data'            (long-context KV shards, flash-decode combine)
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Parallelism:
+    """Everything a model needs to know about the mesh.  mesh=None means
+    single-device execution (smoke tests) — all constraints become no-ops."""
+
+    mesh: Mesh | None = None
+    data_axes: tuple = ("data",)       # batch axes, e.g. ("pod", "data")
+    model_axis: str = "model"
+    fsdp_axis: str | None = "data"     # None disables ZeRO-3 param sharding
+
+    @property
+    def data_spec(self):
+        return self.data_axes if len(self.data_axes) > 1 else self.data_axes[0]
+
+    @property
+    def model_size(self) -> int:
+        return self.mesh.shape[self.model_axis] if self.mesh else 1
+
+    @property
+    def data_size(self) -> int:
+        if not self.mesh:
+            return 1
+        n = 1
+        for a in self.data_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    @property
+    def all_axes(self) -> tuple:
+        return tuple(self.data_axes) + (self.model_axis,)
+
+    def constrain(self, x, *spec):
+        """with_sharding_constraint if a mesh is present, else identity."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec)))
+
+    def sharding(self, *spec) -> NamedSharding | None:
+        return None if self.mesh is None else NamedSharding(self.mesh,
+                                                            P(*spec))
+
+
+def single_device() -> Parallelism:
+    return Parallelism(mesh=None)
+
+
+# ---------------------------------------------------------------------------
+# Param path → PartitionSpec rules.
+#
+# Paths are '/'-joined key paths into the param pytree, WITHOUT the leading
+# stacked-layer index dim (rules below prepend None for stacked leaves
+# automatically, detected by `stacked` groups in the tree builder).
+# ---------------------------------------------------------------------------
+
+_FSDP = "__FSDP__"    # placeholder replaced by the fsdp axis (or None)
+_TP = "__TP__"        # placeholder replaced by the model axis
+
+# (regex, spec-per-dim) — first match wins.  Specs are for the UNSTACKED
+# leaf; stacked leaves get None prepended for the layer dim.
+_RULES = [
+    # embeddings / unembedding
+    (r"embed/table$",            (_TP, _FSDP)),         # (V, d)
+    (r"lm_head$",                (_FSDP, _TP)),         # (d, V)
+    # attention
+    (r"attn/wq$",                (_FSDP, _TP)),         # (d, H·Dh)
+    (r"attn/wk$",                (_FSDP, _TP)),
+    (r"attn/wv$",                (_FSDP, _TP)),
+    (r"attn/wo$",                (_TP, _FSDP)),         # (H·Dh, d)
+    (r"attn/(q|k)_norm$",        (None,)),
+    # cross-attention (same shapes)
+    (r"cross/wq$",               (_FSDP, _TP)),
+    (r"cross/wk$",               (_FSDP, _TP)),
+    (r"cross/wv$",               (_FSDP, _TP)),
+    (r"cross/wo$",               (_TP, _FSDP)),
+    (r"cross/(q|k)_norm$",       (None,)),
+    # dense MLP
+    (r"mlp/w_gate$",             (_FSDP, _TP)),
+    (r"mlp/w_up$",               (_FSDP, _TP)),
+    (r"mlp/w_down$",             (_TP, _FSDP)),
+    (r"mlp/w_in$",               (_FSDP, _TP)),
+    (r"mlp/w_out$",              (_TP, _FSDP)),
+    # MoE — expert-parallel mode: experts over model axis
+    (r"moe_ep/router$",          (_FSDP, None)),        # (d, E)
+    (r"moe_ep/w_gate$",          (_TP, _FSDP, None)),   # (E, d, F)
+    (r"moe_ep/w_up$",            (_TP, _FSDP, None)),
+    (r"moe_ep/w_down$",          (_TP, None, _FSDP)),   # (E, F, d)
+    # MoE — tensor-parallel mode: d_ff over model axis
+    (r"moe_tp/router$",          (_FSDP, None)),
+    (r"moe_tp/w_gate$",          (None, _FSDP, _TP)),
+    (r"moe_tp/w_up$",            (None, _FSDP, _TP)),
+    (r"moe_tp/w_down$",          (None, _TP, _FSDP)),
+    # Mamba2
+    (r"ssm/in_proj$",            (_FSDP, None)),        # (d, proj) mixed out
+    (r"ssm/conv_w$",             (None, _TP)),          # (k, conv_dim)
+    (r"ssm/conv_b$",             (_TP,)),
+    (r"ssm/A_log$",              (_TP,)),               # (H,)
+    (r"ssm/D$",                  (_TP,)),
+    (r"ssm/dt_bias$",            (_TP,)),
+    (r"ssm/norm$",               (_TP,)),               # (d_inner,)
+    (r"ssm/out_proj$",           (_TP, _FSDP)),         # (d_inner, d)
+    # norms and everything residual-width
+    (r"(norm|scale|final_norm)$", (None,)),
+]
+
+# Leaves under these top-level keys are layer-stacked (leading L dim).
+STACKED_PREFIXES = ("layers/", "cross_layers/", "encoder/", "groups/")
+
+
+def _fits(parallel: Parallelism, axis, dim_size: int) -> bool:
+    """pjit in_shardings demand divisibility; drop axes that don't divide."""
+    if axis is None or parallel.mesh is None:
+        return True
+    axes = axis if isinstance(axis, tuple) else (axis,)
+    n = 1
+    for a in axes:
+        n *= parallel.mesh.shape[a]
+    return dim_size % n == 0
+
+
+def spec_for(path: str, shape, parallel: Parallelism) -> P:
+    """PartitionSpec for a param leaf at '/'-joined ``path``."""
+    ndim = len(shape)
+    stacked = path.startswith(STACKED_PREFIXES)
+    base = path
+    for pre in STACKED_PREFIXES:
+        if base.startswith(pre):
+            base = base[len(pre):]
+    for rx, spec in _RULES:
+        if re.search(rx, base):
+            dims = [parallel.model_axis if s == _TP
+                    else (parallel.fsdp_axis if s == _FSDP else s)
+                    for s in spec]
+            if stacked:
+                dims = [None] + dims
+            if len(dims) < ndim:      # trailing unsharded dims
+                dims = dims + [None] * (ndim - len(dims))
+            assert len(dims) == ndim, (path, dims, ndim)
+            dims = [d if _fits(parallel, d, shape[i]) else None
+                    for i, d in enumerate(dims)]
+            return P(*dims)
+    return P(*([None] * ndim))        # default: replicated
+
+
+def _join_path(kp) -> str:
+    parts = []
+    for k in kp:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_specs(params_shape, parallel: Parallelism):
+    """Pytree of PartitionSpecs matching a (possibly abstract) param tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: spec_for(_join_path(kp), leaf.shape, parallel),
+        params_shape)
+
+
+def param_shardings(params_shape, parallel: Parallelism):
+    if parallel.mesh is None:
+        return None
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(parallel.mesh, s),
+        param_specs(params_shape, parallel),
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,2 @@
+"""Training substrate: AdamW (fp32 or int8-blockwise moments), LR schedule,
+gradient accumulation, gradient compression, train-step assembly."""

@@ -1,0 +1,96 @@
+"""int8 gradient compression with error feedback for the cross-pod
+all-reduce.
+
+At 512 chips the inter-pod data-parallel reduction crosses the slow
+(data-center-network) links; compressing gradients to int8 with blockwise
+scales cuts that traffic 4× (2× vs bf16).  Error feedback (Seide et al.;
+Karimireddy et al.) keeps the residual of each quantisation step and adds
+it back before the next one, preserving convergence.
+
+The explicit-DP trainer here demonstrates the technique end-to-end on a
+host-device mesh (tests/test_training.py verifies loss parity with the
+uncompressed path); at pod scale the same quantise→all_gather→dequantise→
+mean sequence applies to the ``pod`` axis only, with the in-pod reduction
+left to GSPMD.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .optimizer import BLOCK, dequantize_i8, quantize_i8
+
+
+def compress_decompress(g, err):
+    """One error-feedback quantisation round-trip (per leaf).
+
+    Returns (quantised-then-dequantised gradient, new error residual)."""
+    g32 = g.astype(jnp.float32) + err
+    codes, scales = quantize_i8(g32)
+    deq = dequantize_i8(codes, scales, g32.shape)
+    return deq.astype(g.dtype), g32 - deq
+
+
+def compressed_psum_grads(grads, errors, axis: str):
+    """int8-compressed gradient mean over ``axis`` (inside shard_map).
+
+    Each shard quantises (grad + error-feedback), the int8 codes + fp32
+    scales are all-gathered over the axis (int8 wire format — the 4×
+    saving), dequantised, and averaged."""
+    n = jax.lax.psum(1, axis)
+
+    def per_leaf(g, err):
+        g32 = g.astype(jnp.float32) + err
+        codes, scales = quantize_i8(g32)
+        local_deq = dequantize_i8(codes, scales, g32.shape)
+        new_err = g32 - local_deq
+        all_codes = jax.lax.all_gather(codes, axis)      # int8 on the wire
+        all_scales = jax.lax.all_gather(scales, axis)
+        deq = jax.vmap(lambda c, s: dequantize_i8(c, s, g32.shape))(
+            all_codes, all_scales)
+        return (deq.sum(axis=0) / n).astype(g.dtype), new_err
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_e = tdef.flatten_up_to(errors)
+    out = [per_leaf(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    new_e = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    return new_g, new_e
+
+
+def init_error_feedback(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def make_compressed_dp_grad_fn(loss_fn, mesh: Mesh, axis: str = "data"):
+    """Explicit-DP gradient with int8-compressed cross-shard reduction.
+
+    loss_fn(params, batch) -> scalar.  Returns
+    grad_fn(params, batch, errors) -> (loss_mean, grads_mean, new_errors)
+    with params replicated and batch sharded over ``axis``."""
+
+    def local(params, batch, errors):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        grads, new_err = compressed_psum_grads(grads, errors, axis)
+        return jax.lax.pmean(loss, axis), grads, new_err
+
+    pspec = jax.tree_util.tree_map(lambda _: P(), {})  # params replicated
+
+    def grad_fn(params, batch, errors):
+        in_specs = (
+            jax.tree_util.tree_map(lambda _: P(), params),
+            jax.tree_util.tree_map(lambda _: P(axis), batch),
+            jax.tree_util.tree_map(lambda _: P(), errors),
+        )
+        out_specs = (P(),
+                     jax.tree_util.tree_map(lambda _: P(), params),
+                     jax.tree_util.tree_map(lambda _: P(), errors))
+        return shard_map(local, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)(
+            params, batch, errors)
+    return grad_fn

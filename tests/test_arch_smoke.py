@@ -1,0 +1,169 @@
+"""Per-architecture smoke tests: reduced same-family configs, one forward/
+train step on CPU, asserting output shapes and no NaNs (deliverable f)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models.transformer import (decode_step, forward_hidden,
+                                      init_params, prefill, train_loss)
+from repro.runtime.sharding import single_device
+
+PAR = single_device()
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=32):
+    b = {"tokens": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)}
+    if cfg.kind == "encdec":
+        b["memory"] = jax.random.normal(KEY, (B, cfg.enc_seq, cfg.d_model),
+                                        cfg.jdtype)
+    if cfg.kind == "vlm":
+        b["memory"] = jax.random.normal(KEY, (B, cfg.img_tokens, cfg.d_model),
+                                        cfg.jdtype)
+    return b
+
+
+@pytest.mark.parametrize("arch", configs.list_archs())
+def test_full_config_matches_assignment(arch):
+    cfg = configs.get(arch)
+    spec = {
+        "qwen3-32b": (64, 5120, 64, 8, 25600, 151936),
+        "phi3-medium-14b": (40, 5120, 40, 10, 17920, 100352),
+        "granite-3-2b": (40, 2048, 32, 8, 8192, 49155),
+        "granite-8b": (36, 4096, 32, 8, 14336, 49152),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+        "mixtral-8x22b": (56, 6144, 48, 8, 16384, 32768),
+        "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+        "llama-3.2-vision-11b": (40, 4096, 32, 8, 14336, 128256),
+        "whisper-medium": (24, 1024, 16, 16, 4096, 51865),
+        "mamba2-2.7b": (64, 2560, 0, 0, 0, 50280),
+    }[arch]
+    L, d, H, kv, ff, V = spec
+    assert cfg.n_layers == L and cfg.d_model == d
+    assert cfg.vocab_size == V
+    if H:
+        assert cfg.n_heads == H and cfg.n_kv_heads == kv
+    if arch == "zamba2-1.2b":
+        assert cfg.ssm.state == 64 and cfg.kind == "hybrid"
+    if arch == "mamba2-2.7b":
+        assert cfg.ssm.state == 128 and cfg.kind == "ssm"
+    if arch == "mixtral-8x22b":
+        assert cfg.moe.n_experts == 8 and cfg.moe.top_k == 2
+        assert cfg.sliding_window == 4096
+    if arch == "qwen3-moe-235b-a22b":
+        assert cfg.moe.n_experts == 128 and cfg.moe.top_k == 8
+        assert cfg.qk_norm
+    if ff and not cfg.moe:
+        assert cfg.d_ff == ff
+    if cfg.moe:
+        assert cfg.moe.d_ff == ff
+
+
+@pytest.mark.parametrize("arch", configs.list_archs())
+def test_smoke_forward_and_train_step(arch):
+    cfg = configs.smoke(arch)
+    params = init_params(KEY, cfg)
+    batch = _batch(cfg)
+    h, aux = forward_hidden(cfg, PAR, params, batch["tokens"],
+                            memory=batch.get("memory"))
+    assert h.shape == (2, 32, cfg.d_model)
+    assert np.isfinite(np.asarray(h, np.float32)).all(), "NaN in hidden"
+    loss = jax.jit(lambda p, b: train_loss(cfg, PAR, p, b))(params, batch)
+    assert np.isfinite(float(loss)), "NaN loss"
+    assert 0.0 < float(loss) < 20.0
+
+
+@pytest.mark.parametrize("arch", configs.list_archs())
+def test_smoke_serve_path(arch):
+    cfg = dataclasses.replace(configs.smoke(arch), dtype="float32",
+                              remat="none")
+    params = init_params(KEY, cfg)
+    B, S = 2, 16
+    toks = jax.random.randint(KEY, (B, S + 1), 0, cfg.vocab_size)
+    memory = _batch(cfg, B, S).get("memory")
+    h, _ = forward_hidden(cfg, PAR, params, toks, memory=memory)
+    full_logits = np.asarray((h @ params["lm_head"]).astype(jnp.float32))
+    logits_p, cache = prefill(cfg, PAR, params, toks[:, :S], memory=memory,
+                              max_seq=S + 4)
+    np.testing.assert_allclose(np.asarray(logits_p), full_logits[:, S - 1],
+                               rtol=2e-3, atol=2e-3)
+    lg, cache = decode_step(cfg, PAR, params, cache, toks[:, S:S + 1])
+    np.testing.assert_allclose(np.asarray(lg), full_logits[:, S],
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_sliding_window_cache_ring_buffer():
+    """Mixtral-family SWA decode: cache stays window-sized; decoding past
+    the window keeps matching the full forward (ring-buffer writes)."""
+    cfg = dataclasses.replace(configs.smoke("mixtral-8x22b"),
+                              dtype="float32", sliding_window=8)
+    params = init_params(KEY, cfg)
+    B, S, extra = 1, 12, 6
+    toks = jax.random.randint(KEY, (B, S + extra), 0, cfg.vocab_size)
+    h, _ = forward_hidden(cfg, PAR, params, toks)
+    full_logits = np.asarray((h @ params["lm_head"]).astype(jnp.float32))
+    logits_p, cache = prefill(cfg, PAR, params, toks[:, :S],
+                              max_seq=S + extra)
+    assert cache["self_kv"][0].shape[2] == 8, "cache must be window-sized"
+    np.testing.assert_allclose(np.asarray(logits_p), full_logits[:, S - 1],
+                               rtol=2e-3, atol=2e-3)
+    for j in range(extra):
+        lg, cache = decode_step(cfg, PAR, params, cache,
+                                toks[:, S + j:S + j + 1])
+        np.testing.assert_allclose(np.asarray(lg), full_logits[:, S + j],
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_matches_naive():
+    from repro.models.layers import flash_attention, naive_attention
+    B, S, H, Dh, K = 2, 256, 4, 32, 2
+    q = jax.random.normal(KEY, (B, S, H, Dh), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, K, Dh))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, K, Dh))
+    pos = jnp.arange(S)
+    for causal in (True, False):
+        for window in (None, 64):
+            got = flash_attention(q, k, v, causal=causal, q_positions=pos,
+                                  kv_positions=pos, sliding_window=window,
+                                  kv_chunk=64, q_chunk=128)
+            want = naive_attention(q, k, v, causal=causal, q_positions=pos,
+                                   kv_positions=pos, sliding_window=window)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=2e-4, atol=2e-4)
+
+
+def test_moe_modes_agree():
+    """EP-mode and TP-mode MoE must compute the same function (single
+    device: both reduce to the local path with different e0 logic)."""
+    from repro.models.moe import MoEConfig, init_moe, moe_forward
+    d = 32
+    cfg_ep = MoEConfig(n_experts=4, top_k=2, d_ff=64, mode="ep",
+                       token_chunk=16)
+    p = init_moe(KEY, d, cfg_ep, dtype=jnp.float32)
+    x = jax.random.normal(KEY, (2, 8, d), jnp.float32)
+    y1, aux1 = moe_forward(p, x, cfg_ep)
+    cfg_tp = dataclasses.replace(cfg_ep, mode="tp")
+    y2, aux2 = moe_forward(p, x, cfg_tp)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_ssd_chunk_invariance():
+    """SSD output must not depend on the chunk size (dual-form identity)."""
+    from repro.models.ssm import ssd_chunked
+    B, S, H, P, N = 1, 64, 2, 8, 4
+    k = jax.random.PRNGKey(3)
+    xh = jax.random.normal(k, (B, S, H, P), jnp.float32) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(k, 1),
+                                           (B, S, H)))
+    A = -jnp.array([0.5, 2.0])
+    Bc = jax.random.normal(jax.random.fold_in(k, 2), (B, S, 1, N)) * 0.5
+    Cc = jax.random.normal(jax.random.fold_in(k, 3), (B, S, 1, N)) * 0.5
+    outs = [ssd_chunked(xh, dt, A, Bc, Cc, chunk)[0] for chunk in (8, 16, 64)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   rtol=2e-4, atol=2e-4)

@@ -1,0 +1,91 @@
+"""Distributed (shard_map) search engine tests.
+
+These need a multi-device mesh, so they run in a subprocess with
+``xla_force_host_platform_device_count=8`` — the main pytest process keeps
+the container's single CPU device (per the dry-run isolation rule)."""
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+
+def _run(code: str):
+    env = {"XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+           "PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin",
+           "JAX_PLATFORMS": "cpu"}
+    return subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          capture_output=True, text=True, cwd="/root/repo",
+                          env=env, timeout=600)
+
+
+@pytest.mark.slow
+def test_distributed_matches_single_device():
+    r = _run("""
+        import numpy as np, jax
+        from repro.core.dist_search import (distributed_build,
+            distributed_range_query, distributed_survivor_count,
+            make_data_mesh, pad_database)
+        from repro.core.engine import (device_index_from_host,
+            represent_queries, range_query)
+        from repro.core.fastsax import FastSAXConfig, build_index
+        from repro.data.timeseries import make_wafer_like, make_queries
+
+        assert len(jax.devices()) == 8
+        db = make_wafer_like(n_series=1000, length=128, seed=0)
+        qs = make_queries(db, 4, seed=3)
+        levels, alpha = (8, 16), 10
+        mesh = make_data_mesh()
+        padded, n_valid = pad_database(db, 8)
+        didx = distributed_build(padded, levels, alpha, mesh, n_valid=n_valid)
+        gidx, ans, d2, overflow = distributed_range_query(
+            didx, qs, 2.0, mesh, capacity_per_shard=64,
+            normalize_queries=False)
+        assert not bool(np.asarray(overflow).any())
+
+        cfg = FastSAXConfig(n_segments=levels, alphabet=alpha)
+        idx = build_index(db, cfg, normalize=False)
+        dev = device_index_from_host(idx)
+        qr = represent_queries(np.asarray(qs, np.float32), levels, alpha,
+                               normalize=False)
+        ref_ans, _ = range_query(dev, qr, 2.0)
+        for i in range(4):
+            ref = set(np.nonzero(np.asarray(ref_ans)[i])[0].tolist())
+            a = np.asarray(ans)[i]; gi = np.asarray(gidx)[i]
+            got = set(gi[a].tolist())
+            assert got == ref, (i, got ^ ref)
+
+        counts = np.asarray(distributed_survivor_count(
+            didx, qs, 2.0, mesh, normalize_queries=False))
+        assert (counts >= [len(s) for s in
+                [set(np.nonzero(np.asarray(ref_ans)[i])[0]) for i in range(4)]
+                ]).all()
+        print("OK")
+    """)
+    assert r.returncode == 0, r.stderr[-4000:]
+    assert "OK" in r.stdout
+
+
+@pytest.mark.slow
+def test_padded_rows_never_answer():
+    r = _run("""
+        import numpy as np, jax
+        from repro.core.dist_search import (distributed_build,
+            distributed_range_query, make_data_mesh, pad_database)
+        from repro.data.timeseries import make_wafer_like, make_queries
+
+        db = make_wafer_like(n_series=997, length=128, seed=5)  # prime: pads
+        qs = make_queries(db, 3, seed=6)
+        mesh = make_data_mesh()
+        padded, n_valid = pad_database(db, 8)
+        assert padded.shape[0] == 1000 and n_valid == 997
+        didx = distributed_build(padded, (8, 16), 10, mesh, n_valid=n_valid)
+        gidx, ans, d2, _ = distributed_range_query(
+            didx, qs, 50.0, mesh, capacity_per_shard=256,
+            normalize_queries=False)
+        hit = np.asarray(gidx)[np.asarray(ans)]
+        assert (hit < 997).all(), "padded row leaked into the answer set"
+        print("OK")
+    """)
+    assert r.returncode == 0, r.stderr[-4000:]
+    assert "OK" in r.stdout

@@ -1,0 +1,117 @@
+"""Per-kernel validation: shape/dtype sweeps, Pallas (interpret=True on
+CPU) vs the pure-jnp oracles in kernels/ref.py."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import (cascade_mask, device_index_from_host,
+                               represent_queries)
+from repro.core.fastsax import FastSAXConfig, build_index
+from repro.core.paa import paa_np
+from repro.core.sax import discretize_np
+from repro.data.timeseries import make_wafer_like
+from repro.kernels import ops, ref
+
+SHAPES = [(64, 64), (200, 128), (513, 256)]   # includes non-multiple-of-block
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _data(B, n, dtype, seed=0):
+    x = make_wafer_like(B, n, seed=seed)
+    return jnp.asarray(x, dtype=dtype)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("N", [4, 8, 16])
+def test_paa_kernel(shape, dtype, N):
+    B, n = shape
+    x = _data(B, n, dtype)
+    got = ops.paa(x, N, block_b=128)
+    want = ref.paa_ref(x.astype(jnp.float32), N)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("N", [4, 8, 16])
+def test_linfit_kernel(shape, dtype, N):
+    B, n = shape
+    x = _data(B, n, dtype)
+    got = ops.linfit_residual_sq(x, N, block_b=128)
+    want = ref.linfit_residual_sq_ref(x.astype(jnp.float32), N)
+    tol = 5e-4 if dtype == jnp.float32 else 0.35   # bf16: catastrophic-cancel prone
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol * 10)
+
+
+@pytest.mark.parametrize("shape", [(64, 64), (513, 128)])
+@pytest.mark.parametrize("alphabet", [3, 10, 20])
+@pytest.mark.parametrize("N", [8, 16])
+def test_mindist_kernel(shape, alphabet, N):
+    B, n = shape
+    x = np.asarray(_data(B, n, jnp.float32), np.float64)
+    words = discretize_np(paa_np(x, N), alphabet)
+    qword = words[B // 2]
+    got = ops.mindist_sq(jnp.asarray(words), jnp.asarray(qword), n, alphabet,
+                         block_b=128)
+    tq = jnp.asarray(ref.query_table(qword, alphabet))
+    want = ref.mindist_sq_ref(jnp.asarray(words), tq, n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+    # self-distance must be 0 (adjacent-symbol cells are 0)
+    assert float(np.asarray(got)[B // 2]) == 0.0
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_sqdist_kernel(shape, dtype):
+    B, n = shape
+    x = _data(B, n, dtype)
+    q = x[B // 3]
+    got = ops.sqdist(x, q, block_b=128)
+    want = ref.sqdist_ref(x.astype(jnp.float32), q.astype(jnp.float32))
+    tol = 1e-4 if dtype == jnp.float32 else 0.5
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("alphabet", [3, 10, 20])
+@pytest.mark.parametrize("eps", [0.5, 1.0, 3.0])
+def test_fused_prune_matches_engine_cascade(alphabet, eps):
+    B, n, levels = 300, 128, (8, 16)
+    db = make_wafer_like(B, n, seed=2)
+    idx = build_index(db, FastSAXConfig(n_segments=levels, alphabet=alphabet),
+                      normalize=False)
+    dev = device_index_from_host(idx)
+    q = jnp.asarray(db[11:12], jnp.float32)
+    qr = represent_queries(q, levels, alphabet, normalize=False)
+    want = np.asarray(cascade_mask(dev, qr, eps))[0]
+    got = np.asarray(ops.fused_cascade(
+        (dev.words, dev.residuals),
+        tuple(w[0] for w in qr.words), tuple(r[0] for r in qr.residuals),
+        eps, n, alphabet, levels, block_b=128))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_prune_level_respects_incoming_mask():
+    B, n, N, alphabet = 128, 64, 8, 10
+    db = make_wafer_like(B, n, seed=3)
+    idx = build_index(db, FastSAXConfig(n_segments=(N,), alphabet=alphabet),
+                      normalize=False)
+    dev = device_index_from_host(idx)
+    qr = represent_queries(jnp.asarray(db[:1], jnp.float32), (N,), alphabet,
+                           normalize=False)
+    dead = jnp.zeros((B,), dtype=bool)
+    out = ops.prune_level(dead, dev.residuals[0], dev.words[0],
+                          qr.words[0][0], qr.residuals[0][0],
+                          jnp.float32(100.0), n, alphabet, block_b=128)
+    assert not bool(np.asarray(out).any()), "dead lanes must stay dead"
+
+
+def test_vmem_budget_guard():
+    x = jnp.zeros((256, 100_000), jnp.float32)
+    with pytest.raises(ValueError, match="VMEM"):
+        ops.sqdist(x, x[0], block_b=256)

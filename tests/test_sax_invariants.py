@@ -1,0 +1,133 @@
+"""Property tests (hypothesis) for the mathematical invariants the whole
+system's soundness rests on:
+
+  * the lower-bounding lemma chain  MINDIST ≤ PAA-dist ≤ ED  (paper eq. 1-4)
+  * the C9 inequality  |d(u,ū) − d(q,q̄)| ≤ d(u,q)            (paper eq. 5-9)
+  * optimality of the per-segment LS fit (paper eq. 6)
+  * breakpoint / table structure.
+"""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.paa import paa_np, znormalize_np
+from repro.core.polyfit import linfit_residual_np
+from repro.core.sax import breakpoints, discretize_np, mindist_np, mindist_table
+
+SETTINGS = dict(max_examples=30, deadline=None)
+
+
+def series_pair(n):
+    return st.tuples(
+        st.lists(st.floats(-1e3, 1e3, allow_nan=False, width=32),
+                 min_size=n, max_size=n),
+        st.lists(st.floats(-1e3, 1e3, allow_nan=False, width=32),
+                 min_size=n, max_size=n),
+        st.integers(0, 2 ** 31 - 1),
+    )
+
+
+def _norm_pair(u, v):
+    u = znormalize_np(np.asarray(u, dtype=np.float64))
+    v = znormalize_np(np.asarray(v, dtype=np.float64))
+    return u, v
+
+
+@settings(**SETTINGS)
+@given(series_pair(64), st.sampled_from([4, 8, 16]),
+       st.sampled_from([3, 7, 10, 20]))
+def test_lower_bounding_chain(pair, N, alphabet):
+    u, v, _ = pair
+    u, v = _norm_pair(u, v)
+    n = u.shape[-1]
+    ed = float(np.sqrt(np.sum((u - v) ** 2)))
+    pu, pv = paa_np(u, N), paa_np(v, N)
+    paa_d = float(np.sqrt(n / N) * np.sqrt(np.sum((pu - pv) ** 2)))
+    md = mindist_np(discretize_np(pu, alphabet), discretize_np(pv, alphabet),
+                    n, alphabet)
+    assert paa_d <= ed + 1e-6, "PAA distance must lower-bound ED (eq. 4)"
+    assert md <= paa_d + 1e-6, "MINDIST must lower-bound PAA distance (eq. 3)"
+
+
+@settings(**SETTINGS)
+@given(series_pair(64), st.sampled_from([4, 8, 16]))
+def test_c9_inequality(pair, N):
+    """|d(u,ū) − d(q,q̄)| ≤ d(u,q): the exact inequality behind eq. 9 —
+    excluding when the LHS exceeds ε can never lose a true answer."""
+    u, q, _ = pair
+    u, q = _norm_pair(u, q)
+    ru = float(linfit_residual_np(u, N))
+    rq = float(linfit_residual_np(q, N))
+    ed = float(np.sqrt(np.sum((u - q) ** 2)))
+    assert abs(ru - rq) <= ed + 1e-6
+
+
+@settings(**SETTINGS)
+@given(series_pair(64), st.sampled_from([4, 8, 16]))
+def test_linfit_optimality(pair, N):
+    """d(u,ū) ≤ d(u, any other member of the piecewise-linear class) —
+    the optimality fact (eq. 6) the triangle argument needs."""
+    u, other, seed = pair
+    u = znormalize_np(np.asarray(u, dtype=np.float64))
+    n = u.shape[-1]
+    L = n // N
+    rng = np.random.default_rng(seed)
+    # A random piecewise-linear competitor on the same segmentation.
+    xc = np.arange(L) - (L - 1) / 2.0
+    comp = (rng.uniform(-2, 2, (N, 1)) + rng.uniform(-1, 1, (N, 1)) * xc
+            ).reshape(-1)
+    ru = float(linfit_residual_np(u, N))
+    d_comp = float(np.sqrt(np.sum((u - comp) ** 2)))
+    assert ru <= d_comp + 1e-6
+
+
+@pytest.mark.parametrize("alphabet", [3, 5, 10, 15, 20])
+def test_breakpoints_equiprobable(alphabet):
+    bp = breakpoints(alphabet)
+    assert bp.shape == (alphabet - 1,)
+    assert np.all(np.diff(bp) > 0)
+    for k, x in enumerate(bp, start=1):
+        p = 0.5 * (1 + math.erf(x / math.sqrt(2)))
+        assert abs(p - k / alphabet) < 1e-9
+
+
+@pytest.mark.parametrize("alphabet", [3, 10, 20])
+def test_mindist_table_structure(alphabet):
+    tab = mindist_table(alphabet)
+    assert tab.shape == (alphabet, alphabet)
+    assert np.allclose(tab, tab.T), "table must be symmetric"
+    for r in range(alphabet):
+        for c in range(alphabet):
+            if abs(r - c) <= 1:
+                assert tab[r, c] == 0.0, "adjacent symbols have distance 0"
+            else:
+                assert tab[r, c] > 0.0
+    # Monotone in symbol separation along each row.
+    for r in range(alphabet):
+        row = tab[r]
+        right = row[r + 2:]
+        assert np.all(np.diff(right) >= -1e-12)
+
+
+@settings(**SETTINGS)
+@given(st.lists(st.floats(-1e3, 1e3, allow_nan=False, width=32),
+                min_size=32, max_size=32),
+       st.sampled_from([3, 10, 20]))
+def test_discretize_range(vals, alphabet):
+    u = znormalize_np(np.asarray(vals, dtype=np.float64))
+    sym = discretize_np(paa_np(u, 8), alphabet)
+    assert sym.min() >= 0 and sym.max() < alphabet
+
+
+@settings(**SETTINGS)
+@given(st.lists(st.floats(-1e3, 1e3, allow_nan=False, width=32),
+                min_size=30, max_size=30))
+def test_znormalize(vals):
+    x = np.asarray(vals, dtype=np.float64)
+    z = znormalize_np(x)
+    assert abs(z.mean()) < 1e-6
+    sd = x.std()
+    if sd > 1e-6:
+        assert abs(z.std() - 1.0) < 1e-6

@@ -1,0 +1,103 @@
+"""End-to-end behaviour of the search system: all engines agree with the
+brute-force ground truth (no false dismissals, false alarms filtered), and
+FAST_SAX's accounting matches the paper's claims directionally."""
+import numpy as np
+import pytest
+
+from repro.core.engine import (device_index_from_host, range_query,
+                               range_query_compact, represent_queries)
+from repro.core.fastsax import FastSAXConfig, build_index, represent_query
+from repro.core.search import (fastsax_range_query, linear_scan,
+                               sax_range_query)
+from repro.data.timeseries import make_queries, make_wafer_like
+
+
+@pytest.fixture(scope="module")
+def setup():
+    db = make_wafer_like(n_series=1500, length=128, seed=0)
+    cfg = FastSAXConfig(n_segments=(8, 16), alphabet=10)
+    idx = build_index(db, cfg, normalize=False)
+    queries = make_queries(db, 6, seed=3)
+    return db, cfg, idx, queries
+
+
+@pytest.mark.parametrize("eps", [0.5, 1.0, 2.0, 4.0])
+def test_engines_agree_with_ground_truth(setup, eps):
+    _, cfg, idx, queries = setup
+    for q in queries:
+        qr = represent_query(q, cfg, normalize=False)
+        truth = linear_scan(idx, qr, eps)
+        s = sax_range_query(idx, qr, eps)
+        f = fastsax_range_query(idx, qr, eps)
+        np.testing.assert_array_equal(truth.answers, s.answers)
+        np.testing.assert_array_equal(truth.answers, f.answers)
+        np.testing.assert_allclose(truth.distances, f.distances, rtol=1e-9)
+
+
+@pytest.mark.parametrize("eps", [1.0, 2.0])
+def test_vectorised_engine_matches_opcount_engine(setup, eps):
+    _, cfg, idx, queries = setup
+    dev = device_index_from_host(idx)
+    qr = represent_queries(np.asarray(queries, np.float32),
+                           dev.levels, dev.alphabet, normalize=False)
+    mask, d2 = range_query(dev, qr, eps)
+    mask = np.asarray(mask)
+    for i, q in enumerate(queries):
+        truth = linear_scan(idx, represent_query(q, cfg, normalize=False), eps)
+        got = np.nonzero(mask[i])[0]
+        np.testing.assert_array_equal(truth.answers, got)
+
+
+def test_compact_engine_and_overflow_flag(setup):
+    _, cfg, idx, queries = setup
+    dev = device_index_from_host(idx)
+    qr = represent_queries(np.asarray(queries, np.float32),
+                           dev.levels, dev.alphabet, normalize=False)
+    idxs, ans, d2, overflow = range_query_compact(dev, qr, 1.5, capacity=256)
+    assert not bool(np.asarray(overflow).any())
+    ref_mask, _ = range_query(dev, qr, 1.5)
+    for i in range(len(queries)):
+        got = set(np.asarray(idxs)[i][np.asarray(ans)[i]].tolist())
+        want = set(np.nonzero(np.asarray(ref_mask)[i])[0].tolist())
+        assert got == want
+
+    # Tiny capacity must raise the overflow flag when survivors exceed it.
+    _, _, _, overflow2 = range_query_compact(dev, qr, 4.0, capacity=2)
+    assert bool(np.asarray(overflow2).any())
+
+
+def test_fastsax_is_faster_where_paper_says(setup):
+    """Directional reproduction: mean latency ratio SAX/FAST_SAX > 1 at
+    small ε, and the ratio is non-increasing as ε grows (paper Fig. 2)."""
+    _, cfg, idx, queries = setup
+    ratios = []
+    for eps in (1.0, 4.0):
+        s_lat = f_lat = 0.0
+        for q in queries:
+            qr = represent_query(q, cfg, normalize=False)
+            s_lat += sax_range_query(idx, qr, eps).latency
+            f_lat += fastsax_range_query(idx, qr, eps).latency
+        ratios.append(s_lat / f_lat)
+    assert ratios[0] > 1.2, f"FAST_SAX should win clearly at eps=1: {ratios}"
+    assert ratios[0] >= ratios[1] - 0.05, f"gap should shrink with eps: {ratios}"
+
+
+def test_exclusion_accounting(setup):
+    """excluded_c9 + excluded_c10 + candidates == database size."""
+    _, cfg, idx, queries = setup
+    for q in queries:
+        qr = represent_query(q, cfg, normalize=False)
+        r = fastsax_range_query(idx, qr, 2.0)
+        assert r.excluded_c9 + r.excluded_c10 + r.candidates == idx.size
+
+
+def test_paper_level_order_flag(setup):
+    db, _, _, queries = setup
+    cfg_paper = FastSAXConfig(n_segments=(8, 16), alphabet=10,
+                              level_order="paper")
+    idx_paper = build_index(db, cfg_paper, normalize=False)
+    assert cfg_paper.levels == (16, 8)
+    qr = represent_query(queries[0], cfg_paper, normalize=False)
+    truth = linear_scan(idx_paper, qr, 2.0)
+    got = fastsax_range_query(idx_paper, qr, 2.0)
+    np.testing.assert_array_equal(truth.answers, got.answers)
