@@ -1,0 +1,79 @@
+"""Beyond-paper workload: exact k-NN latency and pruning power.
+
+Compares the three op-counted k-NN engines of ``core/search.py`` on the
+paper's latency-time metric (weighted op counts, same weight table as
+Table 1) over a (k, alphabet) grid:
+
+  * ``linear_scan_knn``  — brute force, the cost ceiling,
+  * ``sax_knn_query``    — classical SAX: MINDIST-ordered best-so-far scan,
+  * ``fastsax_knn_query``— the paper's cascade with a seeded, shrinking
+    best-so-far radius.
+
+Also reports *pruning power*: the fraction of the database each method must
+Euclidean-verify.  Expected shape of the results (recorded in
+EXPERIMENTS.md §kNN): FAST_SAX wins clearly at small k — k-NN with larger k
+behaves like a range query with larger ε, where the paper itself shows the
+gap closing.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.search import (fastsax_knn_query, linear_scan_knn,
+                               sax_knn_query)
+
+from .common import ALPHABETS, emit, index_for, query_reprs
+
+KS = (1, 5, 10, 50)
+
+
+def run(verbose: bool = True) -> dict:
+    """Returns {(k, alphabet): {engine: (latency, verified_frac)}}."""
+    results = {}
+    for k in KS:
+        for alpha in ALPHABETS:
+            _, idx = index_for(alpha)
+            qrs = query_reprs(alpha)
+            B = idx.size
+            cell = {}
+            for name, engine in (("linear", linear_scan_knn),
+                                 ("sax", sax_knn_query),
+                                 ("fastsax", fastsax_knn_query)):
+                lat = 0.0
+                ver = 0
+                for qr in qrs:
+                    r = engine(idx, qr, k)
+                    lat += r.latency
+                    ver += r.verified
+                cell[name] = (lat, ver / (len(qrs) * B))
+            results[(k, alpha)] = cell
+    if verbose:
+        for k in KS:
+            print(f"\n# k-NN latency time (k={k})")
+            print("method    " + "".join(f"  α={a:<12d}" for a in ALPHABETS))
+            for name in ("fastsax", "sax", "linear"):
+                row = "".join(f"  {results[(k, a)][name][0]:<14.4E}"
+                              for a in ALPHABETS)
+                print(f"{name:<10s}{row}")
+            spd = "".join(
+                f"  {results[(k, a)]['linear'][0] / results[(k, a)]['fastsax'][0]:<14.2f}"
+                for a in ALPHABETS)
+            print(f"{'vs linear':<10s}{spd}")
+            frac = "".join(
+                f"  {results[(k, a)]['fastsax'][1]:<14.3f}"
+                for a in ALPHABETS)
+            print(f"{'verified':<10s}{frac}")
+    return results
+
+
+def main() -> None:
+    results = run(verbose=True)
+    for (k, alpha), cell in results.items():
+        lin = cell["linear"][0]
+        for name, (lat, frac) in cell.items():
+            emit(f"knn/{name}/k{k}/a{alpha}", lat,
+                 f"speedup_vs_linear={lin / lat:.2f};verified_frac={frac:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -118,6 +118,38 @@ def discretize_cost(N: int, alphabet: int) -> dict:
     return dict(cmp=N * max(1, math.ceil(math.log2(max(2, alphabet)))))
 
 
+def residual_gap_cost() -> dict:
+    """The C9 quantity |d(u,ū) − d(q,q̄)| *as a lower bound* (no threshold
+    test) — what the k-NN seed phase computes per series."""
+    return dict(sub=1, abs=1)
+
+
+def heap_push_cost(k: int) -> dict:
+    """One sift of a size-k binary heap (the k-NN best-so-far structure)."""
+    import math
+
+    return dict(cmp=max(1, math.ceil(math.log2(max(2, k + 1)))))
+
+
+def select_cost(m: int, k: int) -> dict:
+    """Heap-select the k smallest of m values: one compare per value plus a
+    sift for the values that enter the size-k heap (charged for all m as the
+    pessimistic bound — the accounting must never undercount)."""
+    import math
+
+    lg = max(1, math.ceil(math.log2(max(2, k + 1))))
+    return dict(cmp=m + m * lg)
+
+
+def sort_cost(m: int) -> dict:
+    """Comparison sort of m keys (candidate ordering before verification)."""
+    import math
+
+    if m <= 1:
+        return dict(cmp=0)
+    return dict(cmp=m * max(1, math.ceil(math.log2(m))))
+
+
 def linfit_residual_cost(n: int, N: int) -> dict:
     """Closed-form per-segment first-degree LS residual for the query.
 

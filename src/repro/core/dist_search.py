@@ -29,7 +29,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from .engine import (DeviceIndex, QueryReprDev, build_device_index,
-                     cascade_mask, range_query_compact, represent_queries)
+                     cascade_mask, knn_query, range_query_compact,
+                     represent_queries)
 
 _PAD_RESIDUAL = 1e30  # sentinel: C9 kills padded rows for any finite epsilon
 
@@ -127,6 +128,99 @@ def distributed_range_query(
         check_rep=False,
     )(index.series, index.norms_sq, index.residuals, index.words,
       qr.q, qr.words, qr.residuals, eps)
+
+
+def distributed_knn_query(
+    index: DeviceIndex,
+    queries,
+    k: int,
+    mesh: Mesh,
+    axis: str = "data",
+    capacity_per_shard: int | None = None,
+    n_iters: int = 2,
+    normalize_queries: bool = True,
+    n_valid: int | None = None,
+):
+    """Exact k-NN over the sharded database: local top-k, cross-shard merge.
+
+    Each shard runs the batched best-so-far engine (``engine.knn_query``)
+    over its own rows — zero collectives in the cascade hot path — and
+    emits its local top-k as (global index, d²) pairs sorted ascending by
+    distance.  The per-shard buffers concatenate through the output
+    sharding (the only cross-device movement, an all-gather of Q·P·k pairs
+    when the result is materialised) and a final top-k over the P·k merged
+    pairs yields the exact global answer: the global top-k is always a
+    subset of the union of per-shard top-k sets.
+
+    Padded rows (``pad_database``) are excluded via the per-shard valid
+    mask, so they can never enter an answer even at huge radii; shards
+    holding fewer than k valid rows contribute ``+inf`` slots that lose
+    every merge comparison.
+
+    Returns (nn_idx (Q, k'), nn_d2 (Q, k'), exact (Q,)) with
+    ``k' = min(k, B_local)·P ≥ min(k, B)`` entries merged down to
+    ``min(k, n_valid)`` — callers read the first min(k, n_valid) columns;
+    slots beyond the valid count carry d² = +inf and index −1.  ``exact``
+    is the AND of every shard's exactness certificate; on False, re-run
+    with a larger ``capacity_per_shard`` (``None`` defaults to the full
+    shard size, which can never overflow — always exact).
+
+    ``n_valid`` is optional: padded rows are *always* recognised by the
+    sentinel residual ``distributed_build`` stamps on them (the range path
+    relies on the same sentinel), so the k-NN seed sample can never pick
+    one up even when the caller does not pass ``n_valid``.
+    """
+    levels, alphabet = index.levels, index.alphabet
+    P_sh = mesh.shape[axis]
+    B = index.series.shape[0]
+    b_loc = B // P_sh
+    n_valid = B if n_valid is None else int(n_valid)
+    k_loc = min(int(k), b_loc)
+    cap = b_loc if capacity_per_shard is None else min(int(capacity_per_shard),
+                                                       b_loc)
+    qr = represent_queries(jnp.asarray(queries, dtype=jnp.float32),
+                           levels, alphabet, normalize=normalize_queries)
+
+    def local(series, norms, residuals, words, q, qws, qrs):
+        lidx = DeviceIndex(series=series, norms_sq=norms, words=words,
+                           residuals=residuals, levels=levels,
+                           alphabet=alphabet)
+        lqr = QueryReprDev(q=q, words=qws, residuals=qrs)
+        shard = jax.lax.axis_index(axis)
+        rows = shard * b_loc + jnp.arange(b_loc, dtype=jnp.int32)
+        # Padded rows carry the _PAD_RESIDUAL sentinel at level 0 — the
+        # authoritative marker (n_valid merely narrows it further).  The
+        # range path is safe on the sentinel alone (C9 kills pads at any
+        # finite ε); k-NN must ALSO keep pads out of its seed sample,
+        # where no ε exists yet.
+        vmask = (rows < n_valid) & (residuals[0] < 0.5 * _PAD_RESIDUAL)
+        nn_idx, nn_d2, exact = knn_query(
+            lidx, lqr, k_loc, capacity=cap, n_iters=n_iters,
+            valid_mask=vmask)
+        finite = jnp.isfinite(nn_d2)
+        gidx = jnp.where(finite, nn_idx + shard * b_loc, -1)
+        return gidx, nn_d2, exact[:, None]
+
+    in_specs = (P(axis, None), P(axis),
+                tuple(P(axis) for _ in levels),
+                tuple(P(axis, None) for _ in levels),
+                P(), (P(),) * len(levels), (P(),) * len(levels))
+    out_specs = (P(None, axis), P(None, axis), P(None, axis))
+    gidx, d2, certs = shard_map(
+        local, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=False,
+    )(index.series, index.norms_sq, index.residuals, index.words,
+      qr.q, qr.words, qr.residuals)
+
+    # Cross-shard merge: stable top-k over the concatenated (d², idx) pairs.
+    # Slot order is shard-major with each shard ascending by (d², index), so
+    # equal distances resolve to the lowest global index — the same
+    # deterministic tie-break as every other engine.
+    k_out = min(int(k), gidx.shape[-1])
+    neg, pos = jax.lax.top_k(-d2, k_out)
+    nn_d2 = -neg
+    nn_idx = jnp.take_along_axis(gidx, pos, axis=-1)
+    return nn_idx, nn_d2, jnp.all(certs, axis=-1)
 
 
 def distributed_survivor_count(

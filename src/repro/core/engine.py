@@ -203,6 +203,35 @@ def range_query(
     return answers, jnp.where(answers, d2, jnp.inf)
 
 
+def compact_verify(index: DeviceIndex, qr: QueryReprDev, alive: jnp.ndarray,
+                   capacity: int, order_key: jnp.ndarray | None = None):
+    """Compact alive lanes to ``capacity`` slots and verify only those rows.
+
+    The shared compaction path of the two-phase range query and the k-NN
+    engine.  By default slots are filled prefer-low-index (so slot order —
+    and therefore every downstream tie-break — follows ascending database
+    index); passing ``order_key`` (Q, B), higher = more important, fills
+    them by key instead (the k-NN tightening passes key on the negated
+    residual gap so the most promising survivors are verified first).
+    Returns (idx (Q, C), valid (Q, C), d2 (Q, C)) with ``d2 = +inf`` on
+    invalid slots.
+    """
+    B = alive.shape[-1]
+    if order_key is None:
+        keys = jnp.where(alive,
+                         B - jnp.arange(B, dtype=jnp.int32)[None, :], 0)
+        top, idx = jax.lax.top_k(keys, capacity)              # (Q, C)
+        valid = top > 0
+    else:
+        keys = jnp.where(alive, order_key, -jnp.inf)
+        top, idx = jax.lax.top_k(keys, capacity)              # (Q, C)
+        valid = top > -jnp.inf
+    rows = index.series[idx]                                  # (Q, C, n)
+    diff = rows - qr.q[:, None, :]
+    d2 = jnp.sum(diff * diff, axis=-1)
+    return idx, valid, jnp.where(valid, d2, jnp.inf)
+
+
 @functools.partial(jax.jit, static_argnames=("capacity",))
 def range_query_compact(
     index: DeviceIndex, qr: QueryReprDev, epsilon: jnp.ndarray, capacity: int
@@ -213,21 +242,170 @@ def range_query_compact(
     mask (ties broken by index), then only ``capacity`` rows of the database
     are gathered for the Euclidean verify.  Sound as long as the true
     survivor count ≤ capacity; the returned ``overflow`` flag reports
-    violations so callers can fall back to the dense verify.
+    violations so callers can fall back to the dense verify (see
+    :func:`range_query_auto`).
     """
     Q = qr.q.shape[0]
     eps = _eps_qcol(epsilon, Q)
     alive = cascade_mask(index, qr, eps)                      # (Q, B)
     B = alive.shape[-1]
     capacity = min(int(capacity), B)
-    # Prefer-low-index compaction keys: alive lanes get key B - i, dead 0.
-    keys = jnp.where(alive, B - jnp.arange(B, dtype=jnp.int32)[None, :], 0)
-    top, idx = jax.lax.top_k(keys, capacity)                  # (Q, C)
-    valid = top > 0
-    rows = index.series[idx]                                  # (Q, C, n)
-    diff = rows - qr.q[:, None, :]
-    d2 = jnp.sum(diff * diff, axis=-1)
+    idx, valid, d2 = compact_verify(index, qr, alive, capacity)
     answers = valid & (d2 <= eps * eps)
-    n_alive = alive.sum(axis=-1)
-    overflow = n_alive > capacity
+    overflow = alive.sum(axis=-1) > capacity
     return idx, answers, jnp.where(answers, d2, jnp.inf), overflow
+
+
+def range_query_auto(
+    index: DeviceIndex, qr: QueryReprDev, epsilon, capacity: int
+):
+    """Compact-verify range query with the documented dense fallback.
+
+    Runs :func:`range_query_compact`; any query whose survivors overflowed
+    ``capacity`` is re-answered by the dense :func:`range_query` (host-side
+    branch — overflow is the rare path).  Returns (idx, answers, d2) in the
+    compact layout when no query overflowed, else the dense (mask, d2)
+    layout for all queries; the second element of the tuple always carries
+    the exact answer set.
+    """
+    idx, answers, d2, overflow = range_query_compact(
+        index, qr, epsilon, capacity)
+    if not bool(jax.device_get(overflow).any()):
+        return idx, answers, d2
+    mask, dense_d2 = range_query(index, qr, epsilon)
+    B = mask.shape[-1]
+    all_idx = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32)[None, :],
+                               mask.shape)
+    return all_idx, mask, dense_d2
+
+
+# ---------------------------------------------------------------------------
+# Exact k-NN: iteratively tightened per-query radius over the same cascade.
+# ---------------------------------------------------------------------------
+
+_KNN_SEED_SAMPLE = 64     # minimum strided-sample size for the seed radius
+# f32 slack on the cascade radius (relative + absolute): the index residuals
+# are f64-built then cast while query residuals are computed in f32, so the
+# lower-bound lemma only holds up to rounding noise.  Slack only ever *adds*
+# survivors, so exactness is unaffected; the absolute term matters when the
+# radius tightens to ~0 (exact-duplicate queries).
+_KNN_EPS_SLACK = 1e-4
+_KNN_EPS_ABS = 1e-3
+
+
+def _slacked(eps: jnp.ndarray) -> jnp.ndarray:
+    return eps * (1.0 + _KNN_EPS_SLACK) + _KNN_EPS_ABS
+
+
+def _kth_smallest(d2: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Per-row k-th smallest of (Q, M) values as a (Q, 1) column."""
+    return -jax.lax.top_k(-d2, k)[0][:, -1:]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "capacity", "n_iters"))
+def knn_query(
+    index: DeviceIndex,
+    qr: QueryReprDev,
+    k: int,
+    capacity: int | None = None,
+    n_iters: int = 2,
+    valid_mask: jnp.ndarray | None = None,
+):
+    """Batched exact k-NN over the masked cascade (jit-able, fixed shape).
+
+    The best-so-far recursion of ``core/search.py`` becomes an iteratively
+    tightened per-query ε *column*:
+
+      1. **seed** — verify a strided row sample (≥ max(k, 64) rows); the
+         k-th sampled distance upper-bounds the true k-th distance, so it
+         is a sound starting radius;
+      2. repeat ``n_iters`` times: run :func:`cascade_mask` under the
+         current ε column, compact survivors through the shared
+         :func:`compact_verify` path, and shrink ε to the k-th smallest
+         *verified* distance (ε is monotonically non-increasing and always
+         a verified upper bound — no true neighbour can be excluded);
+      3. the final top-k over the last compacted verify is the answer.
+
+    Returns ``(nn_idx (Q, k), nn_d2 (Q, k), exact (Q,))``.  ``exact`` is
+    the exactness certificate: True iff the final survivor set fit inside
+    ``capacity`` slots, in which case the answer provably equals brute
+    force (ties broken by ascending database index, matching
+    ``np.lexsort``).  On False, re-run with a larger capacity or fall back
+    to dense :func:`verify_distances` + ``top_k`` — soundness is never
+    silently lost.
+
+    ``valid_mask`` (B,) excludes rows (e.g. the padded rows of a sharded
+    database) from both the seed sample and the answer set.
+    """
+    Q, B = qr.q.shape[0], index.series.shape[0]
+    k = min(int(k), B)
+    capacity = min(B, max(4 * k, 64) if capacity is None else int(capacity))
+    capacity = max(capacity, k)
+
+    # --- seed radius from a strided verified sample ------------------------
+    S = min(B, max(k, _KNN_SEED_SAMPLE))
+    sample = (jnp.arange(S, dtype=jnp.int32) * B) // S   # distinct: S ≤ B
+    rows = index.series[sample]                          # (S, n)
+    diff = rows[None, :, :] - qr.q[:, None, :]
+    d2s = jnp.sum(diff * diff, axis=-1)                  # (Q, S)
+    if valid_mask is not None:
+        d2s = jnp.where(valid_mask[sample][None, :], d2s, jnp.inf)
+    eps = jnp.sqrt(jnp.maximum(_kth_smallest(d2s, k), 0.0))   # (Q, 1)
+
+    # --- tightening passes: verify the most *promising* survivors ----------
+    # Promise = small level-0 residual gap (the same O(1) lower bound the
+    # host engine seeds from).  Ordering the limited verify slots by
+    # promise makes ε collapse to ≈ the true k-th distance in one pass even
+    # when the survivor set overflows capacity; ε stays a verified upper
+    # bound throughout, so every pass is sound.
+    gap0 = jnp.abs(index.residuals[0][None, :] - qr.residuals[0][:, None])
+    for _ in range(max(0, int(n_iters) - 1)):
+        alive = cascade_mask(index, qr, _slacked(eps))
+        if valid_mask is not None:
+            alive &= valid_mask[None, :]
+        _, _, d2 = compact_verify(index, qr, alive, capacity,
+                                  order_key=-gap0)
+        eps = jnp.minimum(eps, jnp.sqrt(_kth_smallest(d2, k)))
+
+    # --- final pass: low-index compaction for deterministic tie-breaks -----
+    alive = cascade_mask(index, qr, _slacked(eps))
+    if valid_mask is not None:
+        alive &= valid_mask[None, :]
+    idx, valid, d2 = compact_verify(index, qr, alive, capacity)
+    overflow = alive.sum(axis=-1) > capacity
+
+    neg, pos = jax.lax.top_k(-d2, k)                     # ascending d2
+    nn_d2 = -neg
+    nn_idx = jnp.take_along_axis(idx, pos, axis=-1)
+    return nn_idx, nn_d2, ~overflow
+
+
+def knn_query_auto(
+    index: DeviceIndex,
+    qr: QueryReprDev,
+    k: int,
+    capacity: int | None = None,
+    n_iters: int = 2,
+    valid_mask: jnp.ndarray | None = None,
+    max_doublings: int = 8,
+):
+    """Certificate-driven exact k-NN: escalate capacity until provably exact.
+
+    Runs :func:`knn_query` and, while any query's exactness certificate is
+    False, re-runs with 4× the capacity (capped at B, where the compaction
+    can never overflow — so termination with an all-True certificate is
+    guaranteed).  The escalation is host-side; each distinct capacity
+    compiles once and is cached by jit.
+    """
+    B = index.series.shape[0]
+    k_eff = min(int(k), B)
+    cap = min(B, max(4 * k_eff, 64) if capacity is None else int(capacity))
+    cap = max(cap, k_eff)
+    for _ in range(max_doublings + 1):
+        nn_idx, nn_d2, exact = knn_query(
+            index, qr, k_eff, capacity=cap, n_iters=n_iters,
+            valid_mask=valid_mask)
+        if cap >= B or bool(jax.device_get(exact).all()):
+            return nn_idx, nn_d2, exact
+        cap = min(B, cap * 4)
+    return nn_idx, nn_d2, exact

@@ -200,6 +200,297 @@ def fastsax_range_query(
     )
 
 
+# ---------------------------------------------------------------------------
+# Exact k-nearest-neighbour engines (best-so-far cascade).
+#
+# The same proven-sound lower bounds that power the ε-range cascade (C9's
+# residual gap, eq. 9, and MINDIST, eq. 10) turn directly into exact k-NN
+# search: any candidate whose lower bound exceeds the current k-th best
+# *verified* distance can never enter the answer set.  The radius starts
+# from k cheaply-chosen verified candidates and only shrinks, so every
+# exclusion is sound — the answer set equals brute-force top-k, with ties
+# broken deterministically by (distance, index).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class KNNResult:
+    """Exact k-NN answer + accounting for one query.
+
+    ``indices``/``distances`` are sorted ascending by (distance, index) —
+    identical to brute force under the same deterministic tie-break.
+    """
+
+    indices: np.ndarray          # (k',) with k' = min(k, B)
+    distances: np.ndarray        # (k',) true Euclidean distances
+    counter: OpCounter           # latency-time accounting
+    verified: int                # series that paid a full Euclidean distance
+    excluded_c9: int = 0         # killed by the residual gap (eq. 9)
+    excluded_c10: int = 0        # killed by MINDIST (eq. 10)
+    pruned_bsf: int = 0          # skipped by the best-so-far bound at verify
+    levels_visited: int = 0
+    seed_radius: float = float("inf")   # ε after the seeding phase
+
+    @property
+    def latency(self) -> float:
+        return self.counter.latency()
+
+
+class _BestK:
+    """Max-heap of the k smallest (distance, index) pairs, op-charged.
+
+    The heap key is the *pair* (d, i), so boundary ties resolve exactly the
+    way ``np.lexsort`` brute force does: smaller index wins at equal
+    distance.
+    """
+
+    def __init__(self, k: int, counter: OpCounter):
+        import heapq
+
+        self._heapq = heapq
+        self.k = int(k)
+        self.counter = counter
+        self._heap: list = []    # entries (-d, -i): top is the worst kept pair
+
+    @property
+    def full(self) -> bool:
+        return len(self._heap) >= self.k
+
+    @property
+    def bound(self) -> float:
+        """Current k-th best verified distance (inf until k are held)."""
+        return -self._heap[0][0] if self.full else float("inf")
+
+    def consider(self, d: float, i: int) -> None:
+        if not self.full:
+            self._heapq.heappush(self._heap, (-d, -i))
+            self.counter.count(**cm.heap_push_cost(self.k))
+            return
+        self.counter.count(cmp=1)
+        if (-d, -i) > self._heap[0]:          # (d, i) < current worst pair
+            self._heapq.heapreplace(self._heap, (-d, -i))
+            self.counter.count(**cm.heap_push_cost(self.k))
+
+    def result(self) -> tuple[np.ndarray, np.ndarray]:
+        pairs = sorted((-nd, -ni) for nd, ni in self._heap)
+        idx = np.asarray([i for _, i in pairs], dtype=np.int64)
+        dist = np.asarray([d for d, _ in pairs], dtype=np.float64)
+        return idx, dist
+
+
+def _knn_result_from_heap(best: _BestK, **kw) -> KNNResult:
+    idx, dist = best.result()
+    return KNNResult(indices=idx, distances=dist, **kw)
+
+
+def linear_scan_knn(
+    index: FastSAXIndex,
+    query: np.ndarray | QueryRepr,
+    k: int,
+    counter: OpCounter | None = None,
+) -> KNNResult:
+    """Brute-force exact k-NN — ground truth and cost ceiling."""
+    counter = counter or OpCounter()
+    qr = (query if isinstance(query, QueryRepr)
+          else represent_query(query, index.config))
+    B = index.size
+    k_eff = min(int(k), B)
+    d = _euclidean_np(index.series, qr.q)
+    counter.count(**_scale(cm.euclidean_cost(index.n), B))
+    best = _BestK(k_eff, counter)
+    for i in range(B):
+        best.consider(float(d[i]), i)
+    return _knn_result_from_heap(best, counter=counter, verified=B)
+
+
+def sax_knn_query(
+    index: FastSAXIndex,
+    query: np.ndarray | QueryRepr,
+    k: int,
+    n_segments: int | None = None,
+    counter: OpCounter | None = None,
+) -> KNNResult:
+    """Classical SAX exact k-NN at a single level (MINDIST-ordered scan).
+
+    The textbook exact algorithm: compute MINDIST(q̃, ũ) for every series,
+    visit candidates in ascending MINDIST order, verify true distances into
+    a best-so-far heap, and stop at the first candidate whose lower bound
+    exceeds the running k-th best distance (every later candidate's bound is
+    at least as large).
+    """
+    counter = counter or OpCounter()
+    n, alphabet = index.n, index.config.alphabet
+    if n_segments is None:
+        n_segments = max(index.config.n_segments)
+    level = index.level_for(n_segments)
+    qr = (query if isinstance(query, QueryRepr)
+          else represent_query(query, index.config))
+    li = list(index.config.levels).index(n_segments)
+
+    counter.count(**_query_transform_cost_sax(n, n_segments, alphabet))
+
+    B = index.size
+    k_eff = min(int(k), B)
+    md = np.sqrt(_mindist_sq_np(level.words, qr.words[li], n, alphabet))
+    counter.count(**_scale(cm.mindist_cost(n_segments), B))
+    order = np.argsort(md, kind="stable")
+    counter.count(**cm.sort_cost(B))
+
+    best = _BestK(k_eff, counter)
+    verified = 0
+    pruned = 0
+    for rank, i in enumerate(order):
+        if best.full:
+            counter.count(cmp=1)
+            if md[i] > best.bound:
+                pruned = B - rank
+                break
+        d = float(_euclidean_np(index.series[i:i + 1], qr.q)[0])
+        counter.count(**cm.euclidean_cost(n))
+        verified += 1
+        best.consider(d, int(i))
+    # The break-pruned tail is charged to pruned_bsf only (not also to
+    # excluded_c10), keeping the accounting fields disjoint so
+    # verified + excluded_* + pruned_bsf never exceeds B.
+    return _knn_result_from_heap(
+        best, counter=counter, verified=verified, pruned_bsf=pruned,
+        levels_visited=1)
+
+
+def fastsax_knn_query(
+    index: FastSAXIndex,
+    query: np.ndarray | QueryRepr,
+    k: int,
+    counter: OpCounter | None = None,
+    seed_factor: int = 2,
+) -> KNNResult:
+    """FAST_SAX exact k-NN: seeded best-so-far radius + exclusion cascade.
+
+    Three phases, all charged to the latency-time model:
+
+    1. **Seed** — the level-0 residual gap |d(u,ū) − d(q,q̄)| is itself a
+       lower bound on d(u,q) (eq. 5-9) and costs O(1) per series.  The
+       ``seed_factor · k`` series with the smallest gap are Euclidean-
+       verified into the best-so-far heap; the k-th verified distance is the
+       starting radius ε.
+    2. **Cascade** — the ε-range machinery of :func:`fastsax_range_query`
+       runs per level (C9 then masked MINDIST) against the seeded ε, while
+       recording each survivor's tightest known lower bound.
+    3. **Verify** — cascade survivors are visited in ascending lower-bound
+       order; each verification can only shrink ε, and the scan stops at the
+       first survivor whose bound exceeds it.
+
+    Every exclusion compares a *proven lower bound* against a *verified
+    distance*, so the result is exactly brute-force top-k (ties broken by
+    index).
+    """
+    counter = counter or OpCounter()
+    n, alphabet = index.n, index.config.alphabet
+    qr = (query if isinstance(query, QueryRepr)
+          else represent_query(query, index.config))
+    B = index.size
+    k_eff = min(int(k), B)
+    best = _BestK(k_eff, counter)
+
+    # --- Phase 1: seed the best-so-far radius from level-0 gaps ------------
+    lv0 = index.levels[0]
+    counter.count(**_query_transform_cost_fastsax(n, lv0.n_segments, alphabet))
+    gaps0 = np.abs(lv0.residuals - qr.residuals[0])
+    counter.count(**_scale(cm.residual_gap_cost(), B))
+    n_seed = min(B, max(k_eff, int(seed_factor) * k_eff))
+    seed_idx = np.argsort(gaps0, kind="stable")[:n_seed]
+    counter.count(**cm.select_cost(B, n_seed))
+    d_seed = _euclidean_np(index.series[seed_idx], qr.q)
+    counter.count(**_scale(cm.euclidean_cost(n), n_seed))
+    for i, d in zip(seed_idx, d_seed):
+        best.consider(float(d), int(i))
+    eps = best.bound
+    seed_radius = eps
+
+    verified_mask = np.zeros(B, dtype=bool)
+    verified_mask[seed_idx] = True
+    alive = ~verified_mask
+    lb = np.zeros(B)                 # tightest known lower bound per series
+    lb[~verified_mask] = gaps0[~verified_mask]
+
+    # --- Phase 2: exclusion cascade with mid-cascade tightening ------------
+    excluded_c9 = 0
+    excluded_c10 = 0
+    levels_visited = 0
+    n_verified = int(n_seed)
+    for li, level in enumerate(index.levels):
+        if not alive.any():
+            break
+        levels_visited += 1
+        N = level.n_segments
+        if li > 0:  # level 0's query transform was charged by the seed phase
+            counter.count(**_query_transform_cost_fastsax(n, N, alphabet))
+
+        alive_idx = np.nonzero(alive)[0]
+        if li == 0:
+            # The seed phase already computed (and charged) level-0 gaps;
+            # only the threshold compare is new work here.
+            gap = gaps0[alive_idx]
+            counter.count(cmp=alive_idx.size)
+        else:
+            gap = np.abs(level.residuals[alive_idx] - qr.residuals[li])
+            counter.count(**_scale(cm.c9_cost(), alive_idx.size))
+        lb[alive_idx] = np.maximum(lb[alive_idx], gap)
+        c9_kill = gap > eps
+        excluded_c9 += int(c9_kill.sum())
+        survivors = alive_idx[~c9_kill]
+
+        if survivors.size:
+            md = np.sqrt(_mindist_sq_np(level.words[survivors], qr.words[li],
+                                        n, alphabet))
+            counter.count(**_scale(cm.mindist_cost(N), survivors.size))
+            lb[survivors] = np.maximum(lb[survivors], md)
+            c10_kill = md > eps
+            excluded_c10 += int(c10_kill.sum())
+            survivors = survivors[~c10_kill]
+
+        alive[:] = False
+        alive[survivors] = True
+
+        # Mid-cascade tightening: verify the most promising survivors (the
+        # k smallest lower bounds) NOW, so the next level prunes against
+        # the tightened radius instead of the loose seed.
+        if survivors.size and li < len(index.levels) - 1:
+            m = min(k_eff, survivors.size)
+            counter.count(**cm.select_cost(survivors.size, m))
+            promising = survivors[np.argsort(lb[survivors],
+                                             kind="stable")[:m]]
+            d_p = _euclidean_np(index.series[promising], qr.q)
+            counter.count(**_scale(cm.euclidean_cost(n), m))
+            n_verified += int(m)
+            for i, d in zip(promising, d_p):
+                best.consider(float(d), int(i))
+            eps = min(eps, best.bound)
+            alive[promising] = False
+
+    # --- Phase 3: best-so-far verification in ascending lower-bound order --
+    cand = np.nonzero(alive)[0]
+    order = np.argsort(lb[cand], kind="stable")
+    counter.count(**cm.sort_cost(cand.size))
+    verified = n_verified
+    pruned = 0
+    for rank, ci in enumerate(order):
+        i = int(cand[ci])
+        counter.count(cmp=1)
+        if lb[i] > best.bound:
+            pruned = cand.size - rank
+            break
+        d = float(_euclidean_np(index.series[i:i + 1], qr.q)[0])
+        counter.count(**cm.euclidean_cost(n))
+        verified += 1
+        best.consider(d, i)
+        eps = min(eps, best.bound)
+    return _knn_result_from_heap(
+        best, counter=counter, verified=verified, excluded_c9=excluded_c9,
+        excluded_c10=excluded_c10, pruned_bsf=pruned,
+        levels_visited=levels_visited, seed_radius=float(seed_radius))
+
+
 def linear_scan(
     index: FastSAXIndex,
     query: np.ndarray | QueryRepr,

@@ -65,8 +65,8 @@ def serve_lm(args):
 
 
 def serve_search(args):
-    """FAST_SAX range-query service over a sharded database."""
-    from ..core.dist_search import (distributed_build,
+    """FAST_SAX range-query / k-NN service over a sharded database."""
+    from ..core.dist_search import (distributed_build, distributed_knn_query,
                                     distributed_range_query, make_data_mesh,
                                     pad_database)
     from ..data.timeseries import make_queries, make_wafer_like
@@ -82,6 +82,23 @@ def serve_search(args):
     print(f"[search] indexed {n_valid} series on {n_dev} shard(s) "
           f"in {time.perf_counter()-t0:.2f}s")
     queries = make_queries(db, args.queries, seed=1)
+    if args.knn:
+        k = args.knn
+        t0 = time.perf_counter()
+        nn_idx, nn_d2, exact = distributed_knn_query(
+            index, queries, k, mesh, n_valid=n_valid,
+            normalize_queries=False)
+        jax.block_until_ready(nn_d2)
+        dt = time.perf_counter() - t0
+        nn_idx = np.asarray(nn_idx)[:, :k]
+        nn_d = np.sqrt(np.asarray(nn_d2))[:, :k]
+        for qi in range(min(4, args.queries)):
+            pairs = [f"{i}:{d:.3f}" for i, d in zip(nn_idx[qi], nn_d[qi])]
+            print(f"[knn] q{qi}: {' '.join(pairs[:6])}")
+        print(f"[knn] k={k}: {args.queries} queries in {dt*1e3:.1f} ms "
+              f"({args.queries/dt:.0f} qps); "
+              f"exact={bool(np.asarray(exact).all())}")
+        return
     t0 = time.perf_counter()
     gidx, ans, d2, overflow = distributed_range_query(
         index, queries, args.epsilon, mesh, capacity_per_shard=128,
@@ -109,6 +126,9 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--search", action="store_true",
                     help="serve FAST_SAX range queries instead of an LM")
+    ap.add_argument("--knn", type=int, default=0, metavar="K",
+                    help="with --search: serve exact k-NN queries instead "
+                         "of ε-range queries")
     ap.add_argument("--db-size", type=int, default=4096)
     ap.add_argument("--queries", type=int, default=16)
     ap.add_argument("--epsilon", type=float, default=2.0)

@@ -3,19 +3,24 @@
 These need a multi-device mesh, so they run in a subprocess with
 ``xla_force_host_platform_device_count=8`` — the main pytest process keeps
 the container's single CPU device (per the dry-run isolation rule)."""
+import os
+import pathlib
 import subprocess
 import sys
 import textwrap
 
 import pytest
 
+_REPO_ROOT = str(pathlib.Path(__file__).resolve().parents[1])
+
 
 def _run(code: str):
-    env = {"XLA_FLAGS": "--xla_force_host_platform_device_count=8",
-           "PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin",
-           "JAX_PLATFORMS": "cpu"}
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=str(pathlib.Path(_REPO_ROOT) / "src"),
+               JAX_PLATFORMS="cpu")
     return subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                          capture_output=True, text=True, cwd="/root/repo",
+                          capture_output=True, text=True, cwd=_REPO_ROOT,
                           env=env, timeout=600)
 
 

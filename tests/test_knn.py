@@ -1,0 +1,257 @@
+"""Exactness of the k-NN subsystem against brute-force ground truth.
+
+Every engine — the op-counted host cascade (``core/search.py``), the
+batched device engine (``core/engine.py``), and the multi-shard
+``dist_search`` mesh — must return *exactly* the brute-force top-k
+(indices and distances), with ties broken deterministically by
+(distance, index), including k larger than the database / shard / survivor
+count.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core.engine import (device_index_from_host, knn_query,
+                               knn_query_auto, represent_queries)
+from repro.core.fastsax import FastSAXConfig, build_index, represent_query
+from repro.core.search import (fastsax_knn_query, linear_scan_knn,
+                               sax_knn_query)
+from repro.data.timeseries import make_queries, make_wafer_like
+
+
+def brute_force_knn(db: np.ndarray, q: np.ndarray, k: int):
+    """Ground truth: k smallest Euclidean distances, ties by lowest index."""
+    d = np.sqrt(np.sum((db - q[None, :]) ** 2, axis=-1))
+    order = np.lexsort((np.arange(d.shape[0]), d))[:min(k, d.shape[0])]
+    return order, d[order]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    db = make_wafer_like(n_series=900, length=128, seed=0)
+    db[7] = db[3]
+    db[100] = db[3]          # deliberate exact ties
+    cfg = FastSAXConfig(n_segments=(8, 16), alphabet=10)
+    idx = build_index(db, cfg, normalize=False)
+    queries = make_queries(db, 5, seed=3)
+    queries[0] = db[3]       # exact-duplicate query: d=0 three-way tie
+    return db, cfg, idx, queries
+
+
+ENGINES = [
+    ("linear", linear_scan_knn),
+    ("sax", sax_knn_query),
+    ("fastsax", fastsax_knn_query),
+]
+
+
+@pytest.mark.parametrize("k", [1, 3, 10, 50])
+@pytest.mark.parametrize("name,engine", ENGINES)
+def test_opcounted_engines_match_brute_force(setup, k, name, engine):
+    _, cfg, idx, queries = setup
+    for q in queries:
+        qr = represent_query(q, cfg, normalize=False)
+        ref_idx, ref_d = brute_force_knn(idx.series, qr.q, k)
+        r = engine(idx, qr, k)
+        np.testing.assert_array_equal(r.indices, ref_idx, err_msg=name)
+        np.testing.assert_allclose(r.distances, ref_d, rtol=1e-9, atol=1e-9)
+
+
+@pytest.mark.parametrize("k", [900, 950])
+def test_k_exceeding_database_returns_everything(setup, k):
+    """k ≥ B (and k > any survivor count) degrades to a full sorted scan."""
+    _, cfg, idx, queries = setup
+    qr = represent_query(queries[1], cfg, normalize=False)
+    ref_idx, ref_d = brute_force_knn(idx.series, qr.q, k)
+    assert ref_idx.shape[0] == idx.size
+    for _, engine in ENGINES:
+        r = engine(idx, qr, k)
+        np.testing.assert_array_equal(r.indices, ref_idx)
+        np.testing.assert_allclose(r.distances, ref_d, rtol=1e-9, atol=1e-9)
+
+
+def test_tie_break_is_lowest_index(setup):
+    """The three exact duplicates of db[3] fill the top-3 in index order."""
+    _, cfg, idx, queries = setup
+    qr = represent_query(queries[0], cfg, normalize=False)
+    for _, engine in ENGINES:
+        r = engine(idx, qr, 3)
+        np.testing.assert_array_equal(r.indices, [3, 7, 100])
+        np.testing.assert_allclose(r.distances, 0.0, atol=1e-9)
+
+
+def test_knn_accounting_and_pruning(setup):
+    """FAST_SAX verifies far fewer series than brute force *in aggregate*
+    (a query whose k-NN radius spans the database defeats any lower bound,
+    so per-query pruning is not guaranteed), charges every phase, and its
+    per-series accounting never exceeds the database size."""
+    _, cfg, idx, queries = setup
+    tot_verified = 0
+    tot_fast = tot_lin = 0.0
+    for q in queries:
+        qr = represent_query(q, cfg, normalize=False)
+        r = fastsax_knn_query(idx, qr, 5)
+        lin = linear_scan_knn(idx, qr, 5)
+        tot_verified += r.verified
+        tot_fast += r.latency
+        tot_lin += lin.latency
+        assert np.isfinite(r.seed_radius)
+        accounted = (r.verified + r.excluded_c9 + r.excluded_c10
+                     + r.pruned_bsf)
+        assert accounted <= idx.size
+        assert r.counter.total_ops() > 0
+    assert tot_verified < len(queries) * idx.size // 2
+    assert tot_fast < tot_lin
+
+
+# ---------------------------------------------------------------------------
+# Batched device engine
+# ---------------------------------------------------------------------------
+
+
+def _brute_batch_f32(series_f32: np.ndarray, q_f32: np.ndarray, k: int):
+    d2 = np.sum((series_f32[None, :, :] - q_f32[:, None, :]) ** 2, axis=-1)
+    idx_out, d2_out = [], []
+    for row in d2:
+        o = np.lexsort((np.arange(row.shape[0]), row))[:k]
+        idx_out.append(o)
+        d2_out.append(row[o])
+    return np.asarray(idx_out), np.asarray(d2_out)
+
+
+@pytest.fixture(scope="module")
+def device_setup(setup):
+    _, cfg, idx, queries = setup
+    dev = device_index_from_host(idx)
+    qr = represent_queries(np.asarray(queries, np.float32),
+                           dev.levels, dev.alphabet, normalize=False)
+    return dev, qr
+
+
+@pytest.mark.parametrize("k", [1, 5, 20])
+def test_device_knn_matches_brute_force(device_setup, k):
+    dev, qr = device_setup
+    nn_idx, nn_d2, exact = knn_query_auto(dev, qr, k)
+    assert bool(np.asarray(exact).all())
+    ref_idx, ref_d2 = _brute_batch_f32(np.asarray(dev.series),
+                                       np.asarray(qr.q), k)
+    np.testing.assert_array_equal(np.asarray(nn_idx), ref_idx)
+    np.testing.assert_allclose(np.asarray(nn_d2), ref_d2,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_device_knn_full_capacity_is_always_certified(device_setup):
+    """capacity=B can never overflow: certificate True, answer exact."""
+    dev, qr = device_setup
+    B = dev.series.shape[0]
+    nn_idx, nn_d2, exact = knn_query(dev, qr, 10, capacity=B)
+    assert bool(np.asarray(exact).all())
+    ref_idx, _ = _brute_batch_f32(np.asarray(dev.series),
+                                  np.asarray(qr.q), 10)
+    np.testing.assert_array_equal(np.asarray(nn_idx), ref_idx)
+
+
+def test_device_knn_certificate_reports_capacity_overflow(device_setup):
+    """A capacity below the survivor count must be reported, not hidden."""
+    dev, qr = device_setup
+    _, _, exact = knn_query(dev, qr, 20, capacity=20, n_iters=1)
+    assert not bool(np.asarray(exact).all())
+
+
+def test_device_knn_valid_mask_excludes_rows(device_setup):
+    dev, qr = device_setup
+    import jax.numpy as jnp
+
+    B = dev.series.shape[0]
+    vm = np.ones(B, dtype=bool)
+    vm[3] = vm[7] = False
+    nn_idx, nn_d2, exact = knn_query_auto(dev, qr, 5,
+                                          valid_mask=jnp.asarray(vm))
+    assert bool(np.asarray(exact).all())
+    got = np.asarray(nn_idx)
+    assert 3 not in got and 7 not in got
+    # and the masked brute force agrees
+    ref_idx, _ = _brute_batch_f32(np.asarray(dev.series)[vm],
+                                  np.asarray(qr.q), 5)
+    remap = np.nonzero(vm)[0]
+    np.testing.assert_array_equal(got, remap[ref_idx])
+
+
+# ---------------------------------------------------------------------------
+# Multi-shard mesh (subprocess: needs xla_force_host_platform_device_count)
+# ---------------------------------------------------------------------------
+
+
+_REPO_ROOT = str(pathlib.Path(__file__).resolve().parents[1])
+
+
+def _run(code: str):
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=str(pathlib.Path(_REPO_ROOT) / "src"),
+               JAX_PLATFORMS="cpu")
+    return subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          capture_output=True, text=True, cwd=_REPO_ROOT,
+                          env=env, timeout=600)
+
+
+@pytest.mark.slow
+def test_distributed_knn_matches_brute_force():
+    r = _run("""
+        import numpy as np, jax
+        from repro.core.dist_search import (distributed_build,
+            distributed_knn_query, make_data_mesh, pad_database)
+        from repro.data.timeseries import make_wafer_like, make_queries
+
+        assert len(jax.devices()) == 8
+        db = make_wafer_like(n_series=997, length=128, seed=5)  # prime: pads
+        db[7] = db[3]; db[500] = db[3]
+        qs = make_queries(db, 4, seed=6)
+        qs[0] = db[3]
+        mesh = make_data_mesh()
+        padded, n_valid = pad_database(db, 8)
+        assert padded.shape[0] == 1000 and n_valid == 997
+        didx = distributed_build(padded, (8, 16), 10, mesh, n_valid=n_valid)
+
+        f32db = np.asarray(padded, np.float32)[:n_valid]
+        qf = np.asarray(qs, np.float32)
+        def brute(k):
+            d2 = np.sum((f32db[None] - qf[:, None]) ** 2, -1)
+            oi, od = [], []
+            for row in d2:
+                o = np.lexsort((np.arange(len(row)), row))[:k]
+                oi.append(o); od.append(row[o])
+            return np.asarray(oi), np.asarray(od)
+
+        # k=150 exceeds shard 7's 122 valid rows: its +inf slots must lose.
+        for k in (1, 5, 20, 150):
+            nn_idx, nn_d2, exact = distributed_knn_query(
+                didx, qs, k, mesh, n_valid=n_valid, normalize_queries=False)
+            bi, bd = brute(k)
+            nn_idx = np.asarray(nn_idx)[:, :k]
+            nn_d2 = np.asarray(nn_d2)[:, :k]
+            assert bool(np.asarray(exact).all()), k
+            assert (nn_idx >= 0).all() and (nn_idx < n_valid).all(), \\
+                "padded row leaked into a k-NN answer"
+            assert np.array_equal(nn_idx, bi), (k, nn_idx[:, :5], bi[:, :5])
+            np.testing.assert_allclose(nn_d2, bd, rtol=1e-4, atol=1e-4)
+
+        # Omitting n_valid must be equally exact: pads are recognised by
+        # the sentinel residual alone (regression: the seed sample used to
+        # pick up pad rows and silently shrink the radius).
+        nn_idx, nn_d2, exact = distributed_knn_query(
+            didx, qs, 5, mesh, normalize_queries=False)
+        bi, bd = brute(5)
+        assert bool(np.asarray(exact).all())
+        nn_idx = np.asarray(nn_idx)[:, :5]
+        assert (nn_idx >= 0).all() and (nn_idx < n_valid).all()
+        assert np.array_equal(nn_idx, bi)
+        print("OK")
+    """)
+    assert r.returncode == 0, r.stderr[-4000:]
+    assert "OK" in r.stdout

@@ -5,7 +5,8 @@ import numpy as np
 import pytest
 
 from repro.core.engine import (device_index_from_host, range_query,
-                               range_query_compact, represent_queries)
+                               range_query_auto, range_query_compact,
+                               represent_queries)
 from repro.core.fastsax import FastSAXConfig, build_index, represent_query
 from repro.core.search import (fastsax_range_query, linear_scan,
                                sax_range_query)
@@ -64,6 +65,30 @@ def test_compact_engine_and_overflow_flag(setup):
     # Tiny capacity must raise the overflow flag when survivors exceed it.
     _, _, _, overflow2 = range_query_compact(dev, qr, 4.0, capacity=2)
     assert bool(np.asarray(overflow2).any())
+
+
+def test_compact_overflow_falls_back_to_dense_verify(setup):
+    """The documented overflow recovery (overflow=True → dense verify) must
+    restore the exact answer set — the same compaction path the k-NN engine
+    reuses, so losing soundness here would corrupt k-NN too."""
+    _, cfg, idx, queries = setup
+    dev = device_index_from_host(idx)
+    qr = represent_queries(np.asarray(queries, np.float32),
+                           dev.levels, dev.alphabet, normalize=False)
+    # capacity=2 overflows at eps=4.0 (asserted above) → dense path taken.
+    _, ans_fb, d2_fb = range_query_auto(dev, qr, 4.0, capacity=2)
+    ref_mask, ref_d2 = range_query(dev, qr, 4.0)
+    np.testing.assert_array_equal(np.asarray(ans_fb), np.asarray(ref_mask))
+    np.testing.assert_allclose(np.asarray(d2_fb), np.asarray(ref_d2))
+
+    # No overflow → the compact layout is returned and is equally exact.
+    idxs, ans, d2 = range_query_auto(dev, qr, 1.5, capacity=256)
+    assert np.asarray(ans).shape[-1] == 256
+    for i in range(len(queries)):
+        got = set(np.asarray(idxs)[i][np.asarray(ans)[i]].tolist())
+        want = set(np.nonzero(np.asarray(range_query(dev, qr, 1.5)[0])[i])[0]
+                   .tolist())
+        assert got == want
 
 
 def test_fastsax_is_faster_where_paper_says(setup):
