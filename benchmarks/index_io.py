@@ -1,0 +1,103 @@
+"""Index lifecycle I/O: build vs save vs mmap-load vs warm query.
+
+Quantifies the point of the offline store (DESIGN.md §5): the paper's
+offline phase is recomputed on every process start today, so cold-start
+scales with B; a committed store loads in O(ms) via ``np.load(mmap_mode=
+"r")`` regardless of B.  Per database size this suite measures:
+
+  * ``build``     — the offline phase (``build_index``: PAA + discretise +
+                    linear-fit residuals at every level),
+  * ``save``      — atomic columnar commit (``index.store.save_index``),
+  * ``load_mmap`` — opening the committed store lazily (the serve
+                    cold-start replacement; ``derived`` records the
+                    speedup over rebuild),
+  * ``warm_knn``  — FAST_SAX exact k-NN per query on the just-loaded
+                    index, answer-checked against the built index (the
+                    mmap pages fault in lazily; this is the first-query
+                    cost a warm restart actually pays).
+
+Wall-clock microseconds (this suite measures I/O, not the latency-time op
+model).  Results are recorded in EXPERIMENTS.md §Index-IO.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.fastsax import FastSAXConfig, build_index, represent_query
+from repro.core.search import fastsax_knn_query
+from repro.data.timeseries import make_queries, make_wafer_like
+from repro.index.store import load_index, save_index
+
+from .common import emit
+
+DB_SIZES = (1024, 4096, 16384, 65536)
+LEVELS = (8, 16)
+ALPHABET = 10
+N_QUERIES = 8
+K = 5
+N_LOAD_REPEATS = 5
+
+
+def _time(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, (time.perf_counter() - t0) * 1e6   # µs
+
+
+def run(verbose: bool = True) -> dict:
+    cfg = FastSAXConfig(n_segments=LEVELS, alphabet=ALPHABET)
+    results = {}
+    tmp = tempfile.mkdtemp(prefix="repro_index_io_")
+    try:
+        for B in DB_SIZES:
+            db = make_wafer_like(n_series=B, length=128, seed=0)
+            queries = make_queries(db, N_QUERIES, seed=1)
+
+            built, t_build = _time(lambda: build_index(db, cfg,
+                                                       normalize=False))
+            path = f"{tmp}/idx_{B}"
+            _, t_save = _time(lambda: save_index(built, path))
+            t_load = np.median([_time(lambda: load_index(path))[1]
+                                for _ in range(N_LOAD_REPEATS)])
+            loaded = load_index(path)
+
+            qrs = [represent_query(q, cfg, normalize=False) for q in queries]
+            t0 = time.perf_counter()
+            answers = [fastsax_knn_query(loaded, qr, K) for qr in qrs]
+            t_warm = (time.perf_counter() - t0) / N_QUERIES * 1e6
+            # Correctness check outside the timed region: the loaded index
+            # answers exactly like the built one.
+            for qi, (qr, r) in enumerate(zip(qrs, answers)):
+                ref = fastsax_knn_query(built, qr, K)
+                assert np.array_equal(r.indices, ref.indices), qi
+
+            results[B] = {"build": t_build, "save": t_save,
+                          "load_mmap": t_load, "warm_knn": t_warm,
+                          "speedup": t_build / t_load}
+            if verbose:
+                print(f"# B={B}: build {t_build/1e3:.1f} ms, "
+                      f"save {t_save/1e3:.1f} ms, "
+                      f"mmap load {t_load/1e3:.2f} ms "
+                      f"({t_build / t_load:.0f}x faster than rebuild), "
+                      f"warm 5-NN {t_warm/1e3:.2f} ms/query")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    return results
+
+
+def main() -> None:
+    results = run(verbose=True)
+    for B, r in results.items():
+        emit(f"index_io/build/b{B}", r["build"])
+        emit(f"index_io/save/b{B}", r["save"])
+        emit(f"index_io/load_mmap/b{B}", r["load_mmap"],
+             f"speedup_vs_build={r['speedup']:.1f}")
+        emit(f"index_io/warm_knn/b{B}", r["warm_knn"], f"k={K}")
+
+
+if __name__ == "__main__":
+    main()

@@ -16,7 +16,8 @@ import re
 import sys
 import time
 
-SUITES = ("table1", "figure2", "tightness", "pruning", "engine", "knn")
+SUITES = ("table1", "figure2", "tightness", "pruning", "engine", "knn",
+          "index_io")
 
 _CSV_LINE = re.compile(r"^([a-z0-9_][a-z0-9_/.+-]*),(-?[0-9.eE+]+),(.*)$")
 
@@ -57,11 +58,12 @@ def main() -> None:
     args = ap.parse_args()
     chosen = [s.strip() for s in args.only.split(",") if s.strip()]
 
-    from . import (engine_throughput, figure2_curves, knn_latency,
+    from . import (engine_throughput, figure2_curves, index_io, knn_latency,
                    pruning_power, table1_latency, tightness)
     mains = {"table1": table1_latency.main, "figure2": figure2_curves.main,
              "tightness": tightness.main, "pruning": pruning_power.main,
-             "engine": engine_throughput.main, "knn": knn_latency.main}
+             "engine": engine_throughput.main, "knn": knn_latency.main,
+             "index_io": index_io.main}
     for name in chosen:
         if name not in mains:
             print(f"unknown suite {name!r}", file=sys.stderr)

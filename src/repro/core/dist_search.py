@@ -261,3 +261,25 @@ def make_data_mesh(n_devices: int | None = None, axis: str = "data") -> Mesh:
     devs = jax.devices()
     n = n_devices or len(devs)
     return Mesh(np.asarray(devs[:n]), (axis,))
+
+
+# ---------------------------------------------------------------------------
+# Persistence: the sharded index as a long-lived on-disk artifact.
+# ---------------------------------------------------------------------------
+
+def store_sharded(index: DeviceIndex, path, n_valid: int | None = None):
+    """Persist the sharded index, one store dir per mesh shard — each
+    device's rows are written from its own addressable shard, with no
+    host-side gather of the global arrays (``repro.index.sharded``)."""
+    from ..index.sharded import store_sharded as _store
+    return _store(index, path, n_valid=n_valid)
+
+
+def load_sharded(path, mesh: Mesh, axis: str = "data", verify: bool = False):
+    """Warm-start the distributed engine from a sharded store: generation
+    file *i* maps directly onto mesh shard *i* (mmap → device_put →
+    ``make_array_from_single_device_arrays``).  Returns
+    ``(DeviceIndex, n_valid)``; the stored shard count must match the mesh
+    axis size."""
+    from ..index.sharded import load_sharded as _load
+    return _load(path, mesh, axis=axis, verify=verify)

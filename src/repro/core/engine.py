@@ -66,6 +66,51 @@ class DeviceIndex:
     def n(self) -> int:
         return self.series.shape[-1]
 
+    @classmethod
+    def from_store(cls, path, dtype=jnp.float32, with_ids: bool = False):
+        """Warm-start from a committed ``repro.index`` store directory.
+
+        Accepts either a single-index store (``index.store.save_index``) or
+        a ``MutableIndex`` root (loaded through its live view: tombstoned
+        rows are dropped at upload, so no valid-mask plumbing is needed
+        and even a k-NN with k ≥ the live count can never surface a
+        deleted row).  The arrays are mmap-opened and never rebuilt; for
+        a plain store (or a compacted single-segment root) no full host
+        copy is made beyond the device upload itself, while a root with
+        deltas or tombstones concatenates the live rows on the host first
+        — run ``compact()`` to restore the zero-copy path (DESIGN.md §5).
+
+        The device engines answer in *row positions*.  For a mutable root
+        with any deletions, positions are NOT external ids — pass
+        ``with_ids=True`` to get ``(DeviceIndex, ids)`` where ``ids[pos]``
+        maps every answer back to its stable external id; loading such a
+        store without ``with_ids`` raises rather than let answers be
+        misread as ids.
+        """
+        import pathlib
+
+        import numpy as np
+
+        from ..index import mutable as _mutable
+        from ..index import store as _store
+
+        path = pathlib.Path(path)
+        if (path / _mutable.CURRENT).exists():
+            host, ids = _mutable.MutableIndex.open(path).live_index()
+            ids = np.asarray(ids)
+            if not with_ids and not np.array_equal(
+                    ids, np.arange(ids.size)):
+                raise ValueError(
+                    f"{path}: external ids differ from row positions "
+                    "(rows were deleted) — call "
+                    "from_store(..., with_ids=True) and map answers "
+                    "through the returned ids array")
+        else:
+            host = _store.load_index(path, mmap=True)
+            ids = np.arange(host.size)
+        dev = device_index_from_host(host, dtype=dtype)
+        return (dev, ids) if with_ids else dev
+
 
 def device_index_from_host(index: FastSAXIndex, dtype=jnp.float32) -> DeviceIndex:
     series = jnp.asarray(index.series, dtype=dtype)

@@ -51,8 +51,13 @@ class FastSAXConfig:
                 f"alphabet must be in [{MIN_ALPHABET}, {MAX_ALPHABET}]")
         if len(self.n_segments) == 0:
             raise ValueError("need at least one level")
-        if list(self.n_segments) != sorted(self.n_segments):
-            raise ValueError("n_segments must be listed coarse→fine (ascending)")
+        # Strictly ascending: ``list != sorted`` alone admits duplicates
+        # (e.g. (4, 4, 16)), which would make the cascade pay for the same
+        # level twice and collide the per-level keys of the index store.
+        if any(a >= b for a, b in zip(self.n_segments, self.n_segments[1:])):
+            raise ValueError(
+                "n_segments must be strictly ascending coarse→fine "
+                f"(no duplicates), got {tuple(self.n_segments)}")
         if self.level_order not in ("coarse_first", "paper"):
             raise ValueError(f"bad level_order {self.level_order!r}")
 

@@ -1,0 +1,28 @@
+"""Index lifecycle subsystem (DESIGN.md §5): the layer between the offline
+builders (``core/fastsax.py``) and the three search engines.
+
+  * ``store``    — persistent columnar format: manifest + one ``.npy`` per
+                   level array, sha256 integrity, atomic commit, O(ms)
+                   mmap loading.
+  * ``mutable``  — generations: append-only delta segments, tombstone
+                   bitmap, ``compact()``; answers always identical to a
+                   fresh rebuild over the live rows.
+  * ``sharded``  — per-mesh-shard save/load for ``core/dist_search.py``
+                   with no host-side gather.
+  * ``cli``      — ``python -m repro.index.cli build|insert|delete|
+                   compact|info|verify``.
+"""
+from .mutable import MutableIndex
+from .sharded import load_sharded, sharded_info, store_sharded
+from .store import load_index, save_index, store_info, verify_store
+
+__all__ = [
+    "MutableIndex",
+    "load_index",
+    "save_index",
+    "store_info",
+    "verify_store",
+    "load_sharded",
+    "sharded_info",
+    "store_sharded",
+]

@@ -1,0 +1,146 @@
+"""Index lifecycle CLI (DESIGN.md §5):
+
+    python -m repro.index.cli build   --dir IDX [--db-size 4096] [--input X.npy]
+    python -m repro.index.cli insert  --dir IDX [--db-size 256]  [--input X.npy]
+    python -m repro.index.cli delete  --dir IDX --ids 3,17,42
+    python -m repro.index.cli compact --dir IDX
+    python -m repro.index.cli info    --dir IDX
+    python -m repro.index.cli verify  --dir IDX
+
+``--input`` takes a ``.npy`` of shape (B, n); without it, rows come from
+the synthetic wafer-like generator (``--db-size``/``--length``/``--seed``)
+so the whole lifecycle is exercisable with zero data files — which is
+exactly what the CI round-trip step does.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+from ..core.fastsax import FastSAXConfig
+from .mutable import MutableIndex
+
+
+def _rows(args) -> np.ndarray:
+    if args.input:
+        series = np.load(args.input)
+        if series.ndim != 2:
+            raise SystemExit(f"{args.input}: expected (B, n), "
+                             f"got {series.shape}")
+        return series
+    from ..data.timeseries import make_wafer_like
+    return make_wafer_like(n_series=args.db_size, length=args.length,
+                           seed=args.seed, normalize=False)
+
+
+def _parse_levels(s: str) -> tuple:
+    return tuple(int(p) for p in s.split(",") if p.strip())
+
+
+def cmd_build(args) -> None:
+    cfg = FastSAXConfig(n_segments=_parse_levels(args.levels),
+                        alphabet=args.alphabet)
+    rows = _rows(args)
+    t0 = time.perf_counter()
+    mi = MutableIndex.create(args.dir, rows, cfg)
+    print(f"[index] built gen 0: {mi.n_live} rows (n={rows.shape[1]}, "
+          f"levels={cfg.n_segments}, alphabet={cfg.alphabet}) "
+          f"in {time.perf_counter() - t0:.2f}s -> {args.dir}")
+
+
+def cmd_insert(args) -> None:
+    mi = MutableIndex.open(args.dir)
+    rows = _rows(args)
+    t0 = time.perf_counter()
+    ids = mi.insert(rows)
+    print(f"[index] inserted {ids.size} rows (ids {ids[0]}..{ids[-1]}) "
+          f"in {time.perf_counter() - t0:.2f}s; live={mi.n_live}")
+
+
+def cmd_delete(args) -> None:
+    mi = MutableIndex.open(args.dir)
+    ids = [int(p) for p in args.ids.split(",") if p.strip()]
+    live = mi.delete(ids)
+    print(f"[index] tombstoned {len(ids)} rows; live={live}")
+
+
+def cmd_compact(args) -> None:
+    mi = MutableIndex.open(args.dir)
+    before = mi.info()
+    t0 = time.perf_counter()
+    info = mi.compact()
+    print(f"[index] compacted gen {before['gen']} -> gen {info['gen']}: "
+          f"{before['rows']} rows ({before['n_deltas']} delta(s), "
+          f"{before['tombstoned']} tombstone(s)) -> {info['rows']} live "
+          f"in {time.perf_counter() - t0:.2f}s")
+
+
+def cmd_info(args) -> None:
+    mi = MutableIndex.open(args.dir)
+    print(json.dumps(mi.info(), indent=1))
+
+
+def cmd_verify(args) -> None:
+    names = MutableIndex.open(args.dir).verify()
+    for name in names:
+        print(f"[index] {name}: checksums OK")
+    print(f"[index] verified {len(names)} store(s)")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(prog="repro.index.cli",
+                                 description=__doc__.split("\n")[0])
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    def common(p, data=True):
+        p.add_argument("--dir", required=True, help="index root directory")
+        if data:
+            p.add_argument("--input", default="",
+                           help=".npy of (B, n) rows; default: synthetic")
+            p.add_argument("--db-size", type=int, default=4096)
+            p.add_argument("--length", type=int, default=128)
+            p.add_argument("--seed", type=int, default=0)
+
+    p = sub.add_parser("build", help="build generation 0")
+    common(p)
+    p.add_argument("--levels", default="8,16",
+                   help="comma-separated segment counts, coarse→fine")
+    p.add_argument("--alphabet", type=int, default=10)
+    p.set_defaults(fn=cmd_build)
+
+    p = sub.add_parser("insert", help="append rows as a delta segment")
+    common(p)
+    p.set_defaults(fn=cmd_insert, seed=1)
+
+    p = sub.add_parser("delete", help="tombstone rows by external id")
+    common(p, data=False)
+    p.add_argument("--ids", required=True, help="comma-separated ids")
+    p.set_defaults(fn=cmd_delete)
+
+    p = sub.add_parser("compact", help="fold deltas+tombstones into a new base")
+    common(p, data=False)
+    p.set_defaults(fn=cmd_compact)
+
+    p = sub.add_parser("info", help="print the committed epoch summary")
+    common(p, data=False)
+    p.set_defaults(fn=cmd_info)
+
+    p = sub.add_parser("verify", help="re-hash every segment's checksums")
+    common(p, data=False)
+    p.set_defaults(fn=cmd_verify)
+
+    args = ap.parse_args(argv)
+    try:
+        args.fn(args)
+    except (FileNotFoundError, FileExistsError, KeyError, ValueError,
+            IOError) as e:
+        print(f"[index] error: {e}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,386 @@
+"""Incrementally-updatable FAST_SAX index: generations, deltas, tombstones.
+
+``store.py`` makes one built index durable; this module makes it *mutable*
+without ever rebuilding representations for rows that did not change
+(DESIGN.md §5).  On-disk layout under one root directory:
+
+    <root>/
+      CURRENT                pointer file: name of the committed epoch
+      epoch_<G>.json         one commit: base segment, delta segments in
+                             insertion order, tombstone store, next_id
+      base_<G>/              store.py index dir (+ ``ids`` array)
+      delta_<G>/             store.py index dir for one appended batch
+      tomb_<G>/              store.py dir holding the tombstone bitmap
+
+Commit protocol: every mutation writes only *new* files (segments and the
+epoch manifest are never overwritten), then atomically swaps ``CURRENT``
+via write-to-tmp + ``os.replace``.  A writer killed at any point leaves
+the previous epoch fully intact — the same crash-safety contract as
+``checkpoint/manager.py`` and ``store.write_arrays``.
+
+Mutation semantics:
+
+  * ``insert`` builds representations for the new rows only (per-row math
+    is row-independent, so a delta segment is bit-identical to what a full
+    rebuild would compute for those rows) and appends a delta segment;
+  * ``delete`` flips bits in a tombstone bitmap over physical rows;
+  * ``compact()`` folds base + deltas minus tombstones into a fresh base
+    generation by *concatenating* the precomputed per-row arrays — no
+    PAA/discretise/residual recomputation;
+  * ``search_index()`` materialises the search view: tombstoned rows keep
+    their slots but carry the C9 sentinel residual (the same
+    ``_PAD_RESIDUAL`` mechanism ``core/dist_search.py`` uses for padding),
+    so the existing cascade excludes them at any finite ε with zero new
+    engine code.  Their series rows are additionally overwritten with a
+    large constant so even a direct Euclidean verify can never rank them
+    above a live row.
+
+Soundness guarantee (tested property-style in
+``tests/test_index_mutable.py``): any interleaving of inserts, deletes and
+compactions answers range and k-NN queries identically to a fresh
+``build_index`` over the live rows.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+
+import numpy as np
+
+from ..core.fastsax import (FastSAXConfig, FastSAXIndex, LevelData,
+                            build_index)
+from ..core.search import fastsax_knn_query, fastsax_range_query
+from . import store
+
+# Level-0 C9 sentinel — matches dist_search._PAD_RESIDUAL so every engine
+# that already understands padded rows understands tombstones for free.
+TOMBSTONE_RESIDUAL = 1e30
+# Sentinel series value: makes a tombstoned row's true Euclidean distance
+# astronomically larger than any live z-normalised row's, so best-so-far
+# verification can never keep one even before the cascade kills it.
+TOMBSTONE_SERIES = 1e6
+
+CURRENT = "CURRENT"
+_TOMB_KIND = "fastsax-tombstones"
+
+
+def _epoch_name(gen: int) -> str:
+    return f"epoch_{gen:08d}.json"
+
+
+class MutableIndex:
+    """A persistent FAST_SAX index that absorbs inserts and deletes.
+
+    Rows carry stable external ids (assigned in insertion order, preserved
+    across ``compact()``); all query answers are reported in external ids.
+    """
+
+    def __init__(self, root: str | os.PathLike, epoch: dict):
+        self.root = pathlib.Path(root)
+        self._epoch = epoch
+        self._segments: list = []       # [(dirname, FastSAXIndex, ids)]
+        self._tomb: np.ndarray | None = None
+        self._view: tuple | None = None  # cached (FastSAXIndex, ids)
+        self._load_epoch()
+
+    # --- creation / opening -------------------------------------------------
+
+    @classmethod
+    def create(
+        cls,
+        root: str | os.PathLike,
+        series: np.ndarray,
+        config: FastSAXConfig,
+        normalize: bool = True,
+    ) -> "MutableIndex":
+        """Build generation 0 from ``series`` and commit it."""
+        root = pathlib.Path(root)
+        root.mkdir(parents=True, exist_ok=True)
+        if (root / CURRENT).exists():
+            raise FileExistsError(f"{root}: index already exists (open it)")
+        index = build_index(series, config, normalize=normalize)
+        ids = np.arange(index.size, dtype=np.int64)
+        _save_segment(index, ids, root / "base_00000000")
+        epoch = {"format": store.FORMAT_VERSION, "gen": 0,
+                 "base": "base_00000000", "deltas": [], "tombstones": None,
+                 "next_id": int(index.size),
+                 "config": store._config_to_json(config)}
+        _commit_epoch(root, epoch)
+        return cls(root, epoch)
+
+    @classmethod
+    def open(cls, root: str | os.PathLike) -> "MutableIndex":
+        root = pathlib.Path(root)
+        pointer = (root / CURRENT).read_text().strip()
+        epoch = json.loads((root / pointer).read_text())
+        return cls(root, epoch)
+
+    def _load_epoch(self):
+        self._segments = []
+        for name in [self._epoch["base"], *self._epoch["deltas"]]:
+            idx = store.load_index(self.root / name, mmap=True)
+            ids = np.asarray(store.read_array(self.root / name, "ids"))
+            self._segments.append((name, idx, ids))
+        n_rows = sum(ids.size for _, _, ids in self._segments)
+        if self._epoch["tombstones"] is None:
+            self._tomb = np.zeros(n_rows, dtype=bool)
+        else:
+            mask = np.asarray(store.read_array(
+                self.root / self._epoch["tombstones"], "mask"))
+            # Deltas appended after the tombstone commit extend the bitmap
+            # with live rows.
+            self._tomb = np.zeros(n_rows, dtype=bool)
+            self._tomb[:mask.size] = mask
+        self._view = None
+
+    # --- introspection ------------------------------------------------------
+
+    @property
+    def config(self) -> FastSAXConfig:
+        return self._segments[0][1].config
+
+    @property
+    def n_rows(self) -> int:
+        """Physical rows (live + tombstoned) across base and deltas."""
+        return int(self._tomb.size)
+
+    @property
+    def n_live(self) -> int:
+        return int(self.n_rows - self._tomb.sum())
+
+    @property
+    def ids(self) -> np.ndarray:
+        """External ids of every physical row, ascending."""
+        return np.concatenate([ids for _, _, ids in self._segments])
+
+    @property
+    def live_ids(self) -> np.ndarray:
+        return self.ids[~self._tomb]
+
+    @property
+    def live_mask(self) -> np.ndarray:
+        """(n_rows,) bool: True = live physical row (device valid_mask)."""
+        return ~self._tomb
+
+    def verify(self) -> list:
+        """Re-hash every committed segment (and the tombstone store)
+        against its manifest.  Returns the verified dir names; raises
+        ``IOError`` naming the first corrupt array."""
+        names = [name for name, _, _ in self._segments]
+        if self._epoch["tombstones"]:
+            names.append(self._epoch["tombstones"])
+        for name in names:
+            store.verify_store(self.root / name)
+        return names
+
+    def info(self) -> dict:
+        return {"root": str(self.root), "gen": self._epoch["gen"],
+                "base": self._epoch["base"],
+                "n_deltas": len(self._epoch["deltas"]),
+                "rows": self.n_rows, "live": self.n_live,
+                "tombstoned": int(self._tomb.sum()),
+                "next_id": self._epoch["next_id"],
+                "config": self._epoch["config"]}
+
+    # --- mutation -----------------------------------------------------------
+
+    def _next_gen(self) -> int:
+        return int(self._epoch["gen"]) + 1
+
+    def insert(self, series: np.ndarray, normalize: bool = True) -> np.ndarray:
+        """Append rows as a delta segment.  Returns their external ids."""
+        series = np.asarray(series, dtype=np.float64)
+        if series.ndim != 2 or series.shape[-1] != self._segments[0][1].n:
+            raise ValueError(
+                f"series must be (B, {self._segments[0][1].n}), "
+                f"got {series.shape}")
+        gen = self._next_gen()
+        delta = build_index(series, self.config, normalize=normalize)
+        start = int(self._epoch["next_id"])
+        ids = np.arange(start, start + delta.size, dtype=np.int64)
+        name = f"delta_{gen:08d}"
+        _save_segment(delta, ids, self.root / name)
+        epoch = dict(self._epoch, gen=gen,
+                     deltas=[*self._epoch["deltas"], name],
+                     next_id=start + delta.size)
+        _commit_epoch(self.root, epoch)
+        self._epoch = epoch
+        self._segments.append((name, store.load_index(self.root / name),
+                               ids))
+        self._tomb = np.concatenate(
+            [self._tomb, np.zeros(delta.size, dtype=bool)])
+        self._view = None
+        return ids
+
+    def delete(self, ids) -> int:
+        """Tombstone rows by external id.  Returns the live count after.
+
+        Unknown or already-deleted ids raise ``KeyError`` — silent no-ops
+        would hide caller bugs.
+        """
+        ids = np.atleast_1d(np.asarray(ids, dtype=np.int64))
+        if np.unique(ids).size != ids.size:
+            raise KeyError(f"duplicate ids in delete request: "
+                           f"{ids.tolist()}")
+        all_ids = self.ids
+        pos = np.searchsorted(all_ids, ids)
+        bad = (pos >= all_ids.size) | (all_ids[np.minimum(
+            pos, all_ids.size - 1)] != ids)
+        if bad.any():
+            raise KeyError(f"unknown ids {ids[bad].tolist()}")
+        if self._tomb[pos].any():
+            raise KeyError(
+                f"already deleted: {ids[self._tomb[pos]].tolist()}")
+        gen = self._next_gen()
+        mask = self._tomb.copy()
+        mask[pos] = True
+        name = f"tomb_{gen:08d}"
+        store.write_arrays(self.root / name, {"mask": mask},
+                           {"kind": _TOMB_KIND, "rows": int(mask.size)})
+        epoch = dict(self._epoch, gen=gen, tombstones=name)
+        _commit_epoch(self.root, epoch)
+        self._epoch = epoch
+        self._tomb = mask
+        self._view = None
+        return self.n_live
+
+    def _concat_rows(self):
+        """Concatenate every segment's precomputed per-row arrays, in
+        physical (= id) order: ``(series, words_per_level,
+        resid_per_level)``.  The one place that knows the segment layout —
+        compaction and both search views build on it."""
+        series = np.concatenate(
+            [np.asarray(idx.series) for _, idx, _ in self._segments])
+        words, resid = [], []
+        for li in range(len(self.config.levels)):
+            words.append(np.concatenate(
+                [np.asarray(idx.levels[li].words)
+                 for _, idx, _ in self._segments]))
+            resid.append(np.concatenate(
+                [np.asarray(idx.levels[li].residuals)
+                 for _, idx, _ in self._segments]))
+        return series, words, resid
+
+    def _assemble(self, keep) -> FastSAXIndex:
+        """A FastSAXIndex over ``keep``-selected physical rows."""
+        cfg = self.config
+        series, words, resid = self._concat_rows()
+        return FastSAXIndex(
+            config=cfg, series=series[keep],
+            levels=[LevelData(n_segments=N, words=words[li][keep],
+                              residuals=resid[li][keep])
+                    for li, N in enumerate(cfg.levels)])
+
+    def compact(self, gc: bool = True) -> dict:
+        """Fold deltas and tombstones into a fresh base generation.
+
+        Pure array concatenation of the live rows' precomputed
+        representations — no PAA/discretise/residual recomputation.  After
+        the commit the old segment files are garbage-collected
+        (``gc=False`` keeps them, e.g. for debugging).
+        """
+        if self.n_live == 0:
+            raise ValueError("refusing to compact to an empty index")
+        folded = self._assemble(~self._tomb)
+        ids = self.live_ids
+        gen = self._next_gen()
+        name = f"base_{gen:08d}"
+        _save_segment(folded, ids, self.root / name)
+        epoch = dict(self._epoch, gen=gen, base=name, deltas=[],
+                     tombstones=None)
+        _commit_epoch(self.root, epoch)
+        old = {s for s, _, _ in self._segments}
+        old_tomb = self._epoch["tombstones"]
+        self._epoch = epoch
+        self._load_epoch()
+        if gc:
+            for stale in old:
+                shutil.rmtree(self.root / stale, ignore_errors=True)
+            if old_tomb:
+                shutil.rmtree(self.root / old_tomb, ignore_errors=True)
+            for p in self.root.glob("epoch_*.json"):
+                if p.name != _epoch_name(gen):
+                    p.unlink()
+        return self.info()
+
+    # --- querying -----------------------------------------------------------
+
+    def search_index(self) -> tuple:
+        """Materialise ``(FastSAXIndex, ids)`` for the query engines.
+
+        Physical rows stay in id order; tombstoned rows keep their slots
+        but carry sentinel residuals (C9 kills them at any finite ε — the
+        dist_search padding mechanism) and sentinel series values.  Cached
+        until the next mutation.
+        """
+        if self._view is not None:
+            return self._view
+        if len(self._segments) == 1 and not self._tomb.any():
+            # Zero-copy fast path: the committed base IS the view.
+            self._view = (self._segments[0][1], self._segments[0][2])
+            return self._view
+        dead = self._tomb
+        index = self._assemble(slice(None))
+        index.series[dead] = TOMBSTONE_SERIES
+        for lv in index.levels:
+            lv.residuals[dead] = TOMBSTONE_RESIDUAL
+        self._view = (index, self.ids)
+        return self._view
+
+    def live_index(self) -> tuple:
+        """``(FastSAXIndex over the live rows only, their external ids)``.
+
+        For engines without the sentinel / valid-mask machinery — e.g. the
+        device upload of ``DeviceIndex.from_store`` — where tombstoned
+        rows must not occupy physical slots at all (a k-NN with k ≥ the
+        live count would otherwise surface them).  Row *positions* in the
+        returned index are NOT external ids once deletions exist; map
+        answers through the returned ids array.
+        """
+        if len(self._segments) == 1 and not self._tomb.any():
+            return self._segments[0][1], self._segments[0][2]
+        return self._assemble(~self._tomb), self.live_ids
+
+    def range_query(self, query: np.ndarray, epsilon: float,
+                    normalize: bool = True):
+        """FAST_SAX ε-range query.  Returns ``(ids, distances)`` — answers
+        identical to a fresh rebuild over the live rows."""
+        index, ids = self.search_index()
+        r = fastsax_range_query(
+            index, _repr(query, self.config, normalize), epsilon)
+        return ids[r.answers], r.distances
+
+    def knn_query(self, query: np.ndarray, k: int, normalize: bool = True):
+        """Exact k-NN over the live rows.  Returns ``(ids, distances)``."""
+        index, ids = self.search_index()
+        k_eff = min(int(k), self.n_live)
+        if k_eff == 0:
+            return np.empty(0, dtype=np.int64), np.empty(0)
+        r = fastsax_knn_query(
+            index, _repr(query, self.config, normalize), k_eff)
+        return ids[r.indices], r.distances
+
+
+def _repr(query, config, normalize):
+    from ..core.fastsax import represent_query
+    return represent_query(np.asarray(query, dtype=np.float64), config,
+                           normalize=normalize)
+
+
+def _save_segment(index: FastSAXIndex, ids: np.ndarray,
+                  path: pathlib.Path) -> None:
+    store.save_index(index, path,
+                     extra_arrays={"ids": np.asarray(ids, dtype=np.int64)})
+
+
+def _commit_epoch(root: pathlib.Path, epoch: dict) -> None:
+    """Write the epoch manifest (a new file), then atomically swap CURRENT."""
+    name = _epoch_name(epoch["gen"])
+    tmp = root / (name + ".tmp")
+    tmp.write_text(json.dumps(epoch, indent=1))
+    os.replace(tmp, root / name)
+    cur_tmp = root / (CURRENT + ".tmp")
+    cur_tmp.write_text(name + "\n")
+    os.replace(cur_tmp, root / CURRENT)

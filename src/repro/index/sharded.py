@@ -1,0 +1,158 @@
+"""Per-shard persistence for the distributed engine (DESIGN.md §5).
+
+``core/dist_search.py`` shards the database (and every per-level
+representation) over the mesh ``data`` axis.  Persisting that index must
+not undo the sharding: this module writes **one store directory per mesh
+shard**, each holding exactly the arrays that shard's device owns, and
+loads them back by placing each shard's files directly onto its device
+(``jax.make_array_from_single_device_arrays``) — no host-side gather or
+concatenation of the global arrays in either direction.
+
+    <dir>/
+      manifest.json    {shards, levels, alphabet, n_valid, size, n}
+      shard_00000/     store.py dir: series, norms_sq, words_N*, resid_N*
+      shard_00001/     ...
+
+Each ``shard_*/`` is itself a valid columnar store (checksummed,
+atomically committed), so a single shard can be inspected or verified in
+isolation; the root directory is committed with the same write-to-tmp +
+rename protocol, so readers never observe a partially-written fleet.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+
+import numpy as np
+
+from . import store
+
+MANIFEST = store.MANIFEST
+_KIND = "fastsax-index-sharded"
+
+
+def _device_leaves(index) -> dict:
+    """DeviceIndex -> {leaf name: jax.Array} (per-level layout of store.py)."""
+    leaves = {"series": index.series, "norms_sq": index.norms_sq}
+    for N, w, r in zip(index.levels, index.words, index.residuals):
+        leaves[f"words_N{N}"] = w
+        leaves[f"resid_N{N}"] = r
+    return leaves
+
+
+def store_sharded(
+    index,
+    path: str | os.PathLike,
+    n_valid: int | None = None,
+    extra_meta: dict | None = None,
+) -> pathlib.Path:
+    """Persist a (possibly sharded) ``DeviceIndex``, one dir per shard.
+
+    Every leaf's addressable shards are written from device-local data —
+    the global array is never assembled on the host.  Works unchanged for
+    a single-device index (one shard dir).
+    """
+    import jax
+
+    path = pathlib.Path(path)
+    leaves = _device_leaves(index)
+    B = index.series.shape[0]
+
+    def _shards(a) -> list:
+        """Per-shard (start_row, np.ndarray), sorted by row offset."""
+        a = jax.numpy.asarray(a)
+        if hasattr(a, "addressable_shards") and a.addressable_shards:
+            out = []
+            for sh in a.addressable_shards:
+                idx = sh.index[0] if sh.index else slice(0, None)
+                out.append((idx.start or 0, np.asarray(sh.data)))
+            return sorted(out, key=lambda t: t[0])
+        return [(0, np.asarray(a))]
+
+    per_leaf = {name: _shards(a) for name, a in leaves.items()}
+    n_shards = {len(s) for s in per_leaf.values()}
+    if len(n_shards) != 1:
+        raise ValueError(f"inconsistent shard counts across leaves: "
+                         f"{sorted(n_shards)}")
+    P_sh = n_shards.pop()
+
+    tmp = store.make_tmp_dir(path)
+    for si in range(P_sh):
+        arrays = {name: per_leaf[name][si][1] for name in per_leaf}
+        store.write_arrays(
+            tmp / f"shard_{si:05d}", arrays,
+            {"kind": "fastsax-index-shard", "shard": si, "shards": P_sh,
+             "row_offset": int(per_leaf["series"][si][0])})
+    manifest = {"format": store.FORMAT_VERSION, "kind": _KIND,
+                "shards": P_sh, "levels": [int(N) for N in index.levels],
+                "alphabet": int(index.alphabet), "size": int(B),
+                "n": int(index.series.shape[-1]),
+                "n_valid": int(B if n_valid is None else n_valid),
+                "extra": extra_meta or {}}
+    (tmp / MANIFEST).write_text(json.dumps(manifest, indent=1))
+    return store.commit_dir(tmp, path)
+
+
+def sharded_info(path: str | os.PathLike) -> dict:
+    path = pathlib.Path(path)
+    return json.loads((path / MANIFEST).read_text())
+
+
+def load_sharded(
+    path: str | os.PathLike,
+    mesh,
+    axis: str = "data",
+    verify: bool = False,
+):
+    """Map a sharded store onto a mesh: shard file *i* → mesh device *i*.
+
+    Returns ``(DeviceIndex, n_valid)``.  Each leaf is assembled with
+    ``jax.make_array_from_single_device_arrays`` from per-device puts of
+    the shard files (mmap-opened, so only the bytes each device consumes
+    are read) — the host never holds the global arrays.  The stored shard
+    count must equal the mesh axis size; resharding a store onto a
+    different fleet shape is a ``compact``-style offline operation, not a
+    load-time one.
+    """
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from ..core.engine import DeviceIndex
+
+    path = pathlib.Path(path)
+    manifest = sharded_info(path)
+    if manifest.get("kind") != _KIND:
+        raise IOError(f"{path}: not a {_KIND} store")
+    P_sh = int(manifest["shards"])
+    mesh_size = int(np.prod([mesh.shape[a] for a in mesh.axis_names])
+                    if axis is None else mesh.shape[axis])
+    if P_sh != mesh_size:
+        raise ValueError(
+            f"{path}: stored for {P_sh} shard(s) but mesh axis "
+            f"{axis!r} has {mesh_size} — rebuild or re-store for this fleet")
+    levels = tuple(int(N) for N in manifest["levels"])
+    devices = list(mesh.devices.reshape(-1))
+    shard_dirs = [path / f"shard_{si:05d}" for si in range(P_sh)]
+
+    def leaf(name: str, spec):
+        parts = [
+            jax.device_put(
+                np.asarray(store.read_array(d, name, mmap=not verify,
+                                            verify=verify)), dev)
+            for d, dev in zip(shard_dirs, devices)
+        ]
+        rows = sum(p.shape[0] for p in parts)
+        shape = (rows,) + parts[0].shape[1:]
+        return jax.make_array_from_single_device_arrays(
+            shape, NamedSharding(mesh, spec), parts)
+
+    index = DeviceIndex(
+        series=leaf("series", P(axis, None)),
+        norms_sq=leaf("norms_sq", P(axis)),
+        words=tuple(leaf(f"words_N{N}", P(axis, None)) for N in levels),
+        residuals=tuple(leaf(f"resid_N{N}", P(axis)) for N in levels),
+        levels=levels,
+        alphabet=int(manifest["alphabet"]),
+    )
+    return index, int(manifest["n_valid"])

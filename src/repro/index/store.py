@@ -1,0 +1,239 @@
+"""Persistent columnar store for FAST_SAX indexes (DESIGN.md §5).
+
+The paper's offline phase exists so the online phase never recomputes
+representations — this module makes the offline artefact *survive the
+process*.  One directory per committed index (or index segment):
+
+    <dir>/
+      manifest.json     format version, FastSAXConfig, per-array shape /
+                        dtype / sha256, caller metadata
+      series.npy        (B, n) float64 z-normalised rows
+      words_N8.npy      (B, 8)  int32 SAX words,  one pair per level
+      resid_N8.npy      (B,)    float64 linear-fit residuals d(u,ū)
+      words_N16.npy ... (keyed by segment count — unique, enforced by
+                        FastSAXConfig's ascending-no-duplicates check)
+
+Crash-safety contract (same as ``checkpoint/manager.py``): everything is
+written into a ``<dir>.tmp`` sibling and ``os.rename``d into place — a
+killed writer can never leave a half-index where a reader would pick it
+up, and the previous committed generation is untouched until the rename.
+
+Loading uses ``np.load(mmap_mode="r")``: opening a multi-GB index costs
+milliseconds and pages lazily, so serve cold-start no longer scales with
+database size (EXPERIMENTS.md §Index-IO).  ``verify_store`` re-hashes
+every array against the manifest for explicit integrity checks.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import pathlib
+import shutil
+
+import numpy as np
+
+from ..core.fastsax import FastSAXConfig, FastSAXIndex, LevelData
+
+FORMAT_VERSION = 1
+MANIFEST = "manifest.json"
+_KIND = "fastsax-index"
+
+
+def _sha256(a: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(a).tobytes()).hexdigest()
+
+
+def _array_entry(a: np.ndarray, fname: str) -> dict:
+    return {"file": fname, "shape": list(a.shape), "dtype": str(a.dtype),
+            "sha256": _sha256(a)}
+
+
+def make_tmp_dir(path: str | os.PathLike) -> pathlib.Path:
+    """Fresh ``<path>.tmp`` staging sibling for :func:`commit_dir`."""
+    path = pathlib.Path(path)
+    tmp = path.parent / (path.name + ".tmp")
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    return tmp
+
+
+def commit_dir(tmp: pathlib.Path, path: pathlib.Path) -> pathlib.Path:
+    """Atomically swing a fully-written staging dir into place.
+
+    Never destroys the committed generation before the new one is in
+    place: the old dir is parked at ``<path>.old``, the rename swings,
+    then the backup is dropped.  A writer killed before the first rename
+    leaves the old store untouched; between the renames the old data
+    survives at ``.old`` (the generation layer of ``mutable.py`` never
+    overwrites at all, so its commits have no such window).
+    """
+    if path.exists():
+        backup = path.parent / (path.name + ".old")
+        if backup.exists():
+            shutil.rmtree(backup)
+        os.rename(path, backup)
+        os.rename(tmp, path)
+        shutil.rmtree(backup)
+    else:
+        os.rename(tmp, path)
+    return path
+
+
+def write_arrays(
+    path: str | os.PathLike,
+    arrays: dict,
+    meta: dict,
+) -> pathlib.Path:
+    """Commit ``arrays`` (+ caller ``meta``) to ``path`` atomically.
+
+    The generic writer under every store layout: one ``.npy`` per array,
+    one manifest, write-to-tmp + rename.  ``meta`` must be JSON-friendly.
+    """
+    path = pathlib.Path(path)
+    tmp = make_tmp_dir(path)
+    manifest = {"format": FORMAT_VERSION, "arrays": {}, **meta}
+    for name, a in arrays.items():
+        a = np.ascontiguousarray(a)
+        fname = name + ".npy"
+        np.save(tmp / fname, a)
+        manifest["arrays"][name] = _array_entry(a, fname)
+    (tmp / MANIFEST).write_text(json.dumps(manifest, indent=1))
+    return commit_dir(tmp, path)
+
+
+def read_manifest(path: str | os.PathLike) -> dict:
+    path = pathlib.Path(path)
+    return json.loads((path / MANIFEST).read_text())
+
+
+def read_array(
+    path: str | os.PathLike,
+    name: str,
+    manifest: dict | None = None,
+    mmap: bool = True,
+    verify: bool = False,
+) -> np.ndarray:
+    """Load one named array, lazily (mmap) by default.
+
+    ``verify=True`` forces a full read and raises ``IOError`` on checksum
+    mismatch — corruption fails loudly, never returns silent garbage.
+    """
+    path = pathlib.Path(path)
+    manifest = manifest or read_manifest(path)
+    entry = manifest["arrays"].get(name)
+    if entry is None:
+        raise KeyError(f"store {path} has no array {name!r}")
+    a = np.load(path / entry["file"], mmap_mode="r" if mmap else None)
+    if list(a.shape) != entry["shape"] or str(a.dtype) != entry["dtype"]:
+        raise IOError(f"{path}/{name}: header {a.shape}/{a.dtype} does not "
+                      f"match manifest {entry['shape']}/{entry['dtype']}")
+    if verify and _sha256(np.asarray(a)) != entry["sha256"]:
+        raise IOError(f"{path}/{name}: checksum mismatch — corrupt store")
+    return a
+
+
+def verify_store(path: str | os.PathLike) -> dict:
+    """Re-hash every array against the manifest.  Returns the manifest on
+    success; raises ``IOError`` naming the first corrupt array."""
+    manifest = read_manifest(path)
+    for name in manifest["arrays"]:
+        read_array(path, name, manifest, mmap=True, verify=True)
+    return manifest
+
+
+# --- FastSAXIndex layout ----------------------------------------------------
+
+def _config_to_json(config: FastSAXConfig) -> dict:
+    return {"n_segments": list(config.n_segments),
+            "alphabet": int(config.alphabet),
+            "level_order": config.level_order}
+
+
+def _config_from_json(d: dict) -> FastSAXConfig:
+    return FastSAXConfig(n_segments=tuple(int(N) for N in d["n_segments"]),
+                         alphabet=int(d["alphabet"]),
+                         level_order=d["level_order"])
+
+
+def index_arrays(index: FastSAXIndex) -> dict:
+    """The columnar layout of one index: name -> array.
+
+    No ``norms_sq`` column here: the host engines never read it and the
+    device path recomputes ‖u‖² from the f32 series on upload, so storing
+    it would be dead bytes hashed on every save and verify.  (The
+    *sharded* store does persist it — there it is a real device leaf.)
+    """
+    arrays = {"series": index.series}
+    for lv in index.levels:
+        arrays[f"words_N{lv.n_segments}"] = lv.words
+        arrays[f"resid_N{lv.n_segments}"] = lv.residuals
+    return arrays
+
+
+def save_index(
+    index: FastSAXIndex,
+    path: str | os.PathLike,
+    extra_meta: dict | None = None,
+    extra_arrays: dict | None = None,
+) -> pathlib.Path:
+    """Persist a built index atomically.  O(bytes) once; loads in O(ms).
+
+    ``extra_arrays`` ride along in the same manifest (checksummed like
+    every column) — ``mutable.py`` stores each segment's external ids
+    this way.  ``load_index`` ignores names it does not know.
+    """
+    meta = {"kind": _KIND, "config": _config_to_json(index.config),
+            "size": int(index.size), "n": int(index.n),
+            "extra": extra_meta or {}}
+    return write_arrays(path, {**index_arrays(index), **(extra_arrays or {})},
+                        meta)
+
+
+def load_index(
+    path: str | os.PathLike,
+    mmap: bool = True,
+    verify: bool = False,
+) -> FastSAXIndex:
+    """Open a committed index.  ``mmap=True`` (default) maps arrays lazily;
+    ``verify=True`` additionally re-hashes every array (full read)."""
+    path = pathlib.Path(path)
+    manifest = read_manifest(path)
+    if manifest.get("kind") != _KIND:
+        raise IOError(f"{path}: not a {_KIND} store "
+                      f"(kind={manifest.get('kind')!r})")
+    if manifest["format"] > FORMAT_VERSION:
+        raise IOError(f"{path}: format {manifest['format']} is newer than "
+                      f"this reader ({FORMAT_VERSION})")
+    config = _config_from_json(manifest["config"])
+    series = read_array(path, "series", manifest, mmap=mmap, verify=verify)
+    levels = [
+        LevelData(
+            n_segments=N,
+            words=read_array(path, f"words_N{N}", manifest, mmap=mmap,
+                             verify=verify),
+            residuals=read_array(path, f"resid_N{N}", manifest, mmap=mmap,
+                                 verify=verify),
+        )
+        for N in config.levels
+    ]
+    return FastSAXIndex(config=config, series=series, levels=levels)
+
+
+def store_info(path: str | os.PathLike) -> dict:
+    """Manifest summary for the CLI: sizes, level shapes, on-disk bytes."""
+    path = pathlib.Path(path)
+    manifest = read_manifest(path)
+    arrays = {}
+    total = 0
+    for name, entry in manifest["arrays"].items():
+        nbytes = (path / entry["file"]).stat().st_size
+        total += nbytes
+        arrays[name] = {"shape": entry["shape"], "dtype": entry["dtype"],
+                        "bytes": nbytes}
+    return {"path": str(path), "format": manifest["format"],
+            "kind": manifest.get("kind"), "config": manifest.get("config"),
+            "size": manifest.get("size"), "n": manifest.get("n"),
+            "extra": manifest.get("extra", {}),
+            "arrays": arrays, "total_bytes": total}

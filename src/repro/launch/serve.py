@@ -5,6 +5,7 @@ engine as a first-class serving workload).
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --smoke \
       --batch 4 --prompt-len 32 --gen 16
   PYTHONPATH=src python -m repro.launch.serve --search --db-size 4096
+  PYTHONPATH=src python -m repro.launch.serve --search --index-dir idx/
 """
 from __future__ import annotations
 
@@ -65,22 +66,66 @@ def serve_lm(args):
 
 
 def serve_search(args):
-    """FAST_SAX range-query / k-NN service over a sharded database."""
+    """FAST_SAX range-query / k-NN service over a sharded database.
+
+    With ``--index-dir``, the offline artifact outlives the process: a
+    matching sharded store warm-starts the service (O(ms) mmap load per
+    shard instead of an O(B) rebuild), and a cold build persists its index
+    for the next restart (DESIGN.md §5).
+    """
     from ..core.dist_search import (distributed_build, distributed_knn_query,
-                                    distributed_range_query, make_data_mesh,
-                                    pad_database)
+                                    distributed_range_query, load_sharded,
+                                    make_data_mesh, pad_database,
+                                    store_sharded)
     from ..data.timeseries import make_queries, make_wafer_like
 
     n_dev = len(jax.devices())
     mesh = make_data_mesh()
-    db = make_wafer_like(args.db_size, 128, seed=0)
-    padded, n_valid = pad_database(db, n_dev)
-    t0 = time.perf_counter()
-    index = distributed_build(padded, (8, 16), args.alphabet, mesh,
-                              n_valid=n_valid)
-    jax.block_until_ready(index.series)
-    print(f"[search] indexed {n_valid} series on {n_dev} shard(s) "
-          f"in {time.perf_counter()-t0:.2f}s")
+
+    index = None
+    store_after_build = False
+    if args.index_dir:
+        import os
+        try:
+            t0 = time.perf_counter()
+            index, n_valid = load_sharded(args.index_dir, mesh)
+            jax.block_until_ready(index.series)
+            print(f"[search] warm start: {n_valid} series from "
+                  f"{args.index_dir} on {n_dev} shard(s) "
+                  f"in {time.perf_counter()-t0:.3f}s")
+        except (FileNotFoundError, ValueError, IOError) as e:
+            print(f"[search] cold start ({e})")
+            index = None
+            # Persist after the build ONLY into an empty/absent dir —
+            # never clobber an existing store that merely failed to load
+            # (wrong kind, mesh-size mismatch, corruption): that data may
+            # be someone's only copy.
+            store_after_build = (not os.path.exists(args.index_dir)
+                                 or (os.path.isdir(args.index_dir)
+                                     and not os.listdir(args.index_dir)))
+            if not store_after_build:
+                print(f"[search] NOT overwriting existing {args.index_dir}; "
+                      f"remove it or pick a fresh --index-dir to persist")
+    if index is None:
+        # The database is only needed on the cold path — a warm start must
+        # not pay O(B) host-side regeneration just to derive queries.
+        db = make_wafer_like(args.db_size, 128, seed=0)
+        padded, n_valid = pad_database(db, n_dev)
+        t0 = time.perf_counter()
+        index = distributed_build(padded, (8, 16), args.alphabet, mesh,
+                                  n_valid=n_valid)
+        jax.block_until_ready(index.series)
+        print(f"[search] indexed {n_valid} series on {n_dev} shard(s) "
+              f"in {time.perf_counter()-t0:.2f}s")
+        if store_after_build:
+            t0 = time.perf_counter()
+            store_sharded(index, args.index_dir, n_valid=n_valid)
+            print(f"[search] stored sharded index -> {args.index_dir} "
+                  f"in {time.perf_counter()-t0:.2f}s")
+    else:
+        # Warm path: synthesise a small query-source batch instead of the
+        # whole database (queries are wafer-like rows + noise either way).
+        db = make_wafer_like(max(4 * args.queries, 64), 128, seed=0)
     queries = make_queries(db, args.queries, seed=1)
     if args.knn:
         k = args.knn
@@ -130,6 +175,9 @@ def main(argv=None):
                     help="with --search: serve exact k-NN queries instead "
                          "of ε-range queries")
     ap.add_argument("--db-size", type=int, default=4096)
+    ap.add_argument("--index-dir", default="",
+                    help="with --search: warm-start from this sharded index "
+                         "store (and persist to it after a cold build)")
     ap.add_argument("--queries", type=int, default=16)
     ap.add_argument("--epsilon", type=float, default=2.0)
     ap.add_argument("--alphabet", type=int, default=10)

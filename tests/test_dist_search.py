@@ -72,6 +72,63 @@ def test_distributed_matches_single_device():
 
 
 @pytest.mark.slow
+def test_sharded_store_round_trip():
+    """Persist the sharded index (no host gather), map it back onto the
+    mesh, and get bit-identical leaves and identical answers; a mesh-size
+    mismatch is rejected loudly."""
+    r = _run("""
+        import numpy as np, jax, tempfile, pathlib
+        from repro.core.dist_search import (distributed_build,
+            distributed_knn_query, distributed_range_query, load_sharded,
+            make_data_mesh, pad_database, store_sharded)
+        from repro.data.timeseries import make_wafer_like, make_queries
+
+        db = make_wafer_like(n_series=997, length=128, seed=5)  # pads
+        qs = make_queries(db, 3, seed=6)
+        mesh = make_data_mesh()
+        padded, n_valid = pad_database(db, 8)
+        didx = distributed_build(padded, (8, 16), 10, mesh, n_valid=n_valid)
+        with tempfile.TemporaryDirectory() as d:
+            p = pathlib.Path(d) / "shidx"
+            store_sharded(didx, p, n_valid=n_valid)
+            lidx, nv = load_sharded(p, mesh)
+            assert nv == n_valid
+            for a, b in zip(
+                    (didx.series, didx.norms_sq, *didx.words,
+                     *didx.residuals),
+                    (lidx.series, lidx.norms_sq, *lidx.words,
+                     *lidx.residuals)):
+                assert np.array_equal(np.asarray(a), np.asarray(b))
+            own = lambda x: {s.device.id: s.index
+                             for s in x.addressable_shards}
+            assert own(didx.series) == own(lidx.series)  # no reshard
+            g1, a1, _, _ = distributed_range_query(
+                didx, qs, 2.0, mesh, capacity_per_shard=64,
+                normalize_queries=False)
+            g2, a2, _, _ = distributed_range_query(
+                lidx, qs, 2.0, mesh, capacity_per_shard=64,
+                normalize_queries=False)
+            for i in range(3):
+                s1 = set(np.asarray(g1)[i][np.asarray(a1)[i]].tolist())
+                s2 = set(np.asarray(g2)[i][np.asarray(a2)[i]].tolist())
+                assert s1 == s2
+            n1 = distributed_knn_query(didx, qs, 5, mesh, n_valid=n_valid,
+                                       normalize_queries=False)
+            n2 = distributed_knn_query(lidx, qs, 5, mesh, n_valid=nv,
+                                       normalize_queries=False)
+            assert np.array_equal(np.asarray(n1[0]), np.asarray(n2[0]))
+            try:
+                load_sharded(p, make_data_mesh(4))
+                raise AssertionError("mesh-size mismatch not rejected")
+            except ValueError:
+                pass
+        print("OK")
+    """)
+    assert r.returncode == 0, r.stderr[-4000:]
+    assert "OK" in r.stdout
+
+
+@pytest.mark.slow
 def test_padded_rows_never_answer():
     r = _run("""
         import numpy as np, jax

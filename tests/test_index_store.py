@@ -1,0 +1,250 @@
+"""Index store tests: round-trip bit-exactness, crash safety, integrity,
+the CLI lifecycle, and the FastSAXConfig duplicate-level regression."""
+import json
+import os
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core.fastsax import FastSAXConfig, build_index, represent_query
+from repro.core.search import fastsax_knn_query, fastsax_range_query
+from repro.data.timeseries import make_queries, make_wafer_like
+from repro.index import cli, store
+from repro.index.store import (load_index, save_index, store_info,
+                               verify_store)
+
+CFG = FastSAXConfig(n_segments=(8, 16), alphabet=10)
+
+
+@pytest.fixture(scope="module")
+def db():
+    return make_wafer_like(n_series=256, length=128, seed=0, normalize=False)
+
+
+@pytest.fixture(scope="module")
+def built(db):
+    return build_index(db, CFG, normalize=False)
+
+
+def test_round_trip_bit_exact(built, db, tmp_path):
+    path = tmp_path / "idx"
+    save_index(built, path)
+    loaded = load_index(path)
+    # Every level array — and the series — byte-identical.
+    assert np.array_equal(built.series, np.asarray(loaded.series))
+    assert built.series.dtype == loaded.series.dtype
+    for a, b in zip(built.levels, loaded.levels):
+        assert a.n_segments == b.n_segments
+        assert np.array_equal(a.words, np.asarray(b.words))
+        assert a.words.dtype == b.words.dtype
+        assert np.array_equal(a.residuals, np.asarray(b.residuals))
+    assert loaded.config == built.config
+    # Identical query answers (range + k-NN) through the loaded arrays.
+    for q in make_queries(db, 3, seed=1):
+        qr = represent_query(q, CFG, normalize=False)
+        r0 = fastsax_range_query(built, qr, 2.0)
+        r1 = fastsax_range_query(loaded, qr, 2.0)
+        assert np.array_equal(r0.answers, r1.answers)
+        k0 = fastsax_knn_query(built, qr, 5)
+        k1 = fastsax_knn_query(loaded, qr, 5)
+        assert np.array_equal(k0.indices, k1.indices)
+        assert np.array_equal(k0.distances, k1.distances)
+
+
+def test_mmap_load_is_lazy(built, tmp_path):
+    path = tmp_path / "idx"
+    save_index(built, path)
+    loaded = load_index(path, mmap=True)
+    assert isinstance(loaded.series, np.memmap)
+    info = store_info(path)
+    assert info["size"] == built.size
+    assert set(info["arrays"]) == {"series", "words_N8", "resid_N8",
+                                   "words_N16", "resid_N16"}
+
+
+def test_verify_store_passes_and_reports(built, tmp_path):
+    path = tmp_path / "idx"
+    save_index(built, path)
+    manifest = verify_store(path)
+    assert manifest["kind"] == "fastsax-index"
+
+
+def test_corruption_fails_loudly(built, tmp_path):
+    path = tmp_path / "idx"
+    save_index(built, path)
+    target = path / "resid_N8.npy"
+    raw = bytearray(target.read_bytes())
+    raw[-8] ^= 0xFF                       # flip payload bits, keep header
+    target.write_bytes(bytes(raw))
+    with pytest.raises(IOError, match="resid_N8.*checksum"):
+        verify_store(path)
+    with pytest.raises(IOError, match="checksum"):
+        load_index(path, verify=True)
+    # A tampered *shape* fails the manifest cross-check even without verify.
+    manifest = json.loads((path / store.MANIFEST).read_text())
+    manifest["arrays"]["series"]["shape"][0] += 1
+    (path / store.MANIFEST).write_text(json.dumps(manifest))
+    with pytest.raises(IOError, match="does not match manifest"):
+        load_index(path)
+
+
+def test_crash_before_any_rename_leaves_old_generation(built, db, tmp_path,
+                                                       monkeypatch):
+    """A writer killed before the commit rename never touches the previous
+    generation: it still loads, checksums intact."""
+    path = tmp_path / "idx"
+    save_index(built, path, extra_meta={"gen": 0})
+    newer = build_index(db[:64], CFG, normalize=False)
+
+    def boom(*a, **k):
+        raise OSError("injected crash: writer killed")
+
+    monkeypatch.setattr(store.os, "rename", boom)
+    with pytest.raises(OSError, match="injected crash"):
+        save_index(newer, path, extra_meta={"gen": 1})
+    monkeypatch.undo()
+
+    manifest = verify_store(path)          # old generation: all checksums OK
+    assert manifest["extra"] == {"gen": 0}
+    loaded = load_index(path)
+    assert loaded.size == built.size
+    assert np.array_equal(built.series, np.asarray(loaded.series))
+
+
+def test_crash_between_swap_renames_preserves_old_bytes(built, db, tmp_path,
+                                                        monkeypatch):
+    """Killed between park-old and swing-new: the previous generation's
+    bytes survive (at <path>.old) with checksums intact — data is never
+    destroyed before the new generation is in place."""
+    path = tmp_path / "idx"
+    save_index(built, path, extra_meta={"gen": 0})
+    newer = build_index(db[:64], CFG, normalize=False)
+    real_rename = os.rename
+    calls = []
+
+    def second_call_crashes(src, dst):
+        calls.append(src)
+        if len(calls) == 2:
+            raise OSError("injected crash: writer killed")
+        return real_rename(src, dst)
+
+    monkeypatch.setattr(store.os, "rename", second_call_crashes)
+    with pytest.raises(OSError, match="injected crash"):
+        save_index(newer, path, extra_meta={"gen": 1})
+    monkeypatch.undo()
+
+    backup = tmp_path / "idx.old"
+    assert backup.exists() and not path.exists()
+    manifest = verify_store(backup)
+    assert manifest["extra"] == {"gen": 0}
+
+
+def test_crash_on_fresh_path_commits_nothing(built, tmp_path, monkeypatch):
+    path = tmp_path / "fresh"
+
+    def boom(*a, **k):
+        raise OSError("injected crash")
+
+    monkeypatch.setattr(store.os, "rename", boom)
+    with pytest.raises(OSError):
+        save_index(built, path)
+    monkeypatch.undo()
+    assert not path.exists()               # only a .tmp staging dir remains
+    with pytest.raises(FileNotFoundError):
+        load_index(path)
+
+
+def test_duplicate_levels_rejected():
+    """Regression: the ascending check used to pass duplicates like
+    (4, 4, 16), making the cascade evaluate a level twice."""
+    with pytest.raises(ValueError, match="strictly ascending"):
+        FastSAXConfig(n_segments=(4, 4, 16))
+    with pytest.raises(ValueError, match="strictly ascending"):
+        FastSAXConfig(n_segments=(8, 8))
+    with pytest.raises(ValueError, match="strictly ascending"):
+        FastSAXConfig(n_segments=(16, 8))  # descending still rejected
+    FastSAXConfig(n_segments=(4, 8, 16))   # strictly ascending still fine
+
+
+def test_cli_round_trip(tmp_path, capsys):
+    d = str(tmp_path / "cli_idx")
+
+    def info():
+        capsys.readouterr()                # drop preceding output
+        cli.main(["info", "--dir", d])
+        return json.loads(capsys.readouterr().out)
+
+    cli.main(["build", "--dir", d, "--db-size", "128", "--length", "64",
+              "--levels", "4,8", "--alphabet", "8"])
+    first = info()
+    assert first["live"] == 128 and first["gen"] == 0
+    cli.main(["insert", "--dir", d, "--db-size", "32", "--length", "64"])
+    cli.main(["delete", "--dir", d, "--ids", "0,5,130"])
+    cli.main(["compact", "--dir", d])
+    cli.main(["verify", "--dir", d])
+    final = info()
+    assert final["live"] == 157 and final["n_deltas"] == 0
+    assert final["tombstoned"] == 0 and final["next_id"] == 160
+    # Unknown id fails loudly through the CLI error path.
+    with pytest.raises(SystemExit):
+        cli.main(["delete", "--dir", d, "--ids", "999"])
+
+
+def test_device_index_from_store(built, db, tmp_path):
+    jnp = pytest.importorskip("jax.numpy")
+    from repro.core.engine import (DeviceIndex, device_index_from_host,
+                                   knn_query, represent_queries)
+
+    path = tmp_path / "idx"
+    save_index(built, path)
+    dev_cold = device_index_from_host(built)
+    dev_warm = DeviceIndex.from_store(path)
+    assert np.array_equal(np.asarray(dev_cold.series),
+                          np.asarray(dev_warm.series))
+    qs = represent_queries(jnp.asarray(make_queries(db, 4, seed=2)),
+                           dev_cold.levels, dev_cold.alphabet,
+                           normalize=False)
+    i0, d0, e0 = knn_query(dev_cold, qs, 5)
+    i1, d1, e1 = knn_query(dev_warm, qs, 5)
+    assert np.array_equal(np.asarray(i0), np.asarray(i1))
+    assert np.array_equal(np.asarray(d0), np.asarray(d1))
+
+
+def test_device_index_from_mutable_store_ids(db, tmp_path):
+    """After delete+compact, device-engine row positions are not external
+    ids: loading without the mapping must refuse, and the returned ids
+    array must translate positions back to the right external ids."""
+    jnp = pytest.importorskip("jax.numpy")
+    from repro.core.engine import DeviceIndex, knn_query, represent_queries
+    from repro.index.mutable import MutableIndex
+
+    root = tmp_path / "mut"
+    mi = MutableIndex.create(root, db[:16], CFG, normalize=False)
+    mi.delete([5])
+
+    # Uncompacted delete: the tombstoned row must not occupy a device slot
+    # — even k ≥ live count can never surface it (it is dropped at load,
+    # not sentinel-masked).
+    with pytest.raises(ValueError, match="with_ids=True"):
+        DeviceIndex.from_store(root)
+    dev_u, ids_u = DeviceIndex.from_store(root, with_ids=True)
+    assert dev_u.series.shape[0] == 15 and 5 not in ids_u.tolist()
+    qs_all = represent_queries(jnp.asarray(db[:1], jnp.float32),
+                               dev_u.levels, dev_u.alphabet, normalize=False)
+    nn_all, _, _ = knn_query(dev_u, qs_all, 16)   # k > live count
+    assert 5 not in ids_u[np.asarray(nn_all)[0]].tolist()
+
+    mi.compact()                          # positions shift below id 5
+    with pytest.raises(ValueError, match="with_ids=True"):
+        DeviceIndex.from_store(root)
+    dev, ids = DeviceIndex.from_store(root, with_ids=True)
+    assert np.array_equal(ids, np.concatenate([np.arange(5),
+                                               np.arange(6, 16)]))
+    q = jnp.asarray(db[6:7], jnp.float32)  # query = the row with id 6
+    qs = represent_queries(q, dev.levels, dev.alphabet, normalize=False)
+    nn_idx, _, exact = knn_query(dev, qs, 1)
+    assert bool(np.asarray(exact).all())
+    assert ids[int(np.asarray(nn_idx)[0, 0])] == 6   # mapped answer is right
+    # ...while the raw position (what a naive caller would report) is 5.
+    assert int(np.asarray(nn_idx)[0, 0]) == 5
