@@ -1,8 +1,18 @@
 """Shared benchmark fixtures: the wafer-like database (or real UCR via
-REPRO_UCR_PATH), query workload, and CSV emission helpers."""
+REPRO_UCR_PATH), query workload, and CSV emission helpers.
+
+``REPRO_BENCH_SMOKE=1`` (set by ``benchmarks/run.py --smoke``) selects the
+smoke tier: the same full-size database and query workload but a trimmed
+(ε, α, k) grid, so every record a smoke run emits has the *same name and
+— for the deterministic op-count/pruning suites — the same value* as the
+corresponding record of a full run.  That is what lets the CI
+bench-regression gate (``scripts/bench_gate.py``) diff smoke records
+against the committed full-tier ``BENCH_*.json`` baselines.
+"""
 from __future__ import annotations
 
 import functools
+import os
 import time
 
 import numpy as np
@@ -10,11 +20,15 @@ import numpy as np
 from repro.core.fastsax import FastSAXConfig, build_index, represent_query
 from repro.data.timeseries import benchmark_database, make_queries
 
-EPSILONS = (1.0, 2.0, 3.0, 4.0)          # paper Table 1: ε = 1:4
-ALPHABETS = (3, 10, 20)                  # paper Table 1: α = 3, 10, 20
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
+
+EPSILONS = (1.0, 2.0) if SMOKE else (1.0, 2.0, 3.0, 4.0)   # Table 1: ε = 1:4
+ALPHABETS = (3, 10) if SMOKE else (3, 10, 20)              # Table 1 alphabets
 LEVELS = (8, 16)                         # FAST_SAX cascade (coarse→fine)
 SAX_SEGMENTS = 16                        # the standalone-SAX representation
-N_QUERIES = 20
+N_QUERIES = 20                           # never trimmed: metrics are sums /
+#                                          means over the query workload, so
+#                                          changing it would change values
 
 
 @functools.lru_cache(maxsize=None)

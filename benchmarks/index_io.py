@@ -32,9 +32,9 @@ from repro.core.search import fastsax_knn_query
 from repro.data.timeseries import make_queries, make_wafer_like
 from repro.index.store import load_index, save_index
 
-from .common import emit
+from .common import SMOKE, emit
 
-DB_SIZES = (1024, 4096, 16384, 65536)
+DB_SIZES = (1024, 4096) if SMOKE else (1024, 4096, 16384, 65536)
 LEVELS = (8, 16)
 ALPHABET = 10
 N_QUERIES = 8

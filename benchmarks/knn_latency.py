@@ -22,9 +22,9 @@ import numpy as np
 from repro.core.search import (fastsax_knn_query, linear_scan_knn,
                                sax_knn_query)
 
-from .common import ALPHABETS, emit, index_for, query_reprs
+from .common import ALPHABETS, SMOKE, emit, index_for, query_reprs
 
-KS = (1, 5, 10, 50)
+KS = (1, 5) if SMOKE else (1, 5, 10, 50)
 
 
 def run(verbose: bool = True) -> dict:

@@ -13,7 +13,10 @@ import numpy as np
 from repro.core.fastsax import FastSAXConfig, build_index, represent_query
 from repro.core.search import fastsax_range_query
 
-from .common import ALPHABETS, EPSILONS, database, emit, queries
+from .common import ALPHABETS, EPSILONS, SMOKE, database, emit, queries
+
+LEVEL_SWEEP = ([(16,), (8, 16)] if SMOKE
+               else [(16,), (8, 16), (4, 8, 16), (2, 4, 8, 16)])
 
 
 def main() -> None:
@@ -50,7 +53,7 @@ def main() -> None:
 
     print("\n# level-count sweep (alphabet=10, eps=1): latency vs levels")
     print("levels,latency")
-    for levels in [(16,), (8, 16), (4, 8, 16), (2, 4, 8, 16)]:
+    for levels in LEVEL_SWEEP:
         cfg = FastSAXConfig(n_segments=levels, alphabet=10)
         idx = build_index(db, cfg, normalize=False)
         lat = 0.0

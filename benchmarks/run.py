@@ -1,23 +1,32 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
 """Benchmark driver: runs every paper-table benchmark plus the beyond-paper
-ablations.  ``python -m benchmarks.run [--only table1,...] [--json PATH]``.
+ablations.  ``python -m benchmarks.run [--only table1,...] [--json PATH]
+[--smoke]``.
 
 ``--json`` additionally parses every ``name,value,derived`` CSV line the
 suites emit into a ``BENCH_*.json`` trajectory file (see EXPERIMENTS.md
 §Trajectories): one JSON object per run, so successive PRs accumulate a
 machine-readable perf history.
+
+``--smoke`` selects the CI tier (``REPRO_BENCH_SMOKE=1``): the same
+database and query workload over a trimmed parameter grid, so each
+emitted record matches the name — and for deterministic op-count metrics
+the value — of its full-tier counterpart.  The bench-regression gate
+(``scripts/bench_gate.py``) runs every suite this way and diffs the
+records against the committed baselines.
 """
 from __future__ import annotations
 
 import argparse
 import io
 import json
+import os
 import re
 import sys
 import time
 
 SUITES = ("table1", "figure2", "tightness", "pruning", "engine", "knn",
-          "index_io")
+          "index_io", "serve")
 
 _CSV_LINE = re.compile(r"^([a-z0-9_][a-z0-9_/.+-]*),(-?[0-9.eE+]+),(.*)$")
 
@@ -55,15 +64,22 @@ def main() -> None:
     ap.add_argument("--json", default="",
                     help="also write the parsed records to this "
                          "BENCH_*.json trajectory file")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI tier: trimmed parameter grid, same record "
+                         "names/values on the overlapping cells")
     args = ap.parse_args()
     chosen = [s.strip() for s in args.only.split(",") if s.strip()]
 
+    if args.smoke:
+        # Must land before the suite modules import benchmarks.common.
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+
     from . import (engine_throughput, figure2_curves, index_io, knn_latency,
-                   pruning_power, table1_latency, tightness)
+                   pruning_power, serve_load, table1_latency, tightness)
     mains = {"table1": table1_latency.main, "figure2": figure2_curves.main,
              "tightness": tightness.main, "pruning": pruning_power.main,
              "engine": engine_throughput.main, "knn": knn_latency.main,
-             "index_io": index_io.main}
+             "index_io": index_io.main, "serve": serve_load.main}
     for name in chosen:
         if name not in mains:
             print(f"unknown suite {name!r}", file=sys.stderr)

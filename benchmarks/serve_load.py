@@ -1,0 +1,95 @@
+"""Serving throughput: dynamic micro-batching vs per-request dispatch.
+
+The serving claim of DESIGN.md §6, measured end to end: the same mixed
+range/k-NN workload is driven (a) through ``SearchService.direct_query``
+— one request, one device pass, the pre-serve one-shot model — and (b)
+through the full service (bounded queue → micro-batch → bucketed mixed
+dispatch) under closed-loop concurrency.  Exactness is asserted, not
+assumed: every served answer is replayed through the direct path and must
+match bit-for-bit, so the recorded speedup is at *equal answers*.
+
+Wall-clock numbers (like ``index_io``); the bench-regression gate treats
+them as trajectory data and gates only on the correctness fields
+(``exact``, ``dropped``) plus record presence.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data.timeseries import make_queries, make_wafer_like
+from repro.serve import (SearchService, ServeConfig, WorkloadSpec,
+                         check_exactness, make_workload, run_closed_loop,
+                         run_sequential)
+
+from .common import SMOKE, emit
+
+DB_SIZE = 2048
+N_REQUESTS = 128 if SMOKE else 512
+CLIENTS = 16 if SMOKE else 48
+MAX_BATCH = 64
+KNN_FRAC = 0.5
+K = 5
+EPSILON = 1.0   # a paper ε; keeps range answer sets selective at B=2048
+
+
+def run(verbose: bool = True) -> dict:
+    db = make_wafer_like(DB_SIZE, 128, seed=0)
+    queries = make_queries(db, 64, seed=1)
+    cfg = ServeConfig(max_batch=MAX_BATCH, max_queue=4 * CLIENTS,
+                      max_wait_ms=2.0, normalize_queries=False)
+    service = SearchService.from_series(db, cfg, normalize=False)
+    service.warmup(ks=(K,))
+    spec = WorkloadSpec(n_requests=N_REQUESTS, knn_frac=KNN_FRAC, k=K,
+                        epsilon=EPSILON)
+    workload = make_workload(queries, spec)
+
+    with service:
+        seq_wall, _ = run_sequential(service, workload)
+        result = run_closed_loop(service, workload, clients=CLIENTS,
+                                 deadline_ms=spec.deadline_ms)
+        mismatches = check_exactness(service, workload, result)
+    snap = service.stats.snapshot()
+
+    seq_qps = len(workload) / seq_wall
+    out = {
+        "n_requests": len(workload),
+        "seq_qps": seq_qps,
+        "batched_qps": result.qps,
+        "speedup": result.qps / seq_qps,
+        "exact": mismatches == 0,
+        "dropped": result.dropped_in_deadline,
+        "served": result.served,
+        "mean_batch": snap.get("mean_batch_size", 0.0),
+        "occupancy": snap.get("batch_occupancy", 0.0),
+        "latency_ms": snap.get("latency_ms", {}),
+    }
+    if verbose:
+        lat = out["latency_ms"]
+        print(f"# serve_load: {out['served']}/{out['n_requests']} served, "
+              f"sequential {seq_qps:.0f} qps -> batched "
+              f"{result.qps:.0f} qps ({out['speedup']:.2f}x), "
+              f"mean batch {out['mean_batch']}, "
+              f"p50/p95/p99 = {lat.get('p50')}/{lat.get('p95')}/"
+              f"{lat.get('p99')} ms, exact={out['exact']}, "
+              f"dropped={out['dropped']}")
+    return out
+
+
+def main() -> None:
+    out = run(verbose=True)
+    flags = (f"exact={out['exact']};dropped={out['dropped']};"
+             f"served={out['served']}/{out['n_requests']}")
+    emit("serve/sequential_perq", 1e6 / out["seq_qps"],
+         f"qps={out['seq_qps']:.1f}")
+    emit("serve/batched_perq", 1e6 / max(out["batched_qps"], 1e-9),
+         f"qps={out['batched_qps']:.1f};"
+         f"speedup_vs_sequential={out['speedup']:.2f};{flags};"
+         f"mean_batch={out['mean_batch']};occupancy={out['occupancy']}")
+    lat = out["latency_ms"]
+    for p in ("p50", "p95", "p99"):
+        if p in lat:
+            emit(f"serve/latency_{p}", lat[p] * 1e3, "")
+
+
+if __name__ == "__main__":
+    main()

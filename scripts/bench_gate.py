@@ -1,0 +1,244 @@
+"""Bench-regression CI gate (ISSUE 3): keep the benchmark suite honest.
+
+Wall-clock numbers on shared CI runners are noise; what must never rot is
+the *recording contract* and the *correctness metrics*:
+
+  1. every committed ``BENCH_*.json`` baseline parses and matches the
+     trajectory schema (``{"suites": [...], "records": [{name,
+     us_per_call, derived}, ...]}``) — schema drift fails;
+  2. every suite named in a baseline is still registered in
+     ``benchmarks.run`` — a deleted/renamed benchmark fails;
+  3. every registered suite still *runs* in the ``--smoke`` tier (same
+     database, trimmed grid — record names are a subset of the full
+     tier's);
+  4. every smoke record's name must exist in its suite's baseline (a
+     silently renamed record is schema drift), and at least one record
+     per baselined suite must be produced;
+  5. deterministic metrics (op-count latency-time, pruning power,
+     tightness — everything except wall-clock) are diffed against the
+     baseline with a generous tolerance; exactness flags (``exact=True``,
+     ``dropped=0``, ``below=True``) must hold outright.
+
+Exit 0 = gate passes.  Fresh smoke JSONs are written to ``--out`` for the
+workflow to upload as artifacts.
+
+    PYTHONPATH=src python scripts/bench_gate.py --out bench-fresh
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import math
+import os
+import pathlib
+import subprocess
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+# Suites whose us_per_call / derived numerics are deterministic functions
+# of the (seeded) dataset — safe to diff.  Everything else is wall-clock:
+# presence and correctness flags only.
+DETERMINISTIC = {"table1", "figure2", "tightness", "pruning", "knn"}
+
+REL_TOL = 0.25          # generous: catches 'broken', ignores jitter/drift
+ABS_TOL = 0.05          # floor for fraction-valued metrics
+
+# derived-key semantics: direction a change must NOT take (beyond tol)
+HIGHER_IS_WORSE = ("verified_frac",)
+LOWER_IS_WORSE = ("speedup", "qps", "c9", "c10", "mean", "vs_seq",
+                  "batch_amortise")
+MUST_BE_TRUE = ("exact", "below")
+MUST_BE_ZERO = ("dropped",)
+
+
+def fail(errors: list, msg: str):
+    errors.append(msg)
+    print(f"[gate] FAIL: {msg}")
+
+
+def parse_derived(derived: str) -> dict:
+    """'k=v;k=v' and bare 'True'/'False' fragments -> dict."""
+    out = {}
+    for part in str(derived).split(";"):
+        part = part.strip()
+        if not part:
+            continue
+        if "=" in part:
+            key, val = part.split("=", 1)
+            out[key.strip()] = val.strip()
+        elif part in ("True", "False"):
+            out["below"] = part   # figure2's bare monotonicity flag
+    return out
+
+
+def as_float(s):
+    try:
+        return float(str(s).split("/")[0])   # tolerates 'served=512/512'
+    except ValueError:
+        return None
+
+
+def check_schema(path: pathlib.Path, doc, errors: list) -> bool:
+    ok = True
+    if not isinstance(doc, dict) or \
+            not isinstance(doc.get("suites"), list) or \
+            not doc["suites"] or \
+            not isinstance(doc.get("records"), list):
+        fail(errors, f"{path.name}: schema drift — expected "
+                     "{{suites: [...], records: [...]}}")
+        return False
+    for rec in doc["records"]:
+        if (not isinstance(rec, dict)
+                or not isinstance(rec.get("name"), str)
+                or not isinstance(rec.get("us_per_call"), (int, float))
+                or not isinstance(rec.get("derived"), str)):
+            fail(errors, f"{path.name}: schema drift in record {rec!r}")
+            ok = False
+    return ok
+
+
+def suite_of(record_name: str) -> str:
+    return record_name.split("/", 1)[0]
+
+
+def compare_records(base: dict, fresh: dict, suite: str, errors: list):
+    deterministic = suite in DETERMINISTIC
+    for name, brec in base.items():
+        if name not in fresh:
+            continue   # smoke tier runs a trimmed grid — subsets are fine
+        frec = fresh[name]
+        bval, fval = brec["us_per_call"], frec["us_per_call"]
+        if not math.isfinite(fval) or fval < 0:
+            fail(errors, f"{name}: non-finite/negative value {fval}")
+            continue
+        if deterministic and bval > 0:
+            if abs(fval - bval) > REL_TOL * bval:
+                fail(errors, f"{name}: deterministic metric moved "
+                             f"{bval:.6g} -> {fval:.6g} (>{REL_TOL:.0%})")
+        bder, fder = parse_derived(brec["derived"]), \
+            parse_derived(frec["derived"])
+        for key, bs in bder.items():
+            fs = fder.get(key)
+            if fs is None:
+                fail(errors, f"{name}: derived key {key!r} disappeared")
+                continue
+            if key in MUST_BE_TRUE:
+                if bs == "True" and fs != "True":
+                    fail(errors, f"{name}: {key}={fs} (baseline True)")
+                continue
+            if key in MUST_BE_ZERO:
+                if as_float(fs) != 0.0:
+                    fail(errors, f"{name}: {key}={fs} (must be 0)")
+                continue
+            if not deterministic:
+                continue
+            bf, ff = as_float(bs), as_float(fs)
+            if bf is None or ff is None:
+                continue
+            tol = max(ABS_TOL, REL_TOL * abs(bf))
+            if any(key.startswith(p) for p in HIGHER_IS_WORSE) \
+                    and ff > bf + tol:
+                fail(errors, f"{name}: {key} regressed {bf} -> {ff} "
+                             f"(pruning power lost)")
+            if any(key.startswith(p) for p in LOWER_IS_WORSE) \
+                    and ff < bf - tol:
+                fail(errors, f"{name}: {key} regressed {bf} -> {ff}")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="bench-fresh",
+                    help="directory for the fresh smoke JSONs (artifact)")
+    ap.add_argument("--baselines", default="BENCH_*.json",
+                    help="glob (relative to the repo root) of committed "
+                         "baseline trajectory files")
+    ap.add_argument("--skip-run", action="store_true",
+                    help="compare an existing --out dir instead of "
+                         "re-running the smoke tier (debugging)")
+    args = ap.parse_args()
+
+    errors: list = []
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    # 1-2: baselines parse, schema holds, suites still registered.
+    sys.path.insert(0, str(REPO))
+    from benchmarks.run import SUITES
+    baselines = {}
+    paths = sorted(REPO.glob(args.baselines)) or [
+        pathlib.Path(p) for p in sorted(glob.glob(args.baselines))]
+    if not paths:
+        fail(errors, f"no baseline files match {args.baselines!r}")
+    for path in paths:
+        try:
+            doc = json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            fail(errors, f"{path.name}: unreadable baseline ({e})")
+            continue
+        if not check_schema(path, doc, errors):
+            continue
+        for suite in doc["suites"]:
+            if suite not in SUITES:
+                fail(errors, f"{path.name}: suite {suite!r} is no longer "
+                             f"registered in benchmarks.run (missing "
+                             f"benchmark)")
+                continue
+            baselines.setdefault(suite, {}).update(
+                {r["name"]: r for r in doc["records"]
+                 if suite_of(r["name"]) == suite})
+
+    # 3: run every registered suite in the smoke tier, one process so the
+    # shared fixtures (database, indexes) are built once.
+    fresh_path = out_dir / "BENCH_smoke.json"
+    if not args.skip_run:
+        cmd = [sys.executable, "-m", "benchmarks.run", "--smoke",
+               "--only", ",".join(SUITES), "--json", str(fresh_path)]
+        env = dict(os.environ)
+        env["PYTHONPATH"] = (str(REPO / "src") + os.pathsep
+                             + env.get("PYTHONPATH", ""))
+        print(f"[gate] running: {' '.join(cmd)}")
+        proc = subprocess.run(cmd, cwd=REPO, env=env)
+        if proc.returncode != 0:
+            fail(errors, f"smoke benchmark run failed "
+                         f"(exit {proc.returncode})")
+    if fresh_path.exists():
+        fresh_doc = json.loads(fresh_path.read_text())
+        check_schema(fresh_path, fresh_doc, errors)
+        fresh_by_suite: dict = {}
+        for rec in fresh_doc.get("records", []):
+            fresh_by_suite.setdefault(
+                suite_of(rec["name"]), {})[rec["name"]] = rec
+
+        # 4-5: per baselined suite — records produced, names known, diff.
+        for suite, base in sorted(baselines.items()):
+            fresh = fresh_by_suite.get(suite, {})
+            if not fresh:
+                fail(errors, f"suite {suite!r}: smoke run produced no "
+                             f"records (missing benchmark)")
+                continue
+            base_names = set(base)
+            for name in fresh:
+                if name not in base_names:
+                    fail(errors, f"{name}: record not in the committed "
+                                 f"baseline for suite {suite!r} — commit "
+                                 f"an updated BENCH_*.json (schema drift)")
+            compare_records(base, fresh, suite, errors)
+    elif not errors:
+        fail(errors, f"{fresh_path}: smoke run wrote no output")
+
+    report = {"pass": not errors, "errors": errors,
+              "suites_checked": sorted(baselines)}
+    (out_dir / "gate_report.json").write_text(json.dumps(report, indent=1))
+    if errors:
+        print(f"[gate] {len(errors)} failure(s); report: "
+              f"{out_dir}/gate_report.json")
+        return 1
+    print(f"[gate] PASS — {len(baselines)} baselined suite(s), all "
+          f"{len(SUITES)} registered suites ran in the smoke tier")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -29,8 +29,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from .engine import (DeviceIndex, QueryReprDev, build_device_index,
-                     cascade_mask, knn_query, range_query_compact,
-                     represent_queries)
+                     cascade_mask, knn_query, mixed_query,
+                     range_query_compact, represent_queries)
 
 _PAD_RESIDUAL = 1e30  # sentinel: C9 kills padded rows for any finite epsilon
 
@@ -128,6 +128,140 @@ def distributed_range_query(
         check_rep=False,
     )(index.series, index.norms_sq, index.residuals, index.words,
       qr.q, qr.words, qr.residuals, eps)
+
+
+def distributed_range_query_auto(
+    index: DeviceIndex,
+    queries,
+    epsilon,
+    mesh: Mesh,
+    axis: str = "data",
+    capacity_per_shard: int = 128,
+    normalize_queries: bool = True,
+    max_doublings: int = 8,
+):
+    """Range query with the engine's capacity auto-escalation contract.
+
+    Runs :func:`distributed_range_query`; while any shard reports overflow
+    (its survivors did not fit in ``capacity_per_shard`` slots — served
+    answers would be silently truncated), re-runs with 4× the per-shard
+    capacity, capped at the shard size where compaction can never overflow.
+    Mirrors ``engine.range_query_auto`` for the sharded database; each
+    distinct capacity compiles once and is cached by jit.
+    """
+    P_sh = mesh.shape[axis]
+    b_loc = index.series.shape[0] // P_sh
+    cap = min(int(capacity_per_shard), b_loc)
+    for _ in range(max_doublings + 1):
+        gidx, ans, d2, overflow = distributed_range_query(
+            index, queries, epsilon, mesh, axis=axis,
+            capacity_per_shard=cap, normalize_queries=normalize_queries)
+        if cap >= b_loc or not bool(np.asarray(overflow).any()):
+            return gidx, ans, d2, overflow
+        cap = min(b_loc, cap * 4)
+    return gidx, ans, d2, overflow
+
+
+def distributed_mixed_query(
+    index: DeviceIndex,
+    queries,
+    epsilon,
+    is_knn,
+    k: int,
+    mesh: Mesh,
+    axis: str = "data",
+    capacity_per_shard: int = 128,
+    n_iters: int = 2,
+    normalize_queries: bool = True,
+    n_valid: int | None = None,
+):
+    """Batched mixed-workload dispatch over the sharded database.
+
+    The serving layer's one device round-trip per micro-batch: every shard
+    runs ``engine.mixed_query`` on its rows (range rows prune at the
+    caller's ε, k-NN rows self-tighten on shard-local data — zero
+    collectives in the cascade, exactly the dedicated paths' physics) and
+    contributes a ``capacity_per_shard``-slot candidate buffer.  The
+    buffers concatenate through the output sharding; the k-NN merge over
+    P·C candidates happens on the host side of the materialised result
+    (``mixed_topk``), identical to ``distributed_knn_query``'s merge
+    argument: each shard's buffer contains its local top-k, and the global
+    top-k is a subset of the union of local top-k sets.
+
+    Returns ``(gidx (Q, P·C), answer (Q, P·C), d2 (Q, P·C), overflow
+    (Q, P))``.  For range rows ``answer`` marks verified in-range slots;
+    for k-NN rows it marks candidate slots — finish with
+    ``mixed_topk(gidx, d2, k)``.  Any True in ``overflow[q]`` means row q's
+    buffer truncated on that shard (range: answers may be missing; k-NN:
+    certificate failed) — escalate ``capacity_per_shard`` and re-dispatch.
+    """
+    levels, alphabet = index.levels, index.alphabet
+    P_sh = mesh.shape[axis]
+    B = index.series.shape[0]
+    b_loc = B // P_sh
+    n_valid = B if n_valid is None else int(n_valid)
+    k_loc = min(int(k), b_loc)
+    cap = min(int(capacity_per_shard), b_loc)
+    qr = represent_queries(jnp.asarray(queries, dtype=jnp.float32),
+                           levels, alphabet, normalize=normalize_queries)
+    eps = jnp.asarray(epsilon, dtype=jnp.float32)
+    knn_mask = jnp.asarray(is_knn, dtype=bool)
+
+    def local(series, norms, residuals, words, q, qws, qrs, eps_, knn_):
+        lidx = DeviceIndex(series=series, norms_sq=norms, words=words,
+                           residuals=residuals, levels=levels,
+                           alphabet=alphabet)
+        lqr = QueryReprDev(q=q, words=qws, residuals=qrs)
+        shard = jax.lax.axis_index(axis)
+        rows = shard * b_loc + jnp.arange(b_loc, dtype=jnp.int32)
+        vmask = (rows < n_valid) & (residuals[0] < 0.5 * _PAD_RESIDUAL)
+        idx, answer, d2, overflow = mixed_query(
+            lidx, lqr, eps_, knn_, k_loc, capacity=cap, n_iters=n_iters,
+            valid_mask=vmask)
+        gidx = jnp.where(answer, idx + shard * b_loc, -1)
+        return gidx, answer, d2, overflow[:, None]
+
+    in_specs = (P(axis, None), P(axis),
+                tuple(P(axis) for _ in levels),
+                tuple(P(axis, None) for _ in levels),
+                P(), (P(),) * len(levels), (P(),) * len(levels), P(), P())
+    out_specs = (P(None, axis), P(None, axis), P(None, axis), P(None, axis))
+    return shard_map(
+        local, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=False,
+    )(index.series, index.norms_sq, index.residuals, index.words,
+      qr.q, qr.words, qr.residuals, eps, knn_mask)
+
+
+def distributed_mixed_query_auto(
+    index: DeviceIndex,
+    queries,
+    epsilon,
+    is_knn,
+    k: int,
+    mesh: Mesh,
+    axis: str = "data",
+    capacity_per_shard: int = 128,
+    n_iters: int = 2,
+    normalize_queries: bool = True,
+    n_valid: int | None = None,
+    max_doublings: int = 8,
+):
+    """:func:`distributed_mixed_query` under the capacity auto-escalation
+    contract: 4× the per-shard capacity while any shard overflows, capped
+    at the shard size (guaranteed sound there)."""
+    P_sh = mesh.shape[axis]
+    b_loc = index.series.shape[0] // P_sh
+    cap = min(int(capacity_per_shard), b_loc)
+    for _ in range(max_doublings + 1):
+        out = distributed_mixed_query(
+            index, queries, epsilon, is_knn, k, mesh, axis=axis,
+            capacity_per_shard=cap, n_iters=n_iters,
+            normalize_queries=normalize_queries, n_valid=n_valid)
+        if cap >= b_loc or not bool(np.asarray(out[3]).any()):
+            return out
+        cap = min(b_loc, cap * 4)
+    return out
 
 
 def distributed_knn_query(

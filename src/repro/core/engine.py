@@ -425,6 +425,183 @@ def knn_query(
     return nn_idx, nn_d2, ~overflow
 
 
+# ---------------------------------------------------------------------------
+# Mixed-workload dispatch: one device pass serving k-NN AND range queries.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("k", "capacity", "n_iters"))
+def mixed_query(
+    index: DeviceIndex,
+    qr: QueryReprDev,
+    epsilon: jnp.ndarray,
+    is_knn: jnp.ndarray,
+    k: int,
+    capacity: int,
+    n_iters: int = 2,
+    valid_mask: jnp.ndarray | None = None,
+):
+    """One jitted pass answering a *mixed* batch of range and k-NN queries.
+
+    The serving layer (``repro.serve``) coalesces concurrent requests of
+    both kinds into a single device batch; this is its bucket-shape-stable
+    entry point — the compiled shape depends only on ``(Q, k, capacity,
+    n_iters)``, never on the per-request mix, so one compilation serves
+    every batch in the bucket (DESIGN.md §6).
+
+    Per query row, ``is_knn[i]`` selects the semantics:
+
+      * **range** (False): ``epsilon[i]`` is the caller's radius — the row
+        runs exactly the :func:`range_query_compact` dataflow;
+      * **k-NN** (True): ``epsilon[i]`` is ignored; the row seeds its own
+        radius from the strided sample and tightens it per pass, exactly
+        the :func:`knn_query` dataflow.
+
+    The two paths differ only in their per-row ε column — the cascade,
+    promise-ordered tightening and final low-index compaction are shared —
+    so every row's answer is bit-identical to the corresponding dedicated
+    engine call at equal ``(k, capacity, n_iters)`` (tested in
+    ``tests/test_serve.py``).
+
+    Returns ``(idx (Q, C), answer (Q, C), d2 (Q, C), overflow (Q,))``:
+    for range rows ``answer`` marks verified in-range slots; for k-NN rows
+    it marks valid candidate slots — take the row's top-k via
+    :func:`mixed_topk`.  ``overflow`` is the per-row soundness signal
+    (range: survivors truncated; k-NN: exactness certificate is its
+    negation); :func:`mixed_query_auto` escalates capacity on it.
+    """
+    Q, B = qr.q.shape[0], index.series.shape[0]
+    k = min(int(k), B)
+    capacity = max(min(int(capacity), B), k)
+    knn_col = is_knn.reshape(Q, 1)
+    eps_req = _eps_qcol(epsilon, Q)
+
+    # Seed radius for the k-NN rows (range rows keep the caller's ε).
+    S = min(B, max(k, _KNN_SEED_SAMPLE))
+    sample = (jnp.arange(S, dtype=jnp.int32) * B) // S
+    rows = index.series[sample]
+    diff = rows[None, :, :] - qr.q[:, None, :]
+    d2s = jnp.sum(diff * diff, axis=-1)
+    if valid_mask is not None:
+        d2s = jnp.where(valid_mask[sample][None, :], d2s, jnp.inf)
+    eps_knn = jnp.sqrt(jnp.maximum(_kth_smallest(d2s, k), 0.0))
+    eps = jnp.where(knn_col, eps_knn, eps_req)
+
+    def cascade_eps(e):
+        # k-NN rows need the f32 slack (their bound tightens towards the
+        # true distance); range rows use the caller's ε verbatim so the
+        # survivor set — and the overflow flag — match range_query_compact.
+        return jnp.where(knn_col, _slacked(e), e)
+
+    gap0 = jnp.abs(index.residuals[0][None, :] - qr.residuals[0][:, None])
+    for _ in range(max(0, int(n_iters) - 1)):
+        alive = cascade_mask(index, qr, cascade_eps(eps))
+        if valid_mask is not None:
+            alive &= valid_mask[None, :]
+        _, _, d2 = compact_verify(index, qr, alive, capacity,
+                                  order_key=-gap0)
+        tightened = jnp.minimum(eps, jnp.sqrt(_kth_smallest(d2, k)))
+        eps = jnp.where(knn_col, tightened, eps)
+
+    alive = cascade_mask(index, qr, cascade_eps(eps))
+    if valid_mask is not None:
+        alive &= valid_mask[None, :]
+    idx, valid, d2 = compact_verify(index, qr, alive, capacity)
+    overflow = alive.sum(axis=-1) > capacity
+    answer = jnp.where(knn_col, valid, valid & (d2 <= eps_req * eps_req))
+    return idx, answer, jnp.where(answer, d2, jnp.inf), overflow
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def mixed_query_dense(
+    index: DeviceIndex,
+    qr: QueryReprDev,
+    epsilon: jnp.ndarray,
+    is_knn: jnp.ndarray,
+    k: int,
+    valid_mask: jnp.ndarray | None = None,
+):
+    """Dense-verify variant of :func:`mixed_query` — no candidate buffer.
+
+    Range rows follow the :func:`range_query` dataflow (cascade mask +
+    matmul verify); k-NN rows are answered by brute force over the dense
+    distances (``top_k`` ties resolve to the lowest index, the engine-wide
+    tie-break).  Cannot overflow, so the answer is unconditionally exact.
+
+    This is the documented fallback of the compaction engines, promoted to
+    a serving path: when a workload's survivor sets are a large fraction
+    of B, gather-based compaction costs more than the dense matmul it was
+    supposed to avoid — the serving backend switches here the moment the
+    learned capacity crosses ``dense_fallback_frac`` of B (DESIGN.md §6).
+    Same return convention as :func:`mixed_query` with C = B; ``k`` is
+    accepted (and static) only so the jit cache keys match the caller's
+    bucket ladder.
+    """
+    del k
+    Q, B = qr.q.shape[0], index.series.shape[0]
+    knn_col = is_knn.reshape(Q, 1)
+    eps = _eps_qcol(epsilon, Q)
+    alive = cascade_mask(index, qr, eps)
+    d2 = verify_distances(index, qr)
+    valid = jnp.ones((Q, B), dtype=bool)
+    if valid_mask is not None:
+        alive &= valid_mask[None, :]
+        valid &= valid_mask[None, :]
+    in_range = alive & (d2 <= eps * eps)
+    answer = jnp.where(knn_col, valid, in_range)
+    idx = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32)[None, :], (Q, B))
+    overflow = jnp.zeros((Q,), dtype=bool)
+    return idx, answer, jnp.where(answer, d2, jnp.inf), overflow
+
+
+def mixed_topk(idx: jnp.ndarray, d2: jnp.ndarray, k: int):
+    """Extract per-row ascending top-k from a compacted candidate buffer.
+
+    The buffer comes from low-index compaction, so equal distances resolve
+    to the lowest database index — the same deterministic tie-break as
+    :func:`knn_query`.  A request served from a bucket with ``k_bucket >
+    k`` reads its first k columns: a larger top-k is a sorted superset.
+    """
+    neg, pos = jax.lax.top_k(-d2, min(int(k), d2.shape[-1]))
+    return jnp.take_along_axis(idx, pos, axis=-1), -neg
+
+
+def mixed_query_auto(
+    index: DeviceIndex,
+    qr: QueryReprDev,
+    epsilon,
+    is_knn,
+    k: int,
+    capacity: int | None = None,
+    n_iters: int = 2,
+    valid_mask: jnp.ndarray | None = None,
+    max_doublings: int = 8,
+):
+    """Certificate-driven mixed dispatch: escalate capacity until sound.
+
+    The same escalation contract as :func:`knn_query_auto` /
+    :func:`range_query_auto`, reused for the mixed batch: while any row
+    overflowed its candidate buffer, re-run with 4× the capacity (capped
+    at B, where compaction can never overflow, so termination with zero
+    overflow is guaranteed).  Each distinct capacity compiles once and is
+    cached by jit — the serving bucket ladder (DESIGN.md §6) keeps the set
+    of capacities small.
+    """
+    B = index.series.shape[0]
+    k_eff = min(int(k), B)
+    cap = min(B, max(4 * k_eff, 64) if capacity is None else int(capacity))
+    cap = max(cap, k_eff)
+    is_knn = jnp.asarray(is_knn, dtype=bool)
+    for _ in range(max_doublings + 1):
+        idx, answer, d2, overflow = mixed_query(
+            index, qr, epsilon, is_knn, k_eff, capacity=cap,
+            n_iters=n_iters, valid_mask=valid_mask)
+        if cap >= B or not bool(jax.device_get(overflow).any()):
+            return idx, answer, d2, overflow
+        cap = min(B, cap * 4)
+    return idx, answer, d2, overflow
+
+
 def knn_query_auto(
     index: DeviceIndex,
     qr: QueryReprDev,

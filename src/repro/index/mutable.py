@@ -83,6 +83,7 @@ class MutableIndex:
         self._segments: list = []       # [(dirname, FastSAXIndex, ids)]
         self._tomb: np.ndarray | None = None
         self._view: tuple | None = None  # cached (FastSAXIndex, ids)
+        self._listeners: list = []       # commit-refresh hooks (serve layer)
         self._load_epoch()
 
     # --- creation / opening -------------------------------------------------
@@ -184,6 +185,32 @@ class MutableIndex:
                 "next_id": self._epoch["next_id"],
                 "config": self._epoch["config"]}
 
+    # --- refresh hook (the serve layer's live-ingest signal) ----------------
+
+    @property
+    def generation(self) -> int:
+        """The committed epoch number — bumps on every successful mutation.
+        A reader holding a device copy compares this against the generation
+        it uploaded to decide whether a refresh is due (DESIGN.md §6)."""
+        return int(self._epoch["gen"])
+
+    def subscribe(self, fn):
+        """Register ``fn(mutable_index)`` to run after every committed
+        mutation (insert / delete / compact).  Returns an unsubscribe
+        callable.  Listeners fire *after* ``CURRENT`` swaps, so a listener
+        re-reading the index always sees the new epoch; exceptions
+        propagate to the mutator (a silent drop would leave the caller
+        believing its refresh hook ran)."""
+        self._listeners.append(fn)
+        def unsubscribe():
+            if fn in self._listeners:
+                self._listeners.remove(fn)
+        return unsubscribe
+
+    def _notify(self):
+        for fn in list(self._listeners):
+            fn(self)
+
     # --- mutation -----------------------------------------------------------
 
     def _next_gen(self) -> int:
@@ -212,6 +239,7 @@ class MutableIndex:
         self._tomb = np.concatenate(
             [self._tomb, np.zeros(delta.size, dtype=bool)])
         self._view = None
+        self._notify()
         return ids
 
     def delete(self, ids) -> int:
@@ -244,6 +272,7 @@ class MutableIndex:
         self._epoch = epoch
         self._tomb = mask
         self._view = None
+        self._notify()
         return self.n_live
 
     def _concat_rows(self):
@@ -303,6 +332,7 @@ class MutableIndex:
             for p in self.root.glob("epoch_*.json"):
                 if p.name != _epoch_name(gen):
                     p.unlink()
+        self._notify()
         return self.info()
 
     # --- querying -----------------------------------------------------------

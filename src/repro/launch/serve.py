@@ -1,11 +1,19 @@
-"""Serving launcher: batched prefill + decode loop with continuous token
-generation, plus the distributed FAST_SAX search service (the paper's
-engine as a first-class serving workload).
+"""Serving launcher — a thin driver over three serving modes:
 
-  PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --smoke \
-      --batch 4 --prompt-len 32 --gen 16
-  PYTHONPATH=src python -m repro.launch.serve --search --db-size 4096
-  PYTHONPATH=src python -m repro.launch.serve --search --index-dir idx/
+  * LM decode loop (the model-stack smoke):
+      PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
+          --batch 4 --prompt-len 32 --gen 16
+  * one-shot FAST_SAX search (range / k-NN over a sharded database):
+      PYTHONPATH=src python -m repro.launch.serve --search --db-size 4096
+      PYTHONPATH=src python -m repro.launch.serve --search --index-dir idx/
+  * the online query service (``repro.serve``: dynamic micro-batching,
+    admission control, deadlines, live ingest — DESIGN.md §6):
+      PYTHONPATH=src python -m repro.launch.serve --serve --index-dir idx/ \
+          --bench-requests 256 --clients 16 --verify-exact
+
+``--serve`` runs the event loop in-process and drives it with the
+closed-loop load generator (``--bench-requests``); the final line is a
+machine-readable JSON summary (the CI serving smoke parses it).
 """
 from __future__ import annotations
 
@@ -74,9 +82,9 @@ def serve_search(args):
     for the next restart (DESIGN.md §5).
     """
     from ..core.dist_search import (distributed_build, distributed_knn_query,
-                                    distributed_range_query, load_sharded,
-                                    make_data_mesh, pad_database,
-                                    store_sharded)
+                                    distributed_range_query_auto,
+                                    load_sharded, make_data_mesh,
+                                    pad_database, store_sharded)
     from ..data.timeseries import make_queries, make_wafer_like
 
     n_dev = len(jax.devices())
@@ -145,7 +153,10 @@ def serve_search(args):
               f"exact={bool(np.asarray(exact).all())}")
         return
     t0 = time.perf_counter()
-    gidx, ans, d2, overflow = distributed_range_query(
+    # Auto-escalating capacity: a shard whose survivors overflow the
+    # candidate buffer is re-queried at 4x capacity (up to the shard size),
+    # so served answers are never silently truncated.
+    gidx, ans, d2, overflow = distributed_range_query_auto(
         index, queries, args.epsilon, mesh, capacity_per_shard=128,
         normalize_queries=False)
     jax.block_until_ready(ans)
@@ -157,32 +168,128 @@ def serve_search(args):
         print(f"[search] q{qi}: {ans[qi].sum()} answers "
               f"(first: {sorted(hits.tolist())[:6]})")
     print(f"[search] {args.queries} queries in {dt*1e3:.1f} ms "
-          f"({args.queries/dt:.0f} qps); overflow={bool(overflow.any())}")
+          f"({args.queries/dt:.0f} qps); overflow={bool(np.asarray(overflow).any())}")
+
+
+def serve_service(args):
+    """The online query service event loop (``repro.serve``), driven by the
+    closed-loop load generator.  Prints per-request samples, the stats
+    snapshot, and a final machine-readable JSON summary line::
+
+        [serve] summary {...}
+
+    The CI serving smoke parses that line and asserts exactness and zero
+    dropped in-deadline requests.
+    """
+    import json
+
+    from ..data.timeseries import make_queries, make_wafer_like
+    from ..serve import (SearchService, ServeConfig, WorkloadSpec,
+                         check_exactness, make_workload, run_closed_loop)
+
+    cfg = ServeConfig(max_batch=args.max_batch, max_queue=args.max_queue,
+                      max_wait_ms=args.max_wait_ms, alphabet=args.alphabet,
+                      default_deadline_ms=args.deadline_ms or None)
+    if args.index_dir:
+        t0 = time.perf_counter()
+        service = SearchService.from_store(args.index_dir, cfg)
+        print(f"[serve] warm start: {service.backend.size} rows from "
+              f"{args.index_dir} in {time.perf_counter()-t0:.3f}s "
+              f"(live ingest: {'on' if service.mutable else 'off'})")
+        # The query pool only needs series-shaped rows near the database
+        # distribution; the warm path must not regenerate the database.
+        pool_src = make_wafer_like(max(64, 4 * args.queries),
+                                   service.backend.n, seed=0)
+    else:
+        db = make_wafer_like(args.db_size, 128, seed=0)
+        t0 = time.perf_counter()
+        service = SearchService.from_series(db, cfg)
+        print(f"[serve] cold build: {args.db_size} rows in "
+              f"{time.perf_counter()-t0:.2f}s")
+        pool_src = db
+    queries = make_queries(pool_src, max(args.queries, 16), seed=1)
+
+    t0 = time.perf_counter()
+    service.warmup(ks=(args.knn or 8,))
+    print(f"[serve] warmup (bucket ladder precompile) "
+          f"{time.perf_counter()-t0:.1f}s")
+
+    spec = WorkloadSpec(n_requests=args.bench_requests,
+                        knn_frac=args.knn_frac, k=args.knn or 5,
+                        epsilon=args.epsilon,
+                        deadline_ms=args.deadline_ms or None)
+    workload = make_workload(queries, spec)
+    with service:
+        result = run_closed_loop(service, workload, clients=args.clients,
+                                 deadline_ms=spec.deadline_ms)
+        mismatches = -1
+        if args.verify_exact:
+            mismatches = check_exactness(service, workload, result)
+    snap = service.stats.snapshot()
+    summary = result.summary(snap)
+    summary["exact_mismatches"] = mismatches
+    lat = snap.get("latency_ms", {})
+    print(f"[serve] {summary['served']}/{summary['requests']} served at "
+          f"{summary['qps']} qps; p50/p95/p99 = {lat.get('p50')}/"
+          f"{lat.get('p95')}/{lat.get('p99')} ms; "
+          f"mean batch {snap.get('mean_batch_size')} "
+          f"(occupancy {snap.get('batch_occupancy')})")
+    print(f"[serve] summary {json.dumps(summary, sort_keys=True)}")
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-2b",
                     choices=configs.list_archs())
-    ap.add_argument("--smoke", action="store_true", default=True)
+    # BooleanOptionalAction so --no-smoke can actually disable it (a bare
+    # store_true with default=True was impossible to turn off).
+    ap.add_argument("--smoke", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="use the smoke-sized arch config (--no-smoke for "
+                         "the full config)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--search", action="store_true",
-                    help="serve FAST_SAX range queries instead of an LM")
+                    help="one-shot FAST_SAX search instead of an LM")
+    ap.add_argument("--serve", action="store_true",
+                    help="run the online query service event loop "
+                         "(repro.serve) and drive it with the load "
+                         "generator")
     ap.add_argument("--knn", type=int, default=0, metavar="K",
                     help="with --search: serve exact k-NN queries instead "
-                         "of ε-range queries")
+                         "of ε-range queries; with --serve: the workload's "
+                         "k (default 5)")
     ap.add_argument("--db-size", type=int, default=4096)
     ap.add_argument("--index-dir", default="",
-                    help="with --search: warm-start from this sharded index "
-                         "store (and persist to it after a cold build)")
+                    help="warm-start from this index store (--search: "
+                         "sharded store, persisted after a cold build; "
+                         "--serve: any repro.index artifact)")
     ap.add_argument("--queries", type=int, default=16)
     ap.add_argument("--epsilon", type=float, default=2.0)
     ap.add_argument("--alphabet", type=int, default=10)
+    # --serve knobs
+    ap.add_argument("--bench-requests", type=int, default=256,
+                    help="with --serve: closed-loop load-generator request "
+                         "count")
+    ap.add_argument("--clients", type=int, default=16,
+                    help="with --serve: concurrent closed-loop clients")
+    ap.add_argument("--knn-frac", type=float, default=0.5,
+                    help="with --serve: fraction of k-NN requests in the "
+                         "mixed workload")
+    ap.add_argument("--max-batch", type=int, default=32)
+    ap.add_argument("--max-queue", type=int, default=256)
+    ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="with --serve: per-request deadline (0 = none)")
+    ap.add_argument("--verify-exact", action="store_true",
+                    help="with --serve: replay every served request "
+                         "through the direct path and count mismatches")
     args = ap.parse_args(argv)
-    if args.search:
+    if args.serve:
+        serve_service(args)
+    elif args.search:
         serve_search(args)
     else:
         serve_lm(args)

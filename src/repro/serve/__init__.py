@@ -1,0 +1,21 @@
+"""Online query serving for the FAST_SAX engines (DESIGN.md §6).
+
+``SearchService`` turns the batched device engines into a long-lived
+service: bounded-queue admission control, per-request deadlines, dynamic
+micro-batching into shape-bucketed device passes, warm start from any
+committed ``repro.index`` store, live ingest through ``MutableIndex``
+with commit-triggered refresh, and p50/p95/p99 latency accounting.
+"""
+from .batcher import (FAILED, KIND_KNN, KIND_RANGE, OK, REJECTED_DEADLINE,
+                      REJECTED_QUEUE_FULL, MicroBatcher, Request)
+from .loadgen import (LoadResult, WorkloadSpec, check_exactness,
+                      make_workload, run_closed_loop, run_sequential)
+from .service import SearchService, ServeConfig
+from .stats import StatsTracker
+
+__all__ = [
+    "FAILED", "KIND_KNN", "KIND_RANGE", "OK", "REJECTED_DEADLINE",
+    "REJECTED_QUEUE_FULL", "MicroBatcher", "Request", "LoadResult",
+    "WorkloadSpec", "check_exactness", "make_workload", "run_closed_loop",
+    "run_sequential", "SearchService", "ServeConfig", "StatsTracker",
+]

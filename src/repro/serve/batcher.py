@@ -1,0 +1,216 @@
+"""Dynamic micro-batching: a bounded request queue + a dispatcher thread.
+
+The serving problem (DESIGN.md §6): requests arrive one at a time, but the
+engines (``core/engine.py``) are batched — a device pass over Q queries
+costs barely more than over one, and ``jax.jit`` compiles per *shape*.
+The batcher closes that gap:
+
+  * **admission control** — the queue is bounded; a submit against a full
+    queue is rejected immediately (backpressure beats unbounded latency),
+    and a request whose deadline has already passed is rejected at the
+    door;
+  * **coalescing** — the dispatcher drains whatever is queued (up to
+    ``max_batch``), waiting at most ``max_wait_ms`` for stragglers after
+    the first request arrives (the dynamic part: under load the batch
+    fills instantly and no waiting happens; when idle, a lone request pays
+    at most the window);
+  * **deadline enforcement** — requests that expired while queued are
+    rejected at batch-formation time, never dispatched: a reply after the
+    deadline is *stale*, and serving it would hide overload from the
+    caller;
+  * **shape bucketing** is the dispatch function's job (``service.py``
+    pads the drained batch to a power-of-two bucket), so jit compiles once
+    per bucket, never per request.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+from .stats import StatsTracker
+
+KIND_RANGE = "range"
+KIND_KNN = "knn"
+
+# Request terminal states.
+OK = "ok"
+REJECTED_QUEUE_FULL = "rejected_queue_full"
+REJECTED_DEADLINE = "rejected_deadline"
+FAILED = "failed"
+
+
+@dataclasses.dataclass
+class Request:
+    """One in-flight query.  ``wait()`` blocks the submitting thread until
+    the dispatcher (or admission control) resolves it."""
+
+    kind: str                      # KIND_RANGE | KIND_KNN
+    query: np.ndarray              # (n,) float
+    epsilon: float = 0.0           # range only
+    k: int = 0                     # knn only
+    deadline: Optional[float] = None   # absolute time.perf_counter() instant
+    t_submit: float = 0.0
+    status: str = ""
+    ids: Optional[np.ndarray] = None
+    distances: Optional[np.ndarray] = None
+    error: Optional[BaseException] = None
+    _done: threading.Event = dataclasses.field(
+        default_factory=threading.Event, repr=False)
+
+    def _resolve(self, status: str, ids=None, distances=None, error=None):
+        self.status = status
+        self.ids = ids
+        self.distances = distances
+        self.error = error
+        self._done.set()
+
+    def wait(self, timeout: Optional[float] = None) -> str:
+        """Block until resolved; returns the terminal status.  Raises the
+        dispatch exception for FAILED requests — an engine error must not
+        read as an empty answer set."""
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"request not resolved in {timeout}s")
+        if self.status == FAILED and self.error is not None:
+            raise self.error
+        return self.status
+
+
+class MicroBatcher:
+    """Bounded queue + dispatcher thread.  ``dispatch_fn(batch)`` receives
+    a non-empty list of un-expired requests and must resolve every one."""
+
+    def __init__(
+        self,
+        dispatch_fn: Callable[[list], None],
+        max_batch: int = 32,
+        max_queue: int = 256,
+        max_wait_ms: float = 2.0,
+        stats: Optional[StatsTracker] = None,
+    ):
+        if max_batch < 1 or max_queue < 1:
+            raise ValueError("max_batch and max_queue must be >= 1")
+        self._dispatch_fn = dispatch_fn
+        self.max_batch = int(max_batch)
+        self.max_queue = int(max_queue)
+        self.max_wait_s = float(max_wait_ms) / 1e3
+        self.stats = stats or StatsTracker()
+        self._queue: list = []
+        self._cond = threading.Condition()
+        self._stopping = False
+        self._thread: Optional[threading.Thread] = None
+
+    # --- lifecycle ----------------------------------------------------------
+
+    def start(self):
+        if self._thread is not None:
+            raise RuntimeError("batcher already started")
+        self._stopping = False
+        self._thread = threading.Thread(target=self._loop,
+                                        name="repro-serve-batcher",
+                                        daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self):
+        """Stop accepting work, fail anything still queued, join."""
+        with self._cond:
+            self._stopping = True
+            pending, self._queue = self._queue, []
+            self._cond.notify_all()
+        self._fail_batch(pending, RuntimeError("service stopped"))
+        if self._thread is not None:
+            self._thread.join(timeout=30)
+            self._thread = None
+
+    @property
+    def depth(self) -> int:
+        with self._cond:
+            return len(self._queue)
+
+    # --- submission ---------------------------------------------------------
+
+    def submit(self, req: Request) -> Request:
+        """Admission control: enqueue or reject immediately (never blocks)."""
+        req.t_submit = time.perf_counter()
+        self.stats.on_submit()
+        if req.deadline is not None and req.t_submit >= req.deadline:
+            self.stats.on_reject_deadline()
+            req._resolve(REJECTED_DEADLINE)
+            return req
+        with self._cond:
+            if self._stopping:
+                req._resolve(FAILED, error=RuntimeError("service stopped"))
+                self.stats.on_failed()
+                return req
+            if len(self._queue) >= self.max_queue:
+                self.stats.on_reject_full()
+                req._resolve(REJECTED_QUEUE_FULL)
+                return req
+            self._queue.append(req)
+            self._cond.notify()
+        return req
+
+    # --- dispatcher ---------------------------------------------------------
+
+    def _drain(self) -> list:
+        """Wait for work, apply the coalescing window, return ≤ max_batch
+        requests with expired ones rejected (not dispatched)."""
+        with self._cond:
+            while not self._queue and not self._stopping:
+                self._cond.wait()
+            if self._stopping:
+                return []
+            # Coalescing window: give stragglers max_wait to join, but stop
+            # waiting the moment a full batch is available.
+            t_window = time.perf_counter() + self.max_wait_s
+            while len(self._queue) < self.max_batch:
+                remaining = t_window - time.perf_counter()
+                if remaining <= 0 or self._stopping:
+                    break
+                self._cond.wait(timeout=remaining)
+            batch = self._queue[:self.max_batch]
+            del self._queue[:len(batch)]
+        now = time.perf_counter()
+        live = []
+        for req in batch:
+            if req.deadline is not None and now >= req.deadline:
+                self.stats.on_reject_deadline()
+                req._resolve(REJECTED_DEADLINE)
+            else:
+                live.append(req)
+        return live
+
+    def _loop(self):
+        while True:
+            batch = self._drain()
+            with self._cond:
+                stopping = self._stopping
+            if stopping:
+                # A batch drained in the stop() window must still be
+                # resolved — an abandoned request would block its
+                # submitter until timeout.
+                self._fail_batch(batch, RuntimeError("service stopped"))
+                break
+            if not batch:
+                continue
+            try:
+                self._dispatch_fn(batch)
+            except BaseException as e:  # noqa: BLE001 — resolve, don't die
+                self._fail_batch(batch, e)
+            for req in batch:
+                if req.status == OK:
+                    self.stats.on_served(time.perf_counter() - req.t_submit)
+
+    def _fail_batch(self, batch: list, error: BaseException):
+        """Fail every not-yet-resolved request; count only those."""
+        n_failed = 0
+        for req in batch:
+            if not req._done.is_set():
+                req._resolve(FAILED, error=error)
+                n_failed += 1
+        if n_failed:
+            self.stats.on_failed(n_failed)

@@ -1,0 +1,466 @@
+"""The online FAST_SAX query service (DESIGN.md §6).
+
+Layered strictly on the existing engines — the service owns no search
+logic.  Request flow:
+
+    submit → bounded queue (admission control, deadlines)
+           → micro-batch  (MicroBatcher drains + coalesces)
+           → bucket       (pad Q to a power of two, k to a power of two —
+                           jit compiles once per bucket, never per request)
+           → dispatch     (one mixed-workload device pass:
+                           engine.mixed_query_auto, or the sharded
+                           distributed_mixed_query_auto — capacity
+                           auto-escalation keeps every answer exact)
+           → respond      (per-request id/distance extraction, external-id
+                           mapping, latency accounting)
+
+Warm start: ``SearchService.from_store`` accepts any committed
+``repro.index`` artifact — a plain single store, a ``MutableIndex`` root
+(which also enables live ingest), or a sharded store (mapped onto a mesh
+over the available devices).
+
+Live ingest: ``insert``/``delete`` route through the ``MutableIndex``
+(durable, crash-safe); the commit-refresh hook marks the device copy
+stale, and the dispatcher swaps in a freshly-uploaded live view at the
+next batch boundary once ``refresh_min_interval_s`` has passed — queries
+never observe a half-updated index, because the swap is a whole-reference
+replacement between device calls.
+"""
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+import threading
+import time
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.engine import (DeviceIndex, build_device_index,
+                           device_index_from_host, mixed_query,
+                           mixed_query_dense, represent_queries)
+from .batcher import (FAILED, KIND_KNN, KIND_RANGE, OK, MicroBatcher,
+                      Request)
+from .stats import StatsTracker
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Serving knobs.  ``levels``/``alphabet`` matter only when the service
+    builds its own index (``from_series``); a warm start inherits them from
+    the store."""
+
+    levels: Sequence[int] = (8, 16)
+    alphabet: int = 10
+    normalize_queries: bool = True
+    max_batch: int = 32            # micro-batch ceiling (and top Q bucket)
+    max_queue: int = 256           # admission-control bound
+    max_wait_ms: float = 2.0       # coalescing window after first request
+    default_deadline_ms: Optional[float] = None   # None = no deadline
+    n_iters: int = 2               # k-NN tightening passes
+    capacity0: Optional[int] = None  # first candidate capacity (None: auto)
+    dense_fallback_frac: float = 0.125   # capacity > frac·B → dense dispatch
+    refresh_min_interval_s: float = 0.0   # live-ingest refresh throttle
+    warmup_ks: Sequence[int] = (8,)       # k buckets to precompile
+
+
+def _pow2_at_least(n: int, cap: int) -> int:
+    b = 1
+    while b < n and b < cap:
+        b *= 2
+    return min(b, cap)
+
+
+_DENSE = -1   # capacity-hint sentinel: this k bucket dispatches densely
+
+
+class _SingleBackend:
+    """Single-process engine: one DeviceIndex, escalating ``mixed_query``.
+
+    Capacity escalation is *sticky*: once a batch overflows and re-runs at
+    4× capacity, later batches start at the learned capacity — under
+    steady traffic the double pass (and any jit compile beyond the first)
+    happens once, not per batch.  When the learned capacity crosses
+    ``dense_fallback_frac``·B the backend switches to
+    ``mixed_query_dense`` permanently: gather-compaction over a large
+    fraction of the database costs more than the dense matmul verify it
+    exists to avoid.  The policy is backend-global (not per bucket) so a
+    direct replay of any served request takes the same dispatch mode —
+    and therefore the same float path — as the batch that served it.
+    """
+
+    def __init__(self, index: DeviceIndex, cfg: ServeConfig):
+        self.index = index
+        self.cfg = cfg
+        self._cap: Optional[int] = None   # learned capacity or _DENSE
+
+    @property
+    def n(self) -> int:
+        return self.index.n
+
+    @property
+    def size(self) -> int:
+        return self.index.series.shape[0]
+
+    def dispatch(self, q: np.ndarray, eps: np.ndarray, is_knn: np.ndarray,
+                 k: int):
+        B = self.size
+        qr = represent_queries(jnp.asarray(q, jnp.float32),
+                               self.index.levels, self.index.alphabet,
+                               normalize=self.cfg.normalize_queries)
+        eps_j = jnp.asarray(eps, jnp.float32)
+        knn_j = jnp.asarray(is_knn)
+        cap_limit = max(64, int(self.cfg.dense_fallback_frac * B))
+        cap = self._cap
+        if cap is None:
+            cap = self.cfg.capacity0 or max(4 * k, 64)
+        while cap != _DENSE:
+            cap = max(min(int(cap), B), min(k, B))
+            idx, answer, d2, overflow = mixed_query(
+                self.index, qr, eps_j, knn_j, k, capacity=cap,
+                n_iters=self.cfg.n_iters)
+            if cap >= B or not bool(np.asarray(overflow).any()):
+                self._cap = max(cap, self._cap or 0)
+                return np.asarray(idx), np.asarray(answer), np.asarray(d2)
+            cap = cap * 4 if cap * 4 <= cap_limit else _DENSE
+        self._cap = _DENSE
+        idx, answer, d2, _ = mixed_query_dense(
+            self.index, qr, eps_j, knn_j, k)
+        return np.asarray(idx), np.asarray(answer), np.asarray(d2)
+
+
+class _ShardedBackend:
+    """Distributed engine: database sharded over a mesh,
+    ``distributed_mixed_query_auto`` per micro-batch."""
+
+    def __init__(self, index: DeviceIndex, mesh, n_valid: int,
+                 cfg: ServeConfig, axis: str = "data"):
+        self.index = index
+        self.mesh = mesh
+        self.axis = axis
+        self.n_valid = int(n_valid)
+        self.cfg = cfg
+        self._cap: Optional[int] = None   # learned per-shard capacity
+
+    @property
+    def n(self) -> int:
+        return self.index.n
+
+    @property
+    def size(self) -> int:
+        return self.n_valid
+
+    def dispatch(self, q: np.ndarray, eps: np.ndarray, is_knn: np.ndarray,
+                 k: int):
+        from ..core.dist_search import distributed_mixed_query
+
+        b_loc = self.index.series.shape[0] // self.mesh.shape[self.axis]
+        cap = self._cap
+        if cap is None:
+            cap = self.cfg.capacity0 or max(4 * k, 64)
+        cap = min(int(cap), b_loc)
+        while True:
+            gidx, answer, d2, overflow = distributed_mixed_query(
+                self.index, q, eps, is_knn, k, self.mesh, axis=self.axis,
+                capacity_per_shard=cap, n_iters=self.cfg.n_iters,
+                normalize_queries=self.cfg.normalize_queries,
+                n_valid=self.n_valid)
+            if cap >= b_loc or not bool(np.asarray(overflow).any()):
+                break
+            cap = min(b_loc, cap * 4)
+        self._cap = max(cap, self._cap or 0)
+        return np.asarray(gidx), np.asarray(answer), np.asarray(d2)
+
+
+class SearchService:
+    """Online range/k-NN service with dynamic micro-batching."""
+
+    def __init__(self, backend, cfg: ServeConfig = ServeConfig(),
+                 ids: Optional[np.ndarray] = None, mutable=None):
+        self.cfg = cfg
+        self.backend = backend
+        self._ids = None if ids is None else np.asarray(ids, dtype=np.int64)
+        self.mutable = mutable
+        self.stats = StatsTracker()
+        self._batcher = MicroBatcher(
+            self._dispatch, max_batch=cfg.max_batch, max_queue=cfg.max_queue,
+            max_wait_ms=cfg.max_wait_ms, stats=self.stats)
+        # Serializes the (index, ids) swap against in-flight dispatches so
+        # a batch never maps one generation's row positions through
+        # another generation's ids (see _dispatch / refresh).
+        self._refresh_lock = threading.Lock()
+        # Range-only batches still bucket k at the warmed floor, so they
+        # can never hit a cold (Q, k=1) jit entry at serve time.
+        self._k_floor = _pow2_at_least(
+            min(cfg.warmup_ks) if cfg.warmup_ks else 1, self.backend.size)
+        self._loaded_gen = mutable.generation if mutable is not None else -1
+        self._last_refresh = time.perf_counter()
+        self._stale = False
+        self._unsubscribe = None
+        if mutable is not None:
+            self._unsubscribe = mutable.subscribe(self._on_commit)
+
+    # --- construction -------------------------------------------------------
+
+    @classmethod
+    def from_series(cls, series: np.ndarray, cfg: ServeConfig = ServeConfig(),
+                    mesh=None, normalize: bool = True) -> "SearchService":
+        """Cold start: build the device index from raw series."""
+        if mesh is not None:
+            from ..core.dist_search import distributed_build, pad_database
+            padded, n_valid = pad_database(np.asarray(series),
+                                           mesh.shape["data"])
+            index = distributed_build(padded, tuple(cfg.levels), cfg.alphabet,
+                                      mesh, n_valid=n_valid)
+            return cls(_ShardedBackend(index, mesh, n_valid, cfg), cfg)
+        index = build_device_index(jnp.asarray(series, jnp.float32),
+                                   tuple(cfg.levels), cfg.alphabet,
+                                   normalize=normalize)
+        return cls(_SingleBackend(index, cfg), cfg)
+
+    @classmethod
+    def from_store(cls, path, cfg: ServeConfig = ServeConfig(),
+                   mesh=None) -> "SearchService":
+        """Warm start from any committed ``repro.index`` artifact:
+
+        * ``MutableIndex`` root (``CURRENT`` present) — live ingest enabled;
+        * sharded store — mapped onto ``mesh`` (default: a 1-D mesh over
+          all devices; the stored shard count must match);
+        * plain single store — mmap-opened, uploaded once.
+        """
+        from ..index import mutable as _mutable
+        from ..index import sharded as _sharded
+        from ..index import store as _store
+
+        path = pathlib.Path(path)
+        if (path / _mutable.CURRENT).exists():
+            mi = _mutable.MutableIndex.open(path)
+            host, ids = mi.live_index()
+            index = device_index_from_host(host)
+            return cls(_SingleBackend(index, cfg), cfg, ids=np.asarray(ids),
+                       mutable=mi)
+        manifest = _store.store_info(path)
+        if manifest.get("kind") == _sharded._KIND:
+            from ..core.dist_search import load_sharded, make_data_mesh
+            mesh = mesh or make_data_mesh()
+            index, n_valid = load_sharded(path, mesh)
+            return cls(_ShardedBackend(index, mesh, n_valid, cfg), cfg)
+        host = _store.load_index(path, mmap=True)
+        return cls(_SingleBackend(device_index_from_host(host), cfg), cfg)
+
+    # --- lifecycle ----------------------------------------------------------
+
+    def start(self) -> "SearchService":
+        self._batcher.start()
+        return self
+
+    def stop(self):
+        self._batcher.stop()
+        if self._unsubscribe is not None:
+            self._unsubscribe()
+            self._unsubscribe = None
+
+    def __enter__(self) -> "SearchService":
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.stop()
+
+    def warmup(self, qs: Optional[Sequence[int]] = None,
+               ks: Optional[Sequence[int]] = None):
+        """Precompile the bucket ladder so no request pays jit latency.
+        Compiles every (Q bucket ≤ max_batch) × (k bucket) combination —
+        each is one cache entry that every future batch in the bucket
+        reuses."""
+        q_buckets = list(qs) if qs is not None else []
+        if not q_buckets:
+            b = 1
+            while b <= self.cfg.max_batch:
+                q_buckets.append(b)
+                b *= 2
+        k_buckets = [
+            _pow2_at_least(int(k), self.backend.size)
+            for k in (ks if ks is not None else self.cfg.warmup_ks)]
+        probe = np.zeros((1, self.backend.n), dtype=np.float32)
+        for qb in q_buckets:
+            q = np.repeat(probe, qb, axis=0)
+            eps = np.full(qb, 1.0, np.float32)
+            for kb in sorted(set(k_buckets)):
+                is_knn = np.zeros(qb, dtype=bool)
+                is_knn[: max(1, qb // 2)] = True
+                self.backend.dispatch(q, eps, is_knn, kb)
+        return self
+
+    # --- submission ---------------------------------------------------------
+
+    def _deadline(self, deadline_ms) -> Optional[float]:
+        ms = self.cfg.default_deadline_ms if deadline_ms is None else deadline_ms
+        return None if ms is None else time.perf_counter() + float(ms) / 1e3
+
+    def submit_range(self, query: np.ndarray, epsilon: float,
+                     deadline_ms: Optional[float] = None) -> Request:
+        return self._batcher.submit(Request(
+            kind=KIND_RANGE, query=np.asarray(query, dtype=np.float32),
+            epsilon=float(epsilon), deadline=self._deadline(deadline_ms)))
+
+    def submit_knn(self, query: np.ndarray, k: int,
+                   deadline_ms: Optional[float] = None) -> Request:
+        return self._batcher.submit(Request(
+            kind=KIND_KNN, query=np.asarray(query, dtype=np.float32),
+            k=int(k), deadline=self._deadline(deadline_ms)))
+
+    def range_query(self, query, epsilon, deadline_ms=None, timeout=60.0):
+        """Synchronous range query; raises on rejection."""
+        req = self.submit_range(query, epsilon, deadline_ms)
+        if req.wait(timeout) != OK:
+            raise RuntimeError(f"range request {req.status}")
+        return req.ids, req.distances
+
+    def knn(self, query, k, deadline_ms=None, timeout=60.0):
+        """Synchronous exact k-NN; raises on rejection."""
+        req = self.submit_knn(query, k, deadline_ms)
+        if req.wait(timeout) != OK:
+            raise RuntimeError(f"knn request {req.status}")
+        return req.ids, req.distances
+
+    # --- live ingest --------------------------------------------------------
+
+    def _require_mutable(self):
+        if self.mutable is None:
+            raise RuntimeError(
+                "live ingest needs a MutableIndex-backed service "
+                "(SearchService.from_store on an index root)")
+        return self.mutable
+
+    def insert(self, series: np.ndarray) -> np.ndarray:
+        """Durably insert rows; returns their external ids.  Served answers
+        include them after the next refresh (at most
+        ``refresh_min_interval_s`` later)."""
+        return self._require_mutable().insert(np.asarray(series))
+
+    def delete(self, ids) -> int:
+        """Durably tombstone rows by external id."""
+        return self._require_mutable().delete(ids)
+
+    def _on_commit(self, _mi):
+        # Commit-refresh hook (MutableIndex.subscribe): runs on the mutating
+        # thread after CURRENT swaps.  Just a staleness marker — the actual
+        # device upload happens on the dispatcher at a batch boundary, so
+        # in-flight batches finish on a consistent index.
+        self._stale = True
+
+    def _maybe_refresh(self, force: bool = False):
+        mi = self.mutable
+        if mi is None or not (self._stale or force):
+            return
+        with self._refresh_lock:
+            if mi.generation == self._loaded_gen:
+                self._stale = False
+                return
+            now = time.perf_counter()
+            if not force and (now - self._last_refresh
+                              < self.cfg.refresh_min_interval_s):
+                return
+            gen = mi.generation
+            host, ids = mi.live_index()
+            self.backend.index = device_index_from_host(host)
+            self._ids = np.asarray(ids, dtype=np.int64)
+            self._loaded_gen = gen
+            self._last_refresh = now
+            # A commit racing with the upload re-flags via the hook; only
+            # clear staleness if the generation we loaded is still current.
+            self._stale = mi.generation != gen
+
+    def refresh(self):
+        """Force the device index to the committed epoch right now."""
+        self._maybe_refresh(force=True)
+
+    # --- dispatch -----------------------------------------------------------
+
+    def _dispatch(self, batch: list):
+        """MicroBatcher callback: one padded, bucketed device pass."""
+        self._maybe_refresh()
+        Q = len(batch)
+        qb = _pow2_at_least(Q, self.cfg.max_batch)
+        n = self.backend.n
+        q = np.empty((qb, n), dtype=np.float32)
+        eps = np.zeros(qb, dtype=np.float32)
+        is_knn = np.zeros(qb, dtype=bool)
+        max_k = 1
+        for i, req in enumerate(batch):
+            if req.query.shape != (n,):
+                req._resolve(FAILED, error=ValueError(
+                    f"query must be ({n},), got {req.query.shape}"))
+                self.stats.on_failed()
+                continue
+            q[i] = req.query
+            if req.kind == KIND_KNN:
+                is_knn[i] = True
+                max_k = max(max_k, req.k)
+            else:
+                eps[i] = req.epsilon
+        live = [(i, r) for i, r in enumerate(batch)
+                if not r._done.is_set()]
+        if not live:
+            return
+        # Padding rows replay the first live query as a range query at
+        # ε = 0 — same shapes, negligible extra work, no effect on answers.
+        for j in range(Q, qb):
+            q[j] = q[live[0][0]]
+        k_bucket = _pow2_at_least(max(max_k, self._k_floor),
+                                  self.backend.size)
+        self.stats.on_batch(len(live), qb, self._batcher.depth)
+        # Hold the refresh lock across dispatch + ids snapshot: a
+        # concurrent refresh() must not swap in a new generation's ids
+        # between the device pass and the id mapping.
+        with self._refresh_lock:
+            idx, answer, d2 = self.backend.dispatch(q, eps, is_knn,
+                                                    k_bucket)
+            ids = self._ids
+        for i, req in live:
+            self._finish(req, idx[i], answer[i], d2[i], ids)
+
+    def _finish(self, req: Request, idx_row, answer_row, d2_row, ids_map):
+        if req.kind == KIND_KNN:
+            finite = np.isfinite(d2_row)
+            # Ascending (d², slot); slots are low-index compacted, so ties
+            # resolve to the lowest database row — identical ordering to
+            # engine.knn_query / mixed_topk (tested).
+            order = np.lexsort((np.arange(d2_row.size), d2_row))
+            order = order[finite[order]][: req.k]
+            rows = idx_row[order]
+            dist = np.sqrt(d2_row[order])
+        else:
+            mask = answer_row & np.isfinite(d2_row)
+            rows = idx_row[mask]
+            dist = np.sqrt(d2_row[mask])
+        ids = rows if ids_map is None else ids_map[rows]
+        req._resolve(OK, ids=np.asarray(ids, dtype=np.int64),
+                     distances=dist.astype(np.float64))
+
+    # --- unbatched reference path -------------------------------------------
+
+    def direct_query(self, kind: str, query, epsilon: float = 0.0,
+                     k: int = 0):
+        """One request, one device pass, no queue/bucketing — the
+        per-request sequential baseline the benchmarks compare against,
+        and the reference the exactness checks trust."""
+        self._maybe_refresh()
+        n = self.backend.n
+        q = np.asarray(query, dtype=np.float32).reshape(1, n)
+        is_knn = np.asarray([kind == KIND_KNN])
+        eps = np.asarray([0.0 if is_knn[0] else epsilon], np.float32)
+        # Bucket k exactly like _dispatch (including the warmed floor), so
+        # a direct replay hits the same jit entry and backend policy as
+        # the batch that served it — the exactness check compares answers
+        # bit-for-bit.
+        kk = _pow2_at_least(max(int(k), 1, self._k_floor),
+                            self.backend.size)
+        with self._refresh_lock:
+            idx, answer, d2 = self.backend.dispatch(q, eps, is_knn, kk)
+            ids = self._ids
+        req = Request(kind=kind, query=q[0], epsilon=epsilon,
+                      k=max(int(k), 1))
+        self._finish(req, idx[0], answer[0], d2[0], ids)
+        return req.ids, req.distances

@@ -1,0 +1,106 @@
+"""Latency/throughput accounting for the online query service.
+
+One tracker per service; every counter is updated under a single lock by
+the submitting client threads and the dispatcher thread.  Percentiles are
+computed over a bounded ring of recent samples (the service is long-lived;
+an unbounded list would grow with every request ever served), so the
+snapshot reports *recent* latency, which is what an operator watches.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+
+import numpy as np
+
+_RING = 8192   # latency / occupancy samples kept for percentile estimation
+
+
+class StatsTracker:
+    """Thread-safe request/batch accounting (DESIGN.md §6).
+
+    Counters: ``submitted``, ``served``, ``rejected_queue_full`` (admission
+    control), ``rejected_deadline`` (expired before dispatch — never served
+    stale), ``failed`` (dispatch raised).  Gauges: queue depth (sampled at
+    every batch formation), batch occupancy (actual requests / padded
+    bucket slots — the cost of shape bucketing).  Latency is measured
+    submit→result per request, in seconds, and reported as p50/p95/p99 ms.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.t_start = time.perf_counter()
+        self.submitted = 0
+        self.served = 0
+        self.rejected_queue_full = 0
+        self.rejected_deadline = 0
+        self.failed = 0
+        self.batches = 0
+        self._latency = collections.deque(maxlen=_RING)
+        self._occupancy = collections.deque(maxlen=_RING)
+        self._queue_depth = collections.deque(maxlen=_RING)
+
+    # --- recording (called by service / batcher) ---------------------------
+
+    def on_submit(self):
+        with self._lock:
+            self.submitted += 1
+
+    def on_reject_full(self):
+        with self._lock:
+            self.rejected_queue_full += 1
+
+    def on_reject_deadline(self):
+        with self._lock:
+            self.rejected_deadline += 1
+
+    def on_failed(self, n: int = 1):
+        with self._lock:
+            self.failed += n
+
+    def on_batch(self, n_requests: int, bucket_slots: int, queue_depth: int):
+        with self._lock:
+            self.batches += 1
+            self._occupancy.append(n_requests / max(1, bucket_slots))
+            self._queue_depth.append(queue_depth)
+
+    def on_served(self, latency_s: float):
+        with self._lock:
+            self.served += 1
+            self._latency.append(latency_s)
+
+    # --- reading -----------------------------------------------------------
+
+    def snapshot(self) -> dict:
+        """A point-in-time summary; all latencies in milliseconds."""
+        with self._lock:
+            lat = np.asarray(self._latency, dtype=np.float64) * 1e3
+            occ = np.asarray(self._occupancy, dtype=np.float64)
+            depth = np.asarray(self._queue_depth, dtype=np.float64)
+            elapsed = time.perf_counter() - self.t_start
+            out = {
+                "submitted": self.submitted,
+                "served": self.served,
+                "rejected_queue_full": self.rejected_queue_full,
+                "rejected_deadline": self.rejected_deadline,
+                "failed": self.failed,
+                "batches": self.batches,
+                "elapsed_s": round(elapsed, 3),
+                "qps": round(self.served / elapsed, 1) if elapsed > 0 else 0.0,
+            }
+            if self.batches:
+                out["mean_batch_size"] = round(self.served / self.batches, 2)
+        if lat.size:
+            out["latency_ms"] = {
+                "p50": round(float(np.percentile(lat, 50)), 3),
+                "p95": round(float(np.percentile(lat, 95)), 3),
+                "p99": round(float(np.percentile(lat, 99)), 3),
+                "mean": round(float(lat.mean()), 3),
+            }
+        if occ.size:
+            out["batch_occupancy"] = round(float(occ.mean()), 3)
+        if depth.size:
+            out["queue_depth_mean"] = round(float(depth.mean()), 2)
+            out["queue_depth_max"] = int(depth.max())
+        return out

@@ -129,6 +129,70 @@ def test_sharded_store_round_trip():
 
 
 @pytest.mark.slow
+def test_distributed_mixed_dispatch():
+    """The serving layer's per-shard mixed dispatch: one shard_map pass
+    answering k-NN and range rows together, identical to the dedicated
+    distributed engines; range auto-escalation recovers from a tiny
+    capacity."""
+    r = _run("""
+        import numpy as np, jax
+        from repro.core.dist_search import (distributed_build,
+            distributed_knn_query, distributed_mixed_query_auto,
+            distributed_range_query, distributed_range_query_auto,
+            make_data_mesh, pad_database)
+        from repro.core.engine import mixed_topk
+        from repro.data.timeseries import make_wafer_like, make_queries
+
+        db = make_wafer_like(n_series=997, length=128, seed=5)
+        qs = make_queries(db, 6, seed=6)
+        mesh = make_data_mesh()
+        padded, n_valid = pad_database(db, 8)
+        didx = distributed_build(padded, (8, 16), 10, mesh, n_valid=n_valid)
+        eps = np.full(6, 2.0, np.float32)
+        is_knn = np.array([1, 0, 1, 0, 1, 0], bool)
+        k = 5
+        gidx, ans, d2, ov = distributed_mixed_query_auto(
+            didx, qs, eps, is_knn, k, mesh, capacity_per_shard=64,
+            n_valid=n_valid, normalize_queries=False)
+        assert not np.asarray(ov).any()
+        nn_idx, nn_d2, _ = distributed_knn_query(
+            didx, qs, k, mesh, n_valid=n_valid, normalize_queries=False)
+        m_idx, m_d2 = mixed_topk(jax.numpy.asarray(gidx),
+                                 jax.numpy.asarray(d2), k)
+        rg, ra, rd, _ = distributed_range_query(
+            didx, qs, 2.0, mesh, capacity_per_shard=256,
+            normalize_queries=False)
+        for i in range(6):
+            if is_knn[i]:
+                assert np.array_equal(np.asarray(m_idx)[i][:k],
+                                      np.asarray(nn_idx)[i][:k]), i
+                assert np.allclose(np.asarray(m_d2)[i][:k],
+                                   np.asarray(nn_d2)[i][:k]), i
+            else:
+                got = set(np.asarray(gidx)[i][np.asarray(ans)[i]].tolist())
+                ref = set(np.asarray(rg)[i][np.asarray(ra)[i]].tolist())
+                assert got == ref, (i, got ^ ref)
+        hit = np.asarray(gidx)[np.asarray(ans)]
+        assert ((hit >= 0) & (hit < 997)).all()
+        # range auto-escalation: a 2-slot capacity must still be exact
+        g2, a2, _, ov2 = distributed_range_query_auto(
+            didx, qs, 4.0, mesh, capacity_per_shard=2,
+            normalize_queries=False)
+        assert not np.asarray(ov2).any()
+        g3, a3, _, _ = distributed_range_query(
+            didx, qs, 4.0, mesh, capacity_per_shard=1000,
+            normalize_queries=False)
+        for i in range(6):
+            s2 = set(np.asarray(g2)[i][np.asarray(a2)[i]].tolist())
+            s3 = set(np.asarray(g3)[i][np.asarray(a3)[i]].tolist())
+            assert s2 == s3, i
+        print("OK")
+    """)
+    assert r.returncode == 0, r.stderr[-4000:]
+    assert "OK" in r.stdout
+
+
+@pytest.mark.slow
 def test_padded_rows_never_answer():
     r = _run("""
         import numpy as np, jax
