@@ -4,8 +4,20 @@ Compares, on this host (CPU; TPU numbers come from the roofline analysis):
   * the faithful op-counted sequential engine (numpy, per-query),
   * the vectorised XLA engine (single query),
   * the vectorised XLA engine (batched queries — MXU-shaped verify),
-  * the Pallas fused-prune cascade in interpret mode (semantics check; its
-    TPU performance is modelled in EXPERIMENTS.md §Roofline).
+  * the fused one-pass Pallas megakernel (``kernels/fused_query.py``) for
+    the range and k-NN families — interpret mode on CPU (semantics +
+    parity; its TPU performance is modelled in EXPERIMENTS.md §Roofline),
+    compiled Pallas on real TPU.
+
+The fused records double as a continuous parity check: each one carries
+``parity``/``match_frac`` derived keys asserting the megakernel's answers
+are identical to the XLA oracle's, and the bench gate
+(``scripts/bench_gate.py``) fails if either ever degrades.
+
+Note: the pre-PR4 ``engine/pallas_interpret_1q`` record (the retired
+per-level ``fused_cascade`` chain) was un-warmed and semantics-only — its
+wall-clock value measured interpreter dispatch, not kernel work.  It is
+superseded by the ``engine/fused_*`` records below.
 """
 from __future__ import annotations
 
@@ -15,22 +27,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import (device_index_from_host, range_query,
-                               represent_queries)
+from repro.core.engine import (device_index_from_host, knn_query_auto,
+                               knn_query_pallas, range_query,
+                               range_query_pallas, represent_queries)
 from repro.core.fastsax import represent_query
 from repro.core.search import fastsax_range_query
 
 from .common import emit, index_for, queries
 
-
-def _time(f, *args, repeats=5):
-    f(*args)  # warmup / compile
-    t0 = time.perf_counter()
-    for _ in range(repeats):
-        out = f(*args)
-    jax.block_until_ready(out) if hasattr(out, "block_until_ready") or isinstance(
-        out, (tuple, list)) else None
-    return (time.perf_counter() - t0) / repeats
+KNN_K = 8
 
 
 def main() -> None:
@@ -62,7 +67,8 @@ def main() -> None:
     # 3. XLA engine, batched queries
     qrb = represent_queries(jnp.asarray(qs), dev.levels, dev.alphabet,
                             normalize=False)
-    jax.block_until_ready(f(dev, qrb))
+    want_m, want_d = f(dev, qrb)
+    jax.block_until_ready(want_m)
     t0 = time.perf_counter()
     for _ in range(20):
         out = f(dev, qrb)
@@ -71,16 +77,44 @@ def main() -> None:
     emit("engine/xla_batched_perq", t_xlab * 1e6,
          f"batch_amortise={t_xla1 / t_xlab:.1f}x")
 
-    # 4. Pallas fused cascade (interpret mode – correctness path on CPU)
-    from repro.kernels import ops
+    # 4. fused megakernel, range family (one DB pass: every cascade level +
+    # MXU verify per block; exactly one HBM read per database block, zero
+    # per-level mask round-trips).  Warmed; parity vs the XLA oracle.
+    mode = "compiled" if jax.default_backend() == "tpu" else "interpret"
+    got_m, got_d = range_query_pallas(dev, qrb, eps)   # warm/compile
+    jax.block_until_ready(got_m)
+    gm, gd = np.asarray(got_m), np.asarray(got_d)
+    wm, wd = np.asarray(want_m), np.asarray(want_d)
+    match = float(np.mean(np.all(gm == wm, axis=-1)
+                          & np.all(gd == wd, axis=-1)))
     t0 = time.perf_counter()
-    out = ops.fused_cascade((dev.words, dev.residuals),
-                            tuple(w[0] for w in qrb.words),
-                            tuple(r[0] for r in qrb.residuals),
-                            eps, dev.n, dev.alphabet, dev.levels)
-    jax.block_until_ready(out)
-    t_pallas = time.perf_counter() - t0
-    emit("engine/pallas_interpret_1q", t_pallas * 1e6, "semantics-only")
+    for _ in range(5):
+        out = range_query_pallas(dev, qrb, eps)
+    jax.block_until_ready(out[0])
+    t_fused = (time.perf_counter() - t0) / 5 / len(qs)
+    emit("engine/fused_range_batched_perq", t_fused * 1e6,
+         f"parity={match == 1.0};match_frac={match:.3f};"
+         f"db_reads_per_block=1;mode={mode}")
+
+    # 5. fused megakernel, k-NN family (block-local top-k partials +
+    # epilogue merge — no (Q, B) distance matrix in HBM).
+    want_i, want_kd, want_e = knn_query_auto(dev, qrb, KNN_K)
+    got_i, got_kd, got_e = knn_query_pallas(dev, qrb, KNN_K)   # warm
+    jax.block_until_ready(got_kd)
+    kmatch = float(np.mean(
+        np.all(np.asarray(got_i) == np.asarray(want_i), axis=-1)
+        & np.all(np.asarray(got_kd) == np.asarray(want_kd), axis=-1)))
+    exact = bool(np.asarray(want_e).all()) and bool(np.asarray(got_e).all())
+    t0 = time.perf_counter()
+    for _ in range(5):
+        out = knn_query_pallas(dev, qrb, KNN_K)
+    jax.block_until_ready(out[1])
+    t_fknn = (time.perf_counter() - t0) / 5 / len(qs)
+    emit("engine/fused_knn_batched_perq", t_fknn * 1e6,
+         f"parity={kmatch == 1.0};match_frac={kmatch:.3f};exact={exact};"
+         f"k={KNN_K};db_reads_per_block=1;mode={mode}")
+    print("# engine/pallas_interpret_1q (pre-PR4) was un-warmed, "
+          "semantics-only and is superseded by the engine/fused_* records")
 
 
 if __name__ == "__main__":

@@ -49,8 +49,12 @@ ABS_TOL = 0.05          # floor for fraction-valued metrics
 HIGHER_IS_WORSE = ("verified_frac",)
 LOWER_IS_WORSE = ("speedup", "qps", "c9", "c10", "mean", "vs_seq",
                   "batch_amortise")
-MUST_BE_TRUE = ("exact", "below")
+MUST_BE_TRUE = ("exact", "below", "parity")
 MUST_BE_ZERO = ("dropped",)
+# parity fractions (engine suite): the fused megakernel must answer
+# identically to the XLA oracle for EVERY query, every run — 0.999 is a
+# kernel bug, not jitter.
+MUST_BE_ONE = ("match_frac",)
 
 
 def fail(errors: list, msg: str):
@@ -131,6 +135,11 @@ def compare_records(base: dict, fresh: dict, suite: str, errors: list):
             if key in MUST_BE_ZERO:
                 if as_float(fs) != 0.0:
                     fail(errors, f"{name}: {key}={fs} (must be 0)")
+                continue
+            if key in MUST_BE_ONE:
+                if as_float(fs) != 1.0:
+                    fail(errors, f"{name}: {key}={fs} (must be 1.0 — "
+                                 f"kernel/oracle parity lost)")
                 continue
             if not deterministic:
                 continue

@@ -157,3 +157,81 @@ def linfit_residual_cost(n: int, N: int) -> dict:
     then slope/intercept/residual combination (constant ops).
     """
     return dict(add=3 * n, mul=2 * n + 6 * N, div=N, sqrt=1)
+
+
+def latency_of(cost: dict, weights: OpWeights = DEFAULT_WEIGHTS) -> float:
+    """Weighted latency time of one closed-form op-count dict."""
+    return float(sum(int(k) * getattr(weights, name)
+                     for name, k in cost.items()))
+
+
+# ---------------------------------------------------------------------------
+# Adaptive cascade: is a level's MINDIST test worth its cost?
+#
+# The paper always runs both conditions at every level, but C10 only pays
+# off when it excludes enough survivors to cover its own per-series cost
+# (BENCH_knn_pr1.json showed FAST_SAX losing to plain SAX at k=5, α∈{3,10}
+# exactly because the coarse level's MINDIST excluded almost nothing).
+# The host engine probes a small survivor sample, estimates the kill
+# fraction, and consults this decision.
+# ---------------------------------------------------------------------------
+
+def c10_skip_advised(kill_frac: float, n: int, N: int,
+                     weights: OpWeights = DEFAULT_WEIGHTS) -> bool:
+    """True when a level's MINDIST test is expected to cost more than the
+    verification work its exclusions would save.
+
+    Per C9-surviving series the test costs ``mindist_cost(N)``; excluding
+    the series saves (at least) its final Euclidean verification,
+    ``euclidean_cost(n)``.  With an estimated exclusion probability
+    ``kill_frac``, skip when ``kill_frac · gain < cost``.  Skipping is
+    always sound — C10 only ever removes candidates the Euclidean verify
+    would filter anyway.
+    """
+    gain = float(kill_frac) * latency_of(euclidean_cost(n), weights)
+    return gain < latency_of(mindist_cost(N), weights)
+
+
+# ---------------------------------------------------------------------------
+# Device latency model for the fused megakernel (kernels/fused_query.py).
+#
+# The block-shape chooser in kernels/ops.py asks this hook to rank the
+# VMEM-feasible (block_q, block_b) candidates.  The constants are v5e-ish
+# and deliberately coarse: the model only needs to order shapes, and the
+# hot path is so memory-bound that the HBM term dominates every ranking.
+# ---------------------------------------------------------------------------
+
+HBM_GBPS = 819.0          # v5e HBM bandwidth
+MXU_TFLOPS = 197.0        # v5e bf16/f32-accumulate peak
+VPU_GOPS = 4.0e3          # vector unit, elementwise ops
+
+
+def fused_pass_estimate(Q: int, B: int, n: int, levels, alphabet: int,
+                        block_q: int = 8, block_b: int = 256,
+                        k: int = 0) -> dict:
+    """Bytes/flops/latency estimate for one fused megakernel pass.
+
+    Returns ``dict(bytes_hbm, flops_mxu, ops_vpu, t_mem_s, t_compute_s,
+    t_est_s)``.  The database (series, norms, words, residuals at every
+    level) is charged exactly ONE HBM read — that is the kernel's design
+    invariant; query-side tiles are re-streamed once per database block
+    column (they are tiny).  Output traffic is the (Q, B) mask+d2 pair in
+    range form or the (Q, nb·k) partials in top-k form.
+    """
+    import math
+
+    levels = tuple(int(N) for N in levels)
+    nb = math.ceil(B / max(1, block_b))
+    nq = math.ceil(Q / max(1, block_q))
+    Bp, Qp = nb * block_b, nq * block_q     # padded rows are streamed too
+    row_bytes = (n + 1 + sum(levels) + len(levels)) * 4
+    q_row_bytes = (n + 2 + len(levels) + alphabet * sum(levels)) * 4
+    bytes_hbm = Bp * row_bytes + nb * Qp * q_row_bytes
+    bytes_hbm += Qp * (2 * nb * k if k else 2 * Bp) * 4
+    flops_mxu = 2.0 * Qp * Bp * n                     # the verify matmul
+    ops_vpu = float(Qp * Bp) * (sum(levels) * (alphabet + 2) + 8)
+    t_mem = bytes_hbm / (HBM_GBPS * 1e9)
+    t_compute = flops_mxu / (MXU_TFLOPS * 1e12) + ops_vpu / (VPU_GOPS * 1e9)
+    return dict(bytes_hbm=float(bytes_hbm), flops_mxu=flops_mxu,
+                ops_vpu=ops_vpu, t_mem_s=t_mem, t_compute_s=t_compute,
+                t_est_s=max(t_mem, t_compute))

@@ -29,8 +29,10 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from .engine import (DeviceIndex, QueryReprDev, build_device_index,
-                     cascade_mask, knn_query, mixed_query,
-                     range_query_compact, represent_queries)
+                     cascade_mask, compact_answers, knn_query,
+                     knn_query_pallas, mixed_query, mixed_query_pallas,
+                     range_query_compact, range_query_pallas,
+                     represent_queries, resolve_backend)
 
 _PAD_RESIDUAL = 1e30  # sentinel: C9 kills padded rows for any finite epsilon
 
@@ -92,6 +94,7 @@ def distributed_range_query(
     axis: str = "data",
     capacity_per_shard: int = 128,
     normalize_queries: bool = True,
+    backend: str = "auto",
 ):
     """Range query over the sharded database.
 
@@ -100,10 +103,16 @@ def distributed_range_query(
     candidate slots; ``overflow[q, p]`` flags a shard whose survivors did
     not fit (re-run with larger capacity — soundness is never silently
     lost).
+
+    ``backend`` selects the per-shard engine (``engine.resolve_backend``):
+    the XLA cascade or the fused Pallas megakernel, whose dense answers
+    are compacted into the same per-shard buffer convention by the
+    ``compact_answers`` epilogue.
     """
     levels, alphabet = index.levels, index.alphabet
     P_sh = mesh.shape[axis]
     b_loc = index.series.shape[0] // P_sh
+    be = resolve_backend(backend)
     qr = represent_queries(jnp.asarray(queries, dtype=jnp.float32),
                            levels, alphabet, normalize=normalize_queries)
     eps = jnp.asarray(epsilon, dtype=jnp.float32)
@@ -113,8 +122,13 @@ def distributed_range_query(
                            residuals=residuals, levels=levels,
                            alphabet=alphabet)
         lqr = QueryReprDev(q=q, words=qws, residuals=qrs)
-        idx, ans, d2, overflow = range_query_compact(
-            lidx, lqr, eps_, capacity_per_shard)
+        if be == "pallas":
+            dense_ans, dense_d2 = range_query_pallas(lidx, lqr, eps_)
+            idx, ans, d2, overflow = compact_answers(
+                dense_ans, dense_d2, capacity_per_shard)
+        else:
+            idx, ans, d2, overflow = range_query_compact(
+                lidx, lqr, eps_, capacity_per_shard)
         gidx = idx + jax.lax.axis_index(axis) * b_loc
         return gidx, ans, d2, overflow[:, None]
 
@@ -139,6 +153,7 @@ def distributed_range_query_auto(
     capacity_per_shard: int = 128,
     normalize_queries: bool = True,
     max_doublings: int = 8,
+    backend: str = "auto",
 ):
     """Range query with the engine's capacity auto-escalation contract.
 
@@ -155,7 +170,8 @@ def distributed_range_query_auto(
     for _ in range(max_doublings + 1):
         gidx, ans, d2, overflow = distributed_range_query(
             index, queries, epsilon, mesh, axis=axis,
-            capacity_per_shard=cap, normalize_queries=normalize_queries)
+            capacity_per_shard=cap, normalize_queries=normalize_queries,
+            backend=backend)
         if cap >= b_loc or not bool(np.asarray(overflow).any()):
             return gidx, ans, d2, overflow
         cap = min(b_loc, cap * 4)
@@ -174,6 +190,7 @@ def distributed_mixed_query(
     n_iters: int = 2,
     normalize_queries: bool = True,
     n_valid: int | None = None,
+    backend: str = "auto",
 ):
     """Batched mixed-workload dispatch over the sharded database.
 
@@ -202,6 +219,7 @@ def distributed_mixed_query(
     n_valid = B if n_valid is None else int(n_valid)
     k_loc = min(int(k), b_loc)
     cap = min(int(capacity_per_shard), b_loc)
+    be = resolve_backend(backend)
     qr = represent_queries(jnp.asarray(queries, dtype=jnp.float32),
                            levels, alphabet, normalize=normalize_queries)
     eps = jnp.asarray(epsilon, dtype=jnp.float32)
@@ -215,9 +233,16 @@ def distributed_mixed_query(
         shard = jax.lax.axis_index(axis)
         rows = shard * b_loc + jnp.arange(b_loc, dtype=jnp.int32)
         vmask = (rows < n_valid) & (residuals[0] < 0.5 * _PAD_RESIDUAL)
-        idx, answer, d2, overflow = mixed_query(
-            lidx, lqr, eps_, knn_, k_loc, capacity=cap, n_iters=n_iters,
-            valid_mask=vmask)
+        if be == "pallas":
+            _, dense_ans, dense_d2, _ = mixed_query_pallas(
+                lidx, lqr, eps_, knn_, k_loc, n_iters=n_iters,
+                valid_mask=vmask)
+            idx, answer, d2, overflow = compact_answers(
+                dense_ans, dense_d2, cap)
+        else:
+            idx, answer, d2, overflow = mixed_query(
+                lidx, lqr, eps_, knn_, k_loc, capacity=cap, n_iters=n_iters,
+                valid_mask=vmask)
         gidx = jnp.where(answer, idx + shard * b_loc, -1)
         return gidx, answer, d2, overflow[:, None]
 
@@ -246,6 +271,7 @@ def distributed_mixed_query_auto(
     normalize_queries: bool = True,
     n_valid: int | None = None,
     max_doublings: int = 8,
+    backend: str = "auto",
 ):
     """:func:`distributed_mixed_query` under the capacity auto-escalation
     contract: 4× the per-shard capacity while any shard overflows, capped
@@ -257,7 +283,8 @@ def distributed_mixed_query_auto(
         out = distributed_mixed_query(
             index, queries, epsilon, is_knn, k, mesh, axis=axis,
             capacity_per_shard=cap, n_iters=n_iters,
-            normalize_queries=normalize_queries, n_valid=n_valid)
+            normalize_queries=normalize_queries, n_valid=n_valid,
+            backend=backend)
         if cap >= b_loc or not bool(np.asarray(out[3]).any()):
             return out
         cap = min(b_loc, cap * 4)
@@ -274,6 +301,7 @@ def distributed_knn_query(
     n_iters: int = 2,
     normalize_queries: bool = True,
     n_valid: int | None = None,
+    backend: str = "auto",
 ):
     """Exact k-NN over the sharded database: local top-k, cross-shard merge.
 
@@ -312,6 +340,7 @@ def distributed_knn_query(
     k_loc = min(int(k), b_loc)
     cap = b_loc if capacity_per_shard is None else min(int(capacity_per_shard),
                                                        b_loc)
+    be = resolve_backend(backend)
     qr = represent_queries(jnp.asarray(queries, dtype=jnp.float32),
                            levels, alphabet, normalize=normalize_queries)
 
@@ -328,9 +357,13 @@ def distributed_knn_query(
         # finite ε); k-NN must ALSO keep pads out of its seed sample,
         # where no ε exists yet.
         vmask = (rows < n_valid) & (residuals[0] < 0.5 * _PAD_RESIDUAL)
-        nn_idx, nn_d2, exact = knn_query(
-            lidx, lqr, k_loc, capacity=cap, n_iters=n_iters,
-            valid_mask=vmask)
+        if be == "pallas":
+            nn_idx, nn_d2, exact = knn_query_pallas(
+                lidx, lqr, k_loc, n_iters=n_iters, valid_mask=vmask)
+        else:
+            nn_idx, nn_d2, exact = knn_query(
+                lidx, lqr, k_loc, capacity=cap, n_iters=n_iters,
+                valid_mask=vmask)
         finite = jnp.isfinite(nn_d2)
         gidx = jnp.where(finite, nn_idx + shard * b_loc, -1)
         return gidx, nn_d2, exact[:, None]

@@ -28,10 +28,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels import fused_query as _fused
+from ..kernels import ops as kernel_ops
 from .fastsax import FastSAXIndex
 from .paa import paa, znormalize
 from .polyfit import linfit_residual
-from .sax import discretize, mindist_table
+from .sax import discretize
 
 
 @jax.tree_util.register_pytree_node_class
@@ -179,7 +181,9 @@ def represent_queries(
 
 
 def _mindist_sq_tab(alphabet: int) -> jnp.ndarray:
-    return jnp.asarray(mindist_table(alphabet), dtype=jnp.float32)
+    # Shared per-alphabet cache (kernels/ops.py): one host build and one
+    # device constant per alphabet, reused by the Pallas panel construction.
+    return kernel_ops.mindist_table_cached(alphabet)
 
 
 def _eps_qcol(epsilon, Q: int) -> jnp.ndarray:
@@ -347,6 +351,23 @@ def _kth_smallest(d2: jnp.ndarray, k: int) -> jnp.ndarray:
     return -jax.lax.top_k(-d2, k)[0][:, -1:]
 
 
+def _seed_eps(index: "DeviceIndex", qr: "QueryReprDev", k: int, valid_mask):
+    """k-NN seed radius from a strided verified row sample (≥ max(k, 64)
+    rows): the k-th sampled distance upper-bounds the true k-th distance,
+    so it is a sound starting radius.  Shared by :func:`knn_query`,
+    :func:`mixed_query` and the fused Pallas variants — one definition so
+    the backends cannot drift on the quantity their parity rests on."""
+    B = index.series.shape[0]
+    S = min(B, max(k, _KNN_SEED_SAMPLE))
+    sample = (jnp.arange(S, dtype=jnp.int32) * B) // S   # distinct: S ≤ B
+    rows = index.series[sample]                          # (S, n)
+    diff = rows[None, :, :] - qr.q[:, None, :]
+    d2s = jnp.sum(diff * diff, axis=-1)                  # (Q, S)
+    if valid_mask is not None:
+        d2s = jnp.where(valid_mask[sample][None, :], d2s, jnp.inf)
+    return jnp.sqrt(jnp.maximum(_kth_smallest(d2s, k), 0.0))   # (Q, 1)
+
+
 @functools.partial(jax.jit, static_argnames=("k", "capacity", "n_iters"))
 def knn_query(
     index: DeviceIndex,
@@ -388,14 +409,7 @@ def knn_query(
     capacity = max(capacity, k)
 
     # --- seed radius from a strided verified sample ------------------------
-    S = min(B, max(k, _KNN_SEED_SAMPLE))
-    sample = (jnp.arange(S, dtype=jnp.int32) * B) // S   # distinct: S ≤ B
-    rows = index.series[sample]                          # (S, n)
-    diff = rows[None, :, :] - qr.q[:, None, :]
-    d2s = jnp.sum(diff * diff, axis=-1)                  # (Q, S)
-    if valid_mask is not None:
-        d2s = jnp.where(valid_mask[sample][None, :], d2s, jnp.inf)
-    eps = jnp.sqrt(jnp.maximum(_kth_smallest(d2s, k), 0.0))   # (Q, 1)
+    eps = _seed_eps(index, qr, k, valid_mask)            # (Q, 1)
 
     # --- tightening passes: verify the most *promising* survivors ----------
     # Promise = small level-0 residual gap (the same O(1) lower bound the
@@ -477,15 +491,7 @@ def mixed_query(
     eps_req = _eps_qcol(epsilon, Q)
 
     # Seed radius for the k-NN rows (range rows keep the caller's ε).
-    S = min(B, max(k, _KNN_SEED_SAMPLE))
-    sample = (jnp.arange(S, dtype=jnp.int32) * B) // S
-    rows = index.series[sample]
-    diff = rows[None, :, :] - qr.q[:, None, :]
-    d2s = jnp.sum(diff * diff, axis=-1)
-    if valid_mask is not None:
-        d2s = jnp.where(valid_mask[sample][None, :], d2s, jnp.inf)
-    eps_knn = jnp.sqrt(jnp.maximum(_kth_smallest(d2s, k), 0.0))
-    eps = jnp.where(knn_col, eps_knn, eps_req)
+    eps = jnp.where(knn_col, _seed_eps(index, qr, k, valid_mask), eps_req)
 
     def cascade_eps(e):
         # k-NN rows need the f32 slack (their bound tightens towards the
@@ -600,6 +606,293 @@ def mixed_query_auto(
             return idx, answer, d2, overflow
         cap = min(B, cap * 4)
     return idx, answer, d2, overflow
+
+
+# ---------------------------------------------------------------------------
+# Backend dispatch: the fused Pallas megakernel vs the XLA oracle.
+#
+# ``backend="auto"`` selects compiled Pallas on TPU and the XLA engine
+# everywhere else; ``"pallas"`` off-TPU runs the kernels in interpret mode
+# (slow, but bit-identical — the parity-test and CI path).  Block shapes
+# come from the VMEM budget in kernels/ops.py ranked by the latency-model
+# hook in core/cost_model.py (DESIGN.md §7).
+# ---------------------------------------------------------------------------
+
+
+def resolve_backend(backend: str = "auto") -> str:
+    """Map auto|xla|pallas to the concrete engine for this process."""
+    if backend not in ("auto", "xla", "pallas"):
+        raise ValueError(
+            f"backend must be 'auto', 'xla' or 'pallas', got {backend!r}")
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    return backend
+
+
+def _fused_blocks(index: DeviceIndex, Q: int, k: int = 0,
+                  block_q: int | None = None, block_b: int | None = None):
+    if block_q is None or block_b is None:
+        bq, bb = kernel_ops.choose_fused_blocks(
+            Q, index.series.shape[0], index.n, index.levels, index.alphabet,
+            k=k)
+        block_q, block_b = block_q or bq, block_b or bb
+    # Caller-supplied dimensions (either or both) bypass the chooser's
+    # feasibility scan — re-check the final shape against the VMEM budget
+    # so a mixed override cannot compile an overflowing kernel.
+    need = kernel_ops.fused_vmem_bytes(
+        int(block_q), int(block_b), index.n, index.levels, index.alphabet, k)
+    if need > kernel_ops.VMEM_BYTES:
+        raise ValueError(
+            f"fused blocks block_q={block_q}, block_b={block_b} need "
+            f"~{need / 2**20:.1f} MiB VMEM "
+            f"(> {kernel_ops.VMEM_BYTES / 2**20:.0f} MiB); shrink them")
+    return int(block_q), int(block_b)
+
+
+def _masked_residuals(index: DeviceIndex, valid_mask):
+    """Fold an optional row-validity mask into the level-0 residuals: the
+    fused kernel then kills invalid rows through the same C9 sentinel
+    mechanism the sharded engine uses for padding."""
+    if valid_mask is None:
+        return index.residuals
+    res0 = jnp.where(valid_mask, index.residuals[0], _fused.PAD_RESIDUAL)
+    return (res0,) + tuple(index.residuals[1:])
+
+
+def _query_panels(qr: QueryReprDev, alphabet: int) -> tuple:
+    return tuple(kernel_ops.query_panels(w, alphabet) for w in qr.words)
+
+
+def _reverify_rows(index: DeviceIndex, qr: QueryReprDev, idx: jnp.ndarray):
+    """Exact diff²-form distances for candidate rows (−1 → +inf).
+
+    The same expression :func:`compact_verify` evaluates, so the k-NN
+    distances the fused path reports are bit-identical to the XLA engine's
+    for the same candidate indices.
+    """
+    rows = index.series[jnp.maximum(idx, 0)]          # (Q, C, n)
+    diff = rows - qr.q[:, None, :]
+    d2 = jnp.sum(diff * diff, axis=-1)
+    return jnp.where(idx >= 0, d2, jnp.inf)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_b",
+                                             "interpret"))
+def _range_pallas_impl(index, qr, eps, valid_mask, block_q, block_b,
+                       interpret):
+    return _fused.fused_range_pallas(
+        index.series, index.norms_sq, index.words,
+        _masked_residuals(index, valid_mask),
+        qr.q, _query_panels(qr, index.alphabet), qr.residuals, eps,
+        levels=index.levels, alphabet=index.alphabet, n=index.n,
+        block_q=block_q, block_b=block_b, interpret=interpret)
+
+
+def range_query_pallas(
+    index: DeviceIndex, qr: QueryReprDev, epsilon,
+    valid_mask: jnp.ndarray | None = None,
+    block_q: int | None = None, block_b: int | None = None,
+    interpret: bool | None = None,
+):
+    """One-pass fused range query — bit-identical to :func:`range_query`.
+
+    Same return convention: ``(answer_mask (Q, B), d2 (Q, B))`` with +inf
+    outside the answer set.  One ``pallas_call``, one HBM read of every
+    database block, zero per-level mask round-trips.
+    """
+    Q = qr.q.shape[0]
+    block_q, block_b = _fused_blocks(index, Q, 0, block_q, block_b)
+    return _range_pallas_impl(
+        index, qr, _eps_qcol(epsilon, Q), valid_mask, block_q, block_b,
+        kernel_ops._use_interpret(interpret))
+
+
+# Extra block-local top-k slots beyond k: the in-kernel selection ranks by
+# the matmul-form d², the final merge by the re-verified diff² form — the
+# two orderings can swap near-ties (f32 form noise), so a true neighbour
+# sitting exactly at a block's k boundary could otherwise miss its
+# partial list.  A displacement of more than _TOPK_GUARD positions would
+# need > _TOPK_GUARD distinct rows of one block inside the same f32 noise
+# window at the boundary (exact duplicates rank identically in both forms
+# and cannot displace).
+_TOPK_GUARD = 4
+
+
+@functools.partial(jax.jit, static_argnames=("k", "n_iters", "block_q",
+                                             "block_b", "interpret"))
+def _knn_pallas_impl(index, qr, k, n_iters, valid_mask, block_q, block_b,
+                     interpret):
+    Q = qr.q.shape[0]
+    panels = _query_panels(qr, index.alphabet)
+    residuals = _masked_residuals(index, valid_mask)
+    k_sel = min(k + _TOPK_GUARD, block_b)
+
+    def topk_pass(eps):
+        idxp, _ = _fused.fused_topk_pallas(
+            index.series, index.norms_sq, index.words, residuals,
+            qr.q, panels, qr.residuals, _slacked(eps),
+            levels=index.levels, alphabet=index.alphabet, n=index.n,
+            k=k_sel, block_q=block_q, block_b=block_b, interpret=interpret)
+        return idxp, _reverify_rows(index, qr, idxp)
+
+    eps = _seed_eps(index, qr, k, valid_mask)
+    for _ in range(max(0, int(n_iters) - 1)):
+        _, d2v = topk_pass(eps)
+        eps = jnp.minimum(eps, jnp.sqrt(_kth_smallest(d2v, k)))
+    idxp, d2v = topk_pass(eps)
+    nn_idx, nn_d2 = _fused.merge_topk_partials(idxp, d2v, k)
+    # The fused path verifies EVERY cascade survivor (block-local top-k of
+    # the dense masked verify), so the candidate buffer can never
+    # overflow: the certificate is unconditionally True.
+    return nn_idx, nn_d2, jnp.ones((Q,), dtype=bool)
+
+
+def knn_query_pallas(
+    index: DeviceIndex, qr: QueryReprDev, k: int,
+    n_iters: int = 2, valid_mask: jnp.ndarray | None = None,
+    block_q: int | None = None, block_b: int | None = None,
+    interpret: bool | None = None,
+):
+    """Fused-megakernel exact k-NN: same tightening schedule as
+    :func:`knn_query`, but each pass is ONE database read emitting
+    block-local top-k partials (never a (Q, B) distance matrix), merged in
+    a cheap epilogue and re-verified in the engine's diff² form.  Returns
+    ``(nn_idx, nn_d2, exact)`` with ``exact`` always True."""
+    B = index.series.shape[0]
+    k_eff = min(int(k), B)
+    block_q, block_b = _fused_blocks(index, qr.q.shape[0], k_eff,
+                                     block_q, block_b)
+    return _knn_pallas_impl(index, qr, k_eff, int(n_iters), valid_mask,
+                            block_q, block_b,
+                            kernel_ops._use_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "n_iters", "block_q",
+                                             "block_b", "interpret"))
+def _mixed_pallas_impl(index, qr, epsilon, is_knn, k, n_iters, valid_mask,
+                       block_q, block_b, interpret):
+    Q, B = qr.q.shape[0], index.series.shape[0]
+    knn_col = is_knn.reshape(Q, 1)
+    eps_req = _eps_qcol(epsilon, Q)
+    panels = _query_panels(qr, index.alphabet)
+    residuals = _masked_residuals(index, valid_mask)
+    eps = jnp.where(knn_col, _seed_eps(index, qr, k, valid_mask), eps_req)
+
+    def cascade_eps(e):
+        # k-NN rows carry the f32 slack, range rows the caller's ε —
+        # exactly mixed_query's convention.
+        return jnp.where(knn_col, _slacked(e), e)
+
+    k_sel = min(k + _TOPK_GUARD, block_b)
+    for _ in range(max(0, int(n_iters) - 1)):
+        idxp, _ = _fused.fused_topk_pallas(
+            index.series, index.norms_sq, index.words, residuals,
+            qr.q, panels, qr.residuals, cascade_eps(eps),
+            levels=index.levels, alphabet=index.alphabet, n=index.n,
+            k=k_sel, block_q=block_q, block_b=block_b, interpret=interpret)
+        d2v = _reverify_rows(index, qr, idxp)
+        tightened = jnp.minimum(eps, jnp.sqrt(_kth_smallest(d2v, k)))
+        eps = jnp.where(knn_col, tightened, eps)
+
+    ans, d2 = _fused.fused_range_pallas(
+        index.series, index.norms_sq, index.words, residuals,
+        qr.q, panels, qr.residuals, cascade_eps(eps),
+        levels=index.levels, alphabet=index.alphabet, n=index.n,
+        block_q=block_q, block_b=block_b, interpret=interpret)
+    idx = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32)[None, :], (Q, B))
+    overflow = jnp.zeros((Q,), dtype=bool)
+    return idx, ans, d2, overflow
+
+
+def mixed_query_pallas(
+    index: DeviceIndex, qr: QueryReprDev, epsilon, is_knn, k: int,
+    n_iters: int = 2, valid_mask: jnp.ndarray | None = None,
+    block_q: int | None = None, block_b: int | None = None,
+    interpret: bool | None = None,
+):
+    """Fused-megakernel mixed batch in :func:`mixed_query_dense` layout.
+
+    Range rows answer at the caller's ε (bit-identical to
+    :func:`range_query`); k-NN rows self-tighten through fused top-k
+    passes and answer with the in-range mask at their final slacked
+    radius — a superset of the exact top-k, extracted per row by the
+    caller (``mixed_topk`` semantics over the dense buffer).  Returns
+    ``(idx (Q, B), answer (Q, B), d2 (Q, B), overflow (Q,))`` with
+    ``overflow`` always False: there is no candidate buffer to overflow.
+    """
+    B = index.series.shape[0]
+    k_eff = min(int(k), B)
+    block_q, block_b = _fused_blocks(index, qr.q.shape[0], k_eff,
+                                     block_q, block_b)
+    return _mixed_pallas_impl(
+        index, qr, jnp.asarray(epsilon, jnp.float32),
+        jnp.asarray(is_knn, dtype=bool), k_eff, int(n_iters), valid_mask,
+        block_q, block_b, kernel_ops._use_interpret(interpret))
+
+
+def compact_answers(answer: jnp.ndarray, d2: jnp.ndarray, capacity: int):
+    """Compact a dense (Q, B) answer mask into ``capacity`` low-index slots.
+
+    The epilogue that adapts the fused backend's dense layout to the
+    compact per-shard buffer convention of ``core/dist_search.py``: slots
+    fill prefer-low-index (the engine-wide tie-break order) and
+    ``overflow`` flags rows whose answers did not fit.  Returns
+    ``(idx (Q, C), valid (Q, C), d2 (Q, C), overflow (Q,))``.
+    """
+    B = answer.shape[-1]
+    capacity = min(int(capacity), B)
+    keys = jnp.where(answer, B - jnp.arange(B, dtype=jnp.int32)[None, :], 0)
+    top, idx = jax.lax.top_k(keys, capacity)
+    valid = top > 0
+    d2c = jnp.where(valid, jnp.take_along_axis(d2, idx, axis=-1), jnp.inf)
+    return idx, valid, d2c, answer.sum(axis=-1) > capacity
+
+
+def range_query_backend(
+    index: DeviceIndex, qr: QueryReprDev, epsilon, backend: str = "auto",
+    **pallas_kw,
+):
+    """Backend-dispatched dense range query (same convention both ways)."""
+    if resolve_backend(backend) == "pallas":
+        return range_query_pallas(index, qr, epsilon, **pallas_kw)
+    return range_query(index, qr, epsilon)
+
+
+def knn_query_backend(
+    index: DeviceIndex, qr: QueryReprDev, k: int, backend: str = "auto",
+    capacity: int | None = None, n_iters: int = 2,
+    valid_mask: jnp.ndarray | None = None, **pallas_kw,
+):
+    """Backend-dispatched exact k-NN: ``(nn_idx, nn_d2, exact)``.
+
+    XLA runs the certificate-escalated :func:`knn_query_auto`; Pallas runs
+    the fused path, whose certificate holds by construction.
+    """
+    if resolve_backend(backend) == "pallas":
+        return knn_query_pallas(index, qr, k, n_iters=n_iters,
+                                valid_mask=valid_mask, **pallas_kw)
+    return knn_query_auto(index, qr, k, capacity=capacity, n_iters=n_iters,
+                          valid_mask=valid_mask)
+
+
+def mixed_query_backend(
+    index: DeviceIndex, qr: QueryReprDev, epsilon, is_knn, k: int,
+    backend: str = "auto", capacity: int | None = None, n_iters: int = 2,
+    valid_mask: jnp.ndarray | None = None, **pallas_kw,
+):
+    """Backend-dispatched mixed batch: ``(idx, answer, d2, overflow)``.
+
+    Both backends carry the exact answer set; XLA in the compact
+    capacity-escalated layout (:func:`mixed_query_auto`), Pallas in the
+    dense overflow-free layout (:func:`mixed_query_pallas`).
+    """
+    if resolve_backend(backend) == "pallas":
+        return mixed_query_pallas(index, qr, epsilon, is_knn, k,
+                                  n_iters=n_iters, valid_mask=valid_mask,
+                                  **pallas_kw)
+    return mixed_query_auto(index, qr, epsilon, is_knn, k,
+                            capacity=capacity, n_iters=n_iters,
+                            valid_mask=valid_mask)
 
 
 def knn_query_auto(

@@ -357,12 +357,18 @@ def sax_knn_query(
         levels_visited=1)
 
 
+# C10 probe size for the adaptive cascade: enough survivors to estimate
+# the level's exclusion rate, cheap enough to charge unconditionally.
+_C10_PROBE = 32
+
+
 def fastsax_knn_query(
     index: FastSAXIndex,
     query: np.ndarray | QueryRepr,
     k: int,
     counter: OpCounter | None = None,
     seed_factor: int = 2,
+    adaptive_c10: bool = True,
 ) -> KNNResult:
     """FAST_SAX exact k-NN: seeded best-so-far radius + exclusion cascade.
 
@@ -383,6 +389,18 @@ def fastsax_knn_query(
     Every exclusion compares a *proven lower bound* against a *verified
     distance*, so the result is exactly brute-force top-k (ties broken by
     index).
+
+    ``adaptive_c10`` (beyond-paper, cost-model-driven): at each level a
+    small survivor probe (``_C10_PROBE`` rows, charged) estimates the
+    MINDIST kill fraction; when the expected exclusion gain is below the
+    test's own cost (``cost_model.c10_skip_advised``) the remaining
+    survivors skip that level's MINDIST.  Skipping is sound — C10 only
+    removes candidates the Euclidean verify would reject anyway — so the
+    answer set is unchanged; only the op accounting (and EXPERIMENTS.md
+    §kNN's before/after) moves.  This is what repairs the k=5 α∈{3,10}
+    cells where FAST_SAX lost to plain SAX in BENCH_knn_pr1.json: there
+    the coarse level's MINDIST excluded almost nothing yet was charged for
+    every survivor.
     """
     counter = counter or OpCounter()
     n, alphabet = index.n, index.config.alphabet
@@ -441,13 +459,44 @@ def fastsax_knn_query(
         survivors = alive_idx[~c9_kill]
 
         if survivors.size:
-            md = np.sqrt(_mindist_sq_np(level.words[survivors], qr.words[li],
-                                        n, alphabet))
-            counter.count(**_scale(cm.mindist_cost(N), survivors.size))
-            lb[survivors] = np.maximum(lb[survivors], md)
-            c10_kill = md > eps
-            excluded_c10 += int(c10_kill.sum())
-            survivors = survivors[~c10_kill]
+            m = survivors.size
+            kill = np.zeros(m, dtype=bool)
+            probe_pos = np.arange(m)
+            # Only non-final levels are skippable: the finest level's
+            # MINDIST is the tightest lower bound and drives the phase-3
+            # verify ordering — dropping it trades a small test cost for
+            # far more Euclidean verifications (measured; EXPERIMENTS.md
+            # §kNN).  A coarse level's bound is superseded by the finest
+            # level's anyway (lb is a running max).
+            last_level = li == len(index.levels) - 1
+            if adaptive_c10 and not last_level and m > _C10_PROBE:
+                # Evenly-spread probe (deterministic) to estimate this
+                # level's MINDIST exclusion rate before paying for it on
+                # every survivor.
+                probe_pos = np.unique(
+                    np.linspace(0, m - 1, _C10_PROBE).astype(np.int64))
+            probe = survivors[probe_pos]
+            md_p = np.sqrt(_mindist_sq_np(level.words[probe], qr.words[li],
+                                          n, alphabet))
+            counter.count(**_scale(cm.mindist_cost(N), probe.size))
+            lb[probe] = np.maximum(lb[probe], md_p)
+            kill[probe_pos] = md_p > eps
+            if probe.size < m:
+                kill_frac = float((md_p > eps).mean())
+                if not cm.c10_skip_advised(kill_frac, n, N):
+                    rest_pos = np.setdiff1d(np.arange(m), probe_pos,
+                                            assume_unique=True)
+                    rest = survivors[rest_pos]
+                    md_r = np.sqrt(_mindist_sq_np(
+                        level.words[rest], qr.words[li], n, alphabet))
+                    counter.count(**_scale(cm.mindist_cost(N), rest.size))
+                    lb[rest] = np.maximum(lb[rest], md_r)
+                    kill[rest_pos] = md_r > eps
+                # else: the level's expected exclusion gain is below the
+                # test's cost — the remaining survivors skip MINDIST here
+                # (sound: C10 only removes rows the verify would reject).
+            excluded_c10 += int(kill.sum())
+            survivors = survivors[~kill]
 
         alive[:] = False
         alive[survivors] = True

@@ -63,7 +63,13 @@ def fused_prune_level_pallas(
     interpret: bool = True,
 ) -> jnp.ndarray:
     B, N = words.shape
-    assert B % block_b == 0, (B, block_b)
+    if B % block_b != 0:
+        # A bare assert here would vanish under ``python -O`` and let a
+        # mis-padded batch silently read garbage rows.
+        raise ValueError(
+            f"batch size B={B} must be a multiple of block_b={block_b}; "
+            f"pad the inputs (ops.prune_level does this) or pick a "
+            f"divisor block size")
     scal = jnp.stack([jnp.asarray(qres, jnp.float32).reshape(()),
                       jnp.asarray(eps, jnp.float32).reshape(())])[None, :]
     out = pl.pallas_call(

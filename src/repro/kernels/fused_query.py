@@ -1,0 +1,309 @@
+"""Pallas TPU megakernel: the whole FAST_SAX online phase in ONE database pass.
+
+``fused_prune.py`` fused the two exclusion conditions of one cascade level;
+this module fuses the *entire* serving hot path: every cascade level (C9 on
+the residual gaps, eq. 9; C10 as the per-query-panel compare-select MINDIST
+sweep, eq. 10) AND the Euclidean verification, for a tile of queries at
+once, inside a single ``pallas_call``.
+
+Why one pass is the roofline-optimal form (EXPERIMENTS.md §Roofline): each
+cascade level has arithmetic intensity far below the TPU ridge point, so a
+per-level kernel chain pays one HBM round-trip of the (B,) mask — and one
+re-read of the (B, N) words — per level.  Here a database block (series
+rows, norms, all levels' words and residuals) is DMA'd into VMEM exactly
+once and every downstream test runs while it is resident; the only HBM
+writes are the final (Q, B) answer mask + distances (range form) or the
+(Q, nb·k) block-local top-k partials (k-NN form).
+
+Grid layout: ``grid = (nb, nq)`` with the **query tile innermost** — the
+database block index maps depend only on the outer index ``j``, so Pallas
+keeps the block resident across the ``i`` sweep and each database block is
+fetched from HBM exactly once per pass, independent of Q.
+
+Per (j, i) step, everything is VMEM-resident:
+
+  * C9: ``|res_l − qres_l| ≤ ε`` on a (block_q, block_b) broadcast — VPU;
+  * C10: the (α, N) per-query panel trick of ``mindist.py``, batched — the
+    α-way compare-select sweep now selects into a (block_q, block_b, N)
+    accumulator, bit-identical to the XLA engine's table gather;
+  * verify: one MXU dot of the (block_q, n) query tile against the
+    (block_b, n) series tile in the ‖u‖² − 2·u·q + ‖q‖² form — the same
+    expression ``core/engine.py::verify_distances`` uses, so the fused
+    answers are bit-identical to the oracle (tested).
+
+The k-NN variant replaces the (Q, B) outputs with block-local top-k
+partials — an unrolled min/argmin selection (ties resolve to the lowest
+database index, the engine-wide tie-break) — merged by the caller in a
+cheap epilogue, so k-NN never materialises a (Q, B) distance matrix in HBM.
+
+Padding protocol (the wrappers below): database rows are padded to a
+multiple of ``block_b`` with a huge sentinel residual (C9 kills them at any
+finite ε — the same mechanism ``core/dist_search.py`` uses for shard
+padding); query rows are padded to a multiple of ``block_q`` with ε = −1,
+which no non-negative gap can satisfy, so padded query rows answer nothing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Residual sentinel for padded database rows: C9 excludes them at any
+# finite epsilon (mirrors core/dist_search._PAD_RESIDUAL).
+PAD_RESIDUAL = 1e30
+# Epsilon sentinel for padded query rows: gaps are >= 0, so nothing passes.
+PAD_EPSILON = -1.0
+
+
+def _split_refs(refs, n_levels: int):
+    """Kernel ref layout shared by both kernels.
+
+    Inputs:  q, qnorm, eps, [qres_l, tq_l]*L, series, norms, [res_l, words_l]*L
+    Outputs: the trailing refs (2 for both variants).
+    """
+    q_ref, qn_ref, eps_ref = refs[0], refs[1], refs[2]
+    qlv = refs[3:3 + 2 * n_levels]
+    series_ref, norms_ref = refs[3 + 2 * n_levels], refs[4 + 2 * n_levels]
+    dlv = refs[5 + 2 * n_levels:5 + 4 * n_levels]
+    outs = refs[5 + 4 * n_levels:]
+    return q_ref, qn_ref, eps_ref, qlv, series_ref, norms_ref, dlv, outs
+
+
+def _cascade_alive(eps, qlv, dlv, *, levels, alphabet, n):
+    """(block_q, block_b) alive mask: every cascade level, VMEM-resident.
+
+    Bit-identical to ``core/engine.py::cascade_mask``: the C9 gap is the
+    same subtract/abs, and the select-sweep accumulator reproduces the
+    engine's ``tab[words, qwords]`` gather element-for-element before the
+    identical squared-sum reduction.
+    """
+    eps2 = eps * eps
+    alive = None
+    for li, N in enumerate(levels):
+        qres = qlv[2 * li][...]                      # (block_q, 1)
+        tq = qlv[2 * li + 1][...]                    # (block_q, alpha, N)
+        res = dlv[2 * li][...]                       # (block_b, 1)
+        words = dlv[2 * li + 1][...]                 # (block_b, N)
+        # C9 (eq. 9): |d(u,ū) − d(q,q̄)| > ε kills.
+        gap = jnp.abs(res[:, 0][None, :] - qres)     # (block_q, block_b)
+        ok = gap <= eps
+        alive = ok if alive is None else alive & ok
+        # C10 (eq. 10): batched per-query-panel compare-select sweep.
+        sel = words[None, :, :]                      # (1, block_b, N)
+        acc = jnp.zeros((qres.shape[0], words.shape[0], N), jnp.float32)
+        for a in range(alphabet):
+            acc = jnp.where(sel == a, tq[:, a, :][:, None, :], acc)
+        md_sq = (float(n) / N) * jnp.sum(acc * acc, axis=-1)
+        alive &= md_sq <= eps2
+    return alive
+
+
+def _verify_d2(q_ref, qn_ref, series_ref, norms_ref):
+    """(block_q, block_b) squared distances — the engine's matmul form."""
+    cross = jnp.dot(q_ref[...], series_ref[...].T,
+                    preferred_element_type=jnp.float32)
+    d2 = qn_ref[...] - 2.0 * cross + norms_ref[...][:, 0][None, :]
+    return jnp.maximum(d2, 0.0)
+
+
+def _fused_range_kernel(*refs, levels, alphabet, n):
+    (q_ref, qn_ref, eps_ref, qlv, series_ref, norms_ref, dlv,
+     (ans_ref, d2_ref)) = _split_refs(refs, len(levels))
+    eps = eps_ref[...]                               # (block_q, 1)
+    alive = _cascade_alive(eps, qlv, dlv,
+                           levels=levels, alphabet=alphabet, n=n)
+    d2 = _verify_d2(q_ref, qn_ref, series_ref, norms_ref)
+    ans = alive & (d2 <= eps * eps)
+    ans_ref[...] = ans.astype(jnp.int32)
+    d2_ref[...] = jnp.where(ans, d2, jnp.inf)
+
+
+def _fused_topk_kernel(*refs, levels, alphabet, n, k, block_b):
+    (q_ref, qn_ref, eps_ref, qlv, series_ref, norms_ref, dlv,
+     (vals_ref, idx_ref)) = _split_refs(refs, len(levels))
+    eps = eps_ref[...]
+    alive = _cascade_alive(eps, qlv, dlv,
+                           levels=levels, alphabet=alphabet, n=n)
+    d2 = _verify_d2(q_ref, qn_ref, series_ref, norms_ref)
+    # k-NN candidates are ALL cascade survivors (no ε² filter on d2): the
+    # caller's ε is a verified upper bound on the k-th distance, which
+    # bounds the cascade, not the answer values.
+    d2m = jnp.where(alive, d2, jnp.inf)
+    base = pl.program_id(0) * block_b                # global row offset
+    cols = jax.lax.broadcasted_iota(jnp.int32, d2m.shape, 1)
+    vals, idxs = [], []
+    for _ in range(k):                               # k static, unrolled
+        v = jnp.min(d2m, axis=-1)                    # (block_q,)
+        am = jnp.argmin(d2m, axis=-1).astype(jnp.int32)  # ties → lowest col
+        vals.append(v)
+        idxs.append(jnp.where(jnp.isfinite(v), base + am, -1))
+        d2m = jnp.where(cols == am[:, None], jnp.inf, d2m)
+    vals_ref[...] = jnp.stack(vals, axis=-1)
+    idx_ref[...] = jnp.stack(idxs, axis=-1)
+
+
+def _pad_rows(x, block, fill=0.0):
+    R = x.shape[0]
+    Rp = (R + block - 1) // block * block
+    if Rp == R:
+        return x
+    pad = [(0, Rp - R)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, pad, constant_values=fill)
+
+
+def _common_specs(levels, alphabet, n, block_q, block_b):
+    """(in_specs, pack) for the shared input layout.  The db-side index
+    maps depend only on the OUTER grid index j, so each database block is
+    fetched from HBM once and stays VMEM-resident across the inner query
+    sweep."""
+    in_specs = [
+        pl.BlockSpec((block_q, n), lambda j, i: (i, 0)),        # q
+        pl.BlockSpec((block_q, 1), lambda j, i: (i, 0)),        # qnorm
+        pl.BlockSpec((block_q, 1), lambda j, i: (i, 0)),        # eps
+    ]
+    for N in levels:
+        in_specs.append(pl.BlockSpec((block_q, 1), lambda j, i: (i, 0)))
+        in_specs.append(
+            pl.BlockSpec((block_q, alphabet, N), lambda j, i: (i, 0, 0)))
+    in_specs.append(pl.BlockSpec((block_b, n), lambda j, i: (j, 0)))  # series
+    in_specs.append(pl.BlockSpec((block_b, 1), lambda j, i: (j, 0)))  # norms
+    for N in levels:
+        in_specs.append(pl.BlockSpec((block_b, 1), lambda j, i: (j, 0)))
+        in_specs.append(pl.BlockSpec((block_b, N), lambda j, i: (j, 0)))
+    return in_specs
+
+
+def _prep_inputs(series, norms_sq, words, residuals, q, q_panels,
+                 q_residuals, eps_col, levels, block_q, block_b):
+    """Pad both axes and assemble the flat input list (see _split_refs)."""
+    B = series.shape[0]
+    Q = q.shape[0]
+    q_p = _pad_rows(q.astype(jnp.float32), block_q)
+    qn = jnp.sum(q_p * q_p, axis=-1, keepdims=True)   # engine's qnorm form
+    eps_p = _pad_rows(eps_col.astype(jnp.float32).reshape(Q, 1), block_q,
+                      fill=PAD_EPSILON)
+    series_p = _pad_rows(series.astype(jnp.float32), block_b)
+    norms_p = _pad_rows(norms_sq.astype(jnp.float32).reshape(B, 1), block_b)
+    inputs = [q_p, qn, eps_p]
+    for li in range(len(levels)):
+        inputs.append(_pad_rows(
+            q_residuals[li].astype(jnp.float32).reshape(Q, 1), block_q))
+        inputs.append(_pad_rows(q_panels[li].astype(jnp.float32), block_q))
+    inputs += [series_p, norms_p]
+    for li in range(len(levels)):
+        inputs.append(_pad_rows(
+            residuals[li].astype(jnp.float32).reshape(B, 1), block_b,
+            fill=PAD_RESIDUAL))
+        inputs.append(_pad_rows(words[li].astype(jnp.int32), block_b))
+    return inputs, q_p.shape[0], series_p.shape[0]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "levels", "alphabet", "n", "block_q", "block_b", "interpret"))
+def fused_range_pallas(
+    series: jnp.ndarray,        # (B, n) f32
+    norms_sq: jnp.ndarray,      # (B,)  f32 precomputed ‖u‖²
+    words: tuple,               # per level (B, N_l) i32
+    residuals: tuple,           # per level (B,) f32
+    q: jnp.ndarray,             # (Q, n) f32
+    q_panels: tuple,            # per level (Q, α, N_l) f32 — see ops.query_panels
+    q_residuals: tuple,         # per level (Q,) f32
+    eps_col: jnp.ndarray,       # (Q,) or (Q, 1) f32 per-query ε
+    levels: tuple,
+    alphabet: int,
+    n: int,
+    block_q: int = 8,
+    block_b: int = 256,
+    interpret: bool = True,
+):
+    """One-pass fused range query: (answers (Q, B) bool, d2 (Q, B) f32).
+
+    Bit-identical to ``core/engine.py::range_query`` (tested): d2 carries
+    +inf on non-answer lanes, exactly like the oracle.
+    """
+    B, Q = series.shape[0], q.shape[0]
+    inputs, Qp, Bp = _prep_inputs(series, norms_sq, words, residuals,
+                                  q, q_panels, q_residuals, eps_col,
+                                  levels, block_q, block_b)
+    grid = (Bp // block_b, Qp // block_q)
+    ans, d2 = pl.pallas_call(
+        functools.partial(_fused_range_kernel, levels=levels,
+                          alphabet=alphabet, n=n),
+        grid=grid,
+        in_specs=_common_specs(levels, alphabet, n, block_q, block_b),
+        out_specs=[
+            pl.BlockSpec((block_q, block_b), lambda j, i: (i, j)),
+            pl.BlockSpec((block_q, block_b), lambda j, i: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Qp, Bp), jnp.int32),
+            jax.ShapeDtypeStruct((Qp, Bp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(*inputs)
+    return ans[:Q, :B] != 0, d2[:Q, :B]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "levels", "alphabet", "n", "k", "block_q", "block_b", "interpret"))
+def fused_topk_pallas(
+    series: jnp.ndarray,
+    norms_sq: jnp.ndarray,
+    words: tuple,
+    residuals: tuple,
+    q: jnp.ndarray,
+    q_panels: tuple,
+    q_residuals: tuple,
+    eps_col: jnp.ndarray,
+    levels: tuple,
+    alphabet: int,
+    n: int,
+    k: int,
+    block_q: int = 8,
+    block_b: int = 256,
+    interpret: bool = True,
+):
+    """One-pass fused cascade + verify emitting block-local top-k partials.
+
+    Returns ``(idx (Q, nb·k) i32, d2 (Q, nb·k) f32)``: for every database
+    block, the k smallest verified distances among that block's cascade
+    survivors (ascending, ties to the lowest index; +inf / −1 on empty
+    slots).  The global top-k is a subset of the union of block-local
+    top-k sets, so callers merge with :func:`merge_topk_partials` — k-NN
+    never writes a (Q, B) distance matrix to HBM.
+    """
+    B, Q = series.shape[0], q.shape[0]
+    inputs, Qp, Bp = _prep_inputs(series, norms_sq, words, residuals,
+                                  q, q_panels, q_residuals, eps_col,
+                                  levels, block_q, block_b)
+    nb = Bp // block_b
+    grid = (nb, Qp // block_q)
+    vals, idx = pl.pallas_call(
+        functools.partial(_fused_topk_kernel, levels=levels,
+                          alphabet=alphabet, n=n, k=k, block_b=block_b),
+        grid=grid,
+        in_specs=_common_specs(levels, alphabet, n, block_q, block_b),
+        out_specs=[
+            pl.BlockSpec((block_q, k), lambda j, i: (i, j)),
+            pl.BlockSpec((block_q, k), lambda j, i: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Qp, nb * k), jnp.float32),
+            jax.ShapeDtypeStruct((Qp, nb * k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(*inputs)
+    return idx[:Q], vals[:Q]
+
+
+def merge_topk_partials(idx: jnp.ndarray, d2: jnp.ndarray, k: int):
+    """Cheap epilogue: merge (Q, nb·k) block-local partials to the global
+    top-k, sorted ascending by (d², index) — the engine-wide deterministic
+    tie-break.  Empty slots (d² = +inf, idx = −1) sort last."""
+    idx_i = jnp.where(idx < 0, jnp.iinfo(jnp.int32).max, idx)
+    d2s, idxs = jax.lax.sort((d2, idx_i), dimension=-1, num_keys=2)
+    k = min(int(k), d2.shape[-1])
+    out_idx = idxs[:, :k]
+    return jnp.where(jnp.isfinite(d2s[:, :k]), out_idx, -1), d2s[:, :k]

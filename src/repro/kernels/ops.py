@@ -2,8 +2,10 @@
 
 Responsibilities kept out of the kernels themselves:
   * batch padding to the block size (and unpadding of results),
-  * the per-query (α, N) MINDIST table panel,
-  * VMEM budget checks for the chosen block shape,
+  * the per-query (α, N) MINDIST table panel (cached per alphabet),
+  * VMEM budget checks and block-shape selection for the fused megakernel
+    (the latency ranking lives in ``core/cost_model.py`` — the hardware
+    numbers are a model concern, not a kernel concern),
   * backend dispatch: ``interpret=None`` → interpret mode off TPU (this
     container is CPU-only; kernels execute via the Pallas interpreter and
     are validated against ``ref.py``), compiled Pallas on real TPU.
@@ -11,12 +13,19 @@ Responsibilities kept out of the kernels themselves:
 Every wrapper has a ``ref.py`` oracle with identical semantics; the XLA
 engine (core/engine.py) uses the oracle expressions directly, so the Pallas
 path is a drop-in for serving on TPU hardware.
+
+The serving hot path no longer chains per-level kernels: the one-pass
+megakernel in ``fused_query.py`` (reached through the ``backend="pallas"``
+dispatch in ``core/engine.py``) evaluates the whole cascade and the
+Euclidean verify in a single database pass.  The single-level
+``prune_level`` wrapper remains for level-at-a-time experimentation.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..core.sax import mindist_table
 from .fused_prune import fused_prune_level_pallas
@@ -26,6 +35,13 @@ from .paa import paa_pallas
 from .sqdist import sqdist_pallas
 
 VMEM_BYTES = 16 * 2 ** 20          # v5e VMEM per core (half, conservatively)
+
+# Candidate fused-megakernel block shapes, largest-first.  block_b is the
+# HBM streaming granularity; block_q amortises each resident database
+# block over more queries (bounded by the VMEM the (block_q, block_b, N)
+# select-sweep accumulator costs).
+FUSED_BLOCK_B = (1024, 512, 256, 128)
+FUSED_BLOCK_Q = (32, 16, 8)
 
 
 def _use_interpret(interpret) -> bool:
@@ -52,6 +68,97 @@ def _check_vmem(block_b: int, n: int, extra: int = 0):
             f"(> {VMEM_BYTES/2**20:.0f} MiB); shrink block_b")
 
 
+# ---------------------------------------------------------------------------
+# MINDIST table + per-query panels (cached per alphabet — the (α, α) table
+# is a pure function of the alphabet, so rebuilding it per call was wasted
+# host work AND a fresh device constant per trace).
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _mindist_table_np(alphabet: int):
+    import numpy as np
+
+    return np.ascontiguousarray(mindist_table(alphabet), dtype=np.float32)
+
+
+def mindist_table_cached(alphabet: int) -> jnp.ndarray:
+    """(α, α) MINDIST cell table; the host build is cached per alphabet.
+
+    The jnp conversion stays OUTSIDE the cache: under jit it folds into a
+    trace constant, and caching a traced value would leak the tracer.
+    """
+    return jnp.asarray(_mindist_table_np(alphabet))
+
+
+def query_table(qword, alphabet: int) -> jnp.ndarray:
+    """(N,) query word -> (α, N) MINDIST panel tq[a, i] = tab[a, q_i]."""
+    return mindist_table_cached(alphabet)[:, qword]
+
+
+def query_panels(qwords, alphabet: int) -> jnp.ndarray:
+    """Batched panel construction: (Q, N) query words -> (Q, α, N) panels.
+
+    ``panels[q, a, i] = tab[a, qwords[q, i]]`` — the per-query slice the
+    compare-select sweep needs, for a whole query tile at once (one gather
+    on the cached table instead of Q python-level slices).
+    """
+    tab = mindist_table_cached(alphabet)
+    return jnp.transpose(tab[:, qwords], (1, 0, 2))
+
+
+# ---------------------------------------------------------------------------
+# Fused-megakernel block-shape selection: VMEM feasibility here, latency
+# ranking in core/cost_model.py (the hook keeps hardware constants out of
+# the kernel layer).
+# ---------------------------------------------------------------------------
+
+def fused_vmem_bytes(block_q: int, block_b: int, n: int, levels,
+                     alphabet: int, k: int = 0) -> int:
+    """Conservative VMEM footprint of one fused-megakernel grid step.
+
+    Inputs and outputs are doubled for pipelining; the transient
+    (block_q, block_b, N) select-sweep accumulator is charged once.
+    """
+    levels = tuple(int(N) for N in levels)
+    n_lv = len(levels)
+    db = block_b * (n + 1 + sum(levels) + n_lv) * 4
+    qside = block_q * (n + 2 + n_lv + alphabet * sum(levels)) * 4
+    out = block_q * (2 * k if k else 2 * block_b) * 4
+    acc = block_q * block_b * (max(levels) + 3) * 4   # sweep acc + d2/masks
+    return 2 * (db + qside + out) + acc
+
+
+def choose_fused_blocks(Q: int, B: int, n: int, levels, alphabet: int,
+                        k: int = 0, vmem: int = VMEM_BYTES):
+    """Pick (block_q, block_b) for the fused megakernel.
+
+    Feasibility is the VMEM budget above; among feasible shapes the
+    cheapest one wins under the latency-model hook
+    ``core/cost_model.fused_pass_estimate`` (HBM streaming vs compute).
+    Raises if nothing fits — the caller should shrink n or levels.
+    """
+    from ..core import cost_model as _cm
+
+    best = None
+    for bq in FUSED_BLOCK_Q:
+        for bb in FUSED_BLOCK_B:
+            if fused_vmem_bytes(bq, bb, n, levels, alphabet, k) > vmem:
+                continue
+            est = _cm.fused_pass_estimate(
+                Q, B, n, levels, alphabet, block_q=bq, block_b=bb, k=k)
+            if best is None or est["t_est_s"] < best[0]:
+                best = (est["t_est_s"], bq, bb)
+    if best is None:
+        raise ValueError(
+            f"no fused block shape fits {vmem/2**20:.0f} MiB VMEM for "
+            f"n={n}, levels={tuple(levels)}, alphabet={alphabet}")
+    return best[1], best[2]
+
+
+# ---------------------------------------------------------------------------
+# Per-kernel wrappers.
+# ---------------------------------------------------------------------------
+
 def paa(x, n_segments: int, *, block_b: int = 256, interpret=None):
     """(B, n) -> (B, N) PAA means (Pallas)."""
     _check_vmem(block_b, x.shape[-1], extra=x.shape[-1] * n_segments * 4)
@@ -71,15 +178,11 @@ def linfit_residual_sq(x, n_segments: int, *, block_b: int = 256,
     return out[:B]
 
 
-def query_table(qword, alphabet: int) -> jnp.ndarray:
-    """(N,) query word -> (α, N) MINDIST panel tq[a, i] = tab[a, q_i]."""
-    tab = jnp.asarray(mindist_table(alphabet), dtype=jnp.float32)
-    return tab[:, qword]
-
-
 def mindist_sq(words, qword, n: int, alphabet: int, *, block_b: int = 256,
                interpret=None):
     """(B, N) words × (N,) query word -> (B,) squared MINDIST (Pallas)."""
+    N = words.shape[-1]
+    _check_vmem(block_b, N, extra=alphabet * N * 4)
     tq = query_table(qword, alphabet)
     wp, B = _pad_rows(words, block_b)
     out = mindist_sq_pallas(wp, tq, n, alphabet, block_b=block_b,
@@ -99,6 +202,8 @@ def sqdist(x, q, *, block_b: int = 256, interpret=None):
 def prune_level(alive, residuals, words, qword, qres, eps, n: int,
                 alphabet: int, *, block_b: int = 256, interpret=None):
     """One fused cascade level (C9 + masked C10) -> new alive mask."""
+    N = words.shape[-1]
+    _check_vmem(block_b, N, extra=(alphabet * N + 2 * block_b) * 4)
     tq = query_table(qword, alphabet)
     ap, B = _pad_rows(alive, block_b)
     rp, _ = _pad_rows(residuals, block_b)
@@ -107,22 +212,3 @@ def prune_level(alive, residuals, words, qword, qres, eps, n: int,
         ap, rp, wp, tq, qres, eps, n, alphabet, block_b=block_b,
         interpret=_use_interpret(interpret))
     return out[:B]
-
-
-def fused_cascade(series_norms_words_residuals, qr_words, qr_residuals,
-                  eps, n: int, alphabet: int, levels, *, block_b: int = 256,
-                  interpret=None):
-    """Full multi-level cascade for ONE query via chained fused kernels.
-
-    ``series_norms_words_residuals``: (words_per_level, residuals_per_level)
-    tuples as in ``core.engine.DeviceIndex``.  Returns the final (B,) alive
-    mask (candidates for the Euclidean verify).
-    """
-    words, residuals = series_norms_words_residuals
-    B = words[0].shape[0]
-    alive = jnp.ones((B,), dtype=bool)
-    for li, N in enumerate(levels):
-        alive = prune_level(alive, residuals[li], words[li], qr_words[li],
-                            qr_residuals[li], eps, n, alphabet,
-                            block_b=block_b, interpret=interpret)
-    return alive

@@ -140,7 +140,7 @@ def serve_search(args):
         t0 = time.perf_counter()
         nn_idx, nn_d2, exact = distributed_knn_query(
             index, queries, k, mesh, n_valid=n_valid,
-            normalize_queries=False)
+            normalize_queries=False, backend=args.backend)
         jax.block_until_ready(nn_d2)
         dt = time.perf_counter() - t0
         nn_idx = np.asarray(nn_idx)[:, :k]
@@ -158,7 +158,7 @@ def serve_search(args):
     # so served answers are never silently truncated.
     gidx, ans, d2, overflow = distributed_range_query_auto(
         index, queries, args.epsilon, mesh, capacity_per_shard=128,
-        normalize_queries=False)
+        normalize_queries=False, backend=args.backend)
     jax.block_until_ready(ans)
     dt = time.perf_counter() - t0
     ans = np.asarray(ans)
@@ -189,7 +189,8 @@ def serve_service(args):
 
     cfg = ServeConfig(max_batch=args.max_batch, max_queue=args.max_queue,
                       max_wait_ms=args.max_wait_ms, alphabet=args.alphabet,
-                      default_deadline_ms=args.deadline_ms or None)
+                      default_deadline_ms=args.deadline_ms or None,
+                      backend=args.backend)
     if args.index_dir:
         t0 = time.perf_counter()
         service = SearchService.from_store(args.index_dir, cfg)
@@ -269,6 +270,13 @@ def main(argv=None):
     ap.add_argument("--queries", type=int, default=16)
     ap.add_argument("--epsilon", type=float, default=2.0)
     ap.add_argument("--alphabet", type=int, default=10)
+    ap.add_argument("--backend", default="auto",
+                    choices=("auto", "xla", "pallas"),
+                    help="search engine backend (--search/--serve): "
+                         "'auto' compiles the fused Pallas megakernel on "
+                         "TPU and uses the XLA engine elsewhere; 'pallas' "
+                         "off-TPU runs the kernels in interpret mode "
+                         "(slow — parity/debug only)")
     # --serve knobs
     ap.add_argument("--bench-requests", type=int, default=256,
                     help="with --serve: closed-loop load-generator request "

@@ -39,7 +39,8 @@ import numpy as np
 
 from ..core.engine import (DeviceIndex, build_device_index,
                            device_index_from_host, mixed_query,
-                           mixed_query_dense, represent_queries)
+                           mixed_query_dense, mixed_query_pallas,
+                           represent_queries, resolve_backend)
 from .batcher import (FAILED, KIND_KNN, KIND_RANGE, OK, MicroBatcher,
                       Request)
 from .stats import StatsTracker
@@ -54,6 +55,7 @@ class ServeConfig:
     levels: Sequence[int] = (8, 16)
     alphabet: int = 10
     normalize_queries: bool = True
+    backend: str = "auto"          # auto|xla|pallas (engine.resolve_backend)
     max_batch: int = 32            # micro-batch ceiling (and top Q bucket)
     max_queue: int = 256           # admission-control bound
     max_wait_ms: float = 2.0       # coalescing window after first request
@@ -93,6 +95,7 @@ class _SingleBackend:
     def __init__(self, index: DeviceIndex, cfg: ServeConfig):
         self.index = index
         self.cfg = cfg
+        self.backend = resolve_backend(cfg.backend)
         self._cap: Optional[int] = None   # learned capacity or _DENSE
 
     @property
@@ -111,6 +114,15 @@ class _SingleBackend:
                                normalize=self.cfg.normalize_queries)
         eps_j = jnp.asarray(eps, jnp.float32)
         knn_j = jnp.asarray(is_knn)
+        if self.backend == "pallas":
+            # One fused megakernel pass per micro-batch: dense layout,
+            # no candidate buffer, no capacity escalation (DESIGN.md §7).
+            # The jit cache stays keyed on the (Q, k) bucket exactly like
+            # the XLA path.
+            idx, answer, d2, _ = mixed_query_pallas(
+                self.index, qr, eps_j, knn_j, k,
+                n_iters=self.cfg.n_iters)
+            return np.asarray(idx), np.asarray(answer), np.asarray(d2)
         cap_limit = max(64, int(self.cfg.dense_fallback_frac * B))
         cap = self._cap
         if cap is None:
@@ -165,7 +177,7 @@ class _ShardedBackend:
                 self.index, q, eps, is_knn, k, self.mesh, axis=self.axis,
                 capacity_per_shard=cap, n_iters=self.cfg.n_iters,
                 normalize_queries=self.cfg.normalize_queries,
-                n_valid=self.n_valid)
+                n_valid=self.n_valid, backend=self.cfg.backend)
             if cap >= b_loc or not bool(np.asarray(overflow).any()):
                 break
             cap = min(b_loc, cap * 4)

@@ -215,3 +215,71 @@ def test_padded_rows_never_answer():
     """)
     assert r.returncode == 0, r.stderr[-4000:]
     assert "OK" in r.stdout
+
+
+@pytest.mark.slow
+def test_distributed_pallas_backend_matches_xla():
+    """backend="pallas" per-shard engines (fused megakernel in interpret
+    mode inside shard_map) answer identically to the XLA shard engines."""
+    r = _run("""
+        import numpy as np, jax
+        from repro.core.dist_search import (distributed_build,
+            distributed_knn_query, distributed_mixed_query_auto,
+            distributed_range_query_auto, make_data_mesh, pad_database)
+        from repro.core.engine import mixed_topk
+        from repro.data.timeseries import make_wafer_like, make_queries
+
+        assert len(jax.devices()) == 8
+        db = make_wafer_like(n_series=1000, length=128, seed=0)
+        qs = make_queries(db, 4, seed=3)
+        levels, alpha, k = (8, 16), 10, 5
+        mesh = make_data_mesh()
+        padded, n_valid = pad_database(db, 8)
+        didx = distributed_build(padded, levels, alpha, mesh, n_valid=n_valid)
+
+        # range: identical answer sets per query
+        gx, ax, dx, _ = distributed_range_query_auto(
+            didx, qs, 2.0, mesh, normalize_queries=False, backend="xla")
+        gp, ap, dp, _ = distributed_range_query_auto(
+            didx, qs, 2.0, mesh, normalize_queries=False, backend="pallas")
+        for i in range(4):
+            sx = set(np.asarray(gx)[i][np.asarray(ax)[i]].tolist())
+            sp = set(np.asarray(gp)[i][np.asarray(ap)[i]].tolist())
+            assert sx == sp, (i, sx ^ sp)
+
+        # k-NN: identical neighbour ids, exact certificates
+        ix, dxk, ex = distributed_knn_query(
+            didx, qs, k, mesh, n_valid=n_valid, normalize_queries=False,
+            backend="xla")
+        ip, dpk, ep = distributed_knn_query(
+            didx, qs, k, mesh, n_valid=n_valid, normalize_queries=False,
+            backend="pallas")
+        assert bool(np.asarray(ex).all()) and bool(np.asarray(ep).all())
+        np.testing.assert_array_equal(np.asarray(ip)[:, :k],
+                                      np.asarray(ix)[:, :k])
+        np.testing.assert_allclose(np.asarray(dpk)[:, :k],
+                                   np.asarray(dxk)[:, :k],
+                                   rtol=1e-4, atol=1e-3)
+
+        # mixed: identical per-row answers
+        is_knn = np.asarray([True, False, True, False])
+        ox = distributed_mixed_query_auto(
+            didx, qs, 2.0, is_knn, k, mesh, n_valid=n_valid,
+            normalize_queries=False, backend="xla")
+        op = distributed_mixed_query_auto(
+            didx, qs, 2.0, is_knn, k, mesh, n_valid=n_valid,
+            normalize_queries=False, backend="pallas")
+        kx, _ = mixed_topk(ox[0], ox[2], k)
+        kp, _ = mixed_topk(op[0], op[2], k)
+        for i in range(4):
+            if is_knn[i]:
+                np.testing.assert_array_equal(np.asarray(kp)[i],
+                                              np.asarray(kx)[i])
+            else:
+                sx = set(np.asarray(ox[0])[i][np.asarray(ox[1])[i]].tolist())
+                sp = set(np.asarray(op[0])[i][np.asarray(op[1])[i]].tolist())
+                assert sx == sp, (i, sx ^ sp)
+        print("OK")
+    """)
+    assert r.returncode == 0, r.stderr[-4000:]
+    assert "OK" in r.stdout

@@ -308,3 +308,40 @@ def test_batcher_coalesces_concurrent_submits(db):
         mb.stop()
     assert sum(seen_batches) == 12
     assert max(seen_batches) > 1, "concurrent submits should coalesce"
+
+
+# ---------------------------------------------------------------------------
+# Fused Pallas backend: the service end-to-end in interpret mode (ISSUE 4).
+# ---------------------------------------------------------------------------
+
+def test_service_pallas_backend_end_to_end(db):
+    """backend="pallas" serves a mixed workload with the same answer ids
+    as the XLA backend (distances agree to f32 matmul-form noise — the
+    same split the XLA dense fallback already has vs the compact path)."""
+    svc_x = service_for(db, backend="xla")
+    svc_p = service_for(db, backend="pallas")
+    assert svc_p.backend.backend == "pallas"
+    pool = make_queries(db, 8, seed=4)
+    with svc_x, svc_p:
+        for i, q in enumerate(pool[:4]):
+            ix, dx = svc_x.range_query(q, 2.0)
+            ip, dp = svc_p.range_query(q, 2.0)
+            np.testing.assert_array_equal(ip, ix)
+            np.testing.assert_allclose(dp, dx, rtol=1e-4, atol=1e-3)
+            ix, dx = svc_x.knn(q, 5)
+            ip, dp = svc_p.knn(q, 5)
+            np.testing.assert_array_equal(ip, ix)
+            np.testing.assert_allclose(dp, dx, rtol=1e-4, atol=1e-3)
+
+
+def test_service_pallas_direct_replay_consistent(db):
+    """The exactness-replay contract holds on the pallas backend: a direct
+    (unbatched) replay reproduces served answers bit-for-bit."""
+    svc = service_for(db, backend="pallas")
+    pool = make_queries(db, 8, seed=5)
+    wl = make_workload(pool, WorkloadSpec(n_requests=24, knn_frac=0.5,
+                                          k=5, epsilon=2.0, seed=6))
+    with svc:
+        res = run_closed_loop(svc, wl, clients=4)
+        assert res.served == len(wl)
+        assert check_exactness(svc, wl, res) == 0
