@@ -325,7 +325,10 @@ def distributed_knn_query(
     slots beyond the valid count carry d² = +inf and index −1.  ``exact``
     is the AND of every shard's exactness certificate; on False, re-run
     with a larger ``capacity_per_shard`` (``None`` defaults to the full
-    shard size, which can never overflow — always exact).
+    shard size, which can never overflow — always exact).  On the pallas
+    backend the certificate instead comes from the block-boundary
+    near-tie detector (``engine.knn_query_pallas``); on a rare False,
+    re-run with ``backend="xla"``.
 
     ``n_valid`` is optional: padded rows are *always* recognised by the
     sentinel residual ``distributed_build`` stamps on them (the range path

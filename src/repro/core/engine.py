@@ -340,6 +340,21 @@ _KNN_SEED_SAMPLE = 64     # minimum strided-sample size for the seed radius
 # radius tightens to ~0 (exact-duplicate queries).
 _KNN_EPS_SLACK = 1e-4
 _KNN_EPS_ABS = 1e-3
+# Stand-in seed radius for a sample with no information.  When the strided
+# sample holds fewer than k valid rows its k-th distance is +inf; an
+# infinite radius is still sound for the XLA path (the alive mask is ANDed
+# with valid_mask explicitly) but would defeat the fused kernels'
+# sentinel-residual exclusion: C9 compares the PAD_RESIDUAL gap (~1e30)
+# against ε, and "1e30 ≤ inf" re-admits every masked/padded row.  The
+# substitute must upper-bound ANY representable distance — f32 series give
+# d² ≤ ~3.4e38 ⇒ d ≤ ~2e19 — while staying well below the sentinel gap, so
+# it can never exclude a true neighbour yet always keeps the in-kernel kill
+# authoritative.  1e28 leaves two orders of margin on the sentinel side
+# (its slacked square overflows f32 to +inf, which only disables the C10
+# exclusion — a performance matter, never a correctness one).  Finite seed
+# radii pass through untouched: a verified sampled distance is sound at
+# any magnitude and, being ≤ ~2e19, can never reach the sentinel gap.
+_SEED_EPS_MAX = 1e28
 
 
 def _slacked(eps: jnp.ndarray) -> jnp.ndarray:
@@ -356,7 +371,13 @@ def _seed_eps(index: "DeviceIndex", qr: "QueryReprDev", k: int, valid_mask):
     rows): the k-th sampled distance upper-bounds the true k-th distance,
     so it is a sound starting radius.  Shared by :func:`knn_query`,
     :func:`mixed_query` and the fused Pallas variants — one definition so
-    the backends cannot drift on the quantity their parity rests on."""
+    the backends cannot drift on the quantity their parity rests on.
+
+    A non-finite radius (a sample with fewer than k valid rows yields
+    +inf) is replaced by ``_SEED_EPS_MAX``: a huge-but-finite radius
+    (unlike an infinite one) still lets the fused kernels' C9 sentinel
+    residual kill masked/padded rows in-kernel.  Finite radii are never
+    touched — a verified sampled distance is sound at any magnitude."""
     B = index.series.shape[0]
     S = min(B, max(k, _KNN_SEED_SAMPLE))
     sample = (jnp.arange(S, dtype=jnp.int32) * B) // S   # distinct: S ≤ B
@@ -365,7 +386,8 @@ def _seed_eps(index: "DeviceIndex", qr: "QueryReprDev", k: int, valid_mask):
     d2s = jnp.sum(diff * diff, axis=-1)                  # (Q, S)
     if valid_mask is not None:
         d2s = jnp.where(valid_mask[sample][None, :], d2s, jnp.inf)
-    return jnp.sqrt(jnp.maximum(_kth_smallest(d2s, k), 0.0))   # (Q, 1)
+    eps = jnp.sqrt(jnp.maximum(_kth_smallest(d2s, k), 0.0))    # (Q, 1)
+    return jnp.where(jnp.isfinite(eps), eps, _SEED_EPS_MAX)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "capacity", "n_iters"))
@@ -663,29 +685,50 @@ def _query_panels(qr: QueryReprDev, alphabet: int) -> tuple:
     return tuple(kernel_ops.query_panels(w, alphabet) for w in qr.words)
 
 
-def _reverify_rows(index: DeviceIndex, qr: QueryReprDev, idx: jnp.ndarray):
-    """Exact diff²-form distances for candidate rows (−1 → +inf).
+def _reverify_rows(index: DeviceIndex, qr: QueryReprDev, idx: jnp.ndarray,
+                   valid_mask: jnp.ndarray | None = None):
+    """Exact diff²-form distances for candidate rows.
 
     The same expression :func:`compact_verify` evaluates, so the k-NN
     distances the fused path reports are bit-identical to the XLA engine's
     for the same candidate indices.
+
+    Candidates outside ``[0, B)`` re-verify to +inf: −1 marks an empty
+    slot, and an index ≥ B is a padded kernel row — JAX's gather would
+    silently clamp it to row B−1 and hand back a finite bogus distance
+    that could survive the merge.  Rows excluded by ``valid_mask`` are
+    +inf for the same reason: they must neither tighten a k-NN radius nor
+    enter an answer.
     """
-    rows = index.series[jnp.maximum(idx, 0)]          # (Q, C, n)
+    B = index.series.shape[0]
+    safe = jnp.clip(idx, 0, B - 1)
+    rows = index.series[safe]                         # (Q, C, n)
     diff = rows - qr.q[:, None, :]
     d2 = jnp.sum(diff * diff, axis=-1)
-    return jnp.where(idx >= 0, d2, jnp.inf)
+    ok = (idx >= 0) & (idx < B)
+    if valid_mask is not None:
+        ok &= valid_mask[safe]
+    return jnp.where(ok, d2, jnp.inf)
 
 
 @functools.partial(jax.jit, static_argnames=("block_q", "block_b",
                                              "interpret"))
 def _range_pallas_impl(index, qr, eps, valid_mask, block_q, block_b,
                        interpret):
-    return _fused.fused_range_pallas(
+    ans, d2 = _fused.fused_range_pallas(
         index.series, index.norms_sq, index.words,
         _masked_residuals(index, valid_mask),
         qr.q, _query_panels(qr, index.alphabet), qr.residuals, eps,
         levels=index.levels, alphabet=index.alphabet, n=index.n,
         block_q=block_q, block_b=block_b, interpret=interpret)
+    if valid_mask is not None:
+        # The sentinel residual already kills masked rows at any sane ε;
+        # masking the dense outputs too makes their exclusion independent
+        # of the caller's radius magnitude (a ≥ ~1e30 ε would otherwise
+        # defeat the in-kernel C9 sentinel compare).
+        ans &= valid_mask[None, :]
+        d2 = jnp.where(ans, d2, jnp.inf)
+    return ans, d2
 
 
 def range_query_pallas(
@@ -714,8 +757,24 @@ def range_query_pallas(
 # partial list.  A displacement of more than _TOPK_GUARD positions would
 # need > _TOPK_GUARD distinct rows of one block inside the same f32 noise
 # window at the boundary (exact duplicates rank identically in both forms
-# and cannot displace).
+# and cannot displace).  The guard makes a loss improbable; it does NOT by
+# itself prove exactness — the certificate below does, by *detecting* the
+# only remaining loss mode instead of assuming it away.
 _TOPK_GUARD = 4
+# Near-tie window for that certificate.  The merge re-verifies every listed
+# candidate, so the only way the fused k-NN can lose a true neighbour is a
+# row CUT from a FULL block-local partial list by a matmul-vs-diff² rank
+# swap at the k_sel boundary.  A cut row's matmul d² is ≥ every kept
+# slot's, so its re-verified distance is ≥ the block's worst re-verified
+# partial minus the (two-sided) f32 form noise: when every full block's
+# worst partial clears the merged k-th distance by this window, no cut row
+# can re-enter the true top-k and the answer is provably exact.  The window
+# is ~100× wider than the observed matmul-vs-diff² round-off on unit-scale
+# data — deliberately conservative, since widening it can only turn a True
+# certificate into a False one (exact-duplicate ties at the boundary are
+# flagged too, even though identical rows cannot actually displace).
+_TOPK_TIE_REL = 1e-4
+_TOPK_TIE_ABS = 1e-3
 
 
 @functools.partial(jax.jit, static_argnames=("k", "n_iters", "block_q",
@@ -733,7 +792,7 @@ def _knn_pallas_impl(index, qr, k, n_iters, valid_mask, block_q, block_b,
             qr.q, panels, qr.residuals, _slacked(eps),
             levels=index.levels, alphabet=index.alphabet, n=index.n,
             k=k_sel, block_q=block_q, block_b=block_b, interpret=interpret)
-        return idxp, _reverify_rows(index, qr, idxp)
+        return idxp, _reverify_rows(index, qr, idxp, valid_mask)
 
     eps = _seed_eps(index, qr, k, valid_mask)
     for _ in range(max(0, int(n_iters) - 1)):
@@ -741,10 +800,22 @@ def _knn_pallas_impl(index, qr, k, n_iters, valid_mask, block_q, block_b,
         eps = jnp.minimum(eps, jnp.sqrt(_kth_smallest(d2v, k)))
     idxp, d2v = topk_pass(eps)
     nn_idx, nn_d2 = _fused.merge_topk_partials(idxp, d2v, k)
-    # The fused path verifies EVERY cascade survivor (block-local top-k of
-    # the dense masked verify), so the candidate buffer can never
-    # overflow: the certificate is unconditionally True.
-    return nn_idx, nn_d2, jnp.ones((Q,), dtype=bool)
+    # Exactness certificate (see _TOPK_TIE_* above).  Cut rows can only
+    # come from a FULL partial list: a block with an empty (+inf) slot had
+    # fewer cascade survivors than slots, and with k_sel == block_b every
+    # row of the block is listed — nothing can be cut at all.  (The
+    # tightening passes need no such check: ε only ever shrinks to
+    # re-verified distances of real rows, which upper-bound the true k-th
+    # distance whatever their partial lists dropped.)
+    if k_sel >= block_b:
+        exact = jnp.ones((Q,), dtype=bool)
+    else:
+        blk_worst = jnp.max(d2v.reshape(Q, -1, k_sel), axis=-1)  # (Q, nb)
+        kth = nn_d2[:, k - 1:k]                                  # (Q, 1)
+        at_risk = jnp.isfinite(blk_worst) & (
+            blk_worst <= kth * (1.0 + _TOPK_TIE_REL) + _TOPK_TIE_ABS)
+        exact = ~jnp.any(at_risk, axis=-1)
+    return nn_idx, nn_d2, exact
 
 
 def knn_query_pallas(
@@ -757,7 +828,24 @@ def knn_query_pallas(
     :func:`knn_query`, but each pass is ONE database read emitting
     block-local top-k partials (never a (Q, B) distance matrix), merged in
     a cheap epilogue and re-verified in the engine's diff² form.  Returns
-    ``(nn_idx, nn_d2, exact)`` with ``exact`` always True."""
+    ``(nn_idx, nn_d2, exact)``.
+
+    ``exact`` is computed, not assumed: since the merge re-verifies every
+    listed candidate, the only possible loss is a row cut from a *full*
+    block-local partial list by a matmul-vs-diff² near-tie rank swap at
+    the ``k + _TOPK_GUARD`` boundary; the epilogue flags exactly that
+    condition (conservatively — boundary ties between exact duplicates
+    are flagged too) and certifies the rest.  On a False row, re-run via
+    the XLA :func:`knn_query_auto` (the ``backend="xla"`` path) or with a
+    larger ``block_b`` so the partial lists cover more of each block.
+    False is rare: it needs a full list whose worst re-verified distance
+    sits within the f32 noise window of the merged k-th distance.
+
+    Kernel size and compile time grow linearly in k: the in-kernel
+    selection unrolls ``k + _TOPK_GUARD`` min/argmin sweeps per block
+    (see :func:`kernels.fused_query.fused_topk_pallas`), so very large k
+    (≳ 100) belongs on the XLA engine, where the dense top-k is a single
+    ``lax.top_k``."""
     B = index.series.shape[0]
     k_eff = min(int(k), B)
     block_q, block_b = _fused_blocks(index, qr.q.shape[0], k_eff,
@@ -790,15 +878,25 @@ def _mixed_pallas_impl(index, qr, epsilon, is_knn, k, n_iters, valid_mask,
             qr.q, panels, qr.residuals, cascade_eps(eps),
             levels=index.levels, alphabet=index.alphabet, n=index.n,
             k=k_sel, block_q=block_q, block_b=block_b, interpret=interpret)
-        d2v = _reverify_rows(index, qr, idxp)
+        d2v = _reverify_rows(index, qr, idxp, valid_mask)
         tightened = jnp.minimum(eps, jnp.sqrt(_kth_smallest(d2v, k)))
         eps = jnp.where(knn_col, tightened, eps)
 
+    # The final pass is the DENSE range form, so (unlike the dedicated
+    # k-NN path) partial-list truncation cannot lose answers here: the
+    # tightening passes only decide how small ε gets — ε stays a verified
+    # upper bound throughout — and the dense mask at the final slacked ε
+    # necessarily covers the true top-k of every k-NN row.
     ans, d2 = _fused.fused_range_pallas(
         index.series, index.norms_sq, index.words, residuals,
         qr.q, panels, qr.residuals, cascade_eps(eps),
         levels=index.levels, alphabet=index.alphabet, n=index.n,
         block_q=block_q, block_b=block_b, interpret=interpret)
+    if valid_mask is not None:
+        # Radius-independent exclusion of masked rows (the C9 sentinel
+        # handles any sane ε; this also covers a caller-supplied huge ε).
+        ans &= valid_mask[None, :]
+        d2 = jnp.where(ans, d2, jnp.inf)
     idx = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32)[None, :], (Q, B))
     overflow = jnp.zeros((Q,), dtype=bool)
     return idx, ans, d2, overflow
@@ -866,7 +964,9 @@ def knn_query_backend(
     """Backend-dispatched exact k-NN: ``(nn_idx, nn_d2, exact)``.
 
     XLA runs the certificate-escalated :func:`knn_query_auto`; Pallas runs
-    the fused path, whose certificate holds by construction.
+    the fused path, whose certificate is computed by the block-boundary
+    near-tie detector (see :func:`knn_query_pallas` — on a rare False,
+    re-issue the query with ``backend="xla"``).
     """
     if resolve_backend(backend) == "pallas":
         return knn_query_pallas(index, qr, k, n_iters=n_iters,

@@ -273,6 +273,10 @@ def fused_topk_pallas(
     slots).  The global top-k is a subset of the union of block-local
     top-k sets, so callers merge with :func:`merge_topk_partials` — k-NN
     never writes a (Q, B) distance matrix to HBM.
+
+    The selection is a k-times unrolled min/argmin sweep, so the kernel
+    body — and its compile time — grows linearly in k; for very large k
+    the dense XLA ``lax.top_k`` path is the better engine.
     """
     B, Q = series.shape[0], q.shape[0]
     inputs, Qp, Bp = _prep_inputs(series, norms_sq, words, residuals,

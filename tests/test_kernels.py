@@ -264,6 +264,118 @@ def test_fused_knn_valid_mask_excludes_rows():
     assert not np.isin(np.asarray(got_i), banned).any()
 
 
+def test_fused_knn_mostly_padding_shard_exact():
+    # REVIEW regression (high): when the strided seed sample holds fewer
+    # than k valid rows, the seed radius used to come out +inf, which let
+    # the sentinel-residual (masked/padded) rows through the fused cascade
+    # ("1e30 <= inf" passes C9); their finite distances then tightened the
+    # radius below the true k-th VALID distance and the final pass dropped
+    # true neighbours (e.g. [3, -1] instead of [3, 7]) while still
+    # certifying exact=True.  Reachable via distributed_knn_query on a
+    # mostly-padding shard.
+    dev, qr = _fused_case(2, 200, (8, 16), 10)
+    vmask = np.zeros(200, dtype=bool)
+    vmask[[5, 7]] = True          # neither row is in the strided seed sample
+    vm = jnp.asarray(vmask)
+    series = np.asarray(dev.series, np.float32)
+    qs = np.asarray(qr.q, np.float32)
+    for k in (1, 2):
+        got_i, got_d, got_e = knn_query_pallas(
+            dev, qr, k, valid_mask=vm, block_q=8, block_b=128,
+            interpret=True)
+        want_i, want_d, want_e = knn_query_auto(dev, qr, k, valid_mask=vm)
+        assert bool(np.asarray(got_e).all()) and bool(np.asarray(want_e).all())
+        np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+        np.testing.assert_array_equal(np.asarray(got_d), np.asarray(want_d))
+        # Brute force over the valid rows only.
+        d2 = ((series[None, :, :] - qs[:, None, :]) ** 2).sum(-1)
+        d2[:, ~vmask] = np.inf
+        for qi in range(2):
+            order = np.lexsort((np.arange(200), d2[qi]))[:k]
+            np.testing.assert_array_equal(np.asarray(got_i)[qi], order)
+
+    # Same scenario through the mixed dispatch (k-NN rows only).
+    is_knn = jnp.asarray([True, True])
+    eps0 = jnp.zeros((2,), jnp.float32)
+    got = mixed_query_pallas(dev, qr, eps0, is_knn, 2, valid_mask=vm,
+                             block_q=8, block_b=128, interpret=True)
+    want = mixed_query_dense(dev, qr, eps0, is_knn, 2, valid_mask=vm)
+    gki, _ = mixed_topk(got[0], got[2], 2)
+    wki, _ = mixed_topk(want[0], want[2], 2)
+    np.testing.assert_array_equal(np.asarray(gki), np.asarray(wki))
+    assert not np.asarray(got[1])[:, ~vmask].any(), \
+        "masked rows must never enter the dense answer mask"
+
+
+def test_fused_knn_huge_scale_finite_seed_radius():
+    # Follow-up regression: the seed-radius guard substitutes a finite
+    # stand-in ONLY for a non-finite (no-information) radius.  On
+    # un-normalised data whose distances exceed any fixed small ceiling, a
+    # legitimately finite sampled radius must pass through untouched on
+    # both backends — an unconditional clamp here would silently exclude
+    # true neighbours while certifying exact=True.
+    from repro.core.engine import build_device_index
+    rng = np.random.default_rng(1)
+    big = (rng.standard_normal((64, 128)) * 1e16).astype(np.float32)
+    dev = build_device_index(jnp.asarray(big), (8,), 10, normalize=False)
+    qr = represent_queries(jnp.asarray(big[:2] + 1e15), (8,), 10,
+                           normalize=False)
+    want_i, _, want_e = knn_query_auto(dev, qr, 3)
+    got_i, _, got_e = knn_query_pallas(dev, qr, 3, block_q=8, block_b=128,
+                                       interpret=True)
+    d2 = ((big[None, :, :].astype(np.float64)
+           - np.asarray(qr.q)[:, None, :].astype(np.float64)) ** 2).sum(-1)
+    bf = np.stack([np.lexsort((np.arange(64), d2[i]))[:3] for i in range(2)])
+    np.testing.assert_array_equal(np.asarray(want_i), bf)
+    np.testing.assert_array_equal(np.asarray(got_i), bf)
+    assert bool(np.asarray(want_e).all()) and bool(np.asarray(got_e).all())
+
+
+def test_reverify_rows_discards_out_of_range_and_invalid():
+    # REVIEW regression (low): indices >= B (padded kernel rows) used to be
+    # gather-clamped to row B-1, yielding finite bogus distances that could
+    # survive the merge.  They must re-verify to +inf, as must rows an
+    # explicit valid_mask excludes.
+    from repro.core.engine import _reverify_rows
+    dev, qr = _fused_case(1, 64, (8,), 3)
+    idx = jnp.asarray([[0, 5, -1, 63, 64, 200]], jnp.int32)
+    d2 = np.asarray(_reverify_rows(dev, qr, idx))
+    assert np.isfinite(d2[0, [0, 1, 3]]).all()
+    assert np.isinf(d2[0, [2, 4, 5]]).all()
+    ref_d2 = ((np.asarray(dev.series)[[0, 5, 63]]
+               - np.asarray(qr.q)[0][None, :]) ** 2).sum(-1)
+    np.testing.assert_allclose(d2[0, [0, 1, 3]], ref_d2, rtol=1e-6)
+    vmask = np.ones(64, dtype=bool)
+    vmask[5] = False
+    d2m = np.asarray(_reverify_rows(dev, qr, idx, jnp.asarray(vmask)))
+    assert np.isinf(d2m[0, 1]) and np.isfinite(d2m[0, [0, 3]]).all()
+
+
+def test_fused_knn_certificate_flags_boundary_ties():
+    # REVIEW regression (low): > _TOPK_GUARD rows of one block inside the
+    # same noise window at the partial-list boundary — the certificate must
+    # not claim exactness there (the conservative direction; here the ties
+    # are exact duplicates, so the answer itself is still correct).
+    n, alphabet, levels = 128, 10, (8,)
+    rng = np.random.default_rng(7)
+    base = rng.standard_normal(n)
+    rest = base[None, :] + 5.0 * rng.standard_normal((48, n))
+    db = np.concatenate([np.repeat(base[None, :], 16, axis=0), rest])
+    idx = build_index(db, FastSAXConfig(n_segments=levels, alphabet=alphabet),
+                      normalize=False)
+    dev = device_index_from_host(idx)
+    qr = represent_queries(jnp.asarray(base[None, :], jnp.float32), levels,
+                           alphabet, normalize=False)
+    got_i, got_d, got_e = knn_query_pallas(dev, qr, 1, block_q=8,
+                                           block_b=128, interpret=True)
+    # 16 zero-distance rows share one block: the full partial list's worst
+    # re-verified distance ties the merged k-th, so no exactness claim...
+    assert not bool(np.asarray(got_e).any())
+    # ...even though the answer (lowest-index duplicate) is in fact right.
+    assert int(np.asarray(got_i)[0, 0]) == 0
+    assert float(np.asarray(got_d)[0, 0]) == 0.0
+
+
 def test_choose_fused_blocks_respects_vmem():
     bq, bb = ops.choose_fused_blocks(32, 4096, 128, (8, 16), 10)
     assert bq in ops.FUSED_BLOCK_Q and bb in ops.FUSED_BLOCK_B
