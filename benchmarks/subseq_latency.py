@@ -1,0 +1,170 @@
+"""Subsequence search: pruning power, exactness and latency vs brute force.
+
+The workload of DESIGN.md §8: every window of a stream batch is a
+database row under per-window z-normalisation; queries are windows cut
+from the streams plus noise.  Per (ε, k) cell the suite measures
+
+  * **pruning power** — the fraction of windows surviving the C9→C10
+    cascade (``verified_frac``, gated: it must not regress);
+  * **exactness/parity** — engine answers equal the f64 brute-force
+    sliding-window reference (``parity``), k-NN certificates hold
+    (``exact``), and the streaming Pallas kernels match the XLA oracle
+    bit-for-bit (``match_frac``) — all gated outright by
+    ``scripts/bench_gate.py``;
+  * **latency** — wall-clock vs the brute-force reference, recorded as
+    *derived* keys (``wall_us``/``vs_brute``): indicative only, never
+    gated (CI wall-clock is noise).
+
+Record values (the ``us_per_call`` column) are deliberately
+*deterministic* quantities — survivor percentages, f64 reference
+distances, HBM-model ratios — so the bench gate can diff them against
+the committed ``BENCH_subseq_pr5.json`` baseline like the other
+deterministic suites.  The streaming-vs-materialised HBM claim is
+recorded from ``cost_model.subseq_pass_estimate`` (the measured TPU
+counterpart belongs to hardware runs; EXPERIMENTS.md §Subsequence).
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cost_model
+from repro.core import subseq as ss
+from repro.core.fastsax import FastSAXConfig
+from repro.data.timeseries import make_subseq_queries, make_wafer_like
+
+from .common import SMOKE, emit
+
+# Same dataset in both tiers (deterministic record values must match the
+# committed full-tier baseline); only the (ε, k) grid is trimmed.
+N_STREAMS = 8
+STREAM_LEN = 1024
+WINDOW = 128
+STRIDE = 4
+LEVELS = (8, 16)
+ALPHA = 10
+EXCL = 16
+N_QUERIES = 10                       # never trimmed: metrics are means
+
+EPSILONS = (1.0, 2.0) if SMOKE else (1.0, 2.0, 3.0)
+KS = (1, 3) if SMOKE else (1, 3, 5)
+
+
+@functools.lru_cache(maxsize=None)
+def _fixture():
+    streams = make_wafer_like(N_STREAMS, STREAM_LEN, seed=0,
+                              normalize=False)
+    cfg = FastSAXConfig(n_segments=LEVELS, alphabet=ALPHA)
+    t0 = time.perf_counter()
+    hidx = ss.build_subseq_index(streams, cfg, WINDOW, STRIDE)
+    build_s = time.perf_counter() - t0
+    sidx = ss.subseq_device_index(hidx)
+    queries = make_subseq_queries(streams, N_QUERIES, WINDOW, seed=1)
+    qr = ss.represent_subseq_queries(sidx, queries)
+    bf = ss.subseq_brute_force_d2(streams, queries, WINDOW, STRIDE)
+    return streams, sidx, queries, qr, bf, build_s
+
+
+def _timed(fn, reps=3):
+    fn()                              # warm/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    return out, (time.perf_counter() - t0) / reps
+
+
+def main() -> None:
+    from repro.core.engine import cascade_mask
+
+    streams, sidx, queries, qr, bf, build_s = _fixture()
+    W = sidx.n_windows
+    print(f"# subseq: {N_STREAMS}x{STREAM_LEN} streams, w={WINDOW}, "
+          f"stride={STRIDE} -> {W} windows; build {build_s*1e3:.1f} ms "
+          f"(amortised features, DESIGN.md §8)")
+
+    # Brute-force reference wall time (per query, the cost ceiling).
+    _, t_brute = _timed(lambda: ss.subseq_brute_force_d2(
+        streams, queries, WINDOW, STRIDE))
+    t_brute_q = t_brute / N_QUERIES
+
+    # --- range: pruning power + parity vs brute force -----------------------
+    import jax
+
+    for eps in EPSILONS:
+        eps_j = jnp.float32(eps)
+        (mask, d2), t_eng = _timed(
+            lambda e=eps_j: jax.block_until_ready(
+                ss.subseq_range_query(sidx, qr, e, backend="xla")))
+        alive = np.asarray(cascade_mask(sidx.index, qr, eps_j))
+        frac = float(alive.mean())
+        parity = bool(np.array_equal(np.asarray(mask), bf <= eps * eps))
+        t_q = t_eng / N_QUERIES
+        emit(f"subseq/pruning/eps{eps:g}", 100.0 * frac,
+             f"verified_frac={frac:.4f};parity={parity};"
+             f"wall_us={t_q*1e6:.1f};brute_wall_us={t_brute_q*1e6:.1f};"
+             f"vs_brute={t_brute_q/t_q:.2f}x")
+
+    # --- exclusion-zone k-NN: exactness + parity vs brute greedy ------------
+    W_s = sidx.windows_per_stream
+    wid = np.arange(W)
+    order = np.argsort(bf, axis=1, kind="stable")
+    bf_sorted = np.take_along_axis(bf, order, 1)
+    for k in KS:
+        (sel_idx, sel_d2, exact), t_eng = _timed(
+            lambda kk=k: ss.subseq_knn_query(sidx, qr, kk, excl=EXCL,
+                                             backend="xla"))
+        ref_idx, ref_d2 = ss.suppress_trivial_matches(
+            order, bf_sorted, wid // W_s, (wid % W_s) * STRIDE, k, EXCL)
+        parity = bool(np.array_equal(sel_idx, ref_idx))
+        kth = float(np.sqrt(ref_d2[:, k - 1]).mean())   # f64, deterministic
+        t_q = t_eng / N_QUERIES
+        emit(f"subseq/knn/k{k}", 1e3 * kth,
+             f"exact={bool(np.asarray(exact).all())};parity={parity};"
+             f"excl={EXCL};wall_us={t_q*1e6:.1f};"
+             f"vs_brute={t_brute_q/t_q:.2f}x")
+
+    # --- streaming Pallas kernels: bit parity + the HBM-model claim ---------
+    mode = "compiled" if jax.default_backend() == "tpu" else "interpret"
+    eps_col = jnp.asarray(np.linspace(1.0, 3.0, N_QUERIES), jnp.float32)
+    want_m, want_d = ss.subseq_range_query(sidx, qr, eps_col, backend="xla")
+    (got_m, got_d), t_pl = _timed(
+        lambda: ss.subseq_range_query_pallas(sidx, qr, eps_col, block_q=8,
+                                             block_w=128, interpret=None),
+        reps=1)
+    match = float(np.mean(
+        np.all(np.asarray(got_m) == np.asarray(want_m), axis=-1)
+        & np.all(np.asarray(got_d) == np.asarray(want_d), axis=-1)))
+    est = cost_model.subseq_pass_estimate(N_QUERIES, W, WINDOW, STRIDE,
+                                          LEVELS, ALPHA, block_q=8,
+                                          block_w=128)
+    emit("subseq/pallas/range", est["hbm_read_ratio"],
+         f"parity={match == 1.0};match_frac={match:.3f};"
+         f"hbm_stream_mib={est['bytes_hbm']/2**20:.2f};"
+         f"hbm_materialized_mib={est['bytes_hbm_materialized']/2**20:.2f};"
+         f"mode={mode};wall_us={t_pl/N_QUERIES*1e6:.1f}")
+
+    k = KS[0]
+    wi, wd, we = ss.subseq_knn_query(sidx, qr, k, excl=EXCL, backend="xla")
+    (pl_out), t_plk = _timed(
+        lambda: ss.subseq_knn_query(sidx, qr, k, excl=EXCL,
+                                    backend="pallas", block_q=8,
+                                    block_w=128), reps=1)
+    gi, gd, ge = pl_out
+    kmatch = float(np.mean(np.all(gi == wi, axis=-1)
+                           & np.all(gd == wd, axis=-1)))
+    kf = ss.knn_fetch_count(k, EXCL, STRIDE, W)
+    est_k = cost_model.subseq_pass_estimate(N_QUERIES, W, WINDOW, STRIDE,
+                                            LEVELS, ALPHA, block_q=8,
+                                            block_w=128, k=kf)
+    emit("subseq/pallas/knn", est_k["hbm_read_ratio"],
+         f"parity={kmatch == 1.0};match_frac={kmatch:.3f};"
+         f"exact={bool(np.asarray(we).all()) and bool(np.asarray(ge).all())};"
+         f"k={k};fetch={kf};mode={mode};"
+         f"wall_us={t_plk/N_QUERIES*1e6:.1f}")
+
+
+if __name__ == "__main__":
+    main()

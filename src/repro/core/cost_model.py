@@ -193,6 +193,33 @@ def c10_skip_advised(kill_frac: float, n: int, N: int,
 
 
 # ---------------------------------------------------------------------------
+# Fused top-k kernel: unroll budget for the in-kernel selection.
+#
+# ``kernels/fused_query.fused_topk_pallas`` unrolls k_sel = k + guard
+# min/argmin sweeps per database block, so kernel code size and compile
+# time grow *linearly* in k while the XLA engine's dense ``lax.top_k`` is
+# one op at any k.  The per-sweep VPU work (one (block_q, block_b) min +
+# argmin + select) costs roughly what one cascade level costs; past
+# ~100 sweeps the selection dominates the whole pass and the compile-time
+# bill keeps growing with nothing to show for it — the dense XLA path is
+# the better engine there (DESIGN.md §7).  The dispatch layer
+# (``engine.resolve_knn_backend``) consults this advice and demotes
+# ``backend="pallas"`` k-NN to XLA instead of compiling an ever-longer
+# kernel; ``knn_query_pallas`` itself stays directly callable at any k.
+# ---------------------------------------------------------------------------
+
+PALLAS_TOPK_UNROLL_MAX = 100
+
+
+def pallas_topk_demote_advised(k_sel: int) -> bool:
+    """True when an unrolled k_sel-sweep in-kernel selection is expected to
+    cost more (compile time + per-block sweep work) than the XLA dense
+    top-k it would replace.  Purely advisory — demotion never changes
+    answers, both backends are exact."""
+    return int(k_sel) > PALLAS_TOPK_UNROLL_MAX
+
+
+# ---------------------------------------------------------------------------
 # Device latency model for the fused megakernel (kernels/fused_query.py).
 #
 # The block-shape chooser in kernels/ops.py asks this hook to rank the
@@ -235,3 +262,43 @@ def fused_pass_estimate(Q: int, B: int, n: int, levels, alphabet: int,
     return dict(bytes_hbm=float(bytes_hbm), flops_mxu=flops_mxu,
                 ops_vpu=ops_vpu, t_mem_s=t_mem, t_compute_s=t_compute,
                 t_est_s=max(t_mem, t_compute))
+
+
+def subseq_pass_estimate(Q: int, n_windows: int, window: int, stride: int,
+                         levels, alphabet: int, block_q: int = 8,
+                         block_w: int = 128, k: int = 0) -> dict:
+    """Latency estimate for one *streaming* subsequence pass
+    (``kernels/fused_query.fused_subseq_range_pallas``, DESIGN.md §8).
+
+    The database side of each grid step is a stream **segment** of
+    ``(block_w − 1)·stride + window`` samples plus per-window metadata
+    (mu, sd, norms, words, residuals), NOT the ``block_w × window``
+    materialised window matrix — windows exist only in VMEM.  The dict
+    adds ``bytes_hbm_materialized`` (what the window-gather form would
+    stream) and ``hbm_read_ratio`` (materialised / streaming, ≈
+    window/stride for stride ≪ window): the design claim the benchmark
+    suite records and EXPERIMENTS.md §Subsequence reports.
+    """
+    import math
+
+    levels = tuple(int(N) for N in levels)
+    nb = math.ceil(n_windows / max(1, block_w))
+    nq = math.ceil(Q / max(1, block_q))
+    Wp, Qp = nb * block_w, nq * block_q
+    seg_len = (block_w - 1) * stride + window
+    meta_row = (3 + sum(levels) + len(levels)) * 4     # mu, sd, norms + levels
+    q_row_bytes = (window + 2 + len(levels) + alphabet * sum(levels)) * 4
+    bytes_stream = nb * seg_len * 4 + Wp * meta_row + nb * Qp * q_row_bytes
+    bytes_stream += Qp * (2 * nb * k if k else 2 * Wp) * 4
+    bytes_mat = Wp * (window * 4 + meta_row) + nb * Qp * q_row_bytes
+    bytes_mat += Qp * (2 * nb * k if k else 2 * Wp) * 4
+    flops_mxu = 2.0 * Qp * Wp * window                 # the verify matmul
+    ops_vpu = float(Qp * Wp) * (sum(levels) * (alphabet + 2) + 8)
+    ops_vpu += float(Wp) * window * 2                  # in-VMEM z build
+    t_mem = bytes_stream / (HBM_GBPS * 1e9)
+    t_compute = flops_mxu / (MXU_TFLOPS * 1e12) + ops_vpu / (VPU_GOPS * 1e9)
+    return dict(bytes_hbm=float(bytes_stream),
+                bytes_hbm_materialized=float(bytes_mat),
+                hbm_read_ratio=float(bytes_mat) / float(bytes_stream),
+                flops_mxu=flops_mxu, ops_vpu=ops_vpu, t_mem_s=t_mem,
+                t_compute_s=t_compute, t_est_s=max(t_mem, t_compute))

@@ -19,6 +19,7 @@ finite ε — they can never reach the answer set.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Sequence
 
@@ -32,7 +33,8 @@ from .engine import (DeviceIndex, QueryReprDev, build_device_index,
                      cascade_mask, compact_answers, knn_query,
                      knn_query_pallas, mixed_query, mixed_query_pallas,
                      range_query_compact, range_query_pallas,
-                     represent_queries, resolve_backend)
+                     represent_queries, resolve_backend,
+                     resolve_knn_backend)
 
 _PAD_RESIDUAL = 1e30  # sentinel: C9 kills padded rows for any finite epsilon
 
@@ -219,7 +221,9 @@ def distributed_mixed_query(
     n_valid = B if n_valid is None else int(n_valid)
     k_loc = min(int(k), b_loc)
     cap = min(int(capacity_per_shard), b_loc)
-    be = resolve_backend(backend)
+    # The mixed pallas path's tightening passes unroll the k-NN selection,
+    # so large k demotes per shard exactly like distributed_knn_query.
+    be = resolve_knn_backend(backend, k_loc)
     qr = represent_queries(jnp.asarray(queries, dtype=jnp.float32),
                            levels, alphabet, normalize=normalize_queries)
     eps = jnp.asarray(epsilon, dtype=jnp.float32)
@@ -343,7 +347,9 @@ def distributed_knn_query(
     k_loc = min(int(k), b_loc)
     cap = b_loc if capacity_per_shard is None else min(int(capacity_per_shard),
                                                        b_loc)
-    be = resolve_backend(backend)
+    # Large k demotes the per-shard engine to XLA (engine.resolve_knn_backend)
+    # rather than compiling an ever-longer unrolled selection kernel.
+    be = resolve_knn_backend(backend, k_loc)
     qr = represent_queries(jnp.asarray(queries, dtype=jnp.float32),
                            levels, alphabet, normalize=normalize_queries)
 
@@ -431,6 +437,155 @@ def make_data_mesh(n_devices: int | None = None, axis: str = "data") -> Mesh:
     devs = jax.devices()
     n = n_devices or len(devs)
     return Mesh(np.asarray(devs[:n]), (axis,))
+
+
+# ---------------------------------------------------------------------------
+# Stream-sharded subsequence dispatch (DESIGN.md §8).
+#
+# The subsequence workload shards over *streams*: each device owns S/P
+# contiguous streams and derives its own windows locally (the shared f32
+# materialisation of ``core/subseq.device_windows`` runs inside
+# shard_map, so no host ever assembles the global (W, w) window matrix).
+# Because windows are numbered stream-major, the per-shard window rows
+# are contiguous in the global window id space and the result is an
+# ordinary sharded DeviceIndex over windows — every distributed engine
+# above consumes it unchanged, padding killed by the same C9 sentinel.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class DistSubseqIndex:
+    """Sharded windows-as-rows index + the subsequence geometry needed to
+    map window ids back to (stream, start) and to size exclusion zones.
+    ``n_valid`` counts real windows (padded streams sort last, so valid
+    window ids coincide with the single-device canonical layout)."""
+
+    index: DeviceIndex
+    window: int
+    stride: int
+    windows_per_stream: int
+    n_valid: int
+
+
+def distributed_subseq_index(
+    hidx,
+    mesh: Mesh,
+    axis: str = "data",
+) -> DistSubseqIndex:
+    """Build the stream-sharded subsequence index from a host
+    ``core/subseq.SubseqHostIndex``: pad the stream batch to a multiple
+    of the shard count (padded streams' windows carry the sentinel
+    residual), shard streams and their window features contiguously, and
+    materialise each shard's z windows on its own device."""
+    from .subseq import device_windows
+
+    P_sh = mesh.shape[axis]
+    S, n_stream = hidx.streams.shape
+    W_s = hidx.windows_per_stream
+    S_p = (S + P_sh - 1) // P_sh * P_sh
+    window, stride = hidx.window, hidx.stride
+    levels = tuple(lv.n_segments for lv in hidx.levels)
+    alphabet = hidx.config.alphabet
+
+    pad_s = S_p - S
+    pad_w = pad_s * W_s
+    streams_p = np.concatenate(
+        [hidx.streams,
+         np.broadcast_to(np.linspace(-1.0, 1.0, n_stream), (pad_s, n_stream))],
+        axis=0) if pad_s else hidx.streams
+    mu_p = np.concatenate([hidx.mu, np.zeros(pad_w)])
+    sd_p = np.concatenate([hidx.sd, np.ones(pad_w)])
+    res_p, words_p = [], []
+    for li, lv in enumerate(hidx.levels):
+        fill = _PAD_RESIDUAL if li == 0 else 0.0
+        res_p.append(np.concatenate(
+            [lv.residuals, np.full(pad_w, fill)]).astype(np.float32))
+        words_p.append(np.concatenate(
+            [lv.words, np.zeros((pad_w, lv.n_segments), np.int32)]).astype(
+                np.int32))
+
+    def local(streams_loc, mu_loc, sd_loc, residuals_loc, words_loc):
+        series = device_windows(streams_loc, window, stride, mu_loc, sd_loc)
+        return (series, jnp.sum(series * series, axis=-1),
+                residuals_loc, words_loc)
+
+    in_specs = (P(axis, None), P(axis), P(axis),
+                tuple(P(axis) for _ in levels),
+                tuple(P(axis, None) for _ in levels))
+    out_specs = (P(axis, None), P(axis),
+                 tuple(P(axis) for _ in levels),
+                 tuple(P(axis, None) for _ in levels))
+    series, norms, residuals, words = shard_map(
+        local, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=False,
+    )(jnp.asarray(streams_p, jnp.float32), jnp.asarray(mu_p, jnp.float32),
+      jnp.asarray(sd_p, jnp.float32), tuple(jnp.asarray(r) for r in res_p),
+      tuple(jnp.asarray(w) for w in words_p))
+    index = DeviceIndex(series=series, norms_sq=norms, words=words,
+                        residuals=residuals, levels=levels,
+                        alphabet=alphabet)
+    return DistSubseqIndex(index=index, window=window, stride=stride,
+                           windows_per_stream=W_s, n_valid=S * W_s)
+
+
+def distributed_subseq_range_query(
+    dsx: DistSubseqIndex,
+    queries,
+    epsilon,
+    mesh: Mesh,
+    axis: str = "data",
+    capacity_per_shard: int = 128,
+    normalize_queries: bool = True,
+    backend: str = "auto",
+):
+    """Stream-sharded subsequence range query — exactly
+    :func:`distributed_range_query_auto` over the windows-as-rows index
+    (the sentinel residual keeps padded-stream windows out at any finite
+    ε).  Answers are global window ids; map through
+    ``(wid // windows_per_stream, (wid % windows_per_stream) · stride)``.
+    """
+    return distributed_range_query_auto(
+        dsx.index, queries, epsilon, mesh, axis=axis,
+        capacity_per_shard=capacity_per_shard,
+        normalize_queries=normalize_queries, backend=backend)
+
+
+def distributed_subseq_knn_query(
+    dsx: DistSubseqIndex,
+    queries,
+    k: int,
+    mesh: Mesh,
+    excl: int | None = None,
+    axis: str = "data",
+    capacity_per_shard: int | None = None,
+    n_iters: int = 2,
+    normalize_queries: bool = True,
+    backend: str = "auto",
+):
+    """Exact exclusion-zone k-NN over the stream-sharded windows.
+
+    Fetches the provably sufficient ``subseq.knn_fetch_count`` candidates
+    through :func:`distributed_knn_query` (local top-k per shard, merged
+    ascending by (d², global index) — the order the greedy suppression
+    needs) and applies the trivial-match suppression on the host, exactly
+    like the single-device ``subseq.subseq_knn_query``.  Returns
+    ``(sel_idx (Q, k), sel_d2 (Q, k), exact (Q,))`` host arrays.
+    """
+    from .subseq import knn_fetch_count, suppress_trivial_matches
+
+    excl = (dsx.window // 2) if excl is None else int(excl)
+    kf = knn_fetch_count(k, excl, dsx.stride, dsx.n_valid)
+    nn_idx, nn_d2, exact = distributed_knn_query(
+        dsx.index, queries, kf, mesh, axis=axis,
+        capacity_per_shard=capacity_per_shard, n_iters=n_iters,
+        normalize_queries=normalize_queries, n_valid=dsx.n_valid,
+        backend=backend)
+    W_s = dsx.windows_per_stream
+    wid = np.arange(dsx.index.series.shape[0])
+    sel_idx, sel_d2 = suppress_trivial_matches(
+        np.asarray(nn_idx), np.asarray(nn_d2), wid // W_s,
+        (wid % W_s) * dsx.stride, int(k), excl)
+    return sel_idx, sel_d2, np.asarray(exact)
 
 
 # ---------------------------------------------------------------------------

@@ -30,6 +30,7 @@ import numpy as np
 
 from ..kernels import fused_query as _fused
 from ..kernels import ops as kernel_ops
+from . import cost_model as _cost_model
 from .fastsax import FastSAXIndex
 from .paa import paa, znormalize
 from .polyfit import linfit_residual
@@ -390,6 +391,44 @@ def _seed_eps(index: "DeviceIndex", qr: "QueryReprDev", k: int, valid_mask):
     return jnp.where(jnp.isfinite(eps), eps, _SEED_EPS_MAX)
 
 
+def _cascade_eps(eps: jnp.ndarray, knn_col=None) -> jnp.ndarray:
+    """Per-row cascade radius: k-NN rows carry the f32 slack (their bound
+    tightens towards the true distance), range rows use the caller's ε
+    verbatim so the survivor set — and the overflow flag — match the
+    dedicated range path.  ``knn_col=None`` means every row is k-NN (the
+    dedicated engines)."""
+    if knn_col is None:
+        return _slacked(eps)
+    return jnp.where(knn_col, _slacked(eps), eps)
+
+
+def _tighten_eps(
+    index: "DeviceIndex", qr: "QueryReprDev", eps: jnp.ndarray, k: int,
+    capacity: int, n_iters: int, valid_mask, knn_col=None,
+) -> jnp.ndarray:
+    """The shared promise-ordered k-NN tightening passes (DESIGN.md §1.2).
+
+    Promise = small level-0 residual gap (the same O(1) lower bound the
+    host engine seeds from).  Ordering the limited verify slots by promise
+    makes ε collapse to ≈ the true k-th distance in one pass even when the
+    survivor set overflows capacity; ε stays a verified upper bound
+    throughout, so every pass is sound.  One definition serves both the
+    dedicated :func:`knn_query` and the mixed :func:`mixed_query` paths
+    (``knn_col`` selects which rows tighten — range rows keep the caller's
+    ε), so the two cannot drift.
+    """
+    gap0 = jnp.abs(index.residuals[0][None, :] - qr.residuals[0][:, None])
+    for _ in range(max(0, int(n_iters) - 1)):
+        alive = cascade_mask(index, qr, _cascade_eps(eps, knn_col))
+        if valid_mask is not None:
+            alive &= valid_mask[None, :]
+        _, _, d2 = compact_verify(index, qr, alive, capacity,
+                                  order_key=-gap0)
+        tight = jnp.minimum(eps, jnp.sqrt(_kth_smallest(d2, k)))
+        eps = tight if knn_col is None else jnp.where(knn_col, tight, eps)
+    return eps
+
+
 @functools.partial(jax.jit, static_argnames=("k", "capacity", "n_iters"))
 def knn_query(
     index: DeviceIndex,
@@ -434,22 +473,10 @@ def knn_query(
     eps = _seed_eps(index, qr, k, valid_mask)            # (Q, 1)
 
     # --- tightening passes: verify the most *promising* survivors ----------
-    # Promise = small level-0 residual gap (the same O(1) lower bound the
-    # host engine seeds from).  Ordering the limited verify slots by
-    # promise makes ε collapse to ≈ the true k-th distance in one pass even
-    # when the survivor set overflows capacity; ε stays a verified upper
-    # bound throughout, so every pass is sound.
-    gap0 = jnp.abs(index.residuals[0][None, :] - qr.residuals[0][:, None])
-    for _ in range(max(0, int(n_iters) - 1)):
-        alive = cascade_mask(index, qr, _slacked(eps))
-        if valid_mask is not None:
-            alive &= valid_mask[None, :]
-        _, _, d2 = compact_verify(index, qr, alive, capacity,
-                                  order_key=-gap0)
-        eps = jnp.minimum(eps, jnp.sqrt(_kth_smallest(d2, k)))
+    eps = _tighten_eps(index, qr, eps, k, capacity, n_iters, valid_mask)
 
     # --- final pass: low-index compaction for deterministic tie-breaks -----
-    alive = cascade_mask(index, qr, _slacked(eps))
+    alive = cascade_mask(index, qr, _cascade_eps(eps))
     if valid_mask is not None:
         alive &= valid_mask[None, :]
     idx, valid, d2 = compact_verify(index, qr, alive, capacity)
@@ -512,26 +539,14 @@ def mixed_query(
     knn_col = is_knn.reshape(Q, 1)
     eps_req = _eps_qcol(epsilon, Q)
 
-    # Seed radius for the k-NN rows (range rows keep the caller's ε).
+    # Seed radius for the k-NN rows (range rows keep the caller's ε); the
+    # shared _tighten_eps/_cascade_eps helpers then treat the two row
+    # kinds exactly like the dedicated engines do.
     eps = jnp.where(knn_col, _seed_eps(index, qr, k, valid_mask), eps_req)
+    eps = _tighten_eps(index, qr, eps, k, capacity, n_iters, valid_mask,
+                       knn_col=knn_col)
 
-    def cascade_eps(e):
-        # k-NN rows need the f32 slack (their bound tightens towards the
-        # true distance); range rows use the caller's ε verbatim so the
-        # survivor set — and the overflow flag — match range_query_compact.
-        return jnp.where(knn_col, _slacked(e), e)
-
-    gap0 = jnp.abs(index.residuals[0][None, :] - qr.residuals[0][:, None])
-    for _ in range(max(0, int(n_iters) - 1)):
-        alive = cascade_mask(index, qr, cascade_eps(eps))
-        if valid_mask is not None:
-            alive &= valid_mask[None, :]
-        _, _, d2 = compact_verify(index, qr, alive, capacity,
-                                  order_key=-gap0)
-        tightened = jnp.minimum(eps, jnp.sqrt(_kth_smallest(d2, k)))
-        eps = jnp.where(knn_col, tightened, eps)
-
-    alive = cascade_mask(index, qr, cascade_eps(eps))
+    alive = cascade_mask(index, qr, _cascade_eps(eps, knn_col))
     if valid_mask is not None:
         alive &= valid_mask[None, :]
     idx, valid, d2 = compact_verify(index, qr, alive, capacity)
@@ -651,6 +666,24 @@ def resolve_backend(backend: str = "auto") -> str:
     return backend
 
 
+def resolve_knn_backend(backend: str, k: int) -> str:
+    """:func:`resolve_backend` plus the top-k unroll demotion (DESIGN.md
+    §7): the fused k-NN kernel unrolls ``k + _TOPK_GUARD`` min/argmin
+    sweeps per database block, so its code size and compile time grow
+    linearly in k while the XLA dense ``lax.top_k`` is one op at any k.
+    When the unroll exceeds the cost-model-advised threshold
+    (``cost_model.PALLAS_TOPK_UNROLL_MAX``, ~100) a Pallas selection is
+    demoted to the XLA engine instead of compiling an ever-longer kernel.
+    Demotion never changes answers — both backends are exact — and
+    :func:`knn_query_pallas` stays directly callable at any k for
+    callers that want the kernel regardless."""
+    be = resolve_backend(backend)
+    if be == "pallas" and _cost_model.pallas_topk_demote_advised(
+            int(k) + _TOPK_GUARD):
+        return "xla"
+    return be
+
+
 def _fused_blocks(index: DeviceIndex, Q: int, k: int = 0,
                   block_q: int | None = None, block_b: int | None = None):
     if block_q is None or block_b is None:
@@ -711,6 +744,20 @@ def _reverify_rows(index: DeviceIndex, qr: QueryReprDev, idx: jnp.ndarray,
     return jnp.where(ok, d2, jnp.inf)
 
 
+def _mask_dense(ans: jnp.ndarray, d2: jnp.ndarray, valid_mask):
+    """Radius-independent exclusion of masked rows from a dense (Q, B)
+    answer/distance pair — the shared epilogue of every fused dense form.
+
+    The sentinel residual already kills masked rows in-kernel at any sane
+    ε; masking the dense outputs too makes their exclusion independent of
+    the caller's radius magnitude (a ≥ ~1e30 ε would otherwise defeat the
+    in-kernel C9 sentinel compare)."""
+    if valid_mask is None:
+        return ans, d2
+    ans = ans & valid_mask[None, :]
+    return ans, jnp.where(ans, d2, jnp.inf)
+
+
 @functools.partial(jax.jit, static_argnames=("block_q", "block_b",
                                              "interpret"))
 def _range_pallas_impl(index, qr, eps, valid_mask, block_q, block_b,
@@ -721,14 +768,7 @@ def _range_pallas_impl(index, qr, eps, valid_mask, block_q, block_b,
         qr.q, _query_panels(qr, index.alphabet), qr.residuals, eps,
         levels=index.levels, alphabet=index.alphabet, n=index.n,
         block_q=block_q, block_b=block_b, interpret=interpret)
-    if valid_mask is not None:
-        # The sentinel residual already kills masked rows at any sane ε;
-        # masking the dense outputs too makes their exclusion independent
-        # of the caller's radius magnitude (a ≥ ~1e30 ε would otherwise
-        # defeat the in-kernel C9 sentinel compare).
-        ans &= valid_mask[None, :]
-        d2 = jnp.where(ans, d2, jnp.inf)
-    return ans, d2
+    return _mask_dense(ans, d2, valid_mask)
 
 
 def range_query_pallas(
@@ -777,44 +817,67 @@ _TOPK_TIE_REL = 1e-4
 _TOPK_TIE_ABS = 1e-3
 
 
+def _fused_tighten_eps(index, qr, eps, k, k_sel, n_iters, valid_mask,
+                       residuals, panels, block_q, block_b, interpret,
+                       knn_col=None):
+    """The fused-backend twin of :func:`_tighten_eps`: each tightening
+    pass is one ``fused_topk_pallas`` database read whose re-verified
+    partials shrink the k-NN rows' radius.  Shared by the dedicated
+    (:func:`knn_query_pallas`) and mixed (:func:`mixed_query_pallas`)
+    paths — ``knn_col`` selects which rows tighten, exactly the
+    :func:`_tighten_eps` convention — so the two cannot drift."""
+    for _ in range(max(0, int(n_iters) - 1)):
+        idxp, _ = _fused.fused_topk_pallas(
+            index.series, index.norms_sq, index.words, residuals,
+            qr.q, panels, qr.residuals, _cascade_eps(eps, knn_col),
+            levels=index.levels, alphabet=index.alphabet, n=index.n,
+            k=k_sel, block_q=block_q, block_b=block_b, interpret=interpret)
+        d2v = _reverify_rows(index, qr, idxp, valid_mask)
+        tight = jnp.minimum(eps, jnp.sqrt(_kth_smallest(d2v, k)))
+        eps = tight if knn_col is None else jnp.where(knn_col, tight, eps)
+    return eps
+
+
+def _topk_exact_certificate(d2v: jnp.ndarray, nn_d2: jnp.ndarray, k: int,
+                            k_sel: int, block_b: int) -> jnp.ndarray:
+    """Exactness certificate for a merged block-local top-k (see
+    _TOPK_TIE_* above).  Cut rows can only come from a FULL partial list:
+    a block with an empty (+inf) slot had fewer cascade survivors than
+    slots, and with ``k_sel == block_b`` every row of the block is listed
+    — nothing can be cut at all.  (The tightening passes need no such
+    check: ε only ever shrinks to re-verified distances of real rows,
+    which upper-bound the true k-th distance whatever their partial lists
+    dropped.)  Shared by :func:`knn_query_pallas` and the streaming
+    subsequence form (``core/subseq.py``)."""
+    Q = d2v.shape[0]
+    if k_sel >= block_b:
+        return jnp.ones((Q,), dtype=bool)
+    blk_worst = jnp.max(d2v.reshape(Q, -1, k_sel), axis=-1)  # (Q, nb)
+    kth = nn_d2[:, k - 1:k]                                  # (Q, 1)
+    at_risk = jnp.isfinite(blk_worst) & (
+        blk_worst <= kth * (1.0 + _TOPK_TIE_REL) + _TOPK_TIE_ABS)
+    return ~jnp.any(at_risk, axis=-1)
+
+
 @functools.partial(jax.jit, static_argnames=("k", "n_iters", "block_q",
                                              "block_b", "interpret"))
 def _knn_pallas_impl(index, qr, k, n_iters, valid_mask, block_q, block_b,
                      interpret):
-    Q = qr.q.shape[0]
     panels = _query_panels(qr, index.alphabet)
     residuals = _masked_residuals(index, valid_mask)
     k_sel = min(k + _TOPK_GUARD, block_b)
 
-    def topk_pass(eps):
-        idxp, _ = _fused.fused_topk_pallas(
-            index.series, index.norms_sq, index.words, residuals,
-            qr.q, panels, qr.residuals, _slacked(eps),
-            levels=index.levels, alphabet=index.alphabet, n=index.n,
-            k=k_sel, block_q=block_q, block_b=block_b, interpret=interpret)
-        return idxp, _reverify_rows(index, qr, idxp, valid_mask)
-
     eps = _seed_eps(index, qr, k, valid_mask)
-    for _ in range(max(0, int(n_iters) - 1)):
-        _, d2v = topk_pass(eps)
-        eps = jnp.minimum(eps, jnp.sqrt(_kth_smallest(d2v, k)))
-    idxp, d2v = topk_pass(eps)
+    eps = _fused_tighten_eps(index, qr, eps, k, k_sel, n_iters, valid_mask,
+                             residuals, panels, block_q, block_b, interpret)
+    idxp, _ = _fused.fused_topk_pallas(
+        index.series, index.norms_sq, index.words, residuals,
+        qr.q, panels, qr.residuals, _cascade_eps(eps),
+        levels=index.levels, alphabet=index.alphabet, n=index.n,
+        k=k_sel, block_q=block_q, block_b=block_b, interpret=interpret)
+    d2v = _reverify_rows(index, qr, idxp, valid_mask)
     nn_idx, nn_d2 = _fused.merge_topk_partials(idxp, d2v, k)
-    # Exactness certificate (see _TOPK_TIE_* above).  Cut rows can only
-    # come from a FULL partial list: a block with an empty (+inf) slot had
-    # fewer cascade survivors than slots, and with k_sel == block_b every
-    # row of the block is listed — nothing can be cut at all.  (The
-    # tightening passes need no such check: ε only ever shrinks to
-    # re-verified distances of real rows, which upper-bound the true k-th
-    # distance whatever their partial lists dropped.)
-    if k_sel >= block_b:
-        exact = jnp.ones((Q,), dtype=bool)
-    else:
-        blk_worst = jnp.max(d2v.reshape(Q, -1, k_sel), axis=-1)  # (Q, nb)
-        kth = nn_d2[:, k - 1:k]                                  # (Q, 1)
-        at_risk = jnp.isfinite(blk_worst) & (
-            blk_worst <= kth * (1.0 + _TOPK_TIE_REL) + _TOPK_TIE_ABS)
-        exact = ~jnp.any(at_risk, axis=-1)
+    exact = _topk_exact_certificate(d2v, nn_d2, k, k_sel, block_b)
     return nn_idx, nn_d2, exact
 
 
@@ -866,21 +929,10 @@ def _mixed_pallas_impl(index, qr, epsilon, is_knn, k, n_iters, valid_mask,
     residuals = _masked_residuals(index, valid_mask)
     eps = jnp.where(knn_col, _seed_eps(index, qr, k, valid_mask), eps_req)
 
-    def cascade_eps(e):
-        # k-NN rows carry the f32 slack, range rows the caller's ε —
-        # exactly mixed_query's convention.
-        return jnp.where(knn_col, _slacked(e), e)
-
     k_sel = min(k + _TOPK_GUARD, block_b)
-    for _ in range(max(0, int(n_iters) - 1)):
-        idxp, _ = _fused.fused_topk_pallas(
-            index.series, index.norms_sq, index.words, residuals,
-            qr.q, panels, qr.residuals, cascade_eps(eps),
-            levels=index.levels, alphabet=index.alphabet, n=index.n,
-            k=k_sel, block_q=block_q, block_b=block_b, interpret=interpret)
-        d2v = _reverify_rows(index, qr, idxp, valid_mask)
-        tightened = jnp.minimum(eps, jnp.sqrt(_kth_smallest(d2v, k)))
-        eps = jnp.where(knn_col, tightened, eps)
+    eps = _fused_tighten_eps(index, qr, eps, k, k_sel, n_iters, valid_mask,
+                             residuals, panels, block_q, block_b, interpret,
+                             knn_col=knn_col)
 
     # The final pass is the DENSE range form, so (unlike the dedicated
     # k-NN path) partial-list truncation cannot lose answers here: the
@@ -889,14 +941,10 @@ def _mixed_pallas_impl(index, qr, epsilon, is_knn, k, n_iters, valid_mask,
     # necessarily covers the true top-k of every k-NN row.
     ans, d2 = _fused.fused_range_pallas(
         index.series, index.norms_sq, index.words, residuals,
-        qr.q, panels, qr.residuals, cascade_eps(eps),
+        qr.q, panels, qr.residuals, _cascade_eps(eps, knn_col),
         levels=index.levels, alphabet=index.alphabet, n=index.n,
         block_q=block_q, block_b=block_b, interpret=interpret)
-    if valid_mask is not None:
-        # Radius-independent exclusion of masked rows (the C9 sentinel
-        # handles any sane ε; this also covers a caller-supplied huge ε).
-        ans &= valid_mask[None, :]
-        d2 = jnp.where(ans, d2, jnp.inf)
+    ans, d2 = _mask_dense(ans, d2, valid_mask)
     idx = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32)[None, :], (Q, B))
     overflow = jnp.zeros((Q,), dtype=bool)
     return idx, ans, d2, overflow
@@ -966,9 +1014,11 @@ def knn_query_backend(
     XLA runs the certificate-escalated :func:`knn_query_auto`; Pallas runs
     the fused path, whose certificate is computed by the block-boundary
     near-tie detector (see :func:`knn_query_pallas` — on a rare False,
-    re-issue the query with ``backend="xla"``).
+    re-issue the query with ``backend="xla"``).  Large k auto-demotes to
+    XLA (:func:`resolve_knn_backend`): past the ~100-sweep unroll
+    threshold the fused selection costs more to compile than it saves.
     """
-    if resolve_backend(backend) == "pallas":
+    if resolve_knn_backend(backend, k) == "pallas":
         return knn_query_pallas(index, qr, k, n_iters=n_iters,
                                 valid_mask=valid_mask, **pallas_kw)
     return knn_query_auto(index, qr, k, capacity=capacity, n_iters=n_iters,
@@ -984,9 +1034,14 @@ def mixed_query_backend(
 
     Both backends carry the exact answer set; XLA in the compact
     capacity-escalated layout (:func:`mixed_query_auto`), Pallas in the
-    dense overflow-free layout (:func:`mixed_query_pallas`).
+    dense overflow-free layout (:func:`mixed_query_pallas`).  The mixed
+    Pallas path's tightening passes unroll the same ``k + _TOPK_GUARD``
+    selection as the dedicated k-NN kernel, so large k demotes to XLA
+    under the same :func:`resolve_knn_backend` advice — a deterministic
+    function of (backend, k), so every batch of a (Q, k) bucket takes
+    the same float path.
     """
-    if resolve_backend(backend) == "pallas":
+    if resolve_knn_backend(backend, k) == "pallas":
         return mixed_query_pallas(index, qr, epsilon, is_knn, k,
                                   n_iters=n_iters, valid_mask=valid_mask,
                                   **pallas_kw)

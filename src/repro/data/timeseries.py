@@ -95,6 +95,27 @@ def make_queries(
     return znormalize_np(q)
 
 
+def make_subseq_queries(
+    streams: np.ndarray,
+    n_queries: int,
+    window: int,
+    noise: float = 0.05,
+    seed: int = 1,
+) -> np.ndarray:
+    """Window-length queries cut from random stream positions + noise —
+    the subsequence-matching regime (``core/subseq.py``).  Returned RAW:
+    the engines z-normalise per query, matching the database side's
+    per-window z-normalisation."""
+    rng = np.random.default_rng(seed)
+    streams = np.asarray(streams)
+    S, n = streams.shape
+    rows = rng.integers(0, S, size=n_queries)
+    starts = rng.integers(0, n - window + 1, size=n_queries)
+    q = np.stack([streams[r, a:a + window]
+                  for r, a in zip(rows, starts)])
+    return q + noise * rng.standard_normal(q.shape)
+
+
 def load_ucr(path: str) -> tuple[np.ndarray, np.ndarray]:
     """Read the standard UCR text format: one series per line,
     ``label, v1, v2, ...`` (comma or whitespace separated)."""

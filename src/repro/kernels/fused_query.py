@@ -100,12 +100,19 @@ def _cascade_alive(eps, qlv, dlv, *, levels, alphabet, n):
     return alive
 
 
-def _verify_d2(q_ref, qn_ref, series_ref, norms_ref):
-    """(block_q, block_b) squared distances — the engine's matmul form."""
-    cross = jnp.dot(q_ref[...], series_ref[...].T,
-                    preferred_element_type=jnp.float32)
-    d2 = qn_ref[...] - 2.0 * cross + norms_ref[...][:, 0][None, :]
+def _verify_arrays(q, qn, series, norms):
+    """(block_q, block_b) squared distances — the engine's matmul form.
+    Takes VMEM-resident arrays so both the whole-series kernels (series
+    read from HBM) and the streaming subsequence kernels (windows built
+    in VMEM) share one verify expression."""
+    cross = jnp.dot(q, series.T, preferred_element_type=jnp.float32)
+    d2 = qn - 2.0 * cross + norms[:, 0][None, :]
     return jnp.maximum(d2, 0.0)
+
+
+def _verify_d2(q_ref, qn_ref, series_ref, norms_ref):
+    return _verify_arrays(q_ref[...], qn_ref[...], series_ref[...],
+                          norms_ref[...])
 
 
 def _fused_range_kernel(*refs, levels, alphabet, n):
@@ -120,6 +127,24 @@ def _fused_range_kernel(*refs, levels, alphabet, n):
     d2_ref[...] = jnp.where(ans, d2, jnp.inf)
 
 
+def _topk_select(d2m, base, k):
+    """Unrolled k-sweep min/argmin block-local selection (ties resolve to
+    the lowest column, the engine-wide tie-break): (vals (bq, k),
+    idx (bq, k)) with +inf / −1 on empty slots.  Shared by the
+    whole-series and streaming-subsequence top-k kernels.  The unroll is
+    why large k belongs on the XLA engine (cost_model
+    PALLAS_TOPK_UNROLL_MAX)."""
+    cols = jax.lax.broadcasted_iota(jnp.int32, d2m.shape, 1)
+    vals, idxs = [], []
+    for _ in range(k):                               # k static, unrolled
+        v = jnp.min(d2m, axis=-1)                    # (block_q,)
+        am = jnp.argmin(d2m, axis=-1).astype(jnp.int32)  # ties → lowest col
+        vals.append(v)
+        idxs.append(jnp.where(jnp.isfinite(v), base + am, -1))
+        d2m = jnp.where(cols == am[:, None], jnp.inf, d2m)
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1)
+
+
 def _fused_topk_kernel(*refs, levels, alphabet, n, k, block_b):
     (q_ref, qn_ref, eps_ref, qlv, series_ref, norms_ref, dlv,
      (vals_ref, idx_ref)) = _split_refs(refs, len(levels))
@@ -132,16 +157,9 @@ def _fused_topk_kernel(*refs, levels, alphabet, n, k, block_b):
     # bounds the cascade, not the answer values.
     d2m = jnp.where(alive, d2, jnp.inf)
     base = pl.program_id(0) * block_b                # global row offset
-    cols = jax.lax.broadcasted_iota(jnp.int32, d2m.shape, 1)
-    vals, idxs = [], []
-    for _ in range(k):                               # k static, unrolled
-        v = jnp.min(d2m, axis=-1)                    # (block_q,)
-        am = jnp.argmin(d2m, axis=-1).astype(jnp.int32)  # ties → lowest col
-        vals.append(v)
-        idxs.append(jnp.where(jnp.isfinite(v), base + am, -1))
-        d2m = jnp.where(cols == am[:, None], jnp.inf, d2m)
-    vals_ref[...] = jnp.stack(vals, axis=-1)
-    idx_ref[...] = jnp.stack(idxs, axis=-1)
+    vals, idxs = _topk_select(d2m, base, k)
+    vals_ref[...] = vals
+    idx_ref[...] = idxs
 
 
 def _pad_rows(x, block, fill=0.0):
@@ -153,11 +171,9 @@ def _pad_rows(x, block, fill=0.0):
     return jnp.pad(x, pad, constant_values=fill)
 
 
-def _common_specs(levels, alphabet, n, block_q, block_b):
-    """(in_specs, pack) for the shared input layout.  The db-side index
-    maps depend only on the OUTER grid index j, so each database block is
-    fetched from HBM once and stays VMEM-resident across the inner query
-    sweep."""
+def _query_specs(levels, alphabet, n, block_q):
+    """Query-side BlockSpecs (index maps depend only on the INNER grid
+    index i) — shared by every kernel family in this module."""
     in_specs = [
         pl.BlockSpec((block_q, n), lambda j, i: (i, 0)),        # q
         pl.BlockSpec((block_q, 1), lambda j, i: (i, 0)),        # qnorm
@@ -167,6 +183,15 @@ def _common_specs(levels, alphabet, n, block_q, block_b):
         in_specs.append(pl.BlockSpec((block_q, 1), lambda j, i: (i, 0)))
         in_specs.append(
             pl.BlockSpec((block_q, alphabet, N), lambda j, i: (i, 0, 0)))
+    return in_specs
+
+
+def _common_specs(levels, alphabet, n, block_q, block_b):
+    """(in_specs, pack) for the shared input layout.  The db-side index
+    maps depend only on the OUTER grid index j, so each database block is
+    fetched from HBM once and stays VMEM-resident across the inner query
+    sweep."""
+    in_specs = _query_specs(levels, alphabet, n, block_q)
     in_specs.append(pl.BlockSpec((block_b, n), lambda j, i: (j, 0)))  # series
     in_specs.append(pl.BlockSpec((block_b, 1), lambda j, i: (j, 0)))  # norms
     for N in levels:
@@ -175,29 +200,36 @@ def _common_specs(levels, alphabet, n, block_q, block_b):
     return in_specs
 
 
-def _prep_inputs(series, norms_sq, words, residuals, q, q_panels,
-                 q_residuals, eps_col, levels, block_q, block_b):
-    """Pad both axes and assemble the flat input list (see _split_refs)."""
-    B = series.shape[0]
+def _prep_query_inputs(q, q_panels, q_residuals, eps_col, levels, block_q):
+    """Pad the query axis and assemble the query-side input pack."""
     Q = q.shape[0]
     q_p = _pad_rows(q.astype(jnp.float32), block_q)
     qn = jnp.sum(q_p * q_p, axis=-1, keepdims=True)   # engine's qnorm form
     eps_p = _pad_rows(eps_col.astype(jnp.float32).reshape(Q, 1), block_q,
                       fill=PAD_EPSILON)
-    series_p = _pad_rows(series.astype(jnp.float32), block_b)
-    norms_p = _pad_rows(norms_sq.astype(jnp.float32).reshape(B, 1), block_b)
     inputs = [q_p, qn, eps_p]
     for li in range(len(levels)):
         inputs.append(_pad_rows(
             q_residuals[li].astype(jnp.float32).reshape(Q, 1), block_q))
         inputs.append(_pad_rows(q_panels[li].astype(jnp.float32), block_q))
+    return inputs, q_p.shape[0]
+
+
+def _prep_inputs(series, norms_sq, words, residuals, q, q_panels,
+                 q_residuals, eps_col, levels, block_q, block_b):
+    """Pad both axes and assemble the flat input list (see _split_refs)."""
+    B = series.shape[0]
+    inputs, Qp = _prep_query_inputs(q, q_panels, q_residuals, eps_col,
+                                    levels, block_q)
+    series_p = _pad_rows(series.astype(jnp.float32), block_b)
+    norms_p = _pad_rows(norms_sq.astype(jnp.float32).reshape(B, 1), block_b)
     inputs += [series_p, norms_p]
     for li in range(len(levels)):
         inputs.append(_pad_rows(
             residuals[li].astype(jnp.float32).reshape(B, 1), block_b,
             fill=PAD_RESIDUAL))
         inputs.append(_pad_rows(words[li].astype(jnp.int32), block_b))
-    return inputs, q_p.shape[0], series_p.shape[0]
+    return inputs, Qp, series_p.shape[0]
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -311,3 +343,269 @@ def merge_topk_partials(idx: jnp.ndarray, d2: jnp.ndarray, k: int):
     k = min(int(k), d2.shape[-1])
     out_idx = idxs[:, :k]
     return jnp.where(jnp.isfinite(d2s[:, :k]), out_idx, -1), d2s[:, :k]
+
+
+# ---------------------------------------------------------------------------
+# Streaming subsequence kernels (DESIGN.md §8).
+#
+# The database is a batch of long streams; the rows are their length-w
+# windows under per-window z-normalisation.  Gathering the (W, w) window
+# matrix into HBM would re-stream every sample ~w/stride times; instead
+# each grid step loads one stream SEGMENT of (block_w − 1)·stride + w
+# samples plus the per-window metadata (μ, σ, norms, words, residuals —
+# a few values per window), materialises the z windows in VMEM with the
+# same f32 expression the XLA oracle uses (core/subseq.device_windows),
+# and runs the identical cascade + MXU verify while resident.  Answers
+# are bit-identical to the whole-series engines over the materialised
+# windows (tested in tests/test_subseq.py).
+#
+# Window blocks never span streams: each stream's window count is padded
+# up to a multiple of block_w, padded windows carry the C9 sentinel
+# residual (and padded query rows the ε = −1 sentinel), exactly the
+# padding protocol of the kernels above.  Segments are cut OUTSIDE the
+# kernel by one small gather (total ≈ stream bytes + overlap — the
+# HBM-traffic claim cost_model.subseq_pass_estimate quantifies).
+# ---------------------------------------------------------------------------
+
+
+def _subseq_split_refs(refs, n_levels: int):
+    """Inputs: q, qnorm, eps, [qres_l, tq_l]*L,
+               seg, mu, sd, norms, [res_l, words_l]*L; outputs trail."""
+    q_ref, qn_ref, eps_ref = refs[0], refs[1], refs[2]
+    qlv = refs[3:3 + 2 * n_levels]
+    base = 3 + 2 * n_levels
+    seg_ref, mu_ref, sd_ref, norms_ref = refs[base:base + 4]
+    dlv = refs[base + 4:base + 4 + 2 * n_levels]
+    outs = refs[base + 4 + 2 * n_levels:]
+    return (q_ref, qn_ref, eps_ref, qlv, seg_ref, mu_ref, sd_ref,
+            norms_ref, dlv, outs)
+
+
+def _subseq_z_block(seg_ref, mu_ref, sd_ref, *, window, stride, block_w):
+    """(block_w, window) z-normalised windows built from the VMEM-resident
+    segment: column j of the window matrix is a static strided slice of
+    the segment (the query "slides" across the tile), then the shared
+    ``(x − μ)/σ`` normalisation — bit-identical to the materialised rows
+    of ``core/subseq.device_windows``."""
+    seg = seg_ref[...]                               # (1, seg_len)
+    span = (block_w - 1) * stride + 1
+    cols = [seg[0, j:j + span:stride] for j in range(window)]
+    win = jnp.stack(cols, axis=1)                    # (block_w, window)
+    return (win - mu_ref[...]) / sd_ref[...]
+
+
+def _subseq_range_kernel(*refs, levels, alphabet, window, stride, block_w):
+    (q_ref, qn_ref, eps_ref, qlv, seg_ref, mu_ref, sd_ref, norms_ref, dlv,
+     (ans_ref, d2_ref)) = _subseq_split_refs(refs, len(levels))
+    eps = eps_ref[...]
+    alive = _cascade_alive(eps, qlv, dlv,
+                           levels=levels, alphabet=alphabet, n=window)
+    z = _subseq_z_block(seg_ref, mu_ref, sd_ref, window=window,
+                        stride=stride, block_w=block_w)
+    d2 = _verify_arrays(q_ref[...], qn_ref[...], z, norms_ref[...])
+    ans = alive & (d2 <= eps * eps)
+    ans_ref[...] = ans.astype(jnp.int32)
+    d2_ref[...] = jnp.where(ans, d2, jnp.inf)
+
+
+def _subseq_topk_kernel(*refs, levels, alphabet, window, stride, k,
+                        block_w):
+    (q_ref, qn_ref, eps_ref, qlv, seg_ref, mu_ref, sd_ref, norms_ref, dlv,
+     (vals_ref, idx_ref)) = _subseq_split_refs(refs, len(levels))
+    eps = eps_ref[...]
+    alive = _cascade_alive(eps, qlv, dlv,
+                           levels=levels, alphabet=alphabet, n=window)
+    z = _subseq_z_block(seg_ref, mu_ref, sd_ref, window=window,
+                        stride=stride, block_w=block_w)
+    d2 = _verify_arrays(q_ref[...], qn_ref[...], z, norms_ref[...])
+    d2m = jnp.where(alive, d2, jnp.inf)
+    base = pl.program_id(0) * block_w      # PADDED window space (see below)
+    vals, idxs = _topk_select(d2m, base, k)
+    vals_ref[...] = vals
+    idx_ref[...] = idxs
+
+
+def _subseq_layout(streams, window: int, stride: int, block_w: int):
+    """Per-stream window padding + segment plan.
+
+    Returns ``(W_s, W_sp, nb, segments)``: canonical windows per stream,
+    padded windows per stream (multiple of block_w, so blocks never span
+    streams), total block count, and the (nb, seg_len) f32 segment array
+    cut by one gather (positions clipped to the owning stream — the
+    clipped samples feed only sentinel-killed padded windows)."""
+    S, n_stream = streams.shape
+    W_s = (n_stream - window) // stride + 1
+    W_sp = -(-W_s // block_w) * block_w
+    nbs = W_sp // block_w
+    nb = S * nbs
+    seg_len = (block_w - 1) * stride + window
+    flat = streams.astype(jnp.float32).reshape(-1)
+    bidx = jnp.arange(nb, dtype=jnp.int32)
+    s_of = bidx // nbs
+    seg_start = s_of * n_stream + (bidx % nbs) * (block_w * stride)
+    lim = (s_of + 1) * n_stream - 1
+    pos = jnp.clip(seg_start[:, None]
+                   + jnp.arange(seg_len, dtype=jnp.int32)[None, :],
+                   0, lim[:, None])
+    return W_s, W_sp, nb, flat[pos]
+
+
+def _pad_windows(x, S: int, W_s: int, W_sp: int, fill):
+    """Reshape a canonical stream-major per-window array (W, ...) into the
+    padded (S·W_sp, ...) layout the kernel grids over."""
+    x2 = x.reshape(S, W_s, *x.shape[1:])
+    pad = [(0, 0), (0, W_sp - W_s)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x2, pad, constant_values=fill).reshape(
+        S * W_sp, *x.shape[1:])
+
+
+def _subseq_prep(streams, mu, sd, norms_sq, words, residuals,
+                 q, q_panels, q_residuals, eps_col, levels,
+                 window, stride, block_q, block_w):
+    S = streams.shape[0]
+    W = mu.shape[0]
+    q_inputs, Qp = _prep_query_inputs(q, q_panels, q_residuals, eps_col,
+                                      levels, block_q)
+    W_s, W_sp, nb, segments = _subseq_layout(streams, window, stride,
+                                             block_w)
+    f32 = jnp.float32
+    db_inputs = [
+        segments,
+        _pad_windows(mu.astype(f32).reshape(W, 1), S, W_s, W_sp, 0.0),
+        _pad_windows(sd.astype(f32).reshape(W, 1), S, W_s, W_sp, 1.0),
+        _pad_windows(norms_sq.astype(f32).reshape(W, 1), S, W_s, W_sp, 0.0),
+    ]
+    for li in range(len(levels)):
+        db_inputs.append(_pad_windows(
+            residuals[li].astype(f32).reshape(W, 1), S, W_s, W_sp,
+            PAD_RESIDUAL))
+        db_inputs.append(_pad_windows(
+            words[li].astype(jnp.int32), S, W_s, W_sp, 0))
+    return q_inputs + db_inputs, Qp, W_s, W_sp, nb, segments.shape[-1]
+
+
+def _subseq_specs(levels, alphabet, window, seg_len, block_q, block_w):
+    in_specs = _query_specs(levels, alphabet, window, block_q)
+    in_specs.append(pl.BlockSpec((1, seg_len), lambda j, i: (j, 0)))  # seg
+    for _ in range(3):                               # mu, sd, norms
+        in_specs.append(pl.BlockSpec((block_w, 1), lambda j, i: (j, 0)))
+    for N in levels:
+        in_specs.append(pl.BlockSpec((block_w, 1), lambda j, i: (j, 0)))
+        in_specs.append(pl.BlockSpec((block_w, N), lambda j, i: (j, 0)))
+    return in_specs
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "levels", "alphabet", "window", "stride", "block_q", "block_w",
+    "interpret"))
+def fused_subseq_range_pallas(
+    streams: jnp.ndarray,       # (S, n_stream) f32 raw streams
+    mu: jnp.ndarray,            # (W,) f32 per-window mean
+    sd: jnp.ndarray,            # (W,) f32 guarded per-window std
+    norms_sq: jnp.ndarray,      # (W,) f32 ‖z‖² of the z windows
+    words: tuple,               # per level (W, N_l) i32
+    residuals: tuple,           # per level (W,) f32
+    q: jnp.ndarray,             # (Q, window) f32 z-normalised queries
+    q_panels: tuple,            # per level (Q, α, N_l) f32
+    q_residuals: tuple,         # per level (Q,) f32
+    eps_col: jnp.ndarray,       # (Q,) or (Q, 1) f32
+    levels: tuple,
+    alphabet: int,
+    window: int,
+    stride: int,
+    block_q: int = 8,
+    block_w: int = 128,
+    interpret: bool = True,
+):
+    """One-pass streaming subsequence range query: ``(answers (Q, W) bool,
+    d2 (Q, W) f32)`` in canonical stream-major window order — bit-identical
+    to ``engine.range_query`` over the materialised windows (tested)."""
+    S = streams.shape[0]
+    Q, W = q.shape[0], mu.shape[0]
+    inputs, Qp, W_s, W_sp, nb, seg_len = _subseq_prep(
+        streams, mu, sd, norms_sq, words, residuals, q, q_panels,
+        q_residuals, eps_col, levels, window, stride, block_q, block_w)
+    grid = (nb, Qp // block_q)
+    ans, d2 = pl.pallas_call(
+        functools.partial(_subseq_range_kernel, levels=levels,
+                          alphabet=alphabet, window=window, stride=stride,
+                          block_w=block_w),
+        grid=grid,
+        in_specs=_subseq_specs(levels, alphabet, window, seg_len, block_q,
+                               block_w),
+        out_specs=[
+            pl.BlockSpec((block_q, block_w), lambda j, i: (i, j)),
+            pl.BlockSpec((block_q, block_w), lambda j, i: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Qp, S * W_sp), jnp.int32),
+            jax.ShapeDtypeStruct((Qp, S * W_sp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(*inputs)
+    # Padded (S, W_sp) window layout -> canonical (W,) stream-major order.
+    ans = ans[:Q].reshape(Q, S, W_sp)[:, :, :W_s].reshape(Q, W)
+    d2 = d2[:Q].reshape(Q, S, W_sp)[:, :, :W_s].reshape(Q, W)
+    return ans != 0, d2
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "levels", "alphabet", "window", "stride", "k", "block_q", "block_w",
+    "interpret"))
+def fused_subseq_topk_pallas(
+    streams: jnp.ndarray,
+    mu: jnp.ndarray,
+    sd: jnp.ndarray,
+    norms_sq: jnp.ndarray,
+    words: tuple,
+    residuals: tuple,
+    q: jnp.ndarray,
+    q_panels: tuple,
+    q_residuals: tuple,
+    eps_col: jnp.ndarray,
+    levels: tuple,
+    alphabet: int,
+    window: int,
+    stride: int,
+    k: int,
+    block_q: int = 8,
+    block_w: int = 128,
+    interpret: bool = True,
+):
+    """Streaming subsequence top-k: block-local partials ``(idx (Q, nb·k)
+    i32, d2 (Q, nb·k) f32)`` with ``idx`` already mapped to canonical
+    window ids (−1 on empty/padded slots).  Merge with
+    :func:`merge_topk_partials`; the k-NN engine re-verifies candidates
+    in the diff² form exactly like the whole-series fused path."""
+    Q = q.shape[0]
+    inputs, Qp, W_s, W_sp, nb, seg_len = _subseq_prep(
+        streams, mu, sd, norms_sq, words, residuals, q, q_panels,
+        q_residuals, eps_col, levels, window, stride, block_q, block_w)
+    grid = (nb, Qp // block_q)
+    vals, idx = pl.pallas_call(
+        functools.partial(_subseq_topk_kernel, levels=levels,
+                          alphabet=alphabet, window=window, stride=stride,
+                          k=k, block_w=block_w),
+        grid=grid,
+        in_specs=_subseq_specs(levels, alphabet, window, seg_len, block_q,
+                               block_w),
+        out_specs=[
+            pl.BlockSpec((block_q, k), lambda j, i: (i, j)),
+            pl.BlockSpec((block_q, k), lambda j, i: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Qp, nb * k), jnp.float32),
+            jax.ShapeDtypeStruct((Qp, nb * k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(*inputs)
+    # Kernel indices live in the padded (S, W_sp) window space; map them to
+    # canonical stream-major ids and kill padded-tail windows explicitly
+    # (their sentinel residual already excludes them at any finite ε —
+    # this also makes the mapping radius-independent).
+    idx, vals = idx[:Q], vals[:Q]
+    s = idx // W_sp
+    t = idx % W_sp
+    ok = (idx >= 0) & (t < W_s)
+    canon = jnp.where(ok, s * W_s + t, -1)
+    return canon, jnp.where(ok, vals, jnp.inf)

@@ -155,6 +155,51 @@ def choose_fused_blocks(Q: int, B: int, n: int, levels, alphabet: int,
     return best[1], best[2]
 
 
+def subseq_vmem_bytes(block_q: int, block_w: int, window: int, stride: int,
+                      levels, alphabet: int, k: int = 0) -> int:
+    """Conservative VMEM footprint of one streaming-subsequence grid step
+    (``fused_query.fused_subseq_*_pallas``): the stream segment + a few
+    metadata values per window on the database side, plus the transient
+    (block_w, window) z-window build and the select-sweep accumulator."""
+    levels = tuple(int(N) for N in levels)
+    n_lv = len(levels)
+    seg_len = (block_w - 1) * stride + window
+    db = (seg_len + block_w * (3 + sum(levels) + n_lv)) * 4
+    qside = block_q * (window + 2 + n_lv + alphabet * sum(levels)) * 4
+    out = block_q * (2 * k if k else 2 * block_w) * 4
+    acc = (block_q * block_w * (max(levels) + 3)
+           + block_w * window) * 4                 # sweep acc + z build
+    return 2 * (db + qside + out) + acc
+
+
+def choose_subseq_blocks(Q: int, n_windows: int, window: int, stride: int,
+                         levels, alphabet: int, k: int = 0,
+                         vmem: int = VMEM_BYTES):
+    """Pick (block_q, block_w) for the streaming subsequence kernels —
+    VMEM feasibility here, latency ranking by
+    ``core/cost_model.subseq_pass_estimate`` (same split as
+    :func:`choose_fused_blocks`)."""
+    from ..core import cost_model as _cm
+
+    best = None
+    for bq in FUSED_BLOCK_Q:
+        for bw in FUSED_BLOCK_B:
+            if subseq_vmem_bytes(bq, bw, window, stride, levels, alphabet,
+                                 k) > vmem:
+                continue
+            est = _cm.subseq_pass_estimate(
+                Q, n_windows, window, stride, levels, alphabet,
+                block_q=bq, block_w=bw, k=k)
+            if best is None or est["t_est_s"] < best[0]:
+                best = (est["t_est_s"], bq, bw)
+    if best is None:
+        raise ValueError(
+            f"no subseq block shape fits {vmem/2**20:.0f} MiB VMEM for "
+            f"window={window}, stride={stride}, levels={tuple(levels)}, "
+            f"alphabet={alphabet}")
+    return best[1], best[2]
+
+
 # ---------------------------------------------------------------------------
 # Per-kernel wrappers.
 # ---------------------------------------------------------------------------

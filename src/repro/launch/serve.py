@@ -73,6 +73,70 @@ def serve_lm(args):
     print(f"[serve] sample generation (first row): {gen[0][:16].tolist()}")
 
 
+def serve_subseq_search(args):
+    """One-shot stream-sharded *subsequence* search (DESIGN.md §8):
+    index every window of a stream batch across the mesh, then answer
+    windowed range or exclusion-zone k-NN queries.
+
+        PYTHONPATH=src python -m repro.launch.serve --search --subseq \\
+            --streams 8 --stream-len 1024 --stride 4 --knn 3
+    """
+    from ..core.dist_search import (distributed_subseq_index,
+                                    distributed_subseq_knn_query,
+                                    distributed_subseq_range_query,
+                                    make_data_mesh)
+    from ..core.fastsax import FastSAXConfig
+    from ..core.subseq import build_subseq_index
+    from ..data.timeseries import make_subseq_queries, make_wafer_like
+
+    mesh = make_data_mesh()
+    n_dev = len(jax.devices())
+    streams = make_wafer_like(args.streams, args.stream_len, seed=0,
+                              normalize=False)
+    t0 = time.perf_counter()
+    hidx = build_subseq_index(
+        streams, FastSAXConfig(n_segments=(8, 16), alphabet=args.alphabet),
+        args.window, args.stride)
+    dsx = distributed_subseq_index(hidx, mesh)
+    jax.block_until_ready(dsx.index.series)
+    print(f"[subseq] indexed {dsx.n_valid} windows "
+          f"({args.streams}x{args.stream_len}, w={args.window}, "
+          f"s={args.stride}) on {n_dev} shard(s) "
+          f"in {time.perf_counter()-t0:.2f}s")
+    queries = make_subseq_queries(streams, args.queries, args.window, seed=1)
+    excl = None if args.excl < 0 else args.excl
+    if args.knn:
+        t0 = time.perf_counter()
+        sel_idx, sel_d2, exact = distributed_subseq_knn_query(
+            dsx, queries, args.knn, mesh, excl=excl, backend=args.backend)
+        dt = time.perf_counter() - t0
+        W_s = dsx.windows_per_stream
+        for qi in range(min(4, args.queries)):
+            pairs = [f"s{w // W_s}@{(w % W_s) * dsx.stride}:{d:.3f}"
+                     for w, d in zip(sel_idx[qi], np.sqrt(sel_d2[qi]))
+                     if w >= 0]
+            print(f"[subseq-knn] q{qi}: {' '.join(pairs)}")
+        print(f"[subseq-knn] k={args.knn} "
+              f"excl={dsx.window // 2 if excl is None else excl}: "
+              f"{args.queries} queries in {dt*1e3:.1f} ms; "
+              f"exact={bool(exact.all())}")
+        return
+    t0 = time.perf_counter()
+    gidx, ans, d2, overflow = distributed_subseq_range_query(
+        dsx, queries, args.epsilon, mesh, backend=args.backend)
+    jax.block_until_ready(ans)
+    dt = time.perf_counter() - t0
+    ans = np.asarray(ans)
+    gidx = np.asarray(gidx)
+    for qi in range(min(4, args.queries)):
+        hits = sorted(gidx[qi][ans[qi]].tolist())
+        print(f"[subseq] q{qi}: {ans[qi].sum()} windows within "
+              f"eps={args.epsilon} (first: {hits[:6]})")
+    print(f"[subseq] {args.queries} queries in {dt*1e3:.1f} ms "
+          f"({args.queries/dt:.0f} qps); "
+          f"overflow={bool(np.asarray(overflow).any())}")
+
+
 def serve_search(args):
     """FAST_SAX range-query / k-NN service over a sharded database.
 
@@ -169,6 +233,79 @@ def serve_search(args):
               f"(first: {sorted(hits.tolist())[:6]})")
     print(f"[search] {args.queries} queries in {dt*1e3:.1f} ms "
           f"({args.queries/dt:.0f} qps); overflow={bool(np.asarray(overflow).any())}")
+
+
+class _SubseqLoadShim:
+    """Adapts a ``SubseqSearchService`` to the load generator's
+    submit_knn/submit_range/direct_query surface, so ``run_closed_loop``
+    and ``check_exactness`` drive the subsequence request family through
+    the same closed-loop + replay machinery as the whole-series service."""
+
+    def __init__(self, svc):
+        self.svc = svc
+
+    def submit_knn(self, q, k, deadline_ms=None):
+        return self.svc.submit_subseq_knn(q, k, deadline_ms=deadline_ms)
+
+    def submit_range(self, q, eps, deadline_ms=None):
+        return self.svc.submit_subseq_range(q, eps, deadline_ms=deadline_ms)
+
+    def direct_query(self, kind, q, epsilon=0.0, k=0):
+        if kind == "knn":
+            return self.svc.direct_subseq_knn(q, k)
+        return self.svc.direct_subseq_range(q, epsilon)
+
+
+def serve_subseq_service(args):
+    """The online *subsequence* query service: windows-as-rows micro-batch
+    dispatch with exclusion-zone k-NN shaping, driven by the closed-loop
+    load generator with per-request replay verification.
+
+        PYTHONPATH=src python -m repro.launch.serve --serve --subseq \\
+            --streams 8 --stream-len 512 --bench-requests 128 --verify-exact
+    """
+    import json
+
+    from ..data.timeseries import make_subseq_queries, make_wafer_like
+    from ..serve import (ServeConfig, SubseqSearchService, WorkloadSpec,
+                         check_exactness, make_workload, run_closed_loop)
+
+    cfg = ServeConfig(max_batch=args.max_batch, max_queue=args.max_queue,
+                      max_wait_ms=args.max_wait_ms, alphabet=args.alphabet,
+                      default_deadline_ms=args.deadline_ms or None,
+                      backend=args.backend)
+    streams = make_wafer_like(args.streams, args.stream_len, seed=0,
+                              normalize=False)
+    excl = None if args.excl < 0 else args.excl
+    t0 = time.perf_counter()
+    service = SubseqSearchService.from_streams(
+        streams, args.window, args.stride, cfg, excl=excl)
+    print(f"[subseq-serve] indexed {service.sidx.n_windows} windows in "
+          f"{time.perf_counter()-t0:.2f}s (excl={service.excl})")
+    queries = make_subseq_queries(streams, max(args.queries, 16),
+                                  args.window, seed=1)
+    k = args.knn or 3
+    t0 = time.perf_counter()
+    service.warmup(ks=(service._fetch_k(k, service.excl),))
+    print(f"[subseq-serve] warmup {time.perf_counter()-t0:.1f}s")
+    spec = WorkloadSpec(n_requests=args.bench_requests,
+                        knn_frac=args.knn_frac, k=k, epsilon=args.epsilon,
+                        deadline_ms=args.deadline_ms or None)
+    workload = make_workload(queries, spec)
+    shim = _SubseqLoadShim(service)
+    with service:
+        result = run_closed_loop(shim, workload, clients=args.clients,
+                                 deadline_ms=spec.deadline_ms)
+        mismatches = -1
+        if args.verify_exact:
+            mismatches = check_exactness(shim, workload, result)
+    snap = service.stats.snapshot()
+    summary = result.summary(snap)
+    summary["exact_mismatches"] = mismatches
+    print(f"[subseq-serve] {summary['served']}/{summary['requests']} "
+          f"served at {summary['qps']} qps; "
+          f"mean batch {snap.get('mean_batch_size')}")
+    print(f"[serve] summary {json.dumps(summary, sort_keys=True)}")
 
 
 def serve_service(args):
@@ -270,6 +407,22 @@ def main(argv=None):
     ap.add_argument("--queries", type=int, default=16)
     ap.add_argument("--epsilon", type=float, default=2.0)
     ap.add_argument("--alphabet", type=int, default=10)
+    # Subsequence request family (DESIGN.md §8)
+    ap.add_argument("--subseq", action="store_true",
+                    help="with --search/--serve: subsequence workload — "
+                         "index every window of a stream batch; k-NN "
+                         "answers apply the exclusion zone")
+    ap.add_argument("--streams", type=int, default=8,
+                    help="with --subseq: number of streams")
+    ap.add_argument("--stream-len", type=int, default=1024,
+                    help="with --subseq: samples per stream")
+    ap.add_argument("--window", type=int, default=128,
+                    help="with --subseq: window length w")
+    ap.add_argument("--stride", type=int, default=4,
+                    help="with --subseq: window stride")
+    ap.add_argument("--excl", type=int, default=-1,
+                    help="with --subseq: exclusion-zone radius in start "
+                         "positions (-1 = window // 2, 0 = off)")
     ap.add_argument("--backend", default="auto",
                     choices=("auto", "xla", "pallas"),
                     help="search engine backend (--search/--serve): "
@@ -296,9 +449,9 @@ def main(argv=None):
                          "through the direct path and count mismatches")
     args = ap.parse_args(argv)
     if args.serve:
-        serve_service(args)
+        serve_subseq_service(args) if args.subseq else serve_service(args)
     elif args.search:
-        serve_search(args)
+        serve_subseq_search(args) if args.subseq else serve_search(args)
     else:
         serve_lm(args)
 

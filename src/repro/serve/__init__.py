@@ -10,12 +10,13 @@ from .batcher import (FAILED, KIND_KNN, KIND_RANGE, OK, REJECTED_DEADLINE,
                       REJECTED_QUEUE_FULL, MicroBatcher, Request)
 from .loadgen import (LoadResult, WorkloadSpec, check_exactness,
                       make_workload, run_closed_loop, run_sequential)
-from .service import SearchService, ServeConfig
+from .service import SearchService, ServeConfig, SubseqSearchService
 from .stats import StatsTracker
 
 __all__ = [
     "FAILED", "KIND_KNN", "KIND_RANGE", "OK", "REJECTED_DEADLINE",
     "REJECTED_QUEUE_FULL", "MicroBatcher", "Request", "LoadResult",
     "WorkloadSpec", "check_exactness", "make_workload", "run_closed_loop",
-    "run_sequential", "SearchService", "ServeConfig", "StatsTracker",
+    "run_sequential", "SearchService", "ServeConfig",
+    "SubseqSearchService", "StatsTracker",
 ]

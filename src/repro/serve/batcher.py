@@ -53,6 +53,10 @@ class Request:
     epsilon: float = 0.0           # range only
     k: int = 0                     # knn only
     deadline: Optional[float] = None   # absolute time.perf_counter() instant
+    meta: Optional[dict] = None    # service-specific answer-shaping hints
+    #                                (e.g. the subsequence service's
+    #                                exclusion-zone parameters) — opaque to
+    #                                the batcher, read by _postprocess hooks
     t_submit: float = 0.0
     status: str = ""
     ids: Optional[np.ndarray] = None

@@ -40,7 +40,8 @@ import numpy as np
 from ..core.engine import (DeviceIndex, build_device_index,
                            device_index_from_host, mixed_query,
                            mixed_query_dense, mixed_query_pallas,
-                           represent_queries, resolve_backend)
+                           represent_queries, resolve_backend,
+                           resolve_knn_backend)
 from .batcher import (FAILED, KIND_KNN, KIND_RANGE, OK, MicroBatcher,
                       Request)
 from .stats import StatsTracker
@@ -114,7 +115,12 @@ class _SingleBackend:
                                normalize=self.cfg.normalize_queries)
         eps_j = jnp.asarray(eps, jnp.float32)
         knn_j = jnp.asarray(is_knn)
-        if self.backend == "pallas":
+        # Large k buckets demote the fused path to XLA (the unrolled
+        # in-kernel selection grows linearly in k, DESIGN.md §7); the
+        # decision is a pure function of (backend, k bucket), so every
+        # batch — and every direct replay — of a bucket takes the same
+        # float path.
+        if resolve_knn_backend(self.backend, k) == "pallas":
             # One fused megakernel pass per micro-batch: dense layout,
             # no candidate buffer, no capacity escalation (DESIGN.md §7).
             # The jit cache stays keyed on the (Q, k) bucket exactly like
@@ -447,17 +453,28 @@ class SearchService:
             mask = answer_row & np.isfinite(d2_row)
             rows = idx_row[mask]
             dist = np.sqrt(d2_row[mask])
+        rows, dist = self._postprocess(req, rows, dist)
         ids = rows if ids_map is None else ids_map[rows]
         req._resolve(OK, ids=np.asarray(ids, dtype=np.int64),
                      distances=dist.astype(np.float64))
 
+    def _postprocess(self, req: Request, rows, dist):
+        """Answer-shaping hook between the device pass and the response —
+        the base service returns candidates verbatim; subclasses (the
+        subsequence service's exclusion-zone suppression) override.  Runs
+        identically on the batched and direct paths, so the serving
+        exactness contract (replay bit-equality) is preserved."""
+        return rows, dist
+
     # --- unbatched reference path -------------------------------------------
 
     def direct_query(self, kind: str, query, epsilon: float = 0.0,
-                     k: int = 0):
+                     k: int = 0, meta: Optional[dict] = None):
         """One request, one device pass, no queue/bucketing — the
         per-request sequential baseline the benchmarks compare against,
-        and the reference the exactness checks trust."""
+        and the reference the exactness checks trust.  ``meta`` carries
+        the same answer-shaping hints a batched submit would attach, so
+        the replay runs the identical :meth:`_postprocess`."""
         self._maybe_refresh()
         n = self.backend.n
         q = np.asarray(query, dtype=np.float32).reshape(1, n)
@@ -473,6 +490,136 @@ class SearchService:
             idx, answer, d2 = self.backend.dispatch(q, eps, is_knn, kk)
             ids = self._ids
         req = Request(kind=kind, query=q[0], epsilon=epsilon,
-                      k=max(int(k), 1))
+                      k=max(int(k), 1), meta=meta)
         self._finish(req, idx[0], answer[0], d2[0], ids)
         return req.ids, req.distances
+
+
+class SubseqSearchService(SearchService):
+    """Online *subsequence* search: every window of the indexed streams is
+    a database row (DESIGN.md §8), served through the unchanged
+    queue → bucket → mixed-dispatch machinery above.
+
+    Two request families:
+
+      * ``submit_subseq_range(query, ε)`` — every window within ε, ids
+        are window ids (map through :meth:`window_meta`);
+      * ``submit_subseq_knn(query, k, excl)`` — the k nearest windows
+        under trivial-match suppression: the request is batched as an
+        ordinary k-NN at the provably sufficient fetch count
+        (``core/subseq.knn_fetch_count``) and the exclusion-zone greedy
+        runs in the :meth:`_postprocess` hook — identically on the
+        batched and direct paths, so replay exactness holds verbatim.
+
+    The device pass itself is the windows-as-rows mixed engine (the
+    micro-batch path shares jit buckets with every other request); the
+    streaming Pallas kernel remains the engine-level serving form for
+    dedicated subsequence fleets (``core/subseq.subseq_range_query``).
+    """
+
+    def __init__(self, sidx, cfg: ServeConfig = ServeConfig(),
+                 excl: Optional[int] = None):
+        self.sidx = sidx
+        self.excl = (sidx.window // 2) if excl is None else int(excl)
+        super().__init__(_SingleBackend(sidx.index, cfg), cfg)
+
+    # --- construction -------------------------------------------------------
+
+    @classmethod
+    def from_streams(cls, streams, window: int, stride: int = 1,
+                     cfg: ServeConfig = ServeConfig(),
+                     excl: Optional[int] = None) -> "SubseqSearchService":
+        """Cold start: amortised window-feature build over raw streams."""
+        from ..core.fastsax import FastSAXConfig
+        from ..core.subseq import build_subseq_index, subseq_device_index
+
+        hidx = build_subseq_index(
+            np.asarray(streams),
+            FastSAXConfig(n_segments=tuple(cfg.levels),
+                          alphabet=cfg.alphabet),
+            window, stride)
+        return cls(subseq_device_index(hidx), cfg, excl=excl)
+
+    @classmethod
+    def from_store(cls, path, cfg: ServeConfig = ServeConfig(),
+                   excl: Optional[int] = None) -> "SubseqSearchService":
+        """Warm start from a committed ``core/subseq.save_subseq_index``
+        store (a standard index store with the stream columns riding
+        along — O(ms) mmap open, like every other warm start)."""
+        from ..core.subseq import load_subseq_index, subseq_device_index
+
+        return cls(subseq_device_index(load_subseq_index(path)), cfg,
+                   excl=excl)
+
+    # --- submission ---------------------------------------------------------
+
+    def _fetch_k(self, k: int, excl: int) -> int:
+        from ..core.subseq import knn_fetch_count
+        return knn_fetch_count(int(k), excl, self.sidx.stride,
+                               self.sidx.n_windows)
+
+    def submit_subseq_range(self, query, epsilon: float,
+                            deadline_ms: Optional[float] = None) -> Request:
+        """Range answers need no suppression — this is a plain range
+        submit whose ids happen to be window ids."""
+        return self.submit_range(query, epsilon, deadline_ms)
+
+    def submit_subseq_knn(self, query, k: int, excl: Optional[int] = None,
+                          deadline_ms: Optional[float] = None) -> Request:
+        excl = self.excl if excl is None else int(excl)
+        return self._batcher.submit(Request(
+            kind=KIND_KNN, query=np.asarray(query, dtype=np.float32),
+            k=self._fetch_k(k, excl), deadline=self._deadline(deadline_ms),
+            meta={"subseq_k": int(k), "excl": excl}))
+
+    def subseq_range(self, query, epsilon, deadline_ms=None, timeout=60.0):
+        return self.range_query(query, epsilon, deadline_ms, timeout)
+
+    def subseq_knn(self, query, k, excl=None, deadline_ms=None,
+                   timeout=60.0):
+        """Synchronous exclusion-zone k-NN; raises on rejection."""
+        req = self.submit_subseq_knn(query, k, excl, deadline_ms)
+        if req.wait(timeout) != OK:
+            raise RuntimeError(f"subseq knn request {req.status}")
+        return req.ids, req.distances
+
+    # --- direct replay (the exactness reference) ----------------------------
+
+    def direct_subseq_range(self, query, epsilon: float):
+        return self.direct_query(KIND_RANGE, query, epsilon=epsilon)
+
+    def direct_subseq_knn(self, query, k: int, excl: Optional[int] = None):
+        excl = self.excl if excl is None else int(excl)
+        return self.direct_query(
+            KIND_KNN, query, k=self._fetch_k(k, excl),
+            meta={"subseq_k": int(k), "excl": excl})
+
+    # --- answer shaping -----------------------------------------------------
+
+    def _postprocess(self, req: Request, rows, dist):
+        """Exclusion-zone suppression, delegated to THE defining greedy
+        (``core/subseq.suppress_trivial_matches`` — the same code the
+        engine and distributed paths run, so the served answers cannot
+        drift from them).  The candidate list is already ascending by
+        (d², id), so scan *positions* stand in for the distance column:
+        the returned "d2" values are then the kept positions, letting
+        the untouched ``dist`` values pass straight through."""
+        from ..core.subseq import suppress_trivial_matches
+
+        meta = req.meta or {}
+        if req.kind != KIND_KNN or "subseq_k" not in meta:
+            return rows, dist
+        k, excl = int(meta["subseq_k"]), int(meta["excl"])
+        rows = np.asarray(rows)
+        wid = np.arange(self.sidx.n_windows)
+        stream_of, start_of = self.sidx.window_meta(wid)
+        sel_idx, sel_pos = suppress_trivial_matches(
+            rows[None, :],
+            np.arange(rows.size, dtype=np.float64)[None, :],
+            stream_of, start_of, k, excl)
+        pos = sel_pos[0][sel_idx[0] >= 0].astype(int)
+        return rows[pos], dist[pos]
+
+    def window_meta(self, ids):
+        """Window ids -> (stream index, start position) host arrays."""
+        return self.sidx.window_meta(ids)

@@ -1,0 +1,428 @@
+"""Subsequence search subsystem (core/subseq.py, DESIGN.md §8).
+
+Property-style invariants across the whole stack:
+
+  * the amortised cumsum window features equal an independent per-window
+    recompute (znormalize → PAA/discretise → linfit residual);
+  * range and exclusion-zone k-NN answers equal the f64 brute-force
+    sliding-window reference across stride / exclusion / padding cases;
+  * the streaming Pallas kernels are bit-identical to the XLA
+    windows-as-rows oracle (including per-stream padding);
+  * the store round trip restores bit-identical answers and remains a
+    valid plain index store (the lifecycle-reuse claim);
+  * the served path replays exactly through the direct path;
+  * the PR-4 follow-up: large-k Pallas k-NN demotes to XLA.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import cost_model
+from repro.core import engine
+from repro.core import subseq as ss
+from repro.core.fastsax import FastSAXConfig
+from repro.core.paa import paa_np, znormalize_np
+from repro.core.polyfit import linfit_residual_np
+from repro.core.sax import discretize_np
+from repro.data.timeseries import make_subseq_queries, make_wafer_like
+
+LEVELS = (8, 16)
+ALPHA = 10
+WINDOW = 128
+
+
+def _index(n_streams=2, stream_len=384, stride=2, seed=0, window=WINDOW,
+           levels=LEVELS, alphabet=ALPHA):
+    streams = make_wafer_like(n_streams, stream_len, seed=seed,
+                              normalize=False)
+    cfg = FastSAXConfig(n_segments=levels, alphabet=alphabet)
+    hidx = ss.build_subseq_index(streams, cfg, window, stride)
+    return streams, hidx, ss.subseq_device_index(hidx)
+
+
+def _queries(streams, n, window=WINDOW, seed=1):
+    return make_subseq_queries(streams, n, window, seed=seed)
+
+
+def _brute_greedy(bf_d2, W_s, stride, k, excl):
+    """Reference exclusion-zone greedy over the full f64 profile."""
+    W = bf_d2.shape[1]
+    order = np.argsort(bf_d2, axis=1, kind="stable")   # ties -> lowest id
+    wid = np.arange(W)
+    return ss.suppress_trivial_matches(
+        order, np.take_along_axis(bf_d2, order, 1),
+        wid // W_s, (wid % W_s) * stride, k, excl)
+
+
+# ---------------------------------------------------------------------------
+# Offline phase: amortised features == independent per-window recompute.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("stride", [1, 2, 5])
+@pytest.mark.parametrize("window,levels", [(128, (8, 16)), (64, (4, 16))])
+def test_windowed_features_match_per_window_recompute(stride, window,
+                                                      levels):
+    streams, hidx, _ = _index(n_streams=2, stream_len=384, stride=stride,
+                              window=window, levels=levels)
+    W_s = hidx.windows_per_stream
+    wins = np.stack([streams[s, a:a + window]
+                     for s in range(streams.shape[0])
+                     for a in np.arange(W_s) * stride])
+    z = znormalize_np(wins)
+    np.testing.assert_allclose(hidx.mu, wins.mean(-1), atol=1e-10)
+    np.testing.assert_allclose(
+        hidx.sd, np.maximum(wins.std(-1), ss.ZNORM_EPS), atol=1e-10)
+    # Materialised windows == per-window z-normalisation.
+    np.testing.assert_allclose(ss.materialize_windows_np(hidx), z,
+                               rtol=1e-9, atol=1e-9)
+    for li, N in enumerate(hidx.config.levels):
+        np.testing.assert_array_equal(
+            hidx.levels[li].words, discretize_np(paa_np(z, N), ALPHA))
+        np.testing.assert_allclose(
+            hidx.levels[li].residuals, linfit_residual_np(z, N),
+            rtol=1e-7, atol=1e-7)
+
+
+def test_build_rejects_bad_geometry():
+    streams = make_wafer_like(1, 256, seed=0, normalize=False)
+    cfg = FastSAXConfig(n_segments=(8,), alphabet=ALPHA)
+    with pytest.raises(ValueError, match="divide"):
+        ss.build_subseq_index(streams, cfg, window=100, stride=1)
+    with pytest.raises(ValueError, match="longer"):
+        ss.build_subseq_index(streams, cfg, window=512, stride=1)
+    with pytest.raises(ValueError, match="stride"):
+        ss.build_subseq_index(streams, cfg, window=128, stride=0)
+
+
+# ---------------------------------------------------------------------------
+# Online phase vs the f64 brute-force sliding-window reference.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("stride", [1, 3])
+def test_subseq_range_matches_brute_force(stride):
+    streams, hidx, sidx = _index(stride=stride)
+    qs = _queries(streams, 3)
+    qr = ss.represent_subseq_queries(sidx, qs)
+    eps = jnp.asarray([1.0, 2.5, 6.0], jnp.float32)
+    mask, d2 = ss.subseq_range_query(sidx, qr, eps, backend="xla")
+    bf = ss.subseq_brute_force_d2(streams, qs, WINDOW, stride)
+    ref = bf <= np.asarray(eps)[:, None] ** 2
+    np.testing.assert_array_equal(np.asarray(mask), ref)
+    got = np.asarray(d2)[np.asarray(mask)]
+    np.testing.assert_allclose(got, bf[ref], rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("stride,excl", [(1, 0), (1, 64), (2, 32), (3, 8)])
+def test_subseq_knn_exclusion_matches_brute_force(stride, excl):
+    streams, hidx, sidx = _index(stride=stride)
+    qs = _queries(streams, 3)
+    qr = ss.represent_subseq_queries(sidx, qs)
+    k = 3
+    sel_idx, sel_d2, exact = ss.subseq_knn_query(sidx, qr, k, excl=excl,
+                                                 backend="xla")
+    assert bool(np.asarray(exact).all())
+    bf = ss.subseq_brute_force_d2(streams, qs, WINDOW, stride)
+    ref_idx, ref_d2 = _brute_greedy(bf, sidx.windows_per_stream, stride,
+                                    k, excl)
+    np.testing.assert_array_equal(sel_idx, ref_idx)
+    np.testing.assert_allclose(sel_d2, ref_d2, rtol=1e-4, atol=1e-4)
+    # Exclusion-zone invariant: no two kept windows of one stream within
+    # excl start positions.
+    sid, start = sidx.window_meta(sel_idx)
+    for qi in range(sel_idx.shape[0]):
+        kept = [(s, a) for s, a, w in
+                zip(sid[qi], start[qi], sel_idx[qi]) if w >= 0]
+        for i in range(len(kept)):
+            for j in range(i + 1, len(kept)):
+                if kept[i][0] == kept[j][0] and excl > 0:
+                    assert abs(kept[i][1] - kept[j][1]) >= excl
+
+
+def test_subseq_knn_query_on_own_window_is_trivial_match():
+    # A query equal to a database window must return that window at
+    # distance ~0, and suppression must clear its neighbourhood.
+    streams, hidx, sidx = _index(stride=1)
+    W_s = sidx.windows_per_stream
+    a = 37
+    q = streams[1, a:a + WINDOW]
+    qr = ss.represent_subseq_queries(sidx, q)
+    excl = WINDOW // 2
+    sel_idx, sel_d2, exact = ss.subseq_knn_query(sidx, qr, 2, excl=excl,
+                                                 backend="xla")
+    assert bool(np.asarray(exact).all())
+    assert int(sel_idx[0, 0]) == W_s + a          # stream 1, start 37
+    assert float(sel_d2[0, 0]) < 1e-6
+    sid, start = sidx.window_meta(sel_idx)
+    if sel_idx[0, 1] >= 0 and sid[0, 1] == 1:
+        assert abs(int(start[0, 1]) - a) >= excl
+
+
+def test_knn_fetch_count_bound():
+    # Z counts stride-grid positions strictly inside the zone.
+    assert ss.exclusion_zone_span(0, 1) == 1
+    assert ss.exclusion_zone_span(1, 1) == 1      # only the window itself
+    assert ss.exclusion_zone_span(64, 1) == 127
+    assert ss.exclusion_zone_span(64, 2) == 63
+    assert ss.exclusion_zone_span(8, 3) == 5
+    assert ss.knn_fetch_count(1, 64, 1, 10_000) == 1
+    assert ss.knn_fetch_count(3, 64, 2, 10_000) == 3 + 2 * 62
+    assert ss.knn_fetch_count(3, 64, 2, 50) == 50   # capped at W
+
+
+# ---------------------------------------------------------------------------
+# Streaming Pallas kernels: bit-identical to the XLA oracle.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("stride", [1, 3])
+def test_subseq_range_pallas_bit_identical(stride):
+    streams, hidx, sidx = _index(stride=stride)
+    qs = _queries(streams, 3)
+    qr = ss.represent_subseq_queries(sidx, qs)
+    eps = jnp.asarray([1.0, 3.0, 6.0], jnp.float32)
+    want_m, want_d = ss.subseq_range_query(sidx, qr, eps, backend="xla")
+    # block_w=64 exercises per-stream window padding (W_s % 64 != 0).
+    got_m, got_d = ss.subseq_range_query_pallas(sidx, qr, eps, block_q=8,
+                                                block_w=64, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got_m), np.asarray(want_m))
+    np.testing.assert_array_equal(np.asarray(got_d), np.asarray(want_d))
+
+
+def test_subseq_range_backend_dispatch():
+    streams, hidx, sidx = _index(stride=2)
+    qr = ss.represent_subseq_queries(sidx, _queries(streams, 2))
+    want = ss.subseq_range_query(sidx, qr, 2.0, backend="xla")
+    got = ss.subseq_range_query(sidx, qr, 2.0, backend="pallas",
+                                block_q=8, block_w=64, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+
+
+@pytest.mark.parametrize("stride,excl", [(1, 8), (3, 8)])
+def test_subseq_knn_pallas_bit_identical(stride, excl):
+    # Small excl keeps the fetch count under the demotion threshold, so
+    # backend="pallas" genuinely runs the streaming top-k kernel.
+    streams, hidx, sidx = _index(stride=stride)
+    qs = _queries(streams, 3)
+    qr = ss.represent_subseq_queries(sidx, qs)
+    k = 3
+    assert engine.resolve_knn_backend(
+        "pallas", ss.knn_fetch_count(k, excl, stride,
+                                     sidx.n_windows)) == "pallas"
+    wi, wd, we = ss.subseq_knn_query(sidx, qr, k, excl=excl, backend="xla")
+    gi, gd, ge = ss.subseq_knn_query(sidx, qr, k, excl=excl,
+                                     backend="pallas", block_q=8,
+                                     block_w=64, interpret=True)
+    assert bool(np.asarray(we).all()) and bool(np.asarray(ge).all())
+    np.testing.assert_array_equal(gi, wi)
+    # Candidates re-verify through the shared diff² form on both
+    # backends, so the distances are bit-identical, not merely close.
+    np.testing.assert_array_equal(gd, wd)
+
+
+# ---------------------------------------------------------------------------
+# PR-4 follow-up: cost-model-advised demotion of large-k Pallas k-NN.
+# ---------------------------------------------------------------------------
+
+
+def test_large_k_pallas_knn_demotes_to_xla():
+    assert not cost_model.pallas_topk_demote_advised(
+        cost_model.PALLAS_TOPK_UNROLL_MAX)
+    assert cost_model.pallas_topk_demote_advised(
+        cost_model.PALLAS_TOPK_UNROLL_MAX + 1)
+    small = cost_model.PALLAS_TOPK_UNROLL_MAX - engine._TOPK_GUARD
+    assert engine.resolve_knn_backend("pallas", small) == "pallas"
+    assert engine.resolve_knn_backend("pallas", small + 1) == "xla"
+    assert engine.resolve_knn_backend("xla", 1) == "xla"
+    # And the dispatch layer answers correctly through the demotion.
+    streams, hidx, sidx = _index(stride=2)
+    qr = ss.represent_subseq_queries(sidx, _queries(streams, 2))
+    k_big = cost_model.PALLAS_TOPK_UNROLL_MAX + 8
+    want = engine.knn_query_auto(sidx.index, qr, k_big)
+    got = engine.knn_query_backend(sidx.index, qr, k_big, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+    # REVIEW regression: the mixed dispatch (the serving hot path) must
+    # demote too — a large k bucket on backend="pallas" would otherwise
+    # compile the very unrolled kernel the threshold exists to avoid.
+    import jax.numpy as jnp2
+    eps = jnp2.zeros((2,), jnp2.float32)
+    is_knn = jnp2.asarray([True, True])
+    wm = engine.mixed_query_auto(sidx.index, qr, eps, is_knn, k_big)
+    gm = engine.mixed_query_backend(sidx.index, qr, eps, is_knn, k_big,
+                                    backend="pallas")
+    wki, wkd = engine.mixed_topk(wm[0], wm[2], k_big)
+    gki, gkd = engine.mixed_topk(gm[0], gm[2], k_big)
+    np.testing.assert_array_equal(np.asarray(gki), np.asarray(wki))
+    np.testing.assert_array_equal(np.asarray(gkd), np.asarray(wkd))
+
+
+# ---------------------------------------------------------------------------
+# Store round trip: a plain index store + the stream columns.
+# ---------------------------------------------------------------------------
+
+
+def test_subseq_store_round_trip(tmp_path):
+    from repro.core.engine import DeviceIndex
+    from repro.index.store import load_index, store_info, verify_store
+
+    streams, hidx, sidx = _index(stride=2)
+    path = tmp_path / "subseq_idx"
+    ss.save_subseq_index(hidx, path)
+    verify_store(path)                       # checksums hold
+    # It IS a plain index store: the whole-series lifecycle reads it.
+    info = store_info(path)
+    assert info["kind"] == "fastsax-index"
+    assert info["size"] == hidx.n_windows
+    plain = load_index(path)
+    np.testing.assert_allclose(np.asarray(plain.series),
+                               ss.materialize_windows_np(hidx),
+                               rtol=0, atol=0)
+    dev_plain = DeviceIndex.from_store(path)
+    assert dev_plain.series.shape == (hidx.n_windows, WINDOW)
+    # The subseq view restores bit-identical engine answers.
+    warm = ss.subseq_device_index(ss.load_subseq_index(path))
+    qs = _queries(streams, 2)
+    qr = ss.represent_subseq_queries(sidx, qs)
+    want = ss.subseq_range_query(sidx, qr, 2.0, backend="xla")
+    got = ss.subseq_range_query(warm, qr, 2.0, backend="xla")
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+    wi, wd, _ = ss.subseq_knn_query(sidx, qr, 3, excl=16, backend="xla")
+    gi, gd, _ = ss.subseq_knn_query(warm, qr, 3, excl=16, backend="xla")
+    np.testing.assert_array_equal(gi, wi)
+    np.testing.assert_array_equal(gd, wd)
+    # A plain whole-series store is rejected loudly as a subseq source.
+    from repro.core.fastsax import build_index
+    from repro.index.store import save_index
+    plain_path = tmp_path / "plain_idx"
+    save_index(build_index(streams, hidx.config, normalize=True),
+               plain_path)
+    with pytest.raises(IOError, match="subseq"):
+        ss.load_subseq_index(plain_path)
+
+
+# ---------------------------------------------------------------------------
+# Served subsequence requests: batched == direct == engine.
+# ---------------------------------------------------------------------------
+
+
+def test_served_subseq_replay_exactness():
+    from repro.serve import ServeConfig, SubseqSearchService
+
+    streams = make_wafer_like(2, 384, seed=0, normalize=False)
+    cfg = ServeConfig(levels=LEVELS, alphabet=ALPHA, max_batch=8,
+                      max_wait_ms=5.0)
+    svc = SubseqSearchService.from_streams(streams, WINDOW, 2, cfg, excl=16)
+    qs = _queries(streams, 6)
+    k = 3
+    with svc:
+        # Submit concurrently so requests actually coalesce into batches.
+        reqs = [svc.submit_subseq_knn(q, k) for q in qs]
+        reqs += [svc.submit_subseq_range(q, 4.0) for q in qs]
+        for r in reqs:
+            assert r.wait(120.0) == "ok"
+    # Replay every request through the direct path: identical ids, equal
+    # distances (the serving exactness contract).
+    sidx = svc.sidx
+    qr = ss.represent_subseq_queries(sidx, qs)
+    eng_idx, eng_d2, _ = ss.subseq_knn_query(sidx, qr, k, excl=16,
+                                             backend="xla")
+    for i, q in enumerate(qs):
+        ids, dist = svc.direct_subseq_knn(q, k)
+        np.testing.assert_array_equal(reqs[i].ids, ids)
+        np.testing.assert_array_equal(reqs[i].distances, dist)
+        # ... and the service agrees with the engine path: identical ids
+        # always; distances to float-form precision (the service may serve
+        # from the dense matmul-form path while the dedicated engine
+        # reports diff²-form — the documented cross-form noise).
+        keep = eng_idx[i] >= 0
+        np.testing.assert_array_equal(ids, eng_idx[i][keep])
+        np.testing.assert_allclose(dist, np.sqrt(eng_d2[i][keep]),
+                                   rtol=1e-4, atol=1e-6)
+    mask, d2 = ss.subseq_range_query(sidx, qr, 4.0, backend="xla")
+    mask, d2 = np.asarray(mask), np.asarray(d2)
+    for i, q in enumerate(qs):
+        req = reqs[len(qs) + i]
+        ids, dist = svc.direct_subseq_range(q, 4.0)
+        np.testing.assert_array_equal(req.ids, ids)
+        np.testing.assert_array_equal(req.distances, dist)
+        np.testing.assert_array_equal(sorted(ids),
+                                      np.nonzero(mask[i])[0])
+    # Window-id mapping round-trips.
+    sid, start = svc.window_meta(np.asarray([0, sidx.windows_per_stream]))
+    assert sid.tolist() == [0, 1] and start.tolist() == [0, 0]
+
+
+# ---------------------------------------------------------------------------
+# Distributed stream-sharded dispatch (multi-device subprocess, slow).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_distributed_subseq_matches_single_device():
+    import os
+    import pathlib
+    import subprocess
+    import sys
+    import textwrap
+
+    repo = pathlib.Path(__file__).resolve().parents[1]
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=str(repo / "src"), JAX_PLATFORMS="cpu")
+    code = textwrap.dedent("""
+        import numpy as np, jax
+        from repro.core import subseq as ss
+        from repro.core.dist_search import (distributed_subseq_index,
+            distributed_subseq_knn_query, distributed_subseq_range_query,
+            make_data_mesh)
+        from repro.core.fastsax import FastSAXConfig
+        from repro.data.timeseries import make_subseq_queries, make_wafer_like
+
+        assert len(jax.devices()) == 8
+        streams = make_wafer_like(5, 384, seed=0, normalize=False)  # pads to 8
+        cfg = FastSAXConfig(n_segments=(8, 16), alphabet=10)
+        hidx = ss.build_subseq_index(streams, cfg, 128, 2)
+        sidx = ss.subseq_device_index(hidx)
+        mesh = make_data_mesh()
+        dsx = distributed_subseq_index(hidx, mesh)
+        qs = make_subseq_queries(streams, 3, 128, seed=1)
+        qr = ss.represent_subseq_queries(sidx, qs)
+
+        want_m, _ = ss.subseq_range_query(sidx, qr, 4.0, backend="xla")
+        gidx, ans, d2, ov = distributed_subseq_range_query(
+            dsx, qs, 4.0, mesh)
+        want_m = np.asarray(want_m)
+        for i in range(3):
+            got = set(np.asarray(gidx)[i][np.asarray(ans)[i]].tolist())
+            ref = set(np.nonzero(want_m[i])[0].tolist())
+            assert got == ref, (i, got ^ ref)
+
+        wi, wd, we = ss.subseq_knn_query(sidx, qr, 3, excl=32,
+                                         backend="xla")
+        gi, gd, ge = distributed_subseq_knn_query(dsx, qs, 3, mesh,
+                                                  excl=32)
+        assert np.array_equal(wi, gi), (wi, gi)
+        assert np.allclose(wd, gd, rtol=1e-5, atol=1e-6)
+        assert bool(we.all()) and bool(ge.all())
+        # Padded streams can never answer: every id is a valid window.
+        assert (gi[gi >= 0] < dsx.n_valid).all()
+
+        # The distributed pallas backend (fused kernels per shard, in
+        # interpret mode on CPU) answers the same sets.
+        pgidx, pans, _, _ = distributed_subseq_range_query(
+            dsx, qs, 4.0, mesh, backend="pallas")
+        for i in range(3):
+            got = set(np.asarray(pgidx)[i][np.asarray(pans)[i]].tolist())
+            ref = set(np.nonzero(want_m[i])[0].tolist())
+            assert got == ref, (i, got ^ ref)
+        print("OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, cwd=repo, env=env, timeout=600)
+    assert r.returncode == 0, r.stderr[-4000:]
+    assert "OK" in r.stdout
