@@ -1,0 +1,86 @@
+"""Quantized memory-tier ablation (DESIGN.md §9): resident bytes per row
+and pruning power of the int8/bf16 tier vs the full-precision layout.
+
+The PR-6 acceptance claims, recorded per mode:
+
+  * ``quantized/<mode>/resident_bytes_per_row`` — value is the quantized
+    resident bytes per row; ``ratio`` (full / quantized) must stay >= 2x;
+  * ``quantized/<mode>/eps*/a*`` — value is the mean op-model latency of
+    the widened host cascade; ``prune`` is the exclusion fraction, which
+    must stay within 10% of the full-precision cascade (``within10``),
+    with ``recall=1.0`` and ``exact=True`` — quantized answers are
+    SET-IDENTICAL, never merely close (the bench gate enforces all
+    three outright).
+
+Everything here is a deterministic function of the seeded dataset (op
+counts, byte counts, answer sets), so the smoke tier emits the same
+values and the gate diffs them against this file's committed baseline.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.search import (fastsax_range_query,
+                               quantized_fastsax_range_query)
+from repro.index.quantized import (full_precision_resident_bytes,
+                                   quantize_host_index)
+
+from .common import (ALPHABETS, EPSILONS, database, emit, index_for,
+                     queries, query_reprs)
+
+MODES = ("bf16", "int8")
+
+
+def main() -> None:
+    db = database()
+    qs = queries()
+    B = db.shape[0]
+
+    print("# resident bytes per row: quantized tier vs full precision")
+    print("mode,bytes_per_row,ratio")
+    for mode in MODES:
+        cfg, idx = index_for(10)
+        qhost = quantize_host_index(idx, mode)
+        full = full_precision_resident_bytes(B, idx.n, cfg.n_segments)
+        ratio = full / qhost.resident_bytes()
+        bpr = qhost.resident_bytes() / B
+        print(f"{mode},{bpr:.1f},{ratio:.2f}")
+        emit(f"quantized/{mode}/resident_bytes_per_row", bpr,
+             f"ratio={ratio:.2f};ge2x={ratio >= 2.0}")
+
+    print("\n# widened-cascade pruning power + set-identity vs full precision")
+    print("mode,eps,alphabet,prune_q,prune_full,latency_ratio,recall")
+    for mode in MODES:
+        for alpha in ALPHABETS:
+            cfg, idx = index_for(alpha)
+            qhost = quantize_host_index(idx, mode)
+            for eps in EPSILONS:
+                pq, pf, lat_q, lat_f, recall, identical = \
+                    [], [], 0.0, 0.0, [], True
+                for qr in query_reprs(alpha):
+                    ref = fastsax_range_query(idx, qr, eps)
+                    got = quantized_fastsax_range_query(
+                        qhost, idx.series, qr, eps, config=cfg)
+                    pq.append(1.0 - got.candidates / B)
+                    pf.append(1.0 - ref.candidates / B)
+                    lat_q += got.latency
+                    lat_f += ref.latency
+                    hit = np.intersect1d(got.answers, ref.answers).size
+                    recall.append(hit / max(ref.answers.size, 1))
+                    identical &= bool(np.array_equal(got.answers,
+                                                     ref.answers))
+                prune_q, prune_f = float(np.mean(pq)), float(np.mean(pf))
+                within10 = prune_q >= prune_f - 0.10
+                rec = float(np.min(recall))
+                print(f"{mode},{eps:.0f},{alpha},{prune_q:.4f},"
+                      f"{prune_f:.4f},{lat_q / max(lat_f, 1e-30):.3f},"
+                      f"{rec:.3f}")
+                emit(f"quantized/{mode}/eps{eps:.0f}/a{alpha}",
+                     lat_q / len(qs),
+                     f"prune={prune_q:.4f};prune_full={prune_f:.4f};"
+                     f"within10={within10};recall={rec:.1f};"
+                     f"exact={identical}")
+
+
+if __name__ == "__main__":
+    main()

@@ -44,7 +44,7 @@ REPO = pathlib.Path(__file__).resolve().parents[1]
 # reference distances, HBM-model ratios); its wall-clock lives in
 # non-gated derived keys (wall_us/vs_brute).
 DETERMINISTIC = {"table1", "figure2", "tightness", "pruning", "knn",
-                 "subseq"}
+                 "subseq", "quantized"}
 
 REL_TOL = 0.25          # generous: catches 'broken', ignores jitter/drift
 ABS_TOL = 0.05          # floor for fraction-valued metrics
@@ -52,13 +52,19 @@ ABS_TOL = 0.05          # floor for fraction-valued metrics
 # derived-key semantics: direction a change must NOT take (beyond tol)
 HIGHER_IS_WORSE = ("verified_frac",)
 LOWER_IS_WORSE = ("speedup", "qps", "c9", "c10", "mean", "vs_seq",
-                  "batch_amortise")
-MUST_BE_TRUE = ("exact", "below", "parity")
+                  "batch_amortise", "prune", "ratio")
+# 'exact' covers the quantized suite too: quantized answer sets must be
+# IDENTICAL to full precision, 'within10' pins its pruning power to
+# within 10% of the full-precision cascade and 'ge2x' the >= 2x
+# resident-bytes reduction — all hold outright, never merely 'close'.
+MUST_BE_TRUE = ("exact", "below", "parity", "within10", "ge2x")
 MUST_BE_ZERO = ("dropped",)
 # parity fractions (engine suite): the fused megakernel must answer
 # identically to the XLA oracle for EVERY query, every run — 0.999 is a
-# kernel bug, not jitter.
-MUST_BE_ONE = ("match_frac",)
+# kernel bug, not jitter.  'recall' (quantized suite) is the worst-case
+# fraction of true answers recovered: anything below 1.0 means the
+# widened bounds dropped a provable answer — a soundness bug.
+MUST_BE_ONE = ("match_frac", "recall")
 
 
 def fail(errors: list, msg: str):

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..index import quantized as _quant
 from ..kernels import fused_query as _fused
 from ..kernels import ops as kernel_ops
 from . import cost_model as _cost_model
@@ -1079,3 +1080,468 @@ def knn_query_auto(
             return nn_idx, nn_d2, exact
         cap = min(B, cap * 4)
     return nn_idx, nn_d2, exact
+
+
+# ---------------------------------------------------------------------------
+# Quantized memory-tiered engine (DESIGN.md §9).
+#
+# Third cascade tier: the device keeps only the QUANTIZED columns (int8
+# per-block affine or bf16) of the screen — symbols, residuals, series —
+# plus per-block worst-case dequantization errors; the full-precision raw
+# series is demoted to a host mmap tier and touched only to exact-verify
+# the survivors.  Every lower bound is *widened* by the stored error
+# (index/quantized.py has the lemma statements), so every kill remains
+# provably admissible and the final answers are set-identical to the
+# full-precision engine.
+# ---------------------------------------------------------------------------
+
+# f32 slack on the widened series-screen radius: the screen distance d(û,q)
+# is evaluated in f32 while the stored per-row error bound e_u was computed
+# against the f64 source, so the triangle-inequality kill only holds up to
+# f32 rounding of the compare operands.  Widening only ever ADDS survivors
+# — exactness is unaffected.  Shared with the fused kernels (defined in
+# kernels/fused_query.py) so the two screens agree bit-for-bit.
+QUANT_SCREEN_REL = _fused.QUANT_SCREEN_REL
+QUANT_SCREEN_ABS = _fused.QUANT_SCREEN_ABS
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedDeviceIndex:
+    """Device-resident quantized screen columns (pytree).
+
+    ``series``: (B, n) int8 codes or bf16; ``series_scale``/``series_zero``:
+    (B, 1) f32 per-row affine (int8 only, else None); ``series_err``: (B,)
+    f32 per-row ‖u − û‖₂ bound; ``norms_sq``: (B,) f32 ‖û‖² of the
+    dequantized rows; ``words[l]``: (B, N_l) int8 (lossless);
+    ``residuals[l]``: (B,) int8 codes or bf16; ``resid_scale``/``zero``/
+    ``err[l]``: (nb_l, 1) f32 per scale block of ``quantized.RESID_BLOCK``
+    rows (scale/zero None for bf16).
+    """
+
+    series: jnp.ndarray
+    series_scale: jnp.ndarray | None
+    series_zero: jnp.ndarray | None
+    series_err: jnp.ndarray
+    norms_sq: jnp.ndarray
+    words: tuple
+    residuals: tuple
+    resid_scale: tuple
+    resid_zero: tuple
+    resid_err: tuple
+    # static:
+    levels: tuple = dataclasses.field(default=())
+    alphabet: int = 10
+    mode: str = "int8"
+
+    def tree_flatten(self):
+        children = (self.series, self.series_scale, self.series_zero,
+                    self.series_err, self.norms_sq, self.words,
+                    self.residuals, self.resid_scale, self.resid_zero,
+                    self.resid_err)
+        aux = (self.levels, self.alphabet, self.mode)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, levels=aux[0], alphabet=aux[1], mode=aux[2])
+
+    @property
+    def n(self) -> int:
+        return self.series.shape[-1]
+
+
+def _upload_codes(codes: np.ndarray) -> jnp.ndarray:
+    """Host quantized column -> device: uint16 bf16 bit patterns become
+    native device bfloat16 (so kernels dequantize with one astype), int8
+    codes upload verbatim."""
+    codes = np.asarray(codes)
+    if codes.dtype == np.uint16:
+        if _quant._BF16 is None:  # pragma: no cover - jax ships ml_dtypes
+            raise _quant.QuantizationError("bf16 upload needs ml_dtypes")
+        return jnp.asarray(codes.view(_quant._BF16), dtype=jnp.bfloat16)
+    return jnp.asarray(codes, dtype=jnp.int8)
+
+
+def quantized_device_index(qhost) -> QuantizedDeviceIndex:
+    """Upload a ``index.quantized.QuantizedHostIndex`` resident tier."""
+    int8 = qhost.mode == "int8"
+
+    def col(a):                               # (m,) f32 -> (m, 1) f32
+        return jnp.asarray(np.asarray(a, np.float32)).reshape(-1, 1)
+
+    return QuantizedDeviceIndex(
+        series=_upload_codes(qhost.series),
+        series_scale=col(qhost.series_scale) if int8 else None,
+        series_zero=col(qhost.series_zero) if int8 else None,
+        series_err=jnp.asarray(qhost.series_err, jnp.float32),
+        norms_sq=jnp.asarray(qhost.norms_sq, jnp.float32),
+        words=tuple(jnp.asarray(lv.words, jnp.int8) for lv in qhost.levels),
+        residuals=tuple(_upload_codes(lv.residuals) for lv in qhost.levels),
+        resid_scale=tuple(col(lv.scale) if int8 else None
+                          for lv in qhost.levels),
+        resid_zero=tuple(col(lv.zero) if int8 else None
+                         for lv in qhost.levels),
+        resid_err=tuple(col(lv.err) for lv in qhost.levels),
+        levels=tuple(lv.n_segments for lv in qhost.levels),
+        alphabet=qhost.alphabet,
+        mode=qhost.mode,
+    )
+
+
+def _expand_block_col(colv: jnp.ndarray, B: int) -> jnp.ndarray:
+    """(nb, 1) per-scale-block f32 -> (B,) per-row (blocks are consecutive
+    runs of ``quantized.RESID_BLOCK`` rows)."""
+    nb = colv.shape[0]
+    per_row = jnp.broadcast_to(colv, (nb, _quant.RESID_BLOCK)).reshape(-1)
+    return per_row[:B]
+
+
+def _dequant_residuals_dev(qindex: QuantizedDeviceIndex, li: int):
+    """(B,) dequantized residuals — ``zero + scale · code`` (all f32), THE
+    shared dequantizer expression (the Pallas kernels evaluate the same
+    one, so the screens are bit-identical).  The reserved int8 sentinel
+    code dequantizes to PAD_RESIDUAL regardless of scale."""
+    codes = qindex.residuals[li]
+    if qindex.mode == "bf16":
+        return codes.astype(jnp.float32)
+    B = codes.shape[0]
+    scale = _expand_block_col(qindex.resid_scale[li], B)
+    zero = _expand_block_col(qindex.resid_zero[li], B)
+    deq = zero + scale * codes.astype(jnp.float32)
+    return jnp.where(codes == _quant.SENTINEL_CODE,
+                     jnp.float32(_fused.PAD_RESIDUAL), deq)
+
+
+def _dequant_series_dev(qindex: QuantizedDeviceIndex) -> jnp.ndarray:
+    """(B, n) dequantized series rows û (f32)."""
+    if qindex.mode == "bf16":
+        return qindex.series.astype(jnp.float32)
+    return qindex.series_zero + \
+        qindex.series_scale * qindex.series.astype(jnp.float32)
+
+
+def quantized_cascade_mask(
+    qindex: QuantizedDeviceIndex, qr: QueryReprDev, epsilon
+) -> jnp.ndarray:
+    """Widened exclusion cascade over the quantized columns (Q, B).
+
+    C9 widens to ``|r̂(u) − r(q)| ≤ ε + e_blk`` (|r̂ − r| ≤ e_blk, so the
+    widened compare can never kill a true answer); C10 runs UNWIDENED —
+    the symbol columns are stored losslessly in int8, so MINDIST is the
+    exact full-precision bound.
+    """
+    n = qindex.n
+    Q = qr.q.shape[0]
+    eps = _eps_qcol(epsilon, Q)
+    eps2 = eps * eps
+    B = qindex.series.shape[0]
+    alive = jnp.ones((Q, B), dtype=bool)
+    tab = _mindist_sq_tab(qindex.alphabet)
+    for li, N in enumerate(qindex.levels):
+        res = _dequant_residuals_dev(qindex, li)
+        err = _expand_block_col(qindex.resid_err[li], B)
+        gap = jnp.abs(res[None, :] - qr.residuals[li][:, None])
+        alive &= gap <= eps + err[None, :]
+        cell = tab[qindex.words[li].astype(jnp.int32)[None, :, :],
+                   qr.words[li][:, None, :]]
+        md_sq = (n / N) * jnp.sum(cell * cell, axis=-1)
+        alive &= md_sq <= eps2
+    return alive
+
+
+@jax.jit
+def quantized_screen(
+    qindex: QuantizedDeviceIndex, qr: QueryReprDev, epsilon
+):
+    """The full quantized screen: (keep (Q, B), d̂² (Q, B)).
+
+    ``keep`` marks rows that MAY be answers; the caller exact-verifies
+    them against the raw tier.  The series screen applies the triangle
+    inequality to the dequantized rows — d(u,q) ≥ d(û,q) − e_u, so a row
+    with d(û,q) > ε + e_u provably has d(u,q) > ε — widened by the f32
+    slack above.  This function is the XLA oracle the quantized Pallas
+    kernels must match bit-for-bit (tests/test_kernels.py).
+    """
+    Q = qr.q.shape[0]
+    eps = _eps_qcol(epsilon, Q)
+    alive = quantized_cascade_mask(qindex, qr, eps)
+    u = _dequant_series_dev(qindex)
+    qn = jnp.sum(qr.q * qr.q, axis=-1)
+    cross = jnp.dot(qr.q, u.T, preferred_element_type=jnp.float32)
+    d2 = jnp.maximum(qn[:, None] - 2.0 * cross + qindex.norms_sq[None, :],
+                     0.0)
+    thresh = (eps + qindex.series_err[None, :]) * \
+        (1.0 + QUANT_SCREEN_REL) + QUANT_SCREEN_ABS
+    keep = alive & (d2 <= thresh * thresh)
+    return keep, jnp.where(keep, d2, jnp.inf)
+
+
+@functools.partial(jax.jit, static_argnames=("capacity",))
+def _compact_mask(keep: jnp.ndarray, capacity: int):
+    """Low-index compaction of a dense keep mask (no distances needed):
+    (idx (Q, C), valid (Q, C), overflow (Q,))."""
+    B = keep.shape[-1]
+    keys = jnp.where(keep, B - jnp.arange(B, dtype=jnp.int32)[None, :], 0)
+    top, idx = jax.lax.top_k(keys, capacity)
+    valid = top > 0
+    return idx, valid, keep.sum(axis=-1) > capacity
+
+
+@jax.jit
+def _verify_gathered(rows: jnp.ndarray, q: jnp.ndarray, valid: jnp.ndarray):
+    """Exact diff²-form distances of gathered raw-tier rows (Q, C)."""
+    diff = rows - q[:, None, :]
+    d2 = jnp.sum(diff * diff, axis=-1)
+    return jnp.where(valid, d2, jnp.inf)
+
+
+@dataclasses.dataclass
+class TieredIndex:
+    """Two-tier serving index: quantized screen resident, raw mmap verify.
+
+    ``dev`` answers the widened screen on device; ``raw`` is the (B, n)
+    full-precision series — typically an ``np.memmap`` straight off the
+    store, paged in only for the rows the screen could not exclude.
+    ``ids`` (optional) maps row positions to external ids for indexes
+    loaded from a mutable root with deletions.
+    """
+
+    dev: QuantizedDeviceIndex
+    raw: np.ndarray
+    ids: np.ndarray | None = None
+
+    @property
+    def size(self) -> int:
+        return self.dev.series.shape[0]
+
+    @property
+    def mode(self) -> str:
+        return self.dev.mode
+
+    @classmethod
+    def from_host(cls, index: FastSAXIndex, mode: str,
+                  ids: np.ndarray | None = None) -> "TieredIndex":
+        """Quantize a built host index into the tiered layout in memory."""
+        qhost = _quant.quantize_host_index(index, mode)
+        return cls(dev=quantized_device_index(qhost),
+                   raw=np.asarray(index.series), ids=ids)
+
+    @classmethod
+    def from_store(cls, path, quantization: str | None = None,
+                   with_ids: bool = False):
+        """Warm-start the tiered layout from a committed store directory.
+
+        A plain store saved with a matching ``quantization=`` loads its
+        quantized columns directly (mmap — no requantization); a store
+        without a quantized tier (or with a different mode) is quantized
+        in memory from the full-precision columns.  A ``MutableIndex``
+        root defaults to the mode its epoch was created with; a compacted
+        single-segment root reuses its base segment's stored quantized
+        columns (zero-copy, like a plain store), while a root with deltas
+        or tombstones quantizes its live view in memory (live-row blocks
+        straddle segment boundaries, so per-segment scales are not
+        reusable).  The ``with_ids`` contract matches
+        :meth:`DeviceIndex.from_store`.
+        """
+        import pathlib
+
+        from ..index import mutable as _mutable
+        from ..index import store as _store
+
+        path = pathlib.Path(path)
+        if (path / _mutable.CURRENT).exists():
+            mut = _mutable.MutableIndex.open(path)
+            mode = quantization or (
+                mut.quantization if mut.quantization != "none" else "int8")
+            compacted = len(mut._segments) == 1 and not mut._tomb.any()
+            host, ids = mut.live_index()
+            ids = np.asarray(ids)
+            if not with_ids and not np.array_equal(ids,
+                                                   np.arange(ids.size)):
+                raise ValueError(
+                    f"{path}: external ids differ from row positions "
+                    "(rows were deleted) — call "
+                    "from_store(..., with_ids=True) and map answers "
+                    "through the ids array")
+            if compacted and mut.quantization == mode:
+                seg = path / mut._epoch["base"]
+                qhost = _store.load_quantized(seg, mmap=True, mode=mode)
+                raw = _store.read_array(seg, "series", mmap=True)
+                tiered = cls(dev=quantized_device_index(qhost), raw=raw,
+                             ids=ids if with_ids else None)
+            else:
+                tiered = cls.from_host(host, mode,
+                                       ids=ids if with_ids else None)
+            return (tiered, ids) if with_ids else tiered
+        manifest = _store.read_manifest(path)
+        stored = _store.quantized_mode(manifest)
+        mode = quantization or (stored if stored != "none" else "int8")
+        raw = _store.read_array(path, "series", manifest, mmap=True)
+        if stored == mode:
+            qhost = _store.load_quantized(path, mmap=True, mode=mode)
+            tiered = cls(dev=quantized_device_index(qhost), raw=raw)
+        else:
+            host = _store.load_index(path, mmap=True)
+            tiered = cls.from_host(host, mode)
+        ids = np.arange(tiered.size)
+        return (tiered, ids) if with_ids else tiered
+
+
+def _quantized_screen_backend(tindex: TieredIndex, qr: QueryReprDev,
+                              eps_col, backend: str):
+    """Dispatch the dense quantized screen: XLA oracle or the fused
+    dequantize-in-kernel Pallas form (bit-identical — tested)."""
+    if resolve_backend(backend) == "pallas":
+        from ..kernels.fused_query import fused_quant_range_pallas
+
+        Q = qr.q.shape[0]
+        block_q, block_b = _fused_blocks_quant(tindex.dev, Q)
+        return fused_quant_range_pallas(
+            tindex.dev, qr.q, _query_panels(qr, tindex.dev.alphabet),
+            qr.residuals, eps_col, block_q=block_q, block_b=block_b,
+            interpret=kernel_ops._use_interpret(None))
+    return quantized_screen(tindex.dev, qr, eps_col)
+
+
+def _fused_blocks_quant(qdev: QuantizedDeviceIndex, Q: int,
+                        block_q: int | None = None,
+                        block_b: int | None = None):
+    """Block shapes for the quantized kernels: the full-precision chooser
+    is a conservative upper bound on the quantized VMEM footprint (every
+    quantized input is the same size or smaller), so reuse it."""
+    return _fused_blocks(
+        DeviceIndex(series=qdev.series, norms_sq=qdev.norms_sq,
+                    words=qdev.words, residuals=qdev.residuals,
+                    levels=qdev.levels, alphabet=qdev.alphabet),
+        Q, 0, block_q, block_b)
+
+
+def _raw_rows(tindex: TieredIndex, idx) -> jnp.ndarray:
+    """Gather candidate rows from the host mmap tier and upload as f32 —
+    the only touch of full-precision data on the query path."""
+    idx_np = np.asarray(jax.device_get(idx))
+    rows = np.asarray(tindex.raw)[idx_np]
+    return jnp.asarray(rows, dtype=jnp.float32)
+
+
+def quantized_range_query(
+    tindex: TieredIndex, qr: QueryReprDev, epsilon,
+    capacity: int | None = None, backend: str = "auto",
+    max_doublings: int = 8,
+):
+    """Exact range query over the tiered index.
+
+    Screens on the quantized resident tier (widened bounds — no true
+    answer can be excluded), compacts survivors, fetches ONLY those rows
+    from the raw mmap tier, and exact-verifies them in the engine's diff²
+    form.  Capacity escalates 4× on overflow (capped at B, where
+    compaction cannot overflow), so the certificate is always True on
+    return.  Returns ``(idx (Q, C), answer (Q, C), d2 (Q, C), exact (Q,))``
+    — set-identical to :func:`range_query` / ``range_query_compact``
+    (property-tested in tests/test_quantized.py).
+    """
+    Q, B = qr.q.shape[0], tindex.size
+    eps = _eps_qcol(epsilon, Q)
+    keep, _ = _quantized_screen_backend(tindex, qr, eps, backend)
+    cap = min(B, 64 if capacity is None else max(1, int(capacity)))
+    for _ in range(max_doublings + 1):
+        idx, valid, overflow = _compact_mask(keep, cap)
+        if cap >= B or not bool(jax.device_get(overflow).any()):
+            break
+        cap = min(B, cap * 4)
+    d2 = _verify_gathered(_raw_rows(tindex, idx), qr.q, valid)
+    answer = valid & (d2 <= eps * eps)
+    return idx, answer, jnp.where(answer, d2, jnp.inf), ~overflow
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _sample_eps(rows: jnp.ndarray, q: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Seed radius from verified sample rows: (Q, 1) k-th sampled distance
+    (upper-bounds the true k-th distance — a sound starting radius)."""
+    diff = rows[None, :, :] - q[:, None, :]
+    d2s = jnp.sum(diff * diff, axis=-1)
+    eps = jnp.sqrt(jnp.maximum(_kth_smallest(d2s, k), 0.0))
+    return jnp.where(jnp.isfinite(eps), eps, _SEED_EPS_MAX)
+
+
+def _tiered_seed_eps(tindex: TieredIndex, qr: QueryReprDev,
+                     k: int) -> jnp.ndarray:
+    """k-NN seed radius for the tiered engine: the strided sample is
+    fetched from the RAW tier (same strided positions as
+    :func:`_seed_eps`), so the radius is a true verified upper bound."""
+    B = tindex.size
+    S = min(B, max(k, _KNN_SEED_SAMPLE))
+    sample = (np.arange(S) * B) // S
+    rows = jnp.asarray(np.asarray(tindex.raw)[sample], jnp.float32)
+    return _sample_eps(rows, qr.q, k)
+
+
+def quantized_knn_query(
+    tindex: TieredIndex, qr: QueryReprDev, k: int,
+    capacity: int | None = None, backend: str = "auto",
+    max_doublings: int = 8,
+):
+    """Exact k-NN over the tiered index: ``(nn_idx, nn_d2, exact)``.
+
+    Seeds a per-query radius from a verified raw-tier sample (the k-th
+    sampled distance upper-bounds the true k-th distance), screens the
+    quantized tier at the slacked radius — every true neighbour has
+    d ≤ d_k ≤ ε, and the widened screen never kills a row with d ≤ ε —
+    then exact-verifies the surviving candidates from the raw tier and
+    takes their top-k (ties to the lowest index, the engine-wide order).
+    Capacity escalates on overflow up to B, so ``exact`` is always True
+    on return: the answer provably equals brute force.
+    """
+    Q, B = qr.q.shape[0], tindex.size
+    k_eff = min(int(k), B)
+    eps = _tiered_seed_eps(tindex, qr, k_eff)                # (Q, 1)
+    keep, _ = _quantized_screen_backend(tindex, qr, _slacked(eps), backend)
+    cap = min(B, max(4 * k_eff, 64) if capacity is None else int(capacity))
+    cap = max(cap, k_eff)
+    for _ in range(max_doublings + 1):
+        idx, valid, overflow = _compact_mask(keep, cap)
+        if cap >= B or not bool(jax.device_get(overflow).any()):
+            break
+        cap = min(B, cap * 4)
+    d2 = _verify_gathered(_raw_rows(tindex, idx), qr.q, valid)
+    neg, pos = jax.lax.top_k(-d2, k_eff)                     # ascending d2
+    nn_d2 = -neg
+    nn_idx = jnp.take_along_axis(idx, pos, axis=-1)
+    nn_idx = jnp.where(jnp.isfinite(nn_d2), nn_idx, -1)
+    return nn_idx, nn_d2, ~overflow
+
+
+def quantized_mixed_query(
+    tindex: TieredIndex, qr: QueryReprDev, epsilon, is_knn, k: int,
+    capacity: int | None = None, backend: str = "auto",
+    max_doublings: int = 8,
+):
+    """Mixed range/k-NN batch over the tiered index, serving-layer layout.
+
+    The tiered twin of :func:`mixed_query`: range rows screen at the
+    caller's ε (the widening happens inside the screen), k-NN rows at
+    their slacked seeded radius; one shared compaction + raw-tier exact
+    verify serves both.  Returns ``(idx, answer, d2, overflow)`` with
+    ``overflow`` all-False after escalation — for k-NN rows ``answer``
+    marks valid candidate slots (a verified superset of the true top-k),
+    extracted per row via :func:`mixed_topk` exactly like the other
+    serving backends.
+    """
+    Q, B = qr.q.shape[0], tindex.size
+    k_eff = min(int(k), B)
+    knn_col = jnp.asarray(is_knn, dtype=bool).reshape(Q, 1)
+    eps_req = _eps_qcol(epsilon, Q)
+    eps = jnp.where(knn_col, _slacked(_tiered_seed_eps(tindex, qr, k_eff)),
+                    eps_req)
+    keep, _ = _quantized_screen_backend(tindex, qr, eps, backend)
+    cap = min(B, max(4 * k_eff, 64) if capacity is None else int(capacity))
+    cap = max(cap, k_eff)
+    for _ in range(max_doublings + 1):
+        idx, valid, overflow = _compact_mask(keep, cap)
+        if cap >= B or not bool(jax.device_get(overflow).any()):
+            break
+        cap = min(B, cap * 4)
+    d2 = _verify_gathered(_raw_rows(tindex, idx), qr.q, valid)
+    answer = jnp.where(knn_col, valid, valid & (d2 <= eps_req * eps_req))
+    return idx, answer, jnp.where(answer, d2, jnp.inf), overflow

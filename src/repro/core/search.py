@@ -556,3 +556,120 @@ def linear_scan(
     idx = np.nonzero(keep)[0]
     return SearchResult(answers=idx, distances=d[idx], counter=counter,
                         candidates=index.size, levels_visited=0)
+
+
+# ---------------------------------------------------------------------------
+# Quantized-tier range engine (DESIGN.md §9).
+#
+# The resident tier stores int8/bf16 residual codes instead of f32
+# residuals; dequantization error would make the raw C9 test unsound, so
+# the bound is *widened* by the stored per-block worst-case error e_blk:
+#
+#   |r̂(u) − r(q)| > ε + e_blk   ⇒   |r(u) − r(q)| > ε   (reverse triangle
+#   inequality on |r̂ − r| ≤ e_blk)  ⇒  d(u, q) > ε  by eq. 5–9.
+#
+# C10 is NOT widened: the SAX symbols narrow to int8 losslessly (alphabet
+# ≤ 127, enforced at quantize time), so MINDIST is computed on exactly the
+# same words as full precision.  Survivors verify against the raw
+# full-precision rows (the mmap tier), so answers are set-identical to
+# ``fastsax_range_query`` (property-tested in tests/test_quantized.py).
+# ---------------------------------------------------------------------------
+
+
+def _dequant_c9_extra(mode: str) -> dict:
+    """Op cost ON TOP of ``c9_cost()`` per candidate at a quantized level:
+    int8 pays the affine dequant (one fused multiply-add, counted mul+add)
+    plus the bound-widening add; bf16 decode is a pure bit-shift (charged
+    as a lookup) plus the widening add."""
+    if mode == "int8":
+        return dict(mul=1, add=2)
+    return dict(lookup=1, add=1)
+
+
+def quantized_fastsax_range_query(
+    qindex,
+    series: np.ndarray,
+    query: np.ndarray | QueryRepr,
+    epsilon: float,
+    config=None,
+    counter: OpCounter | None = None,
+    lazy_query_levels: bool = True,
+) -> SearchResult:
+    """FAST_SAX range query over the quantized resident tier.
+
+    ``qindex`` is an :class:`repro.index.quantized.QuantizedHostIndex`
+    (symbols + quantized residuals + per-block error bounds); ``series``
+    is the raw full-precision row matrix — typically the store's mmap'd
+    column — touched only for the survivors' final Euclidean verify.
+    ``query`` may be a raw array (then ``config`` must be the index's
+    :class:`FastSAXConfig`) or a precomputed :class:`QueryRepr`.
+
+    Same cascade schedule as :func:`fastsax_range_query`; the only
+    differences are the widened C9 threshold and the per-candidate
+    dequantization charge (:func:`_dequant_c9_extra`).  Answer sets are
+    identical to the full-precision engine by the soundness argument
+    above.
+    """
+    counter = counter or OpCounter()
+    n, alphabet = qindex.n, qindex.alphabet
+    if isinstance(query, QueryRepr):
+        qr = query
+    else:
+        if config is None:
+            raise ValueError("raw-array query needs config= to represent it")
+        qr = represent_query(query, config)
+
+    B = qindex.size
+    alive = np.ones(B, dtype=bool)
+    excluded_c9 = 0
+    excluded_c10 = 0
+    levels_visited = 0
+    eps = float(epsilon)
+    extra = _dequant_c9_extra(qindex.mode)
+
+    for li, lv in enumerate(qindex.levels):
+        if not alive.any():
+            break
+        levels_visited += 1
+        N = lv.n_segments
+        if lazy_query_levels or li == 0:
+            counter.count(**_query_transform_cost_fastsax(n, N, alphabet))
+
+        alive_idx = np.nonzero(alive)[0]
+        res = lv.dequant_residuals()
+        err = lv.row_err()
+        # --- widened C9: |r̂(u) − r(q)| > ε + e_blk(u) ---------------------
+        gap = np.abs(res[alive_idx] - qr.residuals[li])
+        c9_kill = gap > eps + err[alive_idx]
+        counter.count(**_scale(cm.c9_cost(), alive_idx.size))
+        counter.count(**_scale(extra, alive_idx.size))
+        excluded_c9 += int(c9_kill.sum())
+        survivors = alive_idx[~c9_kill]
+
+        # --- C10, unwidened (int8 symbols are lossless) --------------------
+        if survivors.size:
+            md_sq = _mindist_sq_np(lv.words[survivors].astype(np.int64),
+                                   qr.words[li], n, alphabet)
+            counter.count(**_scale(cm.mindist_cost(N), survivors.size))
+            c10_kill = md_sq > eps * eps
+            excluded_c10 += int(c10_kill.sum())
+            survivors = survivors[~c10_kill]
+
+        alive[:] = False
+        alive[survivors] = True
+
+    # --- Final verify from the raw (mmap) tier -----------------------------
+    cand_idx = np.nonzero(alive)[0]
+    d = _euclidean_np(np.asarray(series[cand_idx], dtype=np.float64),
+                      np.asarray(qr.q, dtype=np.float64))
+    counter.count(**_scale(cm.euclidean_cost(n), cand_idx.size))
+    keep = d <= eps
+    return SearchResult(
+        answers=cand_idx[keep],
+        distances=d[keep],
+        counter=counter,
+        candidates=int(cand_idx.size),
+        excluded_c9=excluded_c9,
+        excluded_c10=excluded_c10,
+        levels_visited=levels_visited,
+    )

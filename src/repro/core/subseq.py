@@ -639,3 +639,94 @@ def load_subseq_index(path, mmap: bool = True,
     return SubseqHostIndex(config=fsi.config, window=int(sub["window"]),
                            stride=int(sub["stride"]), streams=streams,
                            mu=mu, sd=sd, levels=fsi.levels)
+
+
+# ---------------------------------------------------------------------------
+# Quantized screen metadata (DESIGN.md §9): stream the cascade columns as
+# int8/bf16 instead of f32.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SubseqQuantMeta:
+    """Quantized per-window screen metadata for the streaming kernel.
+
+    Only the *screen* columns (SAX words, linear-fit residuals) are
+    quantized — the raw stream samples are resident anyway (the kernel
+    z-normalises them in VMEM), so the in-kernel verify stays exact and
+    answers remain set-identical to full precision.  Unlike the
+    whole-series tier, the dequant params are stored PER WINDOW: the host
+    per-128-row scale blocks do not align with the padded per-stream
+    ``(S, W_sp)`` window layout the kernel grids over, and the window
+    metadata (μ, σ, ‖·‖²) is per-window already, so the expansion
+    ``np.repeat(scale, RESID_BLOCK)`` happens once at build time."""
+
+    mode: str
+    words: tuple        # per level (W, N_l) int8
+    residuals: tuple    # per level (W,) int8 codes / bf16
+    scale: tuple        # per level (W,) f32 (int8) / None (bf16)
+    zero: tuple         # per level (W,) f32 (int8) / None (bf16)
+    err: tuple          # per level (W,) f32 worst-case dequant error
+
+
+def _expand_per_window(blocked: np.ndarray, W: int) -> jnp.ndarray:
+    from ..index import quantized as _quant
+
+    per_row = np.repeat(np.asarray(blocked, np.float32),
+                        _quant.RESID_BLOCK)[:W]
+    return jnp.asarray(per_row, dtype=jnp.float32)
+
+
+def quantize_subseq_meta(hidx: SubseqHostIndex,
+                         mode: str = "int8") -> SubseqQuantMeta:
+    """Quantize the per-window screen columns of a built subseq index.
+
+    Shares the whole-series encoders (``index/quantized.py``) — same
+    codes, same realized worst-case error bound, same ``zero + scale ·
+    code`` dequant expression — then expands the per-block affine params
+    to per-window granularity for the streaming layout."""
+    from ..index import quantized as _quant
+
+    _quant.check_mode(mode)
+    if mode == "none":
+        raise _quant.QuantizationError(
+            "quantize_subseq_meta: mode 'none' has no quantized metadata; "
+            "use the full-precision subseq_range_query instead")
+    words, residuals, scale, zero, err = [], [], [], [], []
+    W = hidx.levels[0].words.shape[0]
+    for lv in hidx.levels:
+        words.append(jnp.asarray(_quant.narrow_words(lv.words),
+                                 dtype=jnp.int8))
+        codes, sc, zp, e_blk = _quant.quantize_residuals(lv.residuals, mode)
+        residuals.append(_engine._upload_codes(codes))
+        scale.append(None if sc is None else _expand_per_window(sc, W))
+        zero.append(None if zp is None else _expand_per_window(zp, W))
+        err.append(_expand_per_window(e_blk, W))
+    return SubseqQuantMeta(mode=mode, words=tuple(words),
+                           residuals=tuple(residuals), scale=tuple(scale),
+                           zero=tuple(zero), err=tuple(err))
+
+
+def subseq_range_query_quantized(
+    sidx: SubseqDeviceIndex, qmeta: SubseqQuantMeta, qr: QueryReprDev,
+    epsilon,
+    block_q: int | None = None, block_w: int | None = None,
+    interpret: bool | None = None,
+):
+    """Streaming range query over quantized screen metadata — answers are
+    set-identical to :func:`subseq_range_query` (tested): the widened C9
+    bound (``gap ≤ ε + err``) keeps the quantized cascade a superset
+    screen and the in-kernel verify over the streamed raw samples is
+    exact, so the ε cut is made on true f32 distances either way."""
+    Q = qr.q.shape[0]
+    block_q, block_w = _subseq_blocks(sidx, Q, 0, block_q, block_w)
+    ans, d2 = _fused.fused_quant_subseq_range_pallas(
+        sidx.streams, sidx.mu, sidx.sd, sidx.index.norms_sq,
+        qmeta.words, qmeta.residuals, qmeta.scale, qmeta.zero, qmeta.err,
+        qr.q, _engine._query_panels(qr, sidx.alphabet), qr.residuals,
+        _engine._eps_qcol(epsilon, Q),
+        mode=qmeta.mode, levels=sidx.levels, alphabet=sidx.alphabet,
+        window=sidx.window, stride=sidx.stride,
+        block_q=block_q, block_w=block_w,
+        interpret=kernel_ops._use_interpret(interpret))
+    return ans, d2

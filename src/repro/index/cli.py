@@ -46,9 +46,12 @@ def cmd_build(args) -> None:
                         alphabet=args.alphabet)
     rows = _rows(args)
     t0 = time.perf_counter()
-    mi = MutableIndex.create(args.dir, rows, cfg)
+    mi = MutableIndex.create(args.dir, rows, cfg,
+                             quantization=args.quantization)
+    quant = (f", quantization={mi.quantization}"
+             if mi.quantization != "none" else "")
     print(f"[index] built gen 0: {mi.n_live} rows (n={rows.shape[1]}, "
-          f"levels={cfg.n_segments}, alphabet={cfg.alphabet}) "
+          f"levels={cfg.n_segments}, alphabet={cfg.alphabet}{quant}) "
           f"in {time.perf_counter() - t0:.2f}s -> {args.dir}")
 
 
@@ -110,6 +113,10 @@ def main(argv=None) -> None:
     p.add_argument("--levels", default="8,16",
                    help="comma-separated segment counts, coarse→fine")
     p.add_argument("--alphabet", type=int, default=10)
+    p.add_argument("--quantization", default="none",
+                   choices=("none", "bf16", "int8"),
+                   help="quantized resident tier written with every "
+                        "segment (DESIGN.md §9)")
     p.set_defaults(fn=cmd_build)
 
     p = sub.add_parser("insert", help="append rows as a delta segment")

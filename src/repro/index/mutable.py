@@ -95,18 +95,30 @@ class MutableIndex:
         series: np.ndarray,
         config: FastSAXConfig,
         normalize: bool = True,
+        quantization: str = "none",
     ) -> "MutableIndex":
-        """Build generation 0 from ``series`` and commit it."""
+        """Build generation 0 from ``series`` and commit it.
+
+        ``quantization`` ("none" | "bf16" | "int8") is an epoch-level
+        property: every segment this index ever commits — the initial
+        base, delta appends, compacted bases — carries a quantized tier
+        in that mode, so a tiered warm start (``TieredIndex.from_store``)
+        finds resident columns at any point in the index's lifecycle.
+        """
+        from . import quantized as _q
+
+        _q.check_mode(quantization)
         root = pathlib.Path(root)
         root.mkdir(parents=True, exist_ok=True)
         if (root / CURRENT).exists():
             raise FileExistsError(f"{root}: index already exists (open it)")
         index = build_index(series, config, normalize=normalize)
         ids = np.arange(index.size, dtype=np.int64)
-        _save_segment(index, ids, root / "base_00000000")
+        _save_segment(index, ids, root / "base_00000000", quantization)
         epoch = {"format": store.FORMAT_VERSION, "gen": 0,
                  "base": "base_00000000", "deltas": [], "tombstones": None,
                  "next_id": int(index.size),
+                 "quantization": quantization,
                  "config": store._config_to_json(config)}
         _commit_epoch(root, epoch)
         return cls(root, epoch)
@@ -141,6 +153,12 @@ class MutableIndex:
     @property
     def config(self) -> FastSAXConfig:
         return self._segments[0][1].config
+
+    @property
+    def quantization(self) -> str:
+        """The epoch's quantized-tier mode ("none" on pre-quantization
+        epochs — the field is absent from their manifests)."""
+        return str(self._epoch.get("quantization", "none"))
 
     @property
     def n_rows(self) -> int:
@@ -228,7 +246,7 @@ class MutableIndex:
         start = int(self._epoch["next_id"])
         ids = np.arange(start, start + delta.size, dtype=np.int64)
         name = f"delta_{gen:08d}"
-        _save_segment(delta, ids, self.root / name)
+        _save_segment(delta, ids, self.root / name, self.quantization)
         epoch = dict(self._epoch, gen=gen,
                      deltas=[*self._epoch["deltas"], name],
                      next_id=start + delta.size)
@@ -316,7 +334,7 @@ class MutableIndex:
         ids = self.live_ids
         gen = self._next_gen()
         name = f"base_{gen:08d}"
-        _save_segment(folded, ids, self.root / name)
+        _save_segment(folded, ids, self.root / name, self.quantization)
         epoch = dict(self._epoch, gen=gen, base=name, deltas=[],
                      tombstones=None)
         _commit_epoch(self.root, epoch)
@@ -400,9 +418,10 @@ def _repr(query, config, normalize):
 
 
 def _save_segment(index: FastSAXIndex, ids: np.ndarray,
-                  path: pathlib.Path) -> None:
+                  path: pathlib.Path, quantization: str = "none") -> None:
     store.save_index(index, path,
-                     extra_arrays={"ids": np.asarray(ids, dtype=np.int64)})
+                     extra_arrays={"ids": np.asarray(ids, dtype=np.int64)},
+                     quantization=quantization)
 
 
 def _commit_epoch(root: pathlib.Path, epoch: dict) -> None:

@@ -41,6 +41,20 @@ def _device_leaves(index) -> dict:
     return leaves
 
 
+def _shards(a) -> list:
+    """Per-shard (start_row, np.ndarray), sorted by row offset."""
+    import jax
+
+    a = jax.numpy.asarray(a)
+    if hasattr(a, "addressable_shards") and a.addressable_shards:
+        out = []
+        for sh in a.addressable_shards:
+            idx = sh.index[0] if sh.index else slice(0, None)
+            out.append((idx.start or 0, np.asarray(sh.data)))
+        return sorted(out, key=lambda t: t[0])
+    return [(0, np.asarray(a))]
+
+
 def store_sharded(
     index,
     path: str | os.PathLike,
@@ -53,22 +67,9 @@ def store_sharded(
     the global array is never assembled on the host.  Works unchanged for
     a single-device index (one shard dir).
     """
-    import jax
-
     path = pathlib.Path(path)
     leaves = _device_leaves(index)
     B = index.series.shape[0]
-
-    def _shards(a) -> list:
-        """Per-shard (start_row, np.ndarray), sorted by row offset."""
-        a = jax.numpy.asarray(a)
-        if hasattr(a, "addressable_shards") and a.addressable_shards:
-            out = []
-            for sh in a.addressable_shards:
-                idx = sh.index[0] if sh.index else slice(0, None)
-                out.append((idx.start or 0, np.asarray(sh.data)))
-            return sorted(out, key=lambda t: t[0])
-        return [(0, np.asarray(a))]
 
     per_leaf = {name: _shards(a) for name, a in leaves.items()}
     n_shards = {len(s) for s in per_leaf.values()}
@@ -156,3 +157,145 @@ def load_sharded(
         alphabet=int(manifest["alphabet"]),
     )
     return index, int(manifest["n_valid"])
+
+
+# ---------------------------------------------------------------------------
+# Tiered (quantized) sharded persistence — DESIGN.md §9.
+#
+# Each shard dir additionally carries the quantized resident-tier columns
+# (same names and dtypes as a plain store's quantized tier) next to its
+# slice of the raw series, so a fleet can warm-start the screen tier
+# shard-by-shard while the raw rows stay on disk for the final verify.
+# ---------------------------------------------------------------------------
+
+_TIERED_KIND = "fastsax-tiered-sharded"
+
+
+def _tiered_leaves(qdev) -> dict:
+    """QuantizedDeviceIndex -> host store columns, quant-tier names.
+
+    Device column vectors ((m, 1)) flatten back to the host layout
+    ((m,)); bf16 codes are stored as their uint16 bit patterns, exactly
+    like ``store.save_index``'s quantized tier."""
+    def codes(a):
+        a = np.asarray(a)
+        return a.view(np.uint16) if a.dtype.name == "bfloat16" else a
+
+    def flat(a):
+        return np.asarray(a, np.float32).reshape(-1)
+
+    int8 = qdev.mode == "int8"
+    leaves = {"qseries": codes(qdev.series),
+              "qseries_err": flat(qdev.series_err),
+              "qnorms": flat(qdev.norms_sq)}
+    if int8:
+        leaves["qseries_scale"] = flat(qdev.series_scale)
+        leaves["qseries_zero"] = flat(qdev.series_zero)
+    for li, N in enumerate(qdev.levels):
+        leaves[f"qwords_N{N}"] = np.asarray(qdev.words[li])
+        leaves[f"qresid_N{N}"] = codes(qdev.residuals[li])
+        leaves[f"qresid_err_N{N}"] = flat(qdev.resid_err[li])
+        if int8:
+            leaves[f"qresid_scale_N{N}"] = flat(qdev.resid_scale[li])
+            leaves[f"qresid_zero_N{N}"] = flat(qdev.resid_zero[li])
+    return leaves
+
+
+def store_sharded_quantized(
+    tindex,
+    path: str | os.PathLike,
+    n_valid: int | None = None,
+    extra_meta: dict | None = None,
+) -> pathlib.Path:
+    """Persist an ``engine.TieredIndex``, one store dir per mesh shard.
+
+    Writes each shard's quantized screen columns from device-local data
+    plus its slice of the host raw series (the mmap verify tier).  With
+    more than one shard, every non-final shard's row count must be a
+    multiple of ``quantized.RESID_BLOCK`` — otherwise the per-block
+    scales of a shard quantized in isolation would not describe the
+    concatenated row order a single-host reload sees.
+    """
+    from . import quantized as _q
+
+    path = pathlib.Path(path)
+    qdev = tindex.dev
+    B = int(qdev.series.shape[0])
+    per_leaf = {name: _shards(a) for name, a in _tiered_leaves(qdev).items()}
+    n_shards = {len(s) for s in per_leaf.values()}
+    if len(n_shards) != 1:
+        raise ValueError(f"inconsistent shard counts across leaves: "
+                         f"{sorted(n_shards)}")
+    P_sh = n_shards.pop()
+    offsets = [start for start, _ in per_leaf["qseries"]]
+    rows = [a.shape[0] for _, a in per_leaf["qseries"]]
+    if P_sh > 1 and any(r % _q.RESID_BLOCK for r in rows[:-1]):
+        raise ValueError(
+            f"shard row counts {rows} are not multiples of "
+            f"RESID_BLOCK={_q.RESID_BLOCK}; per-shard scale blocks would "
+            f"misalign on reload — repad the database")
+
+    raw = np.asarray(tindex.raw)
+    tmp = store.make_tmp_dir(path)
+    for si in range(P_sh):
+        arrays = {name: per_leaf[name][si][1] for name in per_leaf}
+        arrays["series"] = raw[offsets[si]:offsets[si] + rows[si]]
+        store.write_arrays(
+            tmp / f"shard_{si:05d}", arrays,
+            {"kind": "fastsax-tiered-shard", "shard": si, "shards": P_sh,
+             "row_offset": int(offsets[si]),
+             "quant": {"mode": qdev.mode, "resid_block": _q.RESID_BLOCK,
+                       "sentinel_code": _q.SENTINEL_CODE}})
+    manifest = {"format": store.FORMAT_VERSION, "kind": _TIERED_KIND,
+                "shards": P_sh, "levels": [int(N) for N in qdev.levels],
+                "alphabet": int(qdev.alphabet), "size": B,
+                "n": int(raw.shape[-1]), "quantization": qdev.mode,
+                "n_valid": int(B if n_valid is None else n_valid),
+                "extra": extra_meta or {}}
+    (tmp / MANIFEST).write_text(json.dumps(manifest, indent=1))
+    return store.commit_dir(tmp, path)
+
+
+def load_sharded_quantized(
+    path: str | os.PathLike,
+    mmap: bool = True,
+    verify: bool = False,
+):
+    """Reassemble a tiered sharded store on a single host.
+
+    Returns ``(engine.TieredIndex, n_valid)``.  The quantized screen
+    columns concatenate across shards (sound because
+    :func:`store_sharded_quantized` enforced RESID_BLOCK-aligned shard
+    sizes); the raw series stays an ``np.memmap`` for a single-shard
+    store and concatenates otherwise.  Distributed (shard_map) execution
+    of the quantized screen is not implemented — ROADMAP open item; this
+    loader is the warm-start path for single-host tiered serving from a
+    fleet-written store.
+    """
+    from ..core import engine as _engine
+    from . import quantized as _q
+
+    path = pathlib.Path(path)
+    manifest = sharded_info(path)
+    if manifest.get("kind") != _TIERED_KIND:
+        raise IOError(f"{path}: not a {_TIERED_KIND} store")
+    mode = str(manifest["quantization"])
+    levels = tuple(int(N) for N in manifest["levels"])
+    P_sh = int(manifest["shards"])
+    shard_dirs = [path / f"shard_{si:05d}" for si in range(P_sh)]
+
+    def get(name):
+        parts = [np.asarray(store.read_array(d, name, mmap=mmap,
+                                             verify=verify))
+                 for d in shard_dirs]
+        return parts[0] if P_sh == 1 else np.concatenate(parts)
+
+    qhost = _q.quant_from_arrays(mode, int(manifest["n"]),
+                                 int(manifest["alphabet"]), levels, get)
+    raws = [store.read_array(d, "series", mmap=mmap, verify=verify)
+            for d in shard_dirs]
+    raw = raws[0] if P_sh == 1 else np.concatenate(
+        [np.asarray(r) for r in raws])
+    tiered = _engine.TieredIndex(
+        dev=_engine.quantized_device_index(qhost), raw=raw)
+    return tiered, int(manifest["n_valid"])

@@ -39,6 +39,30 @@ FORMAT_VERSION = 1
 MANIFEST = "manifest.json"
 _KIND = "fastsax-index"
 
+#: Dtypes a loader may hand to the engines without a cast.  Anything else
+#: in a core column is a silent-miscast hazard and fails loudly
+#: (:class:`StoreDtypeError`) instead of flowing into the bound math.
+_COLUMN_DTYPES = {
+    "series": ("float64", "float32"),
+    "resid": ("float64", "float32"),
+    "words": ("int32",),
+}
+
+#: Expected dtypes of the quantized resident-tier columns (DESIGN.md §9).
+_QUANT_DTYPES = {
+    "int8": {"qseries": "int8", "qresid": "int8", "qwords": "int8"},
+    "bf16": {"qseries": "uint16", "qresid": "uint16", "qwords": "int8"},
+}
+
+
+class StoreDtypeError(IOError):
+    """A stored column's dtype violates the format contract.
+
+    Every array's dtype is explicit in the manifest; this error means the
+    store was written with (or tampered into) a dtype the loaders would
+    otherwise silently miscast — e.g. float16 residuals flowing into the
+    f32 bound math."""
+
 
 def _sha256(a: np.ndarray) -> str:
     return hashlib.sha256(np.ascontiguousarray(a).tobytes()).hexdigest()
@@ -177,18 +201,54 @@ def save_index(
     path: str | os.PathLike,
     extra_meta: dict | None = None,
     extra_arrays: dict | None = None,
+    quantization: str = "none",
 ) -> pathlib.Path:
     """Persist a built index atomically.  O(bytes) once; loads in O(ms).
 
     ``extra_arrays`` ride along in the same manifest (checksummed like
     every column) — ``mutable.py`` stores each segment's external ids
     this way.  ``load_index`` ignores names it does not know.
+
+    ``quantization`` ∈ {"none", "bf16", "int8"} additionally writes the
+    resident-tier quantized columns (``q*`` arrays) plus a
+    ``manifest["quant"]`` block recording the mode, the scale-block
+    geometry, and the sha256 of every full-precision source column —
+    ``load_quantized`` refuses a store whose quantized columns were
+    derived from a different generation of the exact data.
     """
+    from . import quantized as _q
+
+    _q.check_mode(quantization)
+    arrays = index_arrays(index)
     meta = {"kind": _KIND, "config": _config_to_json(index.config),
             "size": int(index.size), "n": int(index.n),
+            "dtypes": {"series": str(np.asarray(index.series).dtype),
+                       "resid": str(np.asarray(
+                           index.levels[0].residuals).dtype),
+                       "words": str(np.asarray(index.levels[0].words).dtype)},
             "extra": extra_meta or {}}
-    return write_arrays(path, {**index_arrays(index), **(extra_arrays or {})},
-                        meta)
+    if quantization != "none":
+        qhost = _q.quantize_host_index(index, quantization)
+        source_sha = {name: _sha256(np.ascontiguousarray(a))
+                      for name, a in arrays.items()}
+        meta["quant"] = _q.quant_meta(qhost, source_sha)
+        arrays = {**arrays, **_q.quant_arrays(qhost)}
+    return write_arrays(path, {**arrays, **(extra_arrays or {})}, meta)
+
+
+def _check_column_dtype(path, name: str, kind: str, dtype: str,
+                        declared: str | None):
+    """Enforce the loader's dtype contract for one core column."""
+    allowed = _COLUMN_DTYPES[kind]
+    if dtype not in allowed:
+        raise StoreDtypeError(
+            f"{path}/{name}: stored dtype {dtype} is not a valid {kind} "
+            f"dtype (expected one of {allowed}) — refusing the silently "
+            f"miscast load")
+    if declared is not None and dtype != declared:
+        raise StoreDtypeError(
+            f"{path}/{name}: stored dtype {dtype} does not match the "
+            f"manifest dtype contract {declared!r}")
 
 
 def load_index(
@@ -207,18 +267,99 @@ def load_index(
         raise IOError(f"{path}: format {manifest['format']} is newer than "
                       f"this reader ({FORMAT_VERSION})")
     config = _config_from_json(manifest["config"])
+    declared = manifest.get("dtypes", {})
     series = read_array(path, "series", manifest, mmap=mmap, verify=verify)
-    levels = [
-        LevelData(
-            n_segments=N,
-            words=read_array(path, f"words_N{N}", manifest, mmap=mmap,
-                             verify=verify),
-            residuals=read_array(path, f"resid_N{N}", manifest, mmap=mmap,
-                                 verify=verify),
-        )
-        for N in config.levels
-    ]
+    _check_column_dtype(path, "series", "series", str(series.dtype),
+                        declared.get("series"))
+    levels = []
+    for N in config.levels:
+        words = read_array(path, f"words_N{N}", manifest, mmap=mmap,
+                           verify=verify)
+        residuals = read_array(path, f"resid_N{N}", manifest, mmap=mmap,
+                               verify=verify)
+        _check_column_dtype(path, f"words_N{N}", "words", str(words.dtype),
+                            declared.get("words"))
+        _check_column_dtype(path, f"resid_N{N}", "resid",
+                            str(residuals.dtype), declared.get("resid"))
+        levels.append(LevelData(n_segments=N, words=words,
+                                residuals=residuals))
     return FastSAXIndex(config=config, series=series, levels=levels)
+
+
+def has_quantized(manifest: dict) -> bool:
+    return bool(manifest.get("quant"))
+
+
+def quantized_mode(manifest: dict) -> str:
+    quant = manifest.get("quant") or {}
+    return quant.get("mode", "none")
+
+
+def load_quantized(
+    path: str | os.PathLike,
+    mmap: bool = True,
+    verify: bool = False,
+    mode: str | None = None,
+):
+    """Open the quantized resident tier of a committed store.
+
+    Returns a ``repro.index.quantized.QuantizedHostIndex``.  Raises:
+
+    * ``IOError`` when the store carries no quantized tier, or when any
+      quantized source sha256 recorded at quantize time no longer matches
+      the manifest's full-precision column (generation mix — e.g. a scale
+      manifest paired with a rebuilt residual column);
+    * :class:`StoreDtypeError` when a quantized column's dtype deviates
+      from the mode's contract;
+    * the usual shape/checksum ``IOError`` from :func:`read_array` for
+      truncated or bit-flipped payloads.
+
+    ``mode`` pins the expected quantization ("int8"/"bf16"); ``None``
+    accepts whatever the store was built with.
+    """
+    from . import quantized as _q
+
+    path = pathlib.Path(path)
+    manifest = read_manifest(path)
+    quant = manifest.get("quant")
+    if not quant:
+        raise IOError(f"{path}: store has no quantized tier "
+                      f"(save with quantization='int8'|'bf16')")
+    stored_mode = quant.get("mode")
+    if mode is not None and stored_mode != mode:
+        raise IOError(f"{path}: quantized tier is {stored_mode!r}, "
+                      f"caller requires {mode!r}")
+    if int(quant.get("resid_block", -1)) != _q.RESID_BLOCK:
+        raise IOError(f"{path}: quantized scale-block geometry "
+                      f"{quant.get('resid_block')} does not match this "
+                      f"reader ({_q.RESID_BLOCK})")
+    for name, sha in quant.get("source_sha", {}).items():
+        entry = manifest["arrays"].get(name)
+        if entry is None or entry["sha256"] != sha:
+            raise IOError(
+                f"{path}/{name}: quantized columns were derived from a "
+                f"different generation of this array — scale/column "
+                f"generation mismatch, refusing to load")
+    expect = _QUANT_DTYPES[stored_mode]
+
+    def get(name: str) -> np.ndarray:
+        a = read_array(path, name, manifest, mmap=mmap, verify=verify)
+        base = name.split("_N")[0] if name.startswith(
+            ("qwords", "qresid")) else name
+        want = expect.get(base)
+        if base in ("qresid_scale", "qresid_zero", "qresid_err",
+                    "qseries_scale", "qseries_zero", "qseries_err",
+                    "qnorms"):
+            want = "float32"
+        if want is not None and str(a.dtype) != want:
+            raise StoreDtypeError(
+                f"{path}/{name}: quantized column dtype {a.dtype} "
+                f"violates the {stored_mode} contract ({want})")
+        return a
+
+    config = _config_from_json(manifest["config"])
+    return _q.quant_from_arrays(stored_mode, manifest["n"], config.alphabet,
+                                config.levels, get)
 
 
 def store_info(path: str | os.PathLike) -> dict:

@@ -50,11 +50,19 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..index import quantized as _quant
+
 # Residual sentinel for padded database rows: C9 excludes them at any
 # finite epsilon (mirrors core/dist_search._PAD_RESIDUAL).
 PAD_RESIDUAL = 1e30
 # Epsilon sentinel for padded query rows: gaps are >= 0, so nothing passes.
 PAD_EPSILON = -1.0
+
+# f32 slack on the widened quantized series screen — the single source of
+# truth: core/engine.py's XLA oracle imports these, so the two screens
+# cannot drift (they are required to agree bit-for-bit, tested).
+QUANT_SCREEN_REL = 1e-6
+QUANT_SCREEN_ABS = 1e-6
 
 
 def _split_refs(refs, n_levels: int):
@@ -609,3 +617,509 @@ def fused_subseq_topk_pallas(
     ok = (idx >= 0) & (t < W_s)
     canon = jnp.where(ok, s * W_s + t, -1)
     return canon, jnp.where(ok, vals, jnp.inf)
+
+
+# ---------------------------------------------------------------------------
+# Quantized dequantize-in-kernel forms (DESIGN.md §9).
+#
+# The resident tier is QUANTIZED (int8 per-block affine or bf16): what
+# crosses HBM→VMEM per database block is the int8/bf16 codes plus a few
+# f32 scale rows — 2–4× fewer bytes than the f32 layout — and the kernel
+# dequantizes in VMEM with the exact expression of the XLA oracle
+# (``core/engine.quantized_screen``), so the two screens are bit-identical
+# (tested).  The cascade bounds are WIDENED by the stored per-block error
+# (C9) and per-row L2 error (series screen); C10 runs unwidened on the
+# losslessly-narrowed int8 symbols.  These kernels emit the *screen* —
+# survivors that may be answers — and the tiered engine exact-verifies
+# them against the raw mmap tier; the streaming subsequence form streams
+# the raw samples anyway, so its in-kernel verify is already exact and it
+# emits final answers directly.
+#
+# Scale-block layout: ``quantized.RESID_BLOCK`` (128) divides every
+# ``block_b`` candidate, so a kernel block always covers whole scale
+# blocks; the (nb, 1) scale columns ride a (block_b // 128, 1) BlockSpec
+# and are expanded to per-row inside VMEM (pure layout ops).
+# ---------------------------------------------------------------------------
+
+
+def _expand_block_rows(v: jnp.ndarray, block_b: int) -> jnp.ndarray:
+    """(nbs, 1) per-scale-block values -> (block_b, 1) per-row (consecutive
+    runs of RESID_BLOCK rows — same expansion as the XLA oracle)."""
+    nbs = v.shape[0]
+    return jnp.broadcast_to(v, (nbs, block_b // nbs)).reshape(block_b, 1)
+
+
+def _quant_split_refs(refs, n_levels: int, int8: bool):
+    """Quantized kernel ref layout.
+
+    Inputs: q, qnorm, eps, [qres_l, tq_l]*L,
+            qseries(, s_scale, s_zero), serr, norms,
+            [codes_l(, scale_l, zero_l), err_l, words_l]*L
+    (the parenthesised refs exist only in int8 mode).
+    """
+    q_ref, qn_ref, eps_ref = refs[0], refs[1], refs[2]
+    qlv = refs[3:3 + 2 * n_levels]
+    base = 3 + 2 * n_levels
+    if int8:
+        qseries_ref, s_scale_ref, s_zero_ref = refs[base:base + 3]
+        base += 3
+    else:
+        qseries_ref = refs[base]
+        s_scale_ref = s_zero_ref = None
+        base += 1
+    serr_ref, norms_ref = refs[base], refs[base + 1]
+    base += 2
+    per = 5 if int8 else 3
+    dlv = refs[base:base + per * n_levels]
+    outs = refs[base + per * n_levels:]
+    return (q_ref, qn_ref, eps_ref, qlv, qseries_ref, s_scale_ref,
+            s_zero_ref, serr_ref, norms_ref, dlv, outs)
+
+
+def _quant_level_residuals(dlv, li: int, int8: bool, block_b: int):
+    """Dequantized (block_b, 1) residuals + (block_b, 1) error bound +
+    words ref for one level — ``zero + scale · code`` is THE shared
+    dequantizer (bit-identical to engine._dequant_residuals_dev)."""
+    per = 5 if int8 else 3
+    off = per * li
+    if int8:
+        codes = dlv[off][...]                        # (block_b, 1) i8
+        scale = _expand_block_rows(dlv[off + 1][...], block_b)
+        zero = _expand_block_rows(dlv[off + 2][...], block_b)
+        deq = zero + scale * codes.astype(jnp.float32)
+        res = jnp.where(codes == _quant.SENTINEL_CODE,
+                        jnp.float32(PAD_RESIDUAL), deq)
+        err = _expand_block_rows(dlv[off + 3][...], block_b)
+        words_ref = dlv[off + 4]
+    else:
+        res = dlv[off][...].astype(jnp.float32)      # (block_b, 1) bf16
+        err = _expand_block_rows(dlv[off + 1][...], block_b)
+        words_ref = dlv[off + 2]
+    return res, err, words_ref
+
+
+def _quant_cascade_alive(eps, qlv, dlv, *, levels, alphabet, n, int8,
+                         block_b):
+    """(block_q, block_b) alive mask under the WIDENED cascade: C9 compares
+    the dequantized gap against ε + e_blk; C10 is the exact unwidened
+    compare-select sweep on the losslessly-narrowed int8 symbols."""
+    eps2 = eps * eps
+    alive = None
+    for li, N in enumerate(levels):
+        qres = qlv[2 * li][...]                      # (block_q, 1)
+        tq = qlv[2 * li + 1][...]                    # (block_q, alpha, N)
+        res, err, words_ref = _quant_level_residuals(dlv, li, int8, block_b)
+        words = words_ref[...]                       # (block_b, N) i8
+        gap = jnp.abs(res[:, 0][None, :] - qres)     # (block_q, block_b)
+        ok = gap <= eps + err[:, 0][None, :]
+        alive = ok if alive is None else alive & ok
+        sel = words[None, :, :]
+        acc = jnp.zeros((qres.shape[0], words.shape[0], N), jnp.float32)
+        for a in range(alphabet):
+            acc = jnp.where(sel == a, tq[:, a, :][:, None, :], acc)
+        md_sq = (float(n) / N) * jnp.sum(acc * acc, axis=-1)
+        alive &= md_sq <= eps2
+    return alive
+
+
+def _quant_screen_d2(q_ref, qn_ref, qseries_ref, s_scale_ref, s_zero_ref,
+                     norms_ref, int8: bool):
+    """Dequantize the series block in VMEM and evaluate the shared
+    matmul-form screen distance d(û, q)² against the dequantized norms."""
+    codes = qseries_ref[...]
+    if int8:
+        u = s_zero_ref[...] + s_scale_ref[...] * codes.astype(jnp.float32)
+    else:
+        u = codes.astype(jnp.float32)
+    return _verify_arrays(q_ref[...], qn_ref[...], u, norms_ref[...])
+
+
+def _quant_keep(alive, d2, eps, serr_ref):
+    """The widened series screen: keep rows with d(û,q) ≤ (ε + e_u) plus
+    the f32 slack — identical expression to the XLA oracle."""
+    serr = serr_ref[...]                             # (block_b, 1)
+    thresh = (eps + serr[:, 0][None, :]) * (1.0 + QUANT_SCREEN_REL) \
+        + QUANT_SCREEN_ABS
+    return alive & (d2 <= thresh * thresh)
+
+
+def _quant_range_kernel(*refs, levels, alphabet, n, int8, block_b):
+    (q_ref, qn_ref, eps_ref, qlv, qseries_ref, s_scale_ref, s_zero_ref,
+     serr_ref, norms_ref, dlv,
+     (keep_ref, d2_ref)) = _quant_split_refs(refs, len(levels), int8)
+    eps = eps_ref[...]
+    alive = _quant_cascade_alive(eps, qlv, dlv, levels=levels,
+                                 alphabet=alphabet, n=n, int8=int8,
+                                 block_b=block_b)
+    d2 = _quant_screen_d2(q_ref, qn_ref, qseries_ref, s_scale_ref,
+                          s_zero_ref, norms_ref, int8)
+    keep = _quant_keep(alive, d2, eps, serr_ref)
+    keep_ref[...] = keep.astype(jnp.int32)
+    d2_ref[...] = jnp.where(keep, d2, jnp.inf)
+
+
+def _quant_topk_kernel(*refs, levels, alphabet, n, k, int8, block_b):
+    (q_ref, qn_ref, eps_ref, qlv, qseries_ref, s_scale_ref, s_zero_ref,
+     serr_ref, norms_ref, dlv,
+     (vals_ref, idx_ref)) = _quant_split_refs(refs, len(levels), int8)
+    eps = eps_ref[...]
+    alive = _quant_cascade_alive(eps, qlv, dlv, levels=levels,
+                                 alphabet=alphabet, n=n, int8=int8,
+                                 block_b=block_b)
+    d2 = _quant_screen_d2(q_ref, qn_ref, qseries_ref, s_scale_ref,
+                          s_zero_ref, norms_ref, int8)
+    d2m = jnp.where(_quant_keep(alive, d2, eps, serr_ref), d2, jnp.inf)
+    base = pl.program_id(0) * block_b
+    vals, idxs = _topk_select(d2m, base, k)
+    vals_ref[...] = vals
+    idx_ref[...] = idxs
+
+
+def _quant_db_specs(levels, int8: bool, n: int, block_b: int):
+    """Database-side BlockSpecs of the quantized layout (outer index j):
+    per-scale-block columns ride a (block_b // RESID_BLOCK, 1) spec."""
+    nbs = block_b // _quant.RESID_BLOCK
+    specs = [pl.BlockSpec((block_b, n), lambda j, i: (j, 0))]    # qseries
+    if int8:
+        specs += [pl.BlockSpec((block_b, 1), lambda j, i: (j, 0)),  # s_scale
+                  pl.BlockSpec((block_b, 1), lambda j, i: (j, 0))]  # s_zero
+    specs += [pl.BlockSpec((block_b, 1), lambda j, i: (j, 0)),      # serr
+              pl.BlockSpec((block_b, 1), lambda j, i: (j, 0))]      # norms
+    for N in levels:
+        specs.append(pl.BlockSpec((block_b, 1), lambda j, i: (j, 0)))
+        if int8:
+            specs += [pl.BlockSpec((nbs, 1), lambda j, i: (j, 0)),
+                      pl.BlockSpec((nbs, 1), lambda j, i: (j, 0))]
+        specs.append(pl.BlockSpec((nbs, 1), lambda j, i: (j, 0)))   # err
+        specs.append(pl.BlockSpec((block_b, N), lambda j, i: (j, 0)))
+    return specs
+
+
+def _pad_scale_rows(a, block_b: int, Bp: int, fill):
+    """Pad a (nb, 1) per-scale-block column to the padded row count's
+    block tally (Bp // RESID_BLOCK rows)."""
+    need = Bp // _quant.RESID_BLOCK
+    a = jnp.asarray(a, jnp.float32).reshape(-1, 1)
+    if a.shape[0] == need:
+        return a
+    return jnp.pad(a, [(0, need - a.shape[0]), (0, 0)],
+                   constant_values=fill)
+
+
+def _quant_prep_inputs(qdev, q, q_panels, q_residuals, eps_col, block_q,
+                       block_b):
+    """Pad both axes of the quantized layout and assemble the flat input
+    list (see _quant_split_refs).  ``qdev`` duck-types
+    ``core/engine.QuantizedDeviceIndex``."""
+    int8 = qdev.mode == "int8"
+    levels = qdev.levels
+    B = qdev.series.shape[0]
+    inputs, Qp = _prep_query_inputs(q, q_panels, q_residuals, eps_col,
+                                    levels, block_q)
+    Bp = -(-B // block_b) * block_b
+    inputs.append(_pad_rows(qdev.series, block_b, fill=0))
+    if int8:
+        inputs.append(_pad_rows(qdev.series_scale, block_b, fill=1.0))
+        inputs.append(_pad_rows(qdev.series_zero, block_b, fill=0.0))
+    inputs.append(_pad_rows(
+        qdev.series_err.astype(jnp.float32).reshape(B, 1), block_b))
+    inputs.append(_pad_rows(
+        qdev.norms_sq.astype(jnp.float32).reshape(B, 1), block_b))
+    for li in range(len(levels)):
+        codes = qdev.residuals[li].reshape(B, 1)
+        if int8:
+            inputs.append(_pad_rows(codes, block_b,
+                                    fill=_quant.SENTINEL_CODE))
+            inputs.append(_pad_scale_rows(qdev.resid_scale[li], block_b,
+                                          Bp, 1.0))
+            inputs.append(_pad_scale_rows(qdev.resid_zero[li], block_b,
+                                          Bp, 0.0))
+        else:
+            inputs.append(_pad_rows(codes, block_b, fill=PAD_RESIDUAL))
+        inputs.append(_pad_scale_rows(qdev.resid_err[li], block_b, Bp, 0.0))
+        inputs.append(_pad_rows(qdev.words[li], block_b, fill=0))
+    return inputs, Qp, Bp
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "Qp", "Bp", "mode", "levels", "alphabet", "n", "block_q", "block_b",
+    "interpret"))
+def _quant_range_call(inputs, Qp, Bp, mode, levels, alphabet, n, block_q,
+                      block_b, interpret):
+    int8 = mode == "int8"
+    grid = (Bp // block_b, Qp // block_q)
+    in_specs = _query_specs(levels, alphabet, n, block_q) + \
+        _quant_db_specs(levels, int8, n, block_b)
+    return pl.pallas_call(
+        functools.partial(_quant_range_kernel, levels=levels,
+                          alphabet=alphabet, n=n, int8=int8,
+                          block_b=block_b),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((block_q, block_b), lambda j, i: (i, j)),
+            pl.BlockSpec((block_q, block_b), lambda j, i: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Qp, Bp), jnp.int32),
+            jax.ShapeDtypeStruct((Qp, Bp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(*inputs)
+
+
+def fused_quant_range_pallas(
+    qdev,                       # engine.QuantizedDeviceIndex (duck-typed)
+    q: jnp.ndarray,             # (Q, n) f32
+    q_panels: tuple,            # per level (Q, α, N_l) f32
+    q_residuals: tuple,         # per level (Q,) f32
+    eps_col: jnp.ndarray,       # (Q,) or (Q, 1) f32
+    block_q: int = 8,
+    block_b: int = 256,
+    interpret: bool = True,
+):
+    """One-pass quantized screen: ``(keep (Q, B) bool, d̂² (Q, B) f32)``.
+
+    Bit-identical to ``core/engine.quantized_screen`` (tested): the codes
+    are dequantized in VMEM, the C9 bound is widened by the per-block
+    error, and the series screen by the per-row L2 error + f32 slack.
+    Survivors still need the raw-tier exact verify — the tiered engine
+    (``core/engine.quantized_range_query``) owns that epilogue.
+    """
+    B, Q = qdev.series.shape[0], q.shape[0]
+    eps = jnp.asarray(eps_col, jnp.float32).reshape(Q, 1)
+    inputs, Qp, Bp = _quant_prep_inputs(qdev, q, q_panels, q_residuals,
+                                        eps, block_q, block_b)
+    keep, d2 = _quant_range_call(
+        inputs, Qp=Qp, Bp=Bp, mode=qdev.mode, levels=qdev.levels,
+        alphabet=qdev.alphabet, n=qdev.n, block_q=block_q,
+        block_b=block_b, interpret=interpret)
+    return keep[:Q, :B] != 0, d2[:Q, :B]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "Qp", "Bp", "mode", "levels", "alphabet", "n", "k", "block_q",
+    "block_b", "interpret"))
+def _quant_topk_call(inputs, Qp, Bp, mode, levels, alphabet, n, k, block_q,
+                     block_b, interpret):
+    int8 = mode == "int8"
+    nb = Bp // block_b
+    grid = (nb, Qp // block_q)
+    in_specs = _query_specs(levels, alphabet, n, block_q) + \
+        _quant_db_specs(levels, int8, n, block_b)
+    return pl.pallas_call(
+        functools.partial(_quant_topk_kernel, levels=levels,
+                          alphabet=alphabet, n=n, k=k, int8=int8,
+                          block_b=block_b),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((block_q, k), lambda j, i: (i, j)),
+            pl.BlockSpec((block_q, k), lambda j, i: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Qp, nb * k), jnp.float32),
+            jax.ShapeDtypeStruct((Qp, nb * k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(*inputs)
+
+
+def fused_quant_topk_pallas(
+    qdev,
+    q: jnp.ndarray,
+    q_panels: tuple,
+    q_residuals: tuple,
+    eps_col: jnp.ndarray,
+    k: int,
+    block_q: int = 8,
+    block_b: int = 256,
+    interpret: bool = True,
+):
+    """Quantized screen emitting block-local top-k partials of the SCREEN
+    distances d(û, q)² among screen survivors — ``(idx (Q, nb·k) i32,
+    d̂² (Q, nb·k) f32)``, merged by :func:`merge_topk_partials`.  The
+    candidates are screen-level (distances to the dequantized rows); any
+    exactness claim still requires the raw-tier verify, which is why the
+    tiered k-NN engine prefers the range screen + compaction epilogue —
+    this form exists for parity testing and candidate generation.
+    """
+    B, Q = qdev.series.shape[0], q.shape[0]
+    eps = jnp.asarray(eps_col, jnp.float32).reshape(Q, 1)
+    inputs, Qp, Bp = _quant_prep_inputs(qdev, q, q_panels, q_residuals,
+                                        eps, block_q, block_b)
+    vals, idx = _quant_topk_call(
+        inputs, Qp=Qp, Bp=Bp, mode=qdev.mode, levels=qdev.levels,
+        alphabet=qdev.alphabet, n=qdev.n, k=int(k), block_q=block_q,
+        block_b=block_b, interpret=interpret)
+    return idx[:Q], vals[:Q]
+
+
+# --- streaming subsequence form --------------------------------------------
+
+
+def _quant_subseq_split_refs(refs, n_levels: int, int8: bool):
+    """Inputs: q, qnorm, eps, [qres_l, tq_l]*L, seg, mu, sd, norms,
+    [codes_l(, scale_l, zero_l), err_l, words_l]*L; outputs trail.  The
+    per-window scale/zero/err columns are pre-expanded per window (the
+    window metadata is already per-window — μ, σ, norms — so the streaming
+    layout stores dequant params at the same granularity)."""
+    q_ref, qn_ref, eps_ref = refs[0], refs[1], refs[2]
+    qlv = refs[3:3 + 2 * n_levels]
+    base = 3 + 2 * n_levels
+    seg_ref, mu_ref, sd_ref, norms_ref = refs[base:base + 4]
+    base += 4
+    per = 5 if int8 else 3
+    dlv = refs[base:base + per * n_levels]
+    outs = refs[base + per * n_levels:]
+    return (q_ref, qn_ref, eps_ref, qlv, seg_ref, mu_ref, sd_ref,
+            norms_ref, dlv, outs)
+
+
+def _quant_window_residuals(dlv, li: int, int8: bool):
+    """Dequantized (block_w, 1) window residuals + error + words ref —
+    per-window affine params, same ``zero + scale · code`` expression."""
+    per = 5 if int8 else 3
+    off = per * li
+    if int8:
+        codes = dlv[off][...]
+        deq = dlv[off + 2][...] + dlv[off + 1][...] * \
+            codes.astype(jnp.float32)
+        res = jnp.where(codes == _quant.SENTINEL_CODE,
+                        jnp.float32(PAD_RESIDUAL), deq)
+        err = dlv[off + 3][...]
+        words_ref = dlv[off + 4]
+    else:
+        res = dlv[off][...].astype(jnp.float32)
+        err = dlv[off + 1][...]
+        words_ref = dlv[off + 2]
+    return res, err, words_ref
+
+
+def _quant_subseq_range_kernel(*refs, levels, alphabet, window, stride,
+                               int8, block_w):
+    (q_ref, qn_ref, eps_ref, qlv, seg_ref, mu_ref, sd_ref, norms_ref, dlv,
+     (ans_ref, d2_ref)) = _quant_subseq_split_refs(refs, len(levels), int8)
+    eps = eps_ref[...]
+    eps2 = eps * eps
+    alive = None
+    for li, N in enumerate(levels):
+        qres = qlv[2 * li][...]
+        tq = qlv[2 * li + 1][...]
+        res, err, words_ref = _quant_window_residuals(dlv, li, int8)
+        words = words_ref[...]
+        gap = jnp.abs(res[:, 0][None, :] - qres)
+        ok = gap <= eps + err[:, 0][None, :]
+        alive = ok if alive is None else alive & ok
+        sel = words[None, :, :]
+        acc = jnp.zeros((qres.shape[0], words.shape[0], N), jnp.float32)
+        for a in range(alphabet):
+            acc = jnp.where(sel == a, tq[:, a, :][:, None, :], acc)
+        md_sq = (float(window) / N) * jnp.sum(acc * acc, axis=-1)
+        alive &= md_sq <= eps2
+    # The raw samples are streamed anyway, so the in-kernel verify is
+    # EXACT — quantization touched only the screen metadata, and the
+    # widened cascade is a superset screen: final answers are identical
+    # to the full-precision subsequence kernel (tested).
+    z = _subseq_z_block(seg_ref, mu_ref, sd_ref, window=window,
+                        stride=stride, block_w=block_w)
+    d2 = _verify_arrays(q_ref[...], qn_ref[...], z, norms_ref[...])
+    ans = alive & (d2 <= eps2)
+    ans_ref[...] = ans.astype(jnp.int32)
+    d2_ref[...] = jnp.where(ans, d2, jnp.inf)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "mode", "levels", "alphabet", "window", "stride", "block_q", "block_w",
+    "interpret"))
+def fused_quant_subseq_range_pallas(
+    streams: jnp.ndarray,       # (S, n_stream) f32 raw streams
+    mu: jnp.ndarray,            # (W,) f32
+    sd: jnp.ndarray,            # (W,) f32
+    norms_sq: jnp.ndarray,      # (W,) f32
+    qwords: tuple,              # per level (W, N_l) int8
+    qresiduals: tuple,          # per level (W,) int8 codes / bf16
+    qresid_scale: tuple,        # per level (W,) f32 per-window (int8) / None
+    qresid_zero: tuple,         # per level (W,) f32 per-window (int8) / None
+    qresid_err: tuple,          # per level (W,) f32 per-window
+    q: jnp.ndarray,
+    q_panels: tuple,
+    q_residuals: tuple,
+    eps_col: jnp.ndarray,
+    mode: str,
+    levels: tuple,
+    alphabet: int,
+    window: int,
+    stride: int,
+    block_q: int = 8,
+    block_w: int = 128,
+    interpret: bool = True,
+):
+    """Streaming subsequence range query over QUANTIZED window metadata:
+    ``(answers (Q, W) bool, d2 (Q, W) f32)`` in canonical stream-major
+    order.  Only the screen columns (words, residuals) are quantized —
+    the raw samples are streamed and z-normalised in VMEM as before, so
+    the verify is exact in-kernel and the answers are set-identical to
+    the full-precision :func:`fused_subseq_range_pallas` (tested).
+    """
+    int8 = mode == "int8"
+    S = streams.shape[0]
+    Q, W = q.shape[0], mu.shape[0]
+    q_inputs, Qp = _prep_query_inputs(q, q_panels, q_residuals, eps_col,
+                                      levels, block_q)
+    W_s, W_sp, nb, segments = _subseq_layout(streams, window, stride,
+                                             block_w)
+    f32 = jnp.float32
+    db_inputs = [
+        segments,
+        _pad_windows(mu.astype(f32).reshape(W, 1), S, W_s, W_sp, 0.0),
+        _pad_windows(sd.astype(f32).reshape(W, 1), S, W_s, W_sp, 1.0),
+        _pad_windows(norms_sq.astype(f32).reshape(W, 1), S, W_s, W_sp, 0.0),
+    ]
+    for li in range(len(levels)):
+        codes = qresiduals[li].reshape(W, 1)
+        if int8:
+            db_inputs.append(_pad_windows(codes, S, W_s, W_sp,
+                                          _quant.SENTINEL_CODE))
+            db_inputs.append(_pad_windows(
+                qresid_scale[li].astype(f32).reshape(W, 1), S, W_s, W_sp,
+                1.0))
+            db_inputs.append(_pad_windows(
+                qresid_zero[li].astype(f32).reshape(W, 1), S, W_s, W_sp,
+                0.0))
+        else:
+            db_inputs.append(_pad_windows(codes, S, W_s, W_sp,
+                                          PAD_RESIDUAL))
+        db_inputs.append(_pad_windows(
+            qresid_err[li].astype(f32).reshape(W, 1), S, W_s, W_sp, 0.0))
+        db_inputs.append(_pad_windows(qwords[li], S, W_s, W_sp, 0))
+    seg_len = segments.shape[-1]
+    in_specs = _query_specs(levels, alphabet, window, block_q)
+    in_specs.append(pl.BlockSpec((1, seg_len), lambda j, i: (j, 0)))
+    for _ in range(3):
+        in_specs.append(pl.BlockSpec((block_w, 1), lambda j, i: (j, 0)))
+    for N in levels:
+        per = 4 if int8 else 2                       # codes(,scale,zero),err
+        for _ in range(per):
+            in_specs.append(pl.BlockSpec((block_w, 1), lambda j, i: (j, 0)))
+        in_specs.append(pl.BlockSpec((block_w, N), lambda j, i: (j, 0)))
+    grid = (nb, Qp // block_q)
+    ans, d2 = pl.pallas_call(
+        functools.partial(_quant_subseq_range_kernel, levels=levels,
+                          alphabet=alphabet, window=window, stride=stride,
+                          int8=int8, block_w=block_w),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((block_q, block_w), lambda j, i: (i, j)),
+            pl.BlockSpec((block_q, block_w), lambda j, i: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Qp, S * W_sp), jnp.int32),
+            jax.ShapeDtypeStruct((Qp, S * W_sp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(*(q_inputs + db_inputs))
+    ans = ans[:Q].reshape(Q, S, W_sp)[:, :, :W_s].reshape(Q, W)
+    d2 = d2[:Q].reshape(Q, S, W_sp)[:, :, :W_s].reshape(Q, W)
+    return ans != 0, d2

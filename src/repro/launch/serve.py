@@ -327,7 +327,7 @@ def serve_service(args):
     cfg = ServeConfig(max_batch=args.max_batch, max_queue=args.max_queue,
                       max_wait_ms=args.max_wait_ms, alphabet=args.alphabet,
                       default_deadline_ms=args.deadline_ms or None,
-                      backend=args.backend)
+                      backend=args.backend, quantization=args.quantization)
     if args.index_dir:
         t0 = time.perf_counter()
         service = SearchService.from_store(args.index_dir, cfg)
@@ -430,6 +430,11 @@ def main(argv=None):
                          "TPU and uses the XLA engine elsewhere; 'pallas' "
                          "off-TPU runs the kernels in interpret mode "
                          "(slow — parity/debug only)")
+    ap.add_argument("--quantization", default="none",
+                    choices=("none", "bf16", "int8"),
+                    help="with --serve: quantized resident tier for the "
+                         "screen columns; survivors verify against the "
+                         "full-precision mmap tier (DESIGN.md §9)")
     # --serve knobs
     ap.add_argument("--bench-requests", type=int, default=256,
                     help="with --serve: closed-loop load-generator request "

@@ -57,6 +57,7 @@ class ServeConfig:
     alphabet: int = 10
     normalize_queries: bool = True
     backend: str = "auto"          # auto|xla|pallas (engine.resolve_backend)
+    quantization: str = "none"     # none|bf16|int8 — tiered resident index
     max_batch: int = 32            # micro-batch ceiling (and top Q bucket)
     max_queue: int = 256           # admission-control bound
     max_wait_ms: float = 2.0       # coalescing window after first request
@@ -107,6 +108,12 @@ class _SingleBackend:
     def size(self) -> int:
         return self.index.series.shape[0]
 
+    def reload_from_host(self, host, ids=None):
+        """Live-ingest refresh hook: swap in a fresh upload of the
+        committed live view (whole-reference replacement — in-flight
+        batches finish on the old index)."""
+        self.index = device_index_from_host(host)
+
     def dispatch(self, q: np.ndarray, eps: np.ndarray, is_knn: np.ndarray,
                  k: int):
         B = self.size
@@ -145,6 +152,53 @@ class _SingleBackend:
         self._cap = _DENSE
         idx, answer, d2, _ = mixed_query_dense(
             self.index, qr, eps_j, knn_j, k)
+        return np.asarray(idx), np.asarray(answer), np.asarray(d2)
+
+
+class _QuantizedBackend:
+    """Tiered serving backend (DESIGN.md §9): the quantized screen stays
+    device-resident, the full-precision rows stay in the mmap tier and
+    are gathered only for the survivors' exact verify.
+
+    Capacity escalation lives inside ``engine.quantized_mixed_query``
+    (auto-escalating compaction), so the dispatch here is a single call.
+    Answers are set-identical to the full-precision backends — the
+    widened screen is a provable superset and the verify is exact
+    (tested in tests/test_serve.py's quantized cases).
+    """
+
+    def __init__(self, tindex, cfg: ServeConfig):
+        self.tindex = tindex
+        self.cfg = cfg
+        self._cap: Optional[int] = None
+
+    @property
+    def n(self) -> int:
+        return int(self.tindex.dev.n)
+
+    @property
+    def size(self) -> int:
+        return int(self.tindex.size)
+
+    def reload_from_host(self, host, ids=None):
+        from ..core.engine import TieredIndex
+
+        self.tindex = TieredIndex.from_host(host, self.tindex.mode)
+
+    def dispatch(self, q: np.ndarray, eps: np.ndarray, is_knn: np.ndarray,
+                 k: int):
+        from ..core.engine import quantized_mixed_query
+
+        qr = represent_queries(jnp.asarray(q, jnp.float32),
+                               self.tindex.dev.levels,
+                               self.tindex.dev.alphabet,
+                               normalize=self.cfg.normalize_queries)
+        cap = self._cap or self.cfg.capacity0 or max(4 * k, 64)
+        idx, answer, d2, _ = quantized_mixed_query(
+            self.tindex, qr, jnp.asarray(eps, jnp.float32),
+            jnp.asarray(is_knn), k, capacity=cap,
+            backend=self.cfg.backend)
+        self._cap = max(cap, self._cap or 0)
         return np.asarray(idx), np.asarray(answer), np.asarray(d2)
 
 
@@ -227,11 +281,27 @@ class SearchService:
         """Cold start: build the device index from raw series."""
         if mesh is not None:
             from ..core.dist_search import distributed_build, pad_database
+            if cfg.quantization != "none":
+                raise ValueError(
+                    "quantized serving is single-host (the tiered verify "
+                    "gathers from the host mmap tier) — drop mesh= or set "
+                    "quantization='none'")
             padded, n_valid = pad_database(np.asarray(series),
                                            mesh.shape["data"])
             index = distributed_build(padded, tuple(cfg.levels), cfg.alphabet,
                                       mesh, n_valid=n_valid)
             return cls(_ShardedBackend(index, mesh, n_valid, cfg), cfg)
+        if cfg.quantization != "none":
+            from ..core.engine import TieredIndex
+            from ..core.fastsax import FastSAXConfig, build_index
+
+            host = build_index(
+                np.asarray(series),
+                FastSAXConfig(n_segments=tuple(cfg.levels),
+                              alphabet=cfg.alphabet),
+                normalize=normalize)
+            tiered = TieredIndex.from_host(host, cfg.quantization)
+            return cls(_QuantizedBackend(tiered, cfg), cfg)
         index = build_device_index(jnp.asarray(series, jnp.float32),
                                    tuple(cfg.levels), cfg.alphabet,
                                    normalize=normalize)
@@ -245,25 +315,54 @@ class SearchService:
         * ``MutableIndex`` root (``CURRENT`` present) — live ingest enabled;
         * sharded store — mapped onto ``mesh`` (default: a 1-D mesh over
           all devices; the stored shard count must match);
+        * tiered sharded store (``store_sharded_quantized``) — always
+          served through the quantized backend (it holds no
+          full-precision screen columns);
         * plain single store — mmap-opened, uploaded once.
+
+        With ``cfg.quantization != "none"`` the single-host cases serve
+        through the tiered :class:`_QuantizedBackend`: a plain store with
+        a matching stored quantized tier warm-starts zero-copy, anything
+        else quantizes the loaded live view in memory.
         """
         from ..index import mutable as _mutable
         from ..index import sharded as _sharded
         from ..index import store as _store
 
         path = pathlib.Path(path)
+        quant = cfg.quantization != "none"
         if (path / _mutable.CURRENT).exists():
             mi = _mutable.MutableIndex.open(path)
             host, ids = mi.live_index()
+            if quant:
+                from ..core.engine import TieredIndex
+
+                tiered = TieredIndex.from_host(host, cfg.quantization)
+                return cls(_QuantizedBackend(tiered, cfg), cfg,
+                           ids=np.asarray(ids), mutable=mi)
             index = device_index_from_host(host)
             return cls(_SingleBackend(index, cfg), cfg, ids=np.asarray(ids),
                        mutable=mi)
-        manifest = _store.store_info(path)
+        manifest = _store.read_manifest(path)
+        if manifest.get("kind") == _sharded._TIERED_KIND:
+            tiered, _n_valid = _sharded.load_sharded_quantized(path)
+            return cls(_QuantizedBackend(tiered, cfg), cfg)
         if manifest.get("kind") == _sharded._KIND:
             from ..core.dist_search import load_sharded, make_data_mesh
+            if quant:
+                raise ValueError(
+                    "quantized serving of a full-precision sharded store "
+                    "is not supported — restore it with "
+                    "store_sharded_quantized, or set quantization='none'")
             mesh = mesh or make_data_mesh()
             index, n_valid = load_sharded(path, mesh)
             return cls(_ShardedBackend(index, mesh, n_valid, cfg), cfg)
+        if quant:
+            from ..core.engine import TieredIndex
+
+            tiered = TieredIndex.from_store(path,
+                                            quantization=cfg.quantization)
+            return cls(_QuantizedBackend(tiered, cfg), cfg)
         host = _store.load_index(path, mmap=True)
         return cls(_SingleBackend(device_index_from_host(host), cfg), cfg)
 
@@ -382,7 +481,7 @@ class SearchService:
                 return
             gen = mi.generation
             host, ids = mi.live_index()
-            self.backend.index = device_index_from_host(host)
+            self.backend.reload_from_host(host)
             self._ids = np.asarray(ids, dtype=np.int64)
             self._loaded_gen = gen
             self._last_refresh = now

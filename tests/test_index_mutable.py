@@ -151,3 +151,71 @@ def test_mutation_crash_leaves_previous_epoch(tmp_path, monkeypatch):
     survivor.insert(pool[48:80])
     survivor.compact()
     assert survivor.n_live == 79
+
+
+# ---------------------------------------------------------------------------
+# Quantized resident tier through the mutation lifecycle (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["bf16", "int8"])
+def test_quantized_append_compact_round_trip(tmp_path, mode):
+    """Every segment of a quantized epoch carries quantized columns, and
+    after compaction they are BIT-identical to a fresh rebuild over the
+    same live rows — compaction re-quantizes the folded rows, it never
+    stitches stale per-segment scale blocks together."""
+    from repro.index import quantized as q
+    from repro.index import store
+
+    pool = _pool(8)
+    root = tmp_path / "idx"
+    mi = MutableIndex.create(root, pool[:48], CFG, quantization=mode)
+    assert mi.quantization == mode
+    ids = mi.insert(pool[48:80])
+    mi.delete([3, 7, int(ids[0])])
+    mi.compact()
+
+    # The epoch records the mode and the (sole) base segment carries a
+    # loadable quantized tier of that mode.
+    reopened = MutableIndex.open(root)
+    assert reopened.quantization == mode
+    seg = root / reopened._epoch["base"]
+    loaded = store.load_quantized(seg, verify=True, mode=mode)
+
+    live, live_ids = reopened.live_index()
+    fresh = q.quantize_host_index(
+        build_index(pool[[i for i in live_ids]], CFG), mode)
+    assert np.array_equal(np.asarray(loaded.series), fresh.series)
+    assert np.array_equal(np.asarray(loaded.series_err), fresh.series_err)
+    assert np.array_equal(np.asarray(loaded.norms_sq), fresh.norms_sq)
+    for a, b in zip(loaded.levels, fresh.levels):
+        assert np.array_equal(np.asarray(a.words), b.words)
+        assert np.array_equal(np.asarray(a.residuals), b.residuals)
+        assert np.array_equal(np.asarray(a.err), b.err)
+        if mode == "int8":
+            assert np.array_equal(np.asarray(a.scale), b.scale)
+            assert np.array_equal(np.asarray(a.zero), b.zero)
+
+    # Delta segments written after compaction carry the tier too.
+    reopened.insert(pool[80:96])
+    delta = [name for name, _, _ in reopened._segments][-1]
+    dq = store.load_quantized(root / delta, mode=mode)
+    assert dq.size == 16
+
+
+def test_quantized_mode_validated_at_create(tmp_path):
+    from repro.index.quantized import QuantizationError
+
+    with pytest.raises(QuantizationError, match="quantization"):
+        MutableIndex.create(tmp_path / "idx", _pool(0)[:8], CFG,
+                            quantization="fp4")
+
+
+def test_unquantized_epoch_stays_unquantized(tmp_path):
+    from repro.index import store
+
+    root = tmp_path / "idx"
+    mi = MutableIndex.create(root, _pool(1)[:16], CFG)
+    assert mi.quantization == "none"
+    seg = root / mi._epoch["base"]
+    with pytest.raises(IOError, match="no quantized tier"):
+        store.load_quantized(seg)

@@ -248,3 +248,109 @@ def test_device_index_from_mutable_store_ids(db, tmp_path):
     assert ids[int(np.asarray(nn_idx)[0, 0])] == 6   # mapped answer is right
     # ...while the raw position (what a naive caller would report) is 5.
     assert int(np.asarray(nn_idx)[0, 0]) == 5
+
+
+# ---------------------------------------------------------------------------
+# Quantized resident-tier columns (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["bf16", "int8"])
+def test_quantized_store_round_trip(built, tmp_path, mode):
+    from repro.index import quantized as q
+
+    path = tmp_path / "qidx"
+    save_index(built, path, quantization=mode)
+    fresh = q.quantize_host_index(built, mode)
+    loaded = store.load_quantized(path, verify=True)
+    assert loaded.mode == mode
+    assert np.array_equal(np.asarray(loaded.series), fresh.series)
+    assert np.array_equal(np.asarray(loaded.series_err), fresh.series_err)
+    for a, b in zip(loaded.levels, fresh.levels):
+        assert np.array_equal(np.asarray(a.words), b.words)
+        assert np.array_equal(np.asarray(a.residuals), b.residuals)
+        assert np.array_equal(np.asarray(a.err), b.err)
+    # Pinning the wrong mode refuses instead of miscasting.
+    other = "int8" if mode == "bf16" else "bf16"
+    with pytest.raises(IOError, match="caller requires"):
+        store.load_quantized(path, mode=other)
+    # A store saved without a quantized tier has nothing to load.
+    plain = tmp_path / "plain"
+    save_index(built, plain)
+    with pytest.raises(IOError, match="no quantized tier"):
+        store.load_quantized(plain)
+
+
+def test_quantized_truncated_scale_column_fails_loudly(built, tmp_path):
+    path = tmp_path / "qidx"
+    save_index(built, path, quantization="int8")
+    scale = np.load(path / "qresid_scale_N8.npy")
+    np.save(path / "qresid_scale_N8.npy", scale[:-1])   # truncated
+    with pytest.raises(IOError, match="qresid_scale_N8.*does not match"):
+        store.load_quantized(path)
+
+
+def test_quantized_bit_flipped_payload_fails_loudly(built, tmp_path):
+    path = tmp_path / "qidx"
+    save_index(built, path, quantization="int8")
+    target = path / "qseries.npy"
+    raw = bytearray(target.read_bytes())
+    raw[-8] ^= 0xFF                       # flip payload bits, keep header
+    target.write_bytes(bytes(raw))
+    with pytest.raises(IOError, match="qseries.*checksum"):
+        store.load_quantized(path, verify=True)
+    with pytest.raises(IOError, match="qseries.*checksum"):
+        verify_store(path)
+
+
+def test_quantized_generation_mismatch_fails_loudly(built, db, tmp_path):
+    """Scale manifest paired with a REBUILT full-precision column: the
+    source sha recorded at quantize time no longer matches, and the load
+    must refuse instead of pairing stale scales with fresh data."""
+    path = tmp_path / "qidx"
+    save_index(built, path, quantization="int8")
+    other = build_index(db[:built.size] * 1.5, CFG, normalize=False)
+    resid = np.ascontiguousarray(other.levels[0].residuals)
+    np.save(path / "resid_N8.npy", resid)
+    manifest = json.loads((path / store.MANIFEST).read_text())
+    manifest["arrays"]["resid_N8"] = store._array_entry(resid,
+                                                        "resid_N8.npy")
+    (path / store.MANIFEST).write_text(json.dumps(manifest))
+    with pytest.raises(IOError, match="generation mismatch"):
+        store.load_quantized(path)
+    # The full-precision view of the same store still loads fine — only
+    # the derived quantized tier is invalidated.
+    load_index(path, verify=True)
+
+
+def test_quantized_column_dtype_contract(built, tmp_path):
+    from repro.index.store import StoreDtypeError
+
+    path = tmp_path / "qidx"
+    save_index(built, path, quantization="int8")
+    err64 = np.load(path / "qseries_err.npy").astype(np.float64)
+    np.save(path / "qseries_err.npy", err64)
+    manifest = json.loads((path / store.MANIFEST).read_text())
+    manifest["arrays"]["qseries_err"] = store._array_entry(
+        err64, "qseries_err.npy")
+    (path / store.MANIFEST).write_text(json.dumps(manifest))
+    with pytest.raises(StoreDtypeError, match="qseries_err.*float64"):
+        store.load_quantized(path)
+
+
+def test_full_precision_dtype_contract(built, tmp_path):
+    """Satellite regression: residual dtype is explicit in the manifest
+    and a miscast column raises the named error, not a silent cast."""
+    from repro.index.store import StoreDtypeError
+
+    path = tmp_path / "idx"
+    save_index(built, path)
+    manifest = json.loads((path / store.MANIFEST).read_text())
+    assert manifest["dtypes"]["resid"] == "float64"
+    assert manifest["dtypes"]["series"] == "float64"
+    resid16 = np.load(path / "resid_N8.npy").astype(np.float16)
+    np.save(path / "resid_N8.npy", resid16)
+    manifest["arrays"]["resid_N8"] = store._array_entry(resid16,
+                                                        "resid_N8.npy")
+    (path / store.MANIFEST).write_text(json.dumps(manifest))
+    with pytest.raises(StoreDtypeError, match="resid_N8.*float16"):
+        load_index(path)

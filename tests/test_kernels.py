@@ -390,3 +390,138 @@ def test_resolve_backend():
     assert resolve_backend("auto") in ("xla", "pallas")
     with pytest.raises(ValueError, match="backend"):
         resolve_backend("cuda")
+
+
+# ---------------------------------------------------------------------------
+# Quantized megakernels (DESIGN.md §9) — dequantize-in-kernel Pallas loads
+# vs the XLA quantized-screen oracle, bit for bit, int8 AND bf16.
+# ---------------------------------------------------------------------------
+
+QUANT_MODES = ("bf16", "int8")
+
+
+def _quant_case(Q, B, levels, alphabet, mode, seed=2):
+    from repro.core import engine
+    n = 128
+    db = make_wafer_like(B, n, seed=seed)
+    idx = build_index(db, FastSAXConfig(n_segments=levels, alphabet=alphabet),
+                      normalize=False)
+    tindex = engine.TieredIndex.from_host(idx, mode)
+    rng = np.random.default_rng(seed)
+    q = db[rng.integers(0, B, Q)] + 0.05 * rng.standard_normal((Q, n))
+    qr = represent_queries(jnp.asarray(q, jnp.float32), levels, alphabet,
+                           normalize=False)
+    return tindex, qr
+
+
+@pytest.mark.parametrize("case", FUSED_GRID)
+@pytest.mark.parametrize("mode", QUANT_MODES)
+def test_fused_quant_range_bit_identical(case, mode):
+    from repro.core import engine
+    from repro.kernels.fused_query import fused_quant_range_pallas
+
+    Q, B, levels, alphabet = case
+    tindex, qr = _quant_case(Q, B, levels, alphabet, mode)
+    eps = jnp.asarray(np.linspace(0.5, 3.0, Q), jnp.float32).reshape(Q, 1)
+    want_k, want_d = engine.quantized_screen(tindex.dev, qr, eps)
+    got_k, got_d = fused_quant_range_pallas(
+        tindex.dev, qr.q, tuple(ops.query_panels(w, alphabet)
+                                for w in qr.words),
+        qr.residuals, eps, block_q=8, block_b=128, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got_k), np.asarray(want_k))
+    np.testing.assert_array_equal(np.asarray(got_d), np.asarray(want_d))
+
+
+@pytest.mark.parametrize("mode", QUANT_MODES)
+def test_fused_quant_range_mostly_padding_block(mode):
+    # A 5-row database inside one 128-lane kernel block: the sentinel-coded
+    # padding lanes must neither survive the screen nor poison the real
+    # lanes' distances (the PR-4 padding regression, quantized edition).
+    from repro.core import engine
+    from repro.kernels.fused_query import fused_quant_range_pallas
+
+    tindex, qr = _quant_case(2, 5, (8,), 10, mode)
+    eps = jnp.full((2, 1), 1e6, jnp.float32)    # keep everything real
+    want_k, want_d = engine.quantized_screen(tindex.dev, qr, eps)
+    got_k, got_d = fused_quant_range_pallas(
+        tindex.dev, qr.q, tuple(ops.query_panels(w, 10) for w in qr.words),
+        qr.residuals, eps, block_q=8, block_b=128, interpret=True)
+    assert got_k.shape == (2, 5)
+    assert bool(np.asarray(got_k).all())
+    np.testing.assert_array_equal(np.asarray(got_k), np.asarray(want_k))
+    np.testing.assert_array_equal(np.asarray(got_d), np.asarray(want_d))
+    assert np.isfinite(np.asarray(got_d)).all()
+
+
+@pytest.mark.parametrize("case", FUSED_GRID[1:])
+@pytest.mark.parametrize("mode", QUANT_MODES)
+def test_fused_quant_topk_partials_contain_global(case, mode):
+    from repro.core import engine
+    from repro.kernels.fused_query import (fused_quant_topk_pallas,
+                                           merge_topk_partials)
+
+    Q, B, levels, alphabet = case
+    k = 5
+    tindex, qr = _quant_case(Q, B, levels, alphabet, mode)
+    eps = jnp.full((Q, 1), 100.0, jnp.float32)   # everything survives
+    panels = tuple(ops.query_panels(w, alphabet) for w in qr.words)
+    idxp, d2p = fused_quant_topk_pallas(
+        tindex.dev, qr.q, panels, qr.residuals, eps, k,
+        block_q=8, block_b=128, interpret=True)
+    nb = (B + 127) // 128
+    assert idxp.shape == (Q, nb * k)
+    nn_idx, nn_d2 = merge_topk_partials(idxp, d2p, k)
+    # Oracle: the dense XLA screen distances, same tie-break.
+    _, dense = engine.quantized_screen(tindex.dev, qr, eps)
+    dense = np.asarray(dense)
+    for qi in range(Q):
+        order = np.lexsort((np.arange(B), dense[qi]))[:k]
+        np.testing.assert_array_equal(np.asarray(nn_idx)[qi], order)
+        np.testing.assert_array_equal(np.asarray(nn_d2)[qi],
+                                      dense[qi][order])
+
+
+@pytest.mark.parametrize("mode", QUANT_MODES)
+def test_quantized_backend_dispatch_parity(mode):
+    # End-to-end tiered range query: the Pallas screen backend and the XLA
+    # oracle produce identical verified answers.
+    from repro.core import engine
+
+    tindex, qr = _quant_case(4, 200, (8, 16), 10, mode)
+    eps = jnp.asarray(np.linspace(0.8, 2.5, 4), jnp.float32)
+    wi, wa, wd, we = engine.quantized_range_query(tindex, qr, eps,
+                                                  backend="xla")
+    gi, ga, gd, ge = engine.quantized_range_query(tindex, qr, eps,
+                                                  backend="pallas")
+    assert bool(np.asarray(we).all()) and bool(np.asarray(ge).all())
+    for qi in range(4):
+        w = set(np.asarray(wi)[qi][np.asarray(wa)[qi]].tolist())
+        g = set(np.asarray(gi)[qi][np.asarray(ga)[qi]].tolist())
+        assert g == w
+
+
+@pytest.mark.parametrize("mode", QUANT_MODES)
+@pytest.mark.parametrize("stride", [1, 4])
+def test_fused_quant_subseq_bit_identical(mode, stride):
+    # Streaming subsequence form: quantized screen metadata + exact
+    # in-kernel verify — answers bit-identical to the full-precision
+    # subsequence kernel (the screen is a provable superset, the epsilon
+    # cut happens on the same exact streamed distances).
+    from repro.core import subseq as ss
+    from repro.data.timeseries import make_subseq_queries
+
+    streams = make_wafer_like(2, 384, seed=5, normalize=False)
+    cfg = FastSAXConfig(n_segments=(8, 16), alphabet=10)
+    hidx = ss.build_subseq_index(streams, cfg, 128, stride)
+    sidx = ss.subseq_device_index(hidx)
+    qmeta = ss.quantize_subseq_meta(hidx, mode)
+    qs = make_subseq_queries(streams, 3, 128, seed=7)
+    qr = represent_queries(jnp.asarray(qs, jnp.float32), (8, 16), 10,
+                           normalize=False)
+    eps = jnp.asarray([1.0, 2.0, 4.0], jnp.float32)
+    want_m, want_d = ss.subseq_range_query(sidx, qr, eps, backend="xla")
+    got_m, got_d = ss.subseq_range_query_quantized(sidx, qmeta, qr, eps,
+                                                   block_q=8, block_w=128,
+                                                   interpret=True)
+    np.testing.assert_array_equal(np.asarray(got_m), np.asarray(want_m))
+    np.testing.assert_array_equal(np.asarray(got_d), np.asarray(want_d))
