@@ -1,0 +1,161 @@
+"""Observability overhead: traced serving must stay within 5% of untraced.
+
+The observability contract of DESIGN.md §10, measured end to end: the
+same mixed range/k-NN workload is served at saturation
+(``run_saturated``: the whole workload submitted up-front, every batch
+full-width) twice — once with ``ServeConfig(trace=False)`` (the default
+hot path, byte-for-byte the pre-observability dispatch) and once with
+``trace=True`` (cascade counters, span ring, per-dispatch calibration).
+The record carries the peak-capacity throughput ratio and the ``ge95``
+flag (traced ≥ 0.95× untraced, median of ``REPS`` interleaved pairs to
+shed scheduler noise) that the bench gate enforces outright, plus
+``exact`` from replaying every traced answer through the direct path.
+
+A second record asserts the counters themselves: the device
+``QueryTrace`` of a range pass must agree EXACTLY — not approximately —
+with the op-counted host engine's accounting (``core/search.py``) on a
+deterministic grid (``parity=True``, also gate-enforced).
+
+Wall-clock values are trajectory data (like ``serve``); only the flags
+gate.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import (device_index_from_host, range_query_traced,
+                               represent_queries)
+from repro.core.fastsax import FastSAXConfig, build_index, represent_query
+from repro.core.search import fastsax_range_query
+from repro.data.timeseries import make_queries, make_wafer_like
+from repro.obs.trace import excluded_c9, excluded_c10
+from repro.serve import (SearchService, ServeConfig, WorkloadSpec,
+                         check_exactness, make_workload, run_saturated)
+
+from .common import SMOKE, emit
+
+DB_SIZE = 2048
+N_REQUESTS = 256 if SMOKE else 768   # short reps can't resolve a 5% gate
+MAX_BATCH = 64
+K = 5
+EPSILON = 1.0
+REPS = 5                    # interleaved pairs; the ratio is their median
+PARITY_B = 256
+PARITY_Q = 8
+PARITY_EPSILONS = (1.0, 2.0, 3.0)
+
+
+def _service(db, trace: bool, queue: int) -> SearchService:
+    cfg = ServeConfig(max_batch=MAX_BATCH, max_queue=queue,
+                      max_wait_ms=2.0, normalize_queries=False,
+                      trace=trace)
+    service = SearchService.from_series(db, cfg, normalize=False)
+    service.warmup(ks=(K,))
+    return service
+
+
+def _measure(db, queries, spec):
+    """REPS interleaved (off, on) saturated pairs; the overhead ratio is
+    the MEDIAN of the per-pair on/off ratios.  Saturated (open-loop,
+    ``run_saturated``) because the contract is about serving capacity:
+    a closed loop's qps is bounded by client-thread scheduling, which
+    both hides the engine-side cost under full batches and drowns a 5%
+    effect in thread noise.  Adjacent pairs see the same machine
+    weather, so slow drift cancels inside each pair, and the median
+    sheds the occasional rep where an unrelated process stole the box —
+    a best-of-per-mode ratio is at the mercy of one spuriously fast
+    untraced rep.  The recorded qps values are each mode's best rep."""
+    workload = make_workload(queries, spec)
+    svc_off = _service(db, trace=False, queue=len(workload))
+    svc_on = _service(db, trace=True, queue=len(workload))
+    ratios = []
+    best_off = best_on = 0.0
+    with svc_off, svc_on:
+        # one untimed pass per service: fault in compile caches and
+        # steady-state thread pools before the first timed pair
+        run_saturated(svc_off, workload, deadline_ms=spec.deadline_ms)
+        run_saturated(svc_on, workload, deadline_ms=spec.deadline_ms)
+        for _ in range(REPS):
+            qps_off = run_saturated(svc_off, workload,
+                                    deadline_ms=spec.deadline_ms).qps
+            result_on = run_saturated(svc_on, workload,
+                                      deadline_ms=spec.deadline_ms)
+            ratios.append(result_on.qps / max(qps_off, 1e-9))
+            best_off = max(best_off, qps_off)
+            best_on = max(best_on, result_on.qps)
+        mismatches = check_exactness(svc_on, workload, result_on)
+    cascade = svc_on.stats.snapshot().get("cascade", {})
+    ratio = float(np.median(ratios))
+    return best_off, best_on, ratio, mismatches, cascade
+
+
+def trace_parity() -> dict:
+    """Device QueryTrace vs host op-counted engine, exact equality."""
+    cfg = FastSAXConfig(n_segments=(8, 16), alphabet=10)
+    db = make_wafer_like(PARITY_B, 128, seed=3, normalize=False)
+    hidx = build_index(db, cfg, normalize=False)
+    didx = device_index_from_host(hidx)
+    queries = make_queries(db, PARITY_Q, seed=4)
+    qr = represent_queries(jnp.asarray(queries, jnp.float32),
+                           didx.levels, didx.alphabet, normalize=False)
+    cells = mismatches = 0
+    for eps in PARITY_EPSILONS:
+        ans, _d2, tr = range_query_traced(didx, qr, np.float32(eps))
+        c9 = excluded_c9(tr, PARITY_B).sum(axis=-1)
+        c10 = excluded_c10(tr).sum(axis=-1)
+        cand = tr.candidates
+        n_ans = np.asarray(ans).sum(axis=-1)
+        for qi in range(PARITY_Q):
+            r = fastsax_range_query(
+                hidx, represent_query(queries[qi], cfg, normalize=False),
+                eps)
+            cells += 1
+            if (int(c9[qi]), int(c10[qi]), int(cand[qi]),
+                    int(n_ans[qi])) != (r.excluded_c9, r.excluded_c10,
+                                        r.candidates, r.answers.size):
+                mismatches += 1
+    return {"cells": cells, "mismatches": mismatches,
+            "parity": mismatches == 0}
+
+
+def run(verbose: bool = True) -> dict:
+    db = make_wafer_like(DB_SIZE, 128, seed=0)
+    queries = make_queries(db, 64, seed=1)
+    spec = WorkloadSpec(n_requests=N_REQUESTS, knn_frac=0.5, k=K,
+                        epsilon=EPSILON)
+    qps_off, qps_on, ratio, mismatches, cascade = _measure(
+        db, queries, spec)
+    par = trace_parity()
+    out = {
+        "qps_untraced": qps_off,
+        "qps_traced": qps_on,
+        "ratio": ratio,
+        "ge95": ratio >= 0.95,
+        "exact": mismatches == 0,
+        "rows_screened": cascade.get("rows_screened", 0),
+        "verified": cascade.get("verified", 0),
+        **par,
+    }
+    if verbose:
+        print(f"# obs_overhead: untraced {qps_off:.0f} qps -> traced "
+              f"{qps_on:.0f} qps (ratio {out['ratio']:.3f}, "
+              f"ge95={out['ge95']}), exact={out['exact']}; trace parity "
+              f"{par['cells'] - par['mismatches']}/{par['cells']} cells")
+    return out
+
+
+def main() -> None:
+    out = run(verbose=True)
+    emit("obs/traced_vs_untraced", 1e6 / max(out["qps_traced"], 1e-9),
+         f"ratio={out['ratio']:.3f};ge95={out['ge95']};"
+         f"exact={out['exact']};qps_untraced={out['qps_untraced']:.1f};"
+         f"rows_screened={out['rows_screened']};"
+         f"verified={out['verified']}")
+    emit("obs/trace_parity", float(out["cells"]),
+         f"parity={out['parity']};cells={out['cells']};"
+         f"mismatches={out['mismatches']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,6 +2,14 @@
 the §Dry-run and §Roofline tables for EXPERIMENTS.md.
 
   PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+
+``--calibration FILE.jsonl`` instead renders a serving cost-model
+calibration report from a ``CalibrationLog.to_jsonl`` export
+(``repro.obs.calibration``, written by ``repro.launch.serve
+--calibration-out``): per (backend, batch, k) dispatch group, the mean
+measured/predicted dispatch time, the signed relative residual of the
+cost model, and the achieved fraction of the roofline bound — the table
+EXPERIMENTS.md §Observability tracks.
 """
 from __future__ import annotations
 
@@ -106,6 +114,57 @@ def dryrun_table(cells):
     return "\n".join(rows)
 
 
+def load_calibration(path):
+    recs = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                recs.append(json.loads(line))
+    return recs
+
+
+def calibration_table(recs):
+    """Group dispatch records by (backend, batch, k); one row per group
+    with mean measured/predicted time, signed residual and achieved
+    roofline fraction."""
+    groups = {}
+    for r in recs:
+        groups.setdefault(
+            (r.get("backend", "?"), int(r.get("batch", 0)),
+             int(r.get("k", 0))), []).append(r)
+    rows = ["| backend | batch | k | n | measured | predicted | "
+            "rel-err | roofline-frac |",
+            "|---|---|---|---|---|---|---|---|"]
+    for (backend, batch, k), g in sorted(groups.items()):
+        n = len(g)
+        mean = lambda key: sum(float(r.get(key, 0.0)) for r in g) / n
+        rows.append(
+            f"| {backend} | {batch} | {k} | {n} | "
+            f"{fmt_s(mean('measured_s'))} | {fmt_s(mean('predicted_s'))} | "
+            f"{mean('rel_err'):+.3f} | {mean('roofline_frac'):.3f} |")
+    return "\n".join(rows)
+
+
+def calibration_report(path):
+    recs = load_calibration(path)
+    print(f"# Cost-model calibration: {len(recs)} dispatch records "
+          f"from {path}")
+    if not recs:
+        return
+    print()
+    print(calibration_table(recs))
+    n = len(recs)
+    mare = sum(abs(float(r.get("rel_err", 0.0))) for r in recs) / n
+    mre = sum(float(r.get("rel_err", 0.0)) for r in recs) / n
+    frac = sum(float(r.get("roofline_frac", 0.0)) for r in recs) / n
+    print()
+    print(f"# overall: mean|rel_err|={mare:.3f} signed={mre:+.3f} "
+          f"mean roofline-frac={frac:.3f} "
+          f"({'model under-predicts' if mre > 0 else 'model over-predicts'}"
+          f" on average)")
+
+
 def summarize(cells):
     ok = sum(1 for c in cells.values() if c.get("status") == "ok")
     skip = sum(1 for c in cells.values() if c.get("status") == "skipped")
@@ -117,7 +176,14 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun")
     ap.add_argument("--mesh", default="single")
+    ap.add_argument("--calibration", default="", metavar="FILE.jsonl",
+                    help="render a CalibrationLog JSONL export "
+                         "(repro.obs.calibration) instead of the dry-run "
+                         "tables")
     args = ap.parse_args()
+    if args.calibration:
+        calibration_report(args.calibration)
+        return
     cells = load(args.dir)
     print("# Dry-run matrix:", summarize(cells))
     print()

@@ -26,7 +26,7 @@ import sys
 import time
 
 SUITES = ("table1", "figure2", "tightness", "pruning", "engine", "knn",
-          "index_io", "serve", "subseq", "quantized")
+          "index_io", "serve", "subseq", "quantized", "obs")
 
 _CSV_LINE = re.compile(r"^([a-z0-9_][a-z0-9_/.+-]*),(-?[0-9.eE+]+),(.*)$")
 
@@ -75,14 +75,15 @@ def main() -> None:
         os.environ["REPRO_BENCH_SMOKE"] = "1"
 
     from . import (engine_throughput, figure2_curves, index_io, knn_latency,
-                   pruning_power, quantized_memory, serve_load,
-                   subseq_latency, table1_latency, tightness)
+                   obs_overhead, pruning_power, quantized_memory,
+                   serve_load, subseq_latency, table1_latency, tightness)
     mains = {"table1": table1_latency.main, "figure2": figure2_curves.main,
              "tightness": tightness.main, "pruning": pruning_power.main,
              "engine": engine_throughput.main, "knn": knn_latency.main,
              "index_io": index_io.main, "serve": serve_load.main,
              "subseq": subseq_latency.main,
-             "quantized": quantized_memory.main}
+             "quantized": quantized_memory.main,
+             "obs": obs_overhead.main}
     for name in chosen:
         if name not in mains:
             print(f"unknown suite {name!r}", file=sys.stderr)

@@ -57,7 +57,7 @@ LOWER_IS_WORSE = ("speedup", "qps", "c9", "c10", "mean", "vs_seq",
 # IDENTICAL to full precision, 'within10' pins its pruning power to
 # within 10% of the full-precision cascade and 'ge2x' the >= 2x
 # resident-bytes reduction — all hold outright, never merely 'close'.
-MUST_BE_TRUE = ("exact", "below", "parity", "within10", "ge2x")
+MUST_BE_TRUE = ("exact", "below", "parity", "within10", "ge2x", "ge95")
 MUST_BE_ZERO = ("dropped",)
 # parity fractions (engine suite): the fused megakernel must answer
 # identically to the XLA oracle for EVERY query, every run — 0.999 is a

@@ -29,11 +29,11 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from .engine import (DeviceIndex, QueryReprDev, build_device_index,
-                     cascade_mask, compact_answers, knn_query,
-                     knn_query_pallas, mixed_query, mixed_query_pallas,
-                     range_query_compact, range_query_pallas,
-                     represent_queries, resolve_backend,
+from .engine import (_SEED_EPS_MAX, DeviceIndex, QueryReprDev,
+                     build_device_index, cascade_mask, cascade_trace,
+                     compact_answers, knn_query, knn_query_pallas,
+                     mixed_query, mixed_query_pallas, range_query_compact,
+                     range_query_pallas, represent_queries, resolve_backend,
                      resolve_knn_backend)
 
 _PAD_RESIDUAL = 1e30  # sentinel: C9 kills padded rows for any finite epsilon
@@ -430,6 +430,125 @@ def distributed_survivor_count(
         local, mesh=mesh, in_specs=in_specs, out_specs=P(), check_rep=False,
     )(index.series, index.norms_sq, index.residuals, index.words,
       qr.q, qr.words, qr.residuals, eps)
+
+
+def distributed_cascade_trace(
+    index: DeviceIndex,
+    queries,
+    epsilon,
+    mesh: Mesh,
+    axis: str = "data",
+    normalize_queries: bool = True,
+    n_valid: int | None = None,
+):
+    """Cascade telemetry over the sharded database (DESIGN.md §10).
+
+    Each shard runs ``engine.cascade_trace`` on its own rows with the pad
+    sentinel folded into the INITIAL alive set (pad rows never count as
+    C9 exclusions), then every counter field psums over the mesh axis.
+    The cascade is row-independent, so the per-level sums equal the
+    single-host trace over the unsharded database exactly — the merged
+    trace bit-agrees with the op-counted host engine the same way the
+    single-device trace does (tests/test_obs.py).
+
+    ``epsilon`` may be scalar or per-query (Q,).  ``answers`` comes back
+    zero (the trace pass never verifies); the traced query wrappers below
+    patch it from their answer buffers.
+    """
+    levels, alphabet = index.levels, index.alphabet
+    P_sh = mesh.shape[axis]
+    B = index.series.shape[0]
+    b_loc = B // P_sh
+    n_valid = B if n_valid is None else int(n_valid)
+    qr = represent_queries(jnp.asarray(queries, dtype=jnp.float32),
+                           levels, alphabet, normalize=normalize_queries)
+    eps = jnp.asarray(epsilon, dtype=jnp.float32)
+
+    def local(series, norms, residuals, words, q, qws, qrs, eps_):
+        lidx = DeviceIndex(series=series, norms_sq=norms, words=words,
+                           residuals=residuals, levels=levels,
+                           alphabet=alphabet)
+        lqr = QueryReprDev(q=q, words=qws, residuals=qrs)
+        shard = jax.lax.axis_index(axis)
+        rows = shard * b_loc + jnp.arange(b_loc, dtype=jnp.int32)
+        vmask = (rows < n_valid) & (residuals[0] < 0.5 * _PAD_RESIDUAL)
+        tr = cascade_trace(lidx, lqr, eps_, vmask)
+        return jax.tree_util.tree_map(lambda c: jax.lax.psum(c, axis), tr)
+
+    in_specs = (P(axis, None), P(axis),
+                tuple(P(axis) for _ in levels),
+                tuple(P(axis, None) for _ in levels),
+                P(), (P(),) * len(levels), (P(),) * len(levels), P())
+    return shard_map(
+        local, mesh=mesh, in_specs=in_specs, out_specs=P(), check_rep=False,
+    )(index.series, index.norms_sq, index.residuals, index.words,
+      qr.q, qr.words, qr.residuals, eps)
+
+
+def distributed_range_query_traced(
+    index: DeviceIndex,
+    queries,
+    epsilon,
+    mesh: Mesh,
+    axis: str = "data",
+    capacity_per_shard: int = 128,
+    normalize_queries: bool = True,
+    max_doublings: int = 8,
+    backend: str = "auto",
+    n_valid: int | None = None,
+):
+    """:func:`distributed_range_query_auto` + merged trace: ``(gidx, ans,
+    d2, overflow, trace)`` — the first four outputs are the unchanged
+    untraced call."""
+    gidx, ans, d2, overflow = distributed_range_query_auto(
+        index, queries, epsilon, mesh, axis=axis,
+        capacity_per_shard=capacity_per_shard,
+        normalize_queries=normalize_queries, max_doublings=max_doublings,
+        backend=backend)
+    trace = distributed_cascade_trace(
+        index, queries, epsilon, mesh, axis=axis,
+        normalize_queries=normalize_queries, n_valid=n_valid)
+    answers = jnp.sum(ans, axis=-1, dtype=jnp.int32)
+    return gidx, ans, d2, overflow, dataclasses.replace(trace,
+                                                        answers=answers)
+
+
+def distributed_knn_query_traced(
+    index: DeviceIndex,
+    queries,
+    k: int,
+    mesh: Mesh,
+    axis: str = "data",
+    capacity_per_shard: int | None = None,
+    n_iters: int = 2,
+    normalize_queries: bool = True,
+    n_valid: int | None = None,
+    backend: str = "auto",
+):
+    """:func:`distributed_knn_query` + merged trace at each query's final
+    verified radius: ``(nn_idx, nn_d2, exact, trace)``.
+
+    The radius is the k-th distance of the CROSS-SHARD merged answer (the
+    same radius the single-host traced engine reports), so the merged
+    counters are comparable across shard counts — and equal the host
+    engine's accounting at ``ε = d_k`` exactly.
+    """
+    nn_idx, nn_d2, exact = distributed_knn_query(
+        index, queries, k, mesh, axis=axis,
+        capacity_per_shard=capacity_per_shard, n_iters=n_iters,
+        normalize_queries=normalize_queries, n_valid=n_valid,
+        backend=backend)
+    B = index.series.shape[0]
+    k_eff = min(int(k), nn_d2.shape[-1],
+                B if n_valid is None else int(n_valid))
+    eps = jnp.sqrt(jnp.maximum(nn_d2[:, k_eff - 1], 0.0))       # (Q,)
+    eps = jnp.where(jnp.isfinite(eps), eps, _SEED_EPS_MAX)
+    trace = distributed_cascade_trace(
+        index, queries, eps, mesh, axis=axis,
+        normalize_queries=normalize_queries, n_valid=n_valid)
+    answers = jnp.sum(jnp.isfinite(nn_d2[:, :k_eff]), axis=-1,
+                      dtype=jnp.int32)
+    return nn_idx, nn_d2, exact, dataclasses.replace(trace, answers=answers)
 
 
 def make_data_mesh(n_devices: int | None = None, axis: str = "data") -> Mesh:

@@ -31,6 +31,7 @@ import numpy as np
 from ..index import quantized as _quant
 from ..kernels import fused_query as _fused
 from ..kernels import ops as kernel_ops
+from ..obs.trace import QueryTrace, screen_row_bytes, tier_bytes
 from . import cost_model as _cost_model
 from .fastsax import FastSAXIndex
 from .paa import paa, znormalize
@@ -366,6 +367,73 @@ def _slacked(eps: jnp.ndarray) -> jnp.ndarray:
 def _kth_smallest(d2: jnp.ndarray, k: int) -> jnp.ndarray:
     """Per-row k-th smallest of (Q, M) values as a (Q, 1) column."""
     return -jax.lax.top_k(-d2, k)[0][:, -1:]
+
+
+def _kth_smallest_rounds(d2: jnp.ndarray, k: int, block: int = 64) -> jnp.ndarray:
+    """:func:`_kth_smallest`, restructured for use INSIDE large fused
+    computations.
+
+    ``lax.top_k`` embedded in a big jitted graph lowers (CPU backend)
+    to a per-row sort whose runtime degrades by an order of magnitude
+    when the computation executes on a serving thread alongside waiter
+    threads — even over narrow rows, and even though the same op
+    standalone is fast.  So: no ``top_k``, no sort.  Two exact stages
+    built from min/argmin reductions only.
+
+    1. block-filter — split the row into ``block``-wide blocks (one
+       full-width min-reduce) and keep the k blocks with the smallest
+       minima, selected by k argmin-and-mask rounds over the (Q, nb)
+       block minima.  Every one of the k smallest values lives in a
+       kept block: at most k-1 blocks have a minimum strictly below
+       the k-th value and all are kept, and each remaining kept block
+       contributes a value no larger than the k-th — so the k-th order
+       statistic of the gathered k·block candidates equals the row's,
+       tie multiplicities included (adversarial grids in
+       tests/test_obs.py).
+    2. :func:`_kth_minrounds` over the (k·block)-wide candidates.
+
+    Same ``+inf`` result for rows with fewer than k finite entries.
+    Used by the traced twins only; the untraced engines keep
+    :func:`_kth_smallest`.
+    """
+    Q, B = d2.shape
+    nb = -(-B // block)
+    if nb <= k:
+        return _kth_minrounds(d2, k)
+    if nb * block != B:
+        d2 = jnp.pad(d2, ((0, 0), (0, nb * block - B)),
+                     constant_values=jnp.inf)
+    blocks = d2.reshape(Q, nb, block)
+    bmins = jnp.min(blocks, axis=-1)
+    cur, cols = bmins, jnp.arange(nb)
+    sel = []
+    for _ in range(int(k)):
+        j = jnp.argmin(cur, axis=-1)
+        sel.append(j)
+        cur = jnp.where(cols[None, :] == j[:, None], jnp.inf, cur)
+    bi = jnp.stack(sel, axis=-1)
+    cand = jnp.take_along_axis(blocks, bi[:, :, None], axis=1)
+    return _kth_minrounds(cand.reshape(Q, -1), k)
+
+
+def _kth_minrounds(d2: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Second stage of :func:`_kth_smallest_rounds` (and the whole
+    computation when the row is too narrow to block): k min-and-mask
+    rounds — each round takes the row minimum, counts its ties, masks
+    them to ``+inf`` and records the minimum on the round where the
+    cumulative tie count crosses k, so duplicates carry their
+    multiplicity."""
+    cur = d2
+    total = jnp.zeros((d2.shape[0], 1), jnp.int32)
+    ans = jnp.full((d2.shape[0], 1), jnp.inf, d2.dtype)
+    for _ in range(int(k)):
+        m = jnp.min(cur, axis=-1, keepdims=True)
+        tie = cur == m
+        c = jnp.sum(tie, axis=-1, keepdims=True, dtype=jnp.int32)
+        ans = jnp.where((total < k) & (total + c >= k), m, ans)
+        total = total + c
+        cur = jnp.where(tie, jnp.inf, cur)
+    return ans
 
 
 def _seed_eps(index: "DeviceIndex", qr: "QueryReprDev", k: int, valid_mask):
@@ -1545,3 +1613,385 @@ def quantized_mixed_query(
     d2 = _verify_gathered(_raw_rows(tindex, idx), qr.q, valid)
     answer = jnp.where(knn_col, valid, valid & (d2 <= eps_req * eps_req))
     return idx, answer, jnp.where(answer, d2, jnp.inf), overflow
+
+
+# ---------------------------------------------------------------------------
+# Observability: traced twins of the query entry points (DESIGN.md §10).
+#
+# Design law: tracing never touches the untraced functions.  Each traced
+# twin (a) runs the UNCHANGED engine call for the answers and (b) runs a
+# separate cheap counting pass that duplicates the cascade expressions
+# term for term.  Disabled tracing is therefore literally the old call
+# path — same jitted callables, same cache entries, same jaxprs (tested
+# in tests/test_obs.py) — and enabled tracing cannot change answers
+# because the answer arrays come from the same functions as before.  The
+# counting pass reads only the screen columns (words + residuals — never
+# the series), so its cost is a small fraction of the verify matmul.
+# ---------------------------------------------------------------------------
+
+
+def _count_alive(mask: jnp.ndarray) -> jnp.ndarray:
+    """(…, B) bool -> (…,) int32 survivor count."""
+    return jnp.sum(mask, axis=-1, dtype=jnp.int32)
+
+
+def _cascade_counting(index: DeviceIndex, qr: QueryReprDev, eps, valid_mask):
+    """:func:`cascade_mask`, line for line, recording per-level counts.
+
+    The per-level expressions are the same jnp terms as
+    :func:`cascade_mask`, applied in the same C9-then-C10 order to the
+    same running alive set as the host engine's sequential scan
+    (``core/search.py``) — so the survivor counts bit-agree with the
+    op-counted host accounting.  ``valid_mask`` (shard padding) is folded
+    into the INITIAL alive set, so pad rows never inflate the level-0 C9
+    kill count.
+    """
+    n = index.n
+    Q = qr.q.shape[0]
+    eps2 = eps * eps
+    alive = jnp.ones((Q, index.series.shape[0]), dtype=bool)
+    if valid_mask is not None:
+        alive &= valid_mask[None, :]
+    tab = _mindist_sq_tab(index.alphabet)
+    after_c9, after_c10 = [], []
+    for li, N in enumerate(index.levels):
+        gap = jnp.abs(index.residuals[li][None, :] - qr.residuals[li][:, None])
+        alive &= gap <= eps
+        after_c9.append(_count_alive(alive))
+        cell = tab[index.words[li][None, :, :], qr.words[li][:, None, :]]
+        md_sq = (n / N) * jnp.sum(cell * cell, axis=-1)
+        alive &= md_sq <= eps2
+        after_c10.append(_count_alive(alive))
+    return alive, jnp.stack(after_c9, axis=-1), jnp.stack(after_c10, axis=-1)
+
+
+@jax.jit
+def cascade_trace(
+    index: DeviceIndex, qr: QueryReprDev, epsilon,
+    valid_mask: jnp.ndarray | None = None,
+) -> QueryTrace:
+    """:class:`QueryTrace` of the cascade at radius ``epsilon``.
+
+    ``verified``/``screen_survivors`` default to the candidate count (the
+    rows a verify must touch; there is no series screen on the
+    full-precision path); ``answers`` is zero — callers that know the
+    answer set patch it via ``dataclasses.replace``.  Safe inside
+    ``shard_map`` (pure dataflow, no host sync).
+    """
+    Q = qr.q.shape[0]
+    _, a9, a10 = _cascade_counting(index, qr, _eps_qcol(epsilon, Q),
+                                   valid_mask)
+    cand = a10[:, -1]
+    return QueryTrace(after_c9=a9, after_c10=a10, screen_survivors=cand,
+                      verified=cand, answers=jnp.zeros_like(cand))
+
+
+def range_query_traced(
+    index: DeviceIndex, qr: QueryReprDev, epsilon, backend: str = "xla",
+    valid_mask: jnp.ndarray | None = None, **pallas_kw,
+):
+    """Range query + :class:`QueryTrace`: ``(answers, d2, trace)``.
+
+    Answers are bit-identical to the untraced backend call (they ARE the
+    untraced backend call); the trace comes from the separate counting
+    pass at the same radius.  On the Pallas backend the counters come
+    from the XLA counting pass over the identical cascade expressions —
+    the fused kernel is bit-identical to the XLA cascade by construction
+    (tests/test_kernels.py), so the counts describe it exactly.
+    """
+    if resolve_backend(backend) == "pallas":
+        ans, d2 = range_query_pallas(index, qr, epsilon,
+                                     valid_mask=valid_mask, **pallas_kw)
+    else:
+        ans, d2 = range_query(index, qr, epsilon)
+        ans, d2 = _mask_dense(ans, d2, valid_mask)
+    trace = cascade_trace(index, qr, epsilon, valid_mask)
+    return ans, d2, dataclasses.replace(trace, answers=_count_alive(ans))
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def knn_radius_trace(
+    index: DeviceIndex, qr: QueryReprDev, nn_d2, k: int,
+    valid_mask: jnp.ndarray | None = None,
+) -> QueryTrace:
+    """Cascade counters at the final verified k-NN radius ``d_k``.
+
+    The adaptive k-NN engines visit levels in a probe-dependent order
+    with a shrinking radius, so their *internal* counts are not
+    comparable across engines; the counters at the final radius are —
+    they equal the host ``fastsax_range_query`` accounting at
+    ``ε = d_k`` exactly (the k-th neighbour's own lower bounds sit
+    strictly inside its distance, so the boundary row always survives
+    both conditions on both engines).
+    """
+    eps = jnp.sqrt(jnp.maximum(nn_d2[:, k - 1:k], 0.0))       # (Q, 1)
+    eps = jnp.where(jnp.isfinite(eps), eps, _SEED_EPS_MAX)
+    _, a9, a10 = _cascade_counting(index, qr, eps, valid_mask)
+    cand = a10[:, -1]
+    answers = jnp.sum(jnp.isfinite(nn_d2[:, :k]), axis=-1, dtype=jnp.int32)
+    return QueryTrace(after_c9=a9, after_c10=a10, screen_survivors=cand,
+                      verified=cand, answers=answers)
+
+
+def knn_query_traced(
+    index: DeviceIndex, qr: QueryReprDev, k: int, backend: str = "xla",
+    capacity: int | None = None, n_iters: int = 2,
+    valid_mask: jnp.ndarray | None = None, **pallas_kw,
+):
+    """Exact k-NN + :class:`QueryTrace` at the final verified radius:
+    ``(nn_idx, nn_d2, exact, trace)`` — the first three outputs are the
+    unchanged :func:`knn_query_backend` results."""
+    if resolve_knn_backend(backend, k) == "pallas":
+        nn_idx, nn_d2, exact = knn_query_pallas(
+            index, qr, k, n_iters=n_iters, valid_mask=valid_mask,
+            **pallas_kw)
+    else:
+        nn_idx, nn_d2, exact = knn_query_auto(
+            index, qr, k, capacity=capacity, n_iters=n_iters,
+            valid_mask=valid_mask)
+    k_eff = min(int(k), index.series.shape[0])
+    trace = knn_radius_trace(index, qr, nn_d2, k_eff, valid_mask)
+    return nn_idx, nn_d2, exact, trace
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def mixed_trace(
+    index: DeviceIndex, qr: QueryReprDev, epsilon, is_knn, k: int,
+    answer, d2, valid_mask: jnp.ndarray | None = None,
+) -> QueryTrace:
+    """Trace for a served mixed batch at each row's FINAL radius.
+
+    Range rows count at the request ε; k-NN rows at their verified k-th
+    candidate distance, recovered from the returned buffers (compact or
+    dense layout both work — non-answer slots carry +inf).  ``answers``
+    is the per-row answer-set size: in-range rows for range requests,
+    ``min(k, finite candidates)`` for k-NN requests.
+    """
+    Q = qr.q.shape[0]
+    eps_req = _eps_qcol(epsilon, Q)
+    knn_col = jnp.asarray(is_knn, dtype=bool).reshape(Q, 1)
+    d2a = jnp.where(answer, d2, jnp.inf)
+    k_eff = max(1, min(int(k), d2a.shape[-1]))
+    eps_knn = jnp.sqrt(jnp.maximum(_kth_smallest_rounds(d2a, k_eff), 0.0))
+    eps_knn = jnp.where(jnp.isfinite(eps_knn), eps_knn, _SEED_EPS_MAX)
+    eps = jnp.where(knn_col, eps_knn, eps_req)
+    _, a9, a10 = _cascade_counting(index, qr, eps, valid_mask)
+    cand = a10[:, -1]
+    n_ans = jnp.sum(jnp.isfinite(d2a), axis=-1, dtype=jnp.int32)
+    answers = jnp.where(knn_col[:, 0], jnp.minimum(n_ans, k_eff), n_ans)
+    return QueryTrace(after_c9=a9, after_c10=a10, screen_survivors=cand,
+                      verified=cand, answers=answers)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "capacity", "n_iters"))
+def mixed_query_and_trace(
+    index: DeviceIndex, qr: QueryReprDev, epsilon, is_knn, k: int,
+    capacity: int, n_iters: int = 2,
+    valid_mask: jnp.ndarray | None = None,
+):
+    """:func:`mixed_query` + :func:`mixed_trace` fused into ONE jit call.
+
+    The serving layer's traced dispatch uses this instead of two separate
+    calls because the counting pass shares its expensive terms with the
+    answer pass — the residual gaps and MINDIST² panels depend on the
+    index and queries but NOT on the radius — so inside one compilation
+    XLA CSEs them and the trace's marginal cost collapses to the per-level
+    comparisons and survivor sums (the overhead contract: traced qps ≥
+    0.95× untraced, gated by ``benchmarks/obs_overhead.py``).  The answer
+    arrays come from the same jaxpr as the standalone call and remain
+    bit-identical to it (tested in tests/test_obs.py).
+
+    Both bodies are traced through their ``__wrapped__`` form: a nested
+    ``jax.jit`` call lowers to a separate computation that XLA will not
+    CSE across, which is precisely the sharing this wrapper exists for.
+    """
+    idx, answer, d2, overflow = mixed_query.__wrapped__(
+        index, qr, epsilon, is_knn, k, capacity, n_iters,
+        valid_mask)
+    trace = mixed_trace.__wrapped__(index, qr, epsilon, is_knn, k, answer,
+                                    d2, valid_mask)
+    return idx, answer, d2, overflow, trace
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def mixed_query_dense_and_trace(
+    index: DeviceIndex, qr: QueryReprDev, epsilon, is_knn, k: int,
+    valid_mask: jnp.ndarray | None = None,
+):
+    """Dense-dispatch twin of :func:`mixed_query_and_trace`.
+
+    Runs ONE cascade chain — the counting chain at the request ε, the
+    radius the untraced :func:`mixed_query_dense` itself uses — so the
+    alive mask is bitwise the untraced chain's and the answer arrays
+    are bit-identical to ``mixed_query_dense`` (asserted in
+    tests/test_obs.py) at the cost of the per-level comparisons and
+    survivor sums alone.
+
+    Counter semantics follow the *work the dense path actually does*:
+    range rows report cascade survivors at ε like every other traced
+    path, but k-NN rows are answered by dense brute force — the
+    cascade is never consulted for them, every valid candidate is
+    distance-verified — so their counters report exactly that
+    (``after_c9 = after_c10 = screen_survivors = verified =`` the
+    valid row count, ``answers = min(k, valid)``).  This differs from
+    the compaction twin (:func:`mixed_trace` counts k-NN rows at the
+    verified k-th radius) because the execution strategy differs;
+    telemetry describes the strategy, not a hypothetical one.
+    Recovering the k-th radius here would need a full-row order
+    statistic inside the fused graph, which is exactly the overhead
+    the ge95 serving gate exists to forbid.
+    """
+    Q, B = qr.q.shape[0], index.series.shape[0]
+    knn_col = jnp.asarray(is_knn, dtype=bool).reshape(Q, 1)
+    eps_req = _eps_qcol(epsilon, Q)
+    d2 = verify_distances(index, qr)
+    valid = jnp.ones((Q, B), dtype=bool)
+    if valid_mask is not None:
+        valid &= valid_mask[None, :]
+    alive, a9, a10 = _cascade_counting(index, qr, eps_req, valid_mask)
+    in_range = alive & (d2 <= eps_req * eps_req)
+    answer = jnp.where(knn_col, valid, in_range)
+    idx = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32)[None, :], (Q, B))
+    overflow = jnp.zeros((Q,), dtype=bool)
+    k_eff = max(1, min(int(k), B))
+    n_valid = jnp.sum(valid, axis=-1, dtype=jnp.int32)
+    n_ans = jnp.sum(answer, axis=-1, dtype=jnp.int32)
+    a9 = jnp.where(knn_col, n_valid[:, None], a9)
+    a10 = jnp.where(knn_col, n_valid[:, None], a10)
+    cand = a10[:, -1]
+    answers = jnp.where(knn_col[:, 0], jnp.minimum(n_ans, k_eff), n_ans)
+    trace = QueryTrace(after_c9=a9, after_c10=a10, screen_survivors=cand,
+                       verified=cand, answers=answers)
+    return idx, answer, jnp.where(answer, d2, jnp.inf), overflow, trace
+
+
+@jax.jit
+def quantized_cascade_trace(
+    qindex: QuantizedDeviceIndex, qr: QueryReprDev, epsilon,
+) -> QueryTrace:
+    """:func:`quantized_screen`, line for line, with counts.
+
+    Per level: widened-C9 survivors then unwidened-C10 survivors (the
+    same expressions over the same running alive set as the widened host
+    oracle ``search.quantized_fastsax_range_query`` — bit-agreement
+    tested); then the series-screen survivor count, which has no host
+    counterpart (the host oracle verifies every cascade survivor) and is
+    the quantized tier's own pruning figure.  ``verified`` equals the
+    screen survivors: exactly the rows the raw mmap tier gathers.
+    """
+    n = qindex.n
+    Q = qr.q.shape[0]
+    eps = _eps_qcol(epsilon, Q)
+    eps2 = eps * eps
+    B = qindex.series.shape[0]
+    alive = jnp.ones((Q, B), dtype=bool)
+    tab = _mindist_sq_tab(qindex.alphabet)
+    after_c9, after_c10 = [], []
+    for li, N in enumerate(qindex.levels):
+        res = _dequant_residuals_dev(qindex, li)
+        err = _expand_block_col(qindex.resid_err[li], B)
+        gap = jnp.abs(res[None, :] - qr.residuals[li][:, None])
+        alive &= gap <= eps + err[None, :]
+        after_c9.append(_count_alive(alive))
+        cell = tab[qindex.words[li].astype(jnp.int32)[None, :, :],
+                   qr.words[li][:, None, :]]
+        md_sq = (n / N) * jnp.sum(cell * cell, axis=-1)
+        alive &= md_sq <= eps2
+        after_c10.append(_count_alive(alive))
+    u = _dequant_series_dev(qindex)
+    qn = jnp.sum(qr.q * qr.q, axis=-1)
+    cross = jnp.dot(qr.q, u.T, preferred_element_type=jnp.float32)
+    d2 = jnp.maximum(qn[:, None] - 2.0 * cross + qindex.norms_sq[None, :],
+                     0.0)
+    thresh = (eps + qindex.series_err[None, :]) * \
+        (1.0 + QUANT_SCREEN_REL) + QUANT_SCREEN_ABS
+    keep = alive & (d2 <= thresh * thresh)
+    kept = _count_alive(keep)
+    return QueryTrace(after_c9=jnp.stack(after_c9, axis=-1),
+                      after_c10=jnp.stack(after_c10, axis=-1),
+                      screen_survivors=kept, verified=kept,
+                      answers=jnp.zeros_like(kept))
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def quantized_mixed_trace(
+    qindex: QuantizedDeviceIndex, qr: QueryReprDev, epsilon, is_knn, k: int,
+    answer, d2,
+) -> QueryTrace:
+    """:func:`mixed_trace` for the tiered backend: the same final-radius
+    recovery from the returned buffers, counted through the widened
+    quantized screen."""
+    Q = qr.q.shape[0]
+    eps_req = _eps_qcol(epsilon, Q)
+    knn_col = jnp.asarray(is_knn, dtype=bool).reshape(Q, 1)
+    d2a = jnp.where(answer, d2, jnp.inf)
+    k_eff = max(1, min(int(k), d2a.shape[-1]))
+    eps_knn = jnp.sqrt(jnp.maximum(_kth_smallest_rounds(d2a, k_eff), 0.0))
+    eps_knn = jnp.where(jnp.isfinite(eps_knn), eps_knn, _SEED_EPS_MAX)
+    eps = jnp.where(knn_col, eps_knn, eps_req)
+    trace = quantized_cascade_trace(qindex, qr, eps)
+    n_ans = jnp.sum(jnp.isfinite(d2a), axis=-1, dtype=jnp.int32)
+    answers = jnp.where(knn_col[:, 0], jnp.minimum(n_ans, k_eff), n_ans)
+    return dataclasses.replace(trace, answers=answers)
+
+
+def quantized_range_query_traced(
+    tindex: TieredIndex, qr: QueryReprDev, epsilon,
+    capacity: int | None = None, backend: str = "auto",
+    max_doublings: int = 8,
+):
+    """:func:`quantized_range_query` + trace: ``(idx, answer, d2, exact,
+    trace)``."""
+    idx, answer, d2, exact = quantized_range_query(
+        tindex, qr, epsilon, capacity=capacity, backend=backend,
+        max_doublings=max_doublings)
+    trace = quantized_cascade_trace(tindex.dev, qr, epsilon)
+    trace = dataclasses.replace(trace, answers=_count_alive(answer))
+    return idx, answer, d2, exact, trace
+
+
+def quantized_knn_query_traced(
+    tindex: TieredIndex, qr: QueryReprDev, k: int,
+    capacity: int | None = None, backend: str = "auto",
+    max_doublings: int = 8,
+):
+    """:func:`quantized_knn_query` + trace at the final verified radius:
+    ``(nn_idx, nn_d2, exact, trace)``."""
+    nn_idx, nn_d2, exact = quantized_knn_query(
+        tindex, qr, k, capacity=capacity, backend=backend,
+        max_doublings=max_doublings)
+    k_eff = min(int(k), tindex.size)
+    eps = jnp.sqrt(jnp.maximum(nn_d2[:, k_eff - 1:k_eff], 0.0))
+    eps = jnp.where(jnp.isfinite(eps), eps, _SEED_EPS_MAX)
+    trace = quantized_cascade_trace(tindex.dev, qr, eps)
+    answers = jnp.sum(jnp.isfinite(nn_d2[:, :k_eff]), axis=-1,
+                      dtype=jnp.int32)
+    return nn_idx, nn_d2, exact, dataclasses.replace(trace, answers=answers)
+
+
+def device_trace_bytes(index: DeviceIndex, trace: QueryTrace) -> dict:
+    """Per-tier bytes for a traced pass over a full-precision index: the
+    screen tier streams every row's f32 residual + int32 word columns
+    once per query; the verify tier is charged the candidate rows (the
+    compact-verify contract — the dense path deliberately streams all
+    rows, a dense>sparse tradeoff, so this figure is the *information*
+    cost the trace reports, not a dense-path byte meter)."""
+    rb = screen_row_bytes(index.levels, index.alphabet)
+    return tier_bytes(trace, index.series.shape[0], rb, index.n,
+                      verify_itemsize=index.series.dtype.itemsize)
+
+
+def tiered_trace_bytes(tindex: TieredIndex, trace: QueryTrace) -> dict:
+    """Per-tier bytes for a traced quantized pass: the resident screen
+    streams the QUANTIZED columns (int8/bf16 itemsizes — the tier's whole
+    point) including the dequantized-series screen row; the verify tier
+    is charged at the raw mmap tier's itemsize for exactly the rows the
+    screen could not exclude."""
+    qdev = tindex.dev
+    rb = screen_row_bytes(
+        qdev.levels, qdev.alphabet,
+        resid_itemsize=qdev.residuals[0].dtype.itemsize,
+        word_itemsize=qdev.words[0].dtype.itemsize)
+    rb += qdev.series.shape[1] * qdev.series.dtype.itemsize
+    return tier_bytes(trace, tindex.size, rb, qdev.series.shape[1],
+                      verify_itemsize=np.asarray(tindex.raw).dtype.itemsize)

@@ -582,6 +582,61 @@ def subseq_knn_query(
     return sel_idx, sel_d2, np.asarray(exact)
 
 
+def subseq_range_query_traced(
+    sidx: SubseqDeviceIndex, qr: QueryReprDev, epsilon,
+    backend: str = "auto", **pallas_kw,
+):
+    """:func:`subseq_range_query` + cascade telemetry: ``(answer_mask,
+    d2, trace)``.  Windows are rows, so the trace is the whole-series
+    ``engine.cascade_trace`` over the windows-as-rows index — its
+    counters bit-agree with the host engine over the materialised-window
+    host index at the same ε (tests/test_obs.py)."""
+    ans, d2 = subseq_range_query(sidx, qr, epsilon, backend=backend,
+                                 **pallas_kw)
+    trace = _engine.cascade_trace(sidx.index, qr, epsilon)
+    answers = jnp.sum(ans, axis=-1, dtype=jnp.int32)
+    return ans, d2, dataclasses.replace(trace, answers=answers)
+
+
+def subseq_knn_query_traced(
+    sidx: SubseqDeviceIndex, qr: QueryReprDev, k: int,
+    excl: int | None = None, backend: str = "auto",
+    capacity: int | None = None, n_iters: int = 2,
+    block_q: int | None = None, block_w: int | None = None,
+    interpret: bool | None = None,
+):
+    """:func:`subseq_knn_query` + cascade telemetry at the FETCH radius:
+    ``(sel_idx, sel_d2, exact, trace)``.
+
+    The trace describes the device work actually done: the engine fetches
+    the :func:`knn_fetch_count` globally-nearest windows, so the counters
+    are taken at that fetch's final verified radius (the suppression
+    epilogue is pure host bookkeeping over already-fetched rows and
+    touches no further device memory).  ``answers`` reports the
+    post-suppression answer count per query.
+    """
+    W = sidx.n_windows
+    excl = (sidx.window // 2) if excl is None else int(excl)
+    kf = knn_fetch_count(k, excl, sidx.stride, W)
+    if _engine.resolve_knn_backend(backend, kf) == "pallas":
+        idx, d2, exact = _subseq_knn_pallas(sidx, qr, kf, n_iters,
+                                            block_q, block_w, interpret)
+    else:
+        idx, d2, exact = _engine.knn_query_auto(
+            sidx.index, qr, kf, capacity=capacity, n_iters=n_iters)
+    trace = _engine.knn_radius_trace(sidx.index, qr, d2,
+                                     min(int(kf), int(d2.shape[-1])))
+    W_s = sidx.windows_per_stream
+    wid_all = np.arange(W)
+    stream_of = wid_all // W_s
+    start_of = (wid_all % W_s) * sidx.stride
+    sel_idx, sel_d2 = suppress_trivial_matches(
+        np.asarray(idx), np.asarray(d2), stream_of, start_of, int(k), excl)
+    answers = jnp.asarray(np.isfinite(sel_d2).sum(axis=-1).astype(np.int32))
+    return (sel_idx, sel_d2, np.asarray(exact),
+            dataclasses.replace(trace, answers=answers))
+
+
 # ---------------------------------------------------------------------------
 # Persistence: a plain index store whose rows are windows (DESIGN.md §8).
 # ---------------------------------------------------------------------------

@@ -82,9 +82,51 @@ def cmd_compact(args) -> None:
           f"in {time.perf_counter() - t0:.2f}s")
 
 
+def _probe_stats(mi: MutableIndex, n_queries: int, epsilon: float) -> dict:
+    """Deterministic cascade-pruning probe over the committed store: a
+    strided sample of live rows queried back against the host engine with
+    op counting on.  Same counters the live service exposes under
+    ``repro_cascade_rows_total`` (DESIGN.md §10), so an offline store and
+    a running service are comparable on one axis."""
+    import dataclasses
+
+    from ..core.cost_model import OpCounter
+    from ..core.fastsax import represent_query
+    from ..core.search import fastsax_range_query
+
+    index, _ids = mi.live_index()
+    B = index.size
+    if B == 0:
+        return {"queries": 0, "epsilon": float(epsilon), "rows": 0}
+    nq = max(1, min(int(n_queries), B))
+    sample = np.linspace(0, B - 1, nq).astype(np.int64)
+    counter = OpCounter()
+    totals = {k: 0 for k in ("candidates", "excluded_c9", "excluded_c10",
+                             "answers", "levels_visited")}
+    for qi in sample:
+        # Stored series are already z-normalised; represent verbatim.
+        qr = represent_query(np.asarray(index.series[qi], np.float64),
+                             mi.config, normalize=False)
+        r = fastsax_range_query(index, qr, epsilon, counter=counter)
+        totals["candidates"] += int(r.candidates)
+        totals["excluded_c9"] += int(r.excluded_c9)
+        totals["excluded_c10"] += int(r.excluded_c10)
+        totals["answers"] += int(r.answers.size)
+        totals["levels_visited"] += int(r.levels_visited)
+    ops = {f.name: getattr(counter, f.name)
+           for f in dataclasses.fields(counter) if f.name != "weights"}
+    return {"queries": nq, "epsilon": float(epsilon), "rows": int(B),
+            "rows_screened": nq * int(B), **totals, "ops": ops,
+            "model_latency": counter.latency()}
+
+
 def cmd_info(args) -> None:
     mi = MutableIndex.open(args.dir)
-    print(json.dumps(mi.info(), indent=1))
+    info = mi.info()
+    if args.stats:
+        info["stats"] = _probe_stats(mi, args.stats_queries,
+                                     args.stats_epsilon)
+    print(json.dumps(info, indent=1))
 
 
 def cmd_verify(args) -> None:
@@ -134,6 +176,15 @@ def main(argv=None) -> None:
 
     p = sub.add_parser("info", help="print the committed epoch summary")
     common(p, data=False)
+    p.add_argument("--stats", action="store_true",
+                   help="also run a deterministic cascade-pruning probe "
+                        "(strided sample of live rows queried back through "
+                        "the op-counted host engine) and attach it under "
+                        "a 'stats' key")
+    p.add_argument("--stats-queries", type=int, default=16,
+                   help="with --stats: probe sample size")
+    p.add_argument("--stats-epsilon", type=float, default=2.0,
+                   help="with --stats: probe range-query radius")
     p.set_defaults(fn=cmd_info)
 
     p = sub.add_parser("verify", help="re-hash every segment's checksums")

@@ -235,6 +235,43 @@ def serve_search(args):
           f"({args.queries/dt:.0f} qps); overflow={bool(np.asarray(overflow).any())}")
 
 
+def _obs_start(args, service):
+    """Start the metrics endpoint when ``--metrics`` is set (port 0 lets
+    the OS pick).  Returns the server (or None) for :func:`_obs_finish`."""
+    if args.metrics < 0:
+        return None
+    from ..obs.metrics import start_metrics_server
+
+    server = start_metrics_server(service.metrics_text, args.metrics)
+    print(f"[serve] metrics at "
+          f"http://127.0.0.1:{server.server_address[1]}/metrics")
+    return server
+
+
+def _obs_finish(args, service, server):
+    """Export trace artifacts, hold the metrics endpoint open for external
+    scrapers (the CI smoke), then shut it down."""
+    tracer = getattr(service, "tracer", None)
+    if tracer is not None and args.trace_jsonl:
+        n = tracer.to_jsonl(args.trace_jsonl)
+        print(f"[serve] wrote {n} spans -> {args.trace_jsonl}")
+    if tracer is not None and args.chrome_trace:
+        n = tracer.to_chrome_trace(args.chrome_trace)
+        print(f"[serve] wrote {n} chrome trace events -> {args.chrome_trace}")
+    calibration = getattr(service, "calibration", None)
+    if calibration is not None and args.calibration_out:
+        n = calibration.to_jsonl(args.calibration_out)
+        print(f"[serve] wrote {n} calibration records -> "
+              f"{args.calibration_out} (render: python -m "
+              f"benchmarks.roofline --calibration {args.calibration_out})")
+    if server is not None:
+        if args.metrics_hold_s > 0:
+            print(f"[serve] holding metrics endpoint for "
+                  f"{args.metrics_hold_s:g}s")
+            time.sleep(args.metrics_hold_s)
+        server.shutdown()
+
+
 class _SubseqLoadShim:
     """Adapts a ``SubseqSearchService`` to the load generator's
     submit_knn/submit_range/direct_query surface, so ``run_closed_loop``
@@ -273,7 +310,8 @@ def serve_subseq_service(args):
     cfg = ServeConfig(max_batch=args.max_batch, max_queue=args.max_queue,
                       max_wait_ms=args.max_wait_ms, alphabet=args.alphabet,
                       default_deadline_ms=args.deadline_ms or None,
-                      backend=args.backend)
+                      backend=args.backend, trace=args.trace,
+                      profile_dir=args.profile_dir)
     streams = make_wafer_like(args.streams, args.stream_len, seed=0,
                               normalize=False)
     excl = None if args.excl < 0 else args.excl
@@ -294,11 +332,14 @@ def serve_subseq_service(args):
     workload = make_workload(queries, spec)
     shim = _SubseqLoadShim(service)
     with service:
+        server = _obs_start(args, service)
         result = run_closed_loop(shim, workload, clients=args.clients,
-                                 deadline_ms=spec.deadline_ms)
+                                 deadline_ms=spec.deadline_ms,
+                                 jsonl_path=args.request_log or None)
         mismatches = -1
         if args.verify_exact:
             mismatches = check_exactness(shim, workload, result)
+        _obs_finish(args, service, server)
     snap = service.stats.snapshot()
     summary = result.summary(snap)
     summary["exact_mismatches"] = mismatches
@@ -327,7 +368,8 @@ def serve_service(args):
     cfg = ServeConfig(max_batch=args.max_batch, max_queue=args.max_queue,
                       max_wait_ms=args.max_wait_ms, alphabet=args.alphabet,
                       default_deadline_ms=args.deadline_ms or None,
-                      backend=args.backend, quantization=args.quantization)
+                      backend=args.backend, quantization=args.quantization,
+                      trace=args.trace, profile_dir=args.profile_dir)
     if args.index_dir:
         t0 = time.perf_counter()
         service = SearchService.from_store(args.index_dir, cfg)
@@ -358,11 +400,14 @@ def serve_service(args):
                         deadline_ms=args.deadline_ms or None)
     workload = make_workload(queries, spec)
     with service:
+        server = _obs_start(args, service)
         result = run_closed_loop(service, workload, clients=args.clients,
-                                 deadline_ms=spec.deadline_ms)
+                                 deadline_ms=spec.deadline_ms,
+                                 jsonl_path=args.request_log or None)
         mismatches = -1
         if args.verify_exact:
             mismatches = check_exactness(service, workload, result)
+        _obs_finish(args, service, server)
     snap = service.stats.snapshot()
     summary = result.summary(snap)
     summary["exact_mismatches"] = mismatches
@@ -452,6 +497,35 @@ def main(argv=None):
     ap.add_argument("--verify-exact", action="store_true",
                     help="with --serve: replay every served request "
                          "through the direct path and count mismatches")
+    # Observability (DESIGN.md §10) — all off by default.
+    ap.add_argument("--trace", action="store_true",
+                    help="with --serve: enable query-path tracing "
+                         "(cascade counters into the stats surface, span "
+                         "ring, per-dispatch cost-model calibration)")
+    ap.add_argument("--metrics", type=int, default=-1, metavar="PORT",
+                    help="with --serve: expose Prometheus metrics at "
+                         "http://127.0.0.1:PORT/metrics (0 = OS-picked "
+                         "port, -1 = off)")
+    ap.add_argument("--metrics-hold-s", type=float, default=0.0,
+                    help="with --metrics: keep the endpoint up this many "
+                         "seconds after the workload, for external "
+                         "scrapers (the CI smoke)")
+    ap.add_argument("--trace-jsonl", default="",
+                    help="with --trace: write the span ring to this JSONL "
+                         "file after the run")
+    ap.add_argument("--chrome-trace", default="",
+                    help="with --trace: write Chrome trace-event JSON "
+                         "(chrome://tracing / Perfetto) after the run")
+    ap.add_argument("--calibration-out", default="",
+                    help="with --trace: write the cost-model calibration "
+                         "log to this JSONL file after the run (render "
+                         "with benchmarks.roofline --calibration)")
+    ap.add_argument("--request-log", default="",
+                    help="with --serve: write the load generator's "
+                         "per-request JSONL to this file")
+    ap.add_argument("--profile-dir", default="",
+                    help="with --trace: jax.profiler capture directory "
+                         "wrapped around each dispatch (XLA-level detail)")
     args = ap.parse_args(argv)
     if args.serve:
         serve_subseq_service(args) if args.subseq else serve_service(args)

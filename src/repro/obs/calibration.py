@@ -1,0 +1,123 @@
+"""Cost-model calibration residuals: predicted vs measured dispatch time.
+
+The ROADMAP's compiled-mode campaign needs ``cost_model``'s latency
+estimates calibrated against reality; until they are, block-shape
+choices and backend demotion ride on an unvalidated model.  This module
+turns every serving dispatch into a calibration sample: the backend
+hands over the cost model's estimate dict (``fused_pass_estimate`` /
+``subseq_pass_estimate`` — ``t_est_s`` plus the bytes/flops terms it was
+derived from) and the measured wall time, and the log derives
+
+  * the signed relative residual ``(measured − predicted) / measured``
+    — the monitored time series the autotuning item will consume, and
+  * the roofline-relative efficiency: the estimate's bytes/flops terms
+    are priced by ``runtime/roofline.py`` into a hardware bound
+    (``RooflineTerms.bound_s``) and divided by the measured time — the
+    fraction of the machine's roofline this dispatch actually achieved.
+
+Memory is bounded (a fixed-capacity deque); recording is pure host
+arithmetic.  ``benchmarks/roofline.py --calibration`` renders a log's
+JSONL export as the calibration report table.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import json
+import threading
+
+
+@dataclasses.dataclass
+class DispatchRecord:
+    """One dispatch's calibration sample (all derived fields host floats)."""
+
+    batch: int              # queries in the dispatched batch
+    k: int                  # k bucket (0 = pure range batch)
+    backend: str
+    measured_s: float
+    predicted_s: float      # cost model t_est_s (0.0 when unavailable)
+    bytes_hbm: float
+    flops: float
+    rel_err: float          # (measured - predicted) / measured
+    bound_s: float          # roofline bound for the modelled work
+    roofline_frac: float    # bound_s / measured_s  (≤ 1 ≈ ideal)
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _roofline_bound_s(estimate: dict) -> float:
+    """Price the estimate's bytes/flops through the three-term roofline
+    (``runtime.roofline.terms_from_analysis`` — single chip, no
+    collectives on the single-host dispatch path)."""
+    from ..runtime.roofline import terms_from_analysis
+
+    terms = terms_from_analysis(
+        {"flops": float(estimate.get("flops_mxu", 0.0)),
+         "bytes accessed": float(estimate.get("bytes_hbm", 0.0))},
+        collective_bytes=0.0, chips=1,
+        model_flops=float(estimate.get("flops_mxu", 0.0)))
+    return terms.bound_s
+
+
+class CalibrationLog:
+    """Bounded, thread-safe log of :class:`DispatchRecord` samples."""
+
+    def __init__(self, capacity: int = 2048):
+        self._ring: collections.deque = collections.deque(
+            maxlen=max(1, int(capacity)))
+        self._lock = threading.Lock()
+        self._recorded = 0
+
+    @property
+    def recorded(self) -> int:
+        return self._recorded
+
+    def __len__(self) -> int:
+        return len(self._ring)
+
+    def record(self, *, batch: int, k: int, backend: str,
+               measured_s: float, estimate: dict | None) -> DispatchRecord:
+        est = estimate or {}
+        predicted = float(est.get("t_est_s", 0.0))
+        measured = max(float(measured_s), 1e-12)
+        bound = _roofline_bound_s(est) if est else 0.0
+        rec = DispatchRecord(
+            batch=int(batch), k=int(k), backend=str(backend),
+            measured_s=measured, predicted_s=predicted,
+            bytes_hbm=float(est.get("bytes_hbm", 0.0)),
+            flops=float(est.get("flops_mxu", 0.0)),
+            rel_err=(measured - predicted) / measured,
+            bound_s=bound, roofline_frac=bound / measured)
+        with self._lock:
+            self._ring.append(rec)
+            self._recorded += 1
+        return rec
+
+    def snapshot(self) -> list:
+        with self._lock:
+            return list(self._ring)
+
+    def summary(self) -> dict:
+        """Aggregates for the metrics surface — clean zeros when empty."""
+        recs = self.snapshot()
+        if not recs:
+            return {"n": 0, "mean_abs_rel_err": 0.0, "mean_rel_err": 0.0,
+                    "mean_roofline_frac": 0.0, "mean_measured_s": 0.0,
+                    "mean_predicted_s": 0.0}
+        n = len(recs)
+        return {
+            "n": n,
+            "mean_abs_rel_err": sum(abs(r.rel_err) for r in recs) / n,
+            "mean_rel_err": sum(r.rel_err for r in recs) / n,
+            "mean_roofline_frac": sum(r.roofline_frac for r in recs) / n,
+            "mean_measured_s": sum(r.measured_s for r in recs) / n,
+            "mean_predicted_s": sum(r.predicted_s for r in recs) / n,
+        }
+
+    def to_jsonl(self, path) -> int:
+        recs = self.snapshot()
+        with open(path, "w") as f:
+            for r in recs:
+                f.write(json.dumps(r.as_dict(), sort_keys=True) + "\n")
+        return len(recs)

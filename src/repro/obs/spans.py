@@ -1,0 +1,135 @@
+"""Structured tracing: a bounded span ring with JSONL / Chrome export.
+
+A :class:`SpanRecorder` is a fixed-capacity ``deque`` of closed spans —
+``(name, t0, t1, attrs)`` on the ``time.perf_counter`` clock, the same
+clock the serving layer stamps ``Request.t_submit`` with, so service
+spans join offline against ``loadgen``'s per-request JSONL without any
+clock translation.  The ring is the overhead contract: memory is bounded
+by ``capacity`` regardless of uptime, recording is an O(1) append under
+a lock, and nothing here ever touches a device (no syncs on the hot
+path; the recorder is pure host bookkeeping).
+
+Exports:
+
+  * :meth:`SpanRecorder.to_jsonl` — one span per line, machine-joinable;
+  * :meth:`SpanRecorder.to_chrome_trace` — the Chrome trace-event JSON
+    array (``chrome://tracing`` / Perfetto ``ph:"X"`` complete events,
+    microsecond timestamps);
+  * :func:`profiler_capture` — the opt-in ``jax.profiler`` capture
+    context the serving layer wraps around Pallas dispatches when a
+    profile directory is configured (XLA/TPU-level detail the host spans
+    cannot see).
+"""
+from __future__ import annotations
+
+import collections
+import contextlib
+import dataclasses
+import json
+import threading
+import time
+
+
+@dataclasses.dataclass
+class Span:
+    name: str
+    t0: float             # time.perf_counter seconds
+    t1: float
+    attrs: dict
+
+    @property
+    def duration_ms(self) -> float:
+        return (self.t1 - self.t0) * 1e3
+
+    def as_dict(self) -> dict:
+        return {"name": self.name, "t0": self.t0, "t1": self.t1,
+                "duration_ms": self.duration_ms, **self.attrs}
+
+
+class SpanRecorder:
+    """Bounded in-memory ring of closed spans (thread-safe)."""
+
+    def __init__(self, capacity: int = 4096):
+        self._ring: collections.deque = collections.deque(
+            maxlen=max(1, int(capacity)))
+        self._lock = threading.Lock()
+        self._recorded = 0          # total ever recorded (ring may drop)
+
+    @property
+    def capacity(self) -> int:
+        return self._ring.maxlen
+
+    @property
+    def recorded(self) -> int:
+        return self._recorded
+
+    def __len__(self) -> int:
+        return len(self._ring)
+
+    def record(self, name: str, t0: float, t1: float, **attrs) -> None:
+        with self._lock:
+            self._ring.append(Span(name, float(t0), float(t1), attrs))
+            self._recorded += 1
+
+    @contextlib.contextmanager
+    def span(self, name: str, **attrs):
+        """Time a block on the recorder's clock and record it on exit."""
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self.record(name, t0, time.perf_counter(), **attrs)
+
+    def snapshot(self) -> list:
+        with self._lock:
+            return list(self._ring)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._ring.clear()
+
+    def counts(self) -> dict:
+        """Spans per name currently in the ring (metrics surface)."""
+        out: dict = {}
+        for s in self.snapshot():
+            out[s.name] = out.get(s.name, 0) + 1
+        return out
+
+    def to_jsonl(self, path) -> int:
+        spans = self.snapshot()
+        with open(path, "w") as f:
+            for s in spans:
+                f.write(json.dumps(s.as_dict(), sort_keys=True) + "\n")
+        return len(spans)
+
+    def to_chrome_trace(self, path) -> int:
+        """Chrome trace-event 'X' (complete) events, ts/dur in µs.
+        Thread id groups by span name so each pipeline stage gets its own
+        track in the viewer."""
+        spans = self.snapshot()
+        tids = {}
+        events = []
+        for s in spans:
+            tid = tids.setdefault(s.name, len(tids))
+            events.append({
+                "name": s.name, "ph": "X", "pid": 0, "tid": tid,
+                "ts": s.t0 * 1e6, "dur": (s.t1 - s.t0) * 1e6,
+                "args": s.attrs,
+            })
+        with open(path, "w") as f:
+            json.dump(events, f)
+        return len(events)
+
+
+@contextlib.contextmanager
+def profiler_capture(logdir: str):
+    """Opt-in ``jax.profiler`` capture around a dispatch.  A no-op when
+    ``logdir`` is falsy, so call sites need no branching; the import is
+    deferred so the hook costs nothing unless actually engaged."""
+    if not logdir:
+        yield
+        return
+    import jax
+
+    with jax.profiler.trace(str(logdir)):
+        yield

@@ -1,0 +1,151 @@
+"""The ``QueryTrace`` pytree: on-device cascade pruning counters.
+
+The paper's headline quantity is *exclusion power* — how many candidates
+each condition (C9 residual gap, C10 MINDIST, the quantized series
+screen) prunes before exact verification.  ``QueryTrace`` carries that
+quantity out of a live device pass as five small integer arrays, cheap
+enough to return alongside every answer:
+
+  * ``after_c9``  (Q, L) — survivors after level ``l``'s C9 test,
+  * ``after_c10`` (Q, L) — survivors after level ``l``'s C10 test
+    (``after_c10[:, -1]`` is the candidate count the verify touches),
+  * ``screen_survivors`` (Q,) — survivors of the quantized series screen
+    (equals the candidate count on unquantized paths, which have no
+    screen),
+  * ``verified`` (Q,) — rows whose exact distance was computed,
+  * ``answers``  (Q,) — final answer-set size per query.
+
+The counters are defined so they agree EXACTLY with the op-counted host
+engine (``core/search.py``): both engines apply C9 then C10 per level to
+the same running alive set, and counting survivors of a masked dataflow
+equals counting survivors of a sequential scan (tests/test_obs.py proves
+the bit-agreement on the smoke grid).  Being a registered pytree, a
+trace crosses ``jax.jit`` / ``shard_map`` boundaries like any other
+output; per-shard traces merge by summation because the cascade is
+row-independent (:func:`merge_traces`).
+
+This module is NumPy/JAX-leaf-agnostic on the host side: every helper
+accepts traces whose leaves are device or host arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QueryTrace:
+    """Per-query cascade counters (see module docstring for field law)."""
+
+    after_c9: object        # (Q, L) int32
+    after_c10: object       # (Q, L) int32
+    screen_survivors: object  # (Q,) int32
+    verified: object        # (Q,) int32
+    answers: object         # (Q,) int32
+
+    def tree_flatten(self):
+        return ((self.after_c9, self.after_c10, self.screen_survivors,
+                 self.verified, self.answers), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def candidates(self):
+        """(Q,) cascade survivor count — what the host engine calls
+        ``SearchResult.candidates``."""
+        return np.asarray(self.after_c10)[:, -1]
+
+
+def excluded_c9(trace: QueryTrace, n_rows: int) -> np.ndarray:
+    """(Q, L) rows killed by C9 at each level — the alive set entering
+    level ``l`` is ``n_rows`` at l=0, else the previous level's C10
+    survivors.  Summing over levels gives the host engine's cumulative
+    ``excluded_c9``."""
+    a9 = np.asarray(trace.after_c9)
+    a10 = np.asarray(trace.after_c10)
+    before = np.concatenate(
+        [np.full((a9.shape[0], 1), n_rows, dtype=a9.dtype), a10[:, :-1]],
+        axis=1)
+    return before - a9
+
+
+def excluded_c10(trace: QueryTrace) -> np.ndarray:
+    """(Q, L) rows killed by C10 at each level (C9 survivors − C10
+    survivors)."""
+    return np.asarray(trace.after_c9) - np.asarray(trace.after_c10)
+
+
+def merge_traces(traces) -> QueryTrace:
+    """Sum counters across shards.  Exact, not approximate: the cascade
+    is row-independent, so per-shard survivor counts over a partition of
+    the rows add up to the single-host counts (the shard layer also
+    psums on device — this host-side form serves tests and offline
+    tooling)."""
+    traces = list(traces)
+    if not traces:
+        raise ValueError("merge_traces needs at least one trace")
+    return QueryTrace(*[
+        np.sum([np.asarray(getattr(t, f.name)) for t in traces], axis=0)
+        for f in dataclasses.fields(QueryTrace)])
+
+
+def select_queries(trace: QueryTrace, rows) -> QueryTrace:
+    """The trace restricted to query rows ``rows`` (host-side slice).
+    The serving layer uses it to drop bucket-padding rows before
+    accumulating a batch's counters into the stats surface."""
+    rows = np.asarray(rows)
+    return QueryTrace(*[
+        np.asarray(getattr(trace, f.name))[rows]
+        for f in dataclasses.fields(QueryTrace)])
+
+
+def trace_totals(trace: QueryTrace, n_rows: int) -> dict:
+    """Workload-level totals (python ints) for the metrics registry."""
+    a9 = np.asarray(trace.after_c9)
+    Q = a9.shape[0]
+    return {
+        "queries": int(Q),
+        "rows_screened": int(Q) * int(n_rows),
+        "after_c9": int(a9[:, -1].sum()),
+        "after_c10": int(np.asarray(trace.after_c10)[:, -1].sum()),
+        "excluded_c9": int(excluded_c9(trace, n_rows).sum()),
+        "excluded_c10": int(excluded_c10(trace).sum()),
+        "screen_survivors": int(np.asarray(trace.screen_survivors).sum()),
+        "verified": int(np.asarray(trace.verified).sum()),
+        "answers": int(np.asarray(trace.answers).sum()),
+    }
+
+
+def screen_row_bytes(levels, alphabet: int, resid_itemsize: int = 4,
+                     word_itemsize: int = 4) -> int:
+    """Resident bytes the cascade screen reads per database row: one
+    residual and one N-symbol word per level.  Pass the quantized tier's
+    itemsizes (1 for int8, 2 for bf16) to account its smaller footprint;
+    ``alphabet`` is unused by the per-row figure but kept for signature
+    stability with the cost model."""
+    del alphabet
+    levels = tuple(int(N) for N in levels)
+    return len(levels) * int(resid_itemsize) + \
+        sum(levels) * int(word_itemsize)
+
+
+def tier_bytes(trace: QueryTrace, n_rows: int, row_screen_bytes: int,
+               n: int, verify_itemsize: int = 4) -> dict:
+    """Bytes touched per tier for one traced pass.
+
+    The screen tier streams EVERY row's screen columns once per query
+    (the masked dataflow has no early exit — that is the design);
+    the verify tier touches only the rows the screen could not exclude
+    (``verified`` × the full-precision row).  On the quantized path the
+    verify itemsize is the raw mmap tier's (8 for the f64 store)."""
+    q = int(np.asarray(trace.after_c9).shape[0])
+    return {
+        "bytes_screen": q * int(n_rows) * int(row_screen_bytes),
+        "bytes_verify": int(np.asarray(trace.verified).sum())
+        * int(n) * int(verify_itemsize),
+    }

@@ -9,7 +9,8 @@ with commit-triggered refresh, and p50/p95/p99 latency accounting.
 from .batcher import (FAILED, KIND_KNN, KIND_RANGE, OK, REJECTED_DEADLINE,
                       REJECTED_QUEUE_FULL, MicroBatcher, Request)
 from .loadgen import (LoadResult, WorkloadSpec, check_exactness,
-                      make_workload, run_closed_loop, run_sequential)
+                      make_workload, run_closed_loop, run_saturated,
+                      run_sequential)
 from .service import SearchService, ServeConfig, SubseqSearchService
 from .stats import StatsTracker
 
@@ -17,6 +18,6 @@ __all__ = [
     "FAILED", "KIND_KNN", "KIND_RANGE", "OK", "REJECTED_DEADLINE",
     "REJECTED_QUEUE_FULL", "MicroBatcher", "Request", "LoadResult",
     "WorkloadSpec", "check_exactness", "make_workload", "run_closed_loop",
-    "run_sequential", "SearchService", "ServeConfig",
+    "run_saturated", "run_sequential", "SearchService", "ServeConfig",
     "SubseqSearchService", "StatsTracker",
 ]

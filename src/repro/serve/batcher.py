@@ -94,6 +94,7 @@ class MicroBatcher:
         max_queue: int = 256,
         max_wait_ms: float = 2.0,
         stats: Optional[StatsTracker] = None,
+        tracer=None,
     ):
         if max_batch < 1 or max_queue < 1:
             raise ValueError("max_batch and max_queue must be >= 1")
@@ -102,6 +103,11 @@ class MicroBatcher:
         self.max_queue = int(max_queue)
         self.max_wait_s = float(max_wait_ms) / 1e3
         self.stats = stats or StatsTracker()
+        # Optional obs.spans.SpanRecorder: when set, every formed batch
+        # records a "batch_form" span plus one "enqueue" span per member
+        # (t_submit -> formation — queueing + coalescing time).  None (the
+        # default) keeps the hot path span-free.
+        self.tracer = tracer
         self._queue: list = []
         self._cond = threading.Condition()
         self._stopping = False
@@ -186,6 +192,13 @@ class MicroBatcher:
                 req._resolve(REJECTED_DEADLINE)
             else:
                 live.append(req)
+        if self.tracer is not None and batch:
+            t_first = min(r.t_submit for r in batch)
+            self.tracer.record("batch_form", t_first, now,
+                               batch=len(live), expired=len(batch) - len(live))
+            for req in live:
+                self.tracer.record("enqueue", req.t_submit, now,
+                                   kind=req.kind)
         return live
 
     def _loop(self):

@@ -38,10 +38,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.engine import (DeviceIndex, build_device_index,
-                           device_index_from_host, mixed_query,
-                           mixed_query_dense, mixed_query_pallas,
+                           device_index_from_host, device_trace_bytes,
+                           mixed_query, mixed_query_and_trace,
+                           mixed_query_dense, mixed_query_dense_and_trace,
+                           mixed_query_pallas, mixed_trace,
                            represent_queries, resolve_backend,
                            resolve_knn_backend)
+from ..obs.calibration import CalibrationLog
+from ..obs.spans import SpanRecorder, profiler_capture
+from ..obs.trace import select_queries, trace_totals
 from .batcher import (FAILED, KIND_KNN, KIND_RANGE, OK, MicroBatcher,
                       Request)
 from .stats import StatsTracker
@@ -67,6 +72,12 @@ class ServeConfig:
     dense_fallback_frac: float = 0.125   # capacity > frac·B → dense dispatch
     refresh_min_interval_s: float = 0.0   # live-ingest refresh throttle
     warmup_ks: Sequence[int] = (8,)       # k buckets to precompile
+    # --- observability (DESIGN.md §10) — all OFF by default: the untraced
+    # hot path is byte-for-byte the pre-observability code path.
+    trace: bool = False            # cascade counters + spans + calibration
+    trace_ring: int = 4096         # span ring capacity (bounded memory)
+    calibration_ring: int = 2048   # dispatch-record ring capacity
+    profile_dir: str = ""          # jax.profiler capture dir ("" = off)
 
 
 def _pow2_at_least(n: int, cap: int) -> int:
@@ -99,6 +110,7 @@ class _SingleBackend:
         self.cfg = cfg
         self.backend = resolve_backend(cfg.backend)
         self._cap: Optional[int] = None   # learned capacity or _DENSE
+        self.stats: Optional[StatsTracker] = None   # set by SearchService
 
     @property
     def n(self) -> int:
@@ -114,45 +126,89 @@ class _SingleBackend:
         batches finish on the old index)."""
         self.index = device_index_from_host(host)
 
+    def _note_demotion(self, k: int):
+        if (self.stats is not None and self.backend == "pallas"
+                and resolve_knn_backend(self.backend, k) != "pallas"):
+            self.stats.on_demotion()
+
+    def _note_certificates(self, overflow):
+        if self.stats is not None:
+            bad = int(np.asarray(overflow).sum())
+            total = int(np.asarray(overflow).size)
+            self.stats.on_certificates(total - bad, total)
+
+    def trace_bytes(self, trace) -> dict:
+        return device_trace_bytes(self.index, trace)
+
+    def cost_estimate(self, Q: int, k: int) -> dict:
+        from ..core.cost_model import fused_pass_estimate
+
+        return fused_pass_estimate(Q, self.size, self.n, self.index.levels,
+                                   self.index.alphabet, k=int(k))
+
     def dispatch(self, q: np.ndarray, eps: np.ndarray, is_knn: np.ndarray,
-                 k: int):
+                 k: int, want_trace: bool = False):
         B = self.size
         qr = represent_queries(jnp.asarray(q, jnp.float32),
                                self.index.levels, self.index.alphabet,
                                normalize=self.cfg.normalize_queries)
         eps_j = jnp.asarray(eps, jnp.float32)
         knn_j = jnp.asarray(is_knn)
+        self._note_demotion(k)
         # Large k buckets demote the fused path to XLA (the unrolled
         # in-kernel selection grows linearly in k, DESIGN.md §7); the
         # decision is a pure function of (backend, k bucket), so every
         # batch — and every direct replay — of a bucket takes the same
         # float path.
+        trace = None
         if resolve_knn_backend(self.backend, k) == "pallas":
             # One fused megakernel pass per micro-batch: dense layout,
             # no candidate buffer, no capacity escalation (DESIGN.md §7).
             # The jit cache stays keyed on the (Q, k) bucket exactly like
             # the XLA path.
-            idx, answer, d2, _ = mixed_query_pallas(
+            idx, answer, d2, overflow = mixed_query_pallas(
                 self.index, qr, eps_j, knn_j, k,
                 n_iters=self.cfg.n_iters)
-            return np.asarray(idx), np.asarray(answer), np.asarray(d2)
-        cap_limit = max(64, int(self.cfg.dense_fallback_frac * B))
-        cap = self._cap
-        if cap is None:
-            cap = self.cfg.capacity0 or max(4 * k, 64)
-        while cap != _DENSE:
-            cap = max(min(int(cap), B), min(k, B))
-            idx, answer, d2, overflow = mixed_query(
-                self.index, qr, eps_j, knn_j, k, capacity=cap,
-                n_iters=self.cfg.n_iters)
-            if cap >= B or not bool(np.asarray(overflow).any()):
-                self._cap = max(cap, self._cap or 0)
-                return np.asarray(idx), np.asarray(answer), np.asarray(d2)
-            cap = cap * 4 if cap * 4 <= cap_limit else _DENSE
-        self._cap = _DENSE
-        idx, answer, d2, _ = mixed_query_dense(
-            self.index, qr, eps_j, knn_j, k)
-        return np.asarray(idx), np.asarray(answer), np.asarray(d2)
+            if want_trace:
+                trace = mixed_trace(self.index, qr, eps_j, knn_j, k,
+                                    answer, d2)
+        else:
+            idx = answer = d2 = overflow = None
+            cap_limit = max(64, int(self.cfg.dense_fallback_frac * B))
+            cap = self._cap
+            if cap is None:
+                cap = self.cfg.capacity0 or max(4 * k, 64)
+            while cap != _DENSE:
+                cap = max(min(int(cap), B), min(k, B))
+                # Traced dispatch fuses the counting pass into the same
+                # jit call (mixed_query_and_trace) so XLA shares the
+                # radius-independent screen terms — the untraced call
+                # path and its jit cache entries are untouched.
+                if want_trace:
+                    idx, answer, d2, overflow, trace = mixed_query_and_trace(
+                        self.index, qr, eps_j, knn_j, k, capacity=cap,
+                        n_iters=self.cfg.n_iters)
+                else:
+                    idx, answer, d2, overflow = mixed_query(
+                        self.index, qr, eps_j, knn_j, k, capacity=cap,
+                        n_iters=self.cfg.n_iters)
+                if cap >= B or not bool(np.asarray(overflow).any()):
+                    self._cap = max(cap, self._cap or 0)
+                    break
+                if self.stats is not None:
+                    self.stats.on_escalation()
+                cap = cap * 4 if cap * 4 <= cap_limit else _DENSE
+            else:
+                self._cap = _DENSE
+                if want_trace:
+                    idx, answer, d2, overflow, trace = \
+                        mixed_query_dense_and_trace(
+                            self.index, qr, eps_j, knn_j, k)
+                else:
+                    idx, answer, d2, overflow = mixed_query_dense(
+                        self.index, qr, eps_j, knn_j, k)
+        self._note_certificates(overflow)
+        return np.asarray(idx), np.asarray(answer), np.asarray(d2), trace
 
 
 class _QuantizedBackend:
@@ -171,6 +227,7 @@ class _QuantizedBackend:
         self.tindex = tindex
         self.cfg = cfg
         self._cap: Optional[int] = None
+        self.stats: Optional[StatsTracker] = None   # set by SearchService
 
     @property
     def n(self) -> int:
@@ -185,21 +242,41 @@ class _QuantizedBackend:
 
         self.tindex = TieredIndex.from_host(host, self.tindex.mode)
 
+    def trace_bytes(self, trace) -> dict:
+        from ..core.engine import tiered_trace_bytes
+
+        return tiered_trace_bytes(self.tindex, trace)
+
+    def cost_estimate(self, Q: int, k: int) -> dict:
+        from ..core.cost_model import fused_pass_estimate
+
+        return fused_pass_estimate(Q, self.size, self.n,
+                                   self.tindex.dev.levels,
+                                   self.tindex.dev.alphabet, k=int(k))
+
     def dispatch(self, q: np.ndarray, eps: np.ndarray, is_knn: np.ndarray,
-                 k: int):
-        from ..core.engine import quantized_mixed_query
+                 k: int, want_trace: bool = False):
+        from ..core.engine import quantized_mixed_query, quantized_mixed_trace
 
         qr = represent_queries(jnp.asarray(q, jnp.float32),
                                self.tindex.dev.levels,
                                self.tindex.dev.alphabet,
                                normalize=self.cfg.normalize_queries)
+        eps_j = jnp.asarray(eps, jnp.float32)
+        knn_j = jnp.asarray(is_knn)
         cap = self._cap or self.cfg.capacity0 or max(4 * k, 64)
-        idx, answer, d2, _ = quantized_mixed_query(
-            self.tindex, qr, jnp.asarray(eps, jnp.float32),
-            jnp.asarray(is_knn), k, capacity=cap,
+        idx, answer, d2, overflow = quantized_mixed_query(
+            self.tindex, qr, eps_j, knn_j, k, capacity=cap,
             backend=self.cfg.backend)
         self._cap = max(cap, self._cap or 0)
-        return np.asarray(idx), np.asarray(answer), np.asarray(d2)
+        if self.stats is not None:
+            bad = int(np.asarray(overflow).sum())
+            total = int(np.asarray(overflow).size)
+            self.stats.on_certificates(total - bad, total)
+        trace = (quantized_mixed_trace(self.tindex.dev, qr, eps_j, knn_j, k,
+                                       answer, d2)
+                 if want_trace else None)
+        return np.asarray(idx), np.asarray(answer), np.asarray(d2), trace
 
 
 class _ShardedBackend:
@@ -214,6 +291,7 @@ class _ShardedBackend:
         self.n_valid = int(n_valid)
         self.cfg = cfg
         self._cap: Optional[int] = None   # learned per-shard capacity
+        self.stats: Optional[StatsTracker] = None   # set by SearchService
 
     @property
     def n(self) -> int:
@@ -223,9 +301,26 @@ class _ShardedBackend:
     def size(self) -> int:
         return self.n_valid
 
+    def trace_bytes(self, trace) -> dict:
+        from ..obs.trace import screen_row_bytes, tier_bytes
+
+        rb = screen_row_bytes(self.index.levels, self.index.alphabet)
+        return tier_bytes(trace, self.n_valid, rb, self.n,
+                          verify_itemsize=self.index.series.dtype.itemsize)
+
+    def cost_estimate(self, Q: int, k: int) -> dict:
+        from ..core.cost_model import fused_pass_estimate
+
+        # Per-chip figure: each shard screens its own rows concurrently.
+        b_loc = self.index.series.shape[0] // self.mesh.shape[self.axis]
+        return fused_pass_estimate(Q, b_loc, self.n, self.index.levels,
+                                   self.index.alphabet, k=int(k))
+
     def dispatch(self, q: np.ndarray, eps: np.ndarray, is_knn: np.ndarray,
-                 k: int):
-        from ..core.dist_search import distributed_mixed_query
+                 k: int, want_trace: bool = False):
+        from ..core.dist_search import (distributed_cascade_trace,
+                                        distributed_mixed_query)
+        from ..core.engine import _SEED_EPS_MAX
 
         b_loc = self.index.series.shape[0] // self.mesh.shape[self.axis]
         cap = self._cap
@@ -240,9 +335,36 @@ class _ShardedBackend:
                 n_valid=self.n_valid, backend=self.cfg.backend)
             if cap >= b_loc or not bool(np.asarray(overflow).any()):
                 break
+            if self.stats is not None:
+                self.stats.on_escalation()
             cap = min(b_loc, cap * 4)
         self._cap = max(cap, self._cap or 0)
-        return np.asarray(gidx), np.asarray(answer), np.asarray(d2)
+        gidx, answer, d2 = (np.asarray(gidx), np.asarray(answer),
+                            np.asarray(d2))
+        if self.stats is not None:
+            # Per-query certificate: no shard's buffer truncated.
+            bad = int(np.asarray(overflow).any(axis=-1).sum())
+            self.stats.on_certificates(gidx.shape[0] - bad, gidx.shape[0])
+        trace = None
+        if want_trace:
+            # Each row's FINAL radius, recovered from the merged buffers
+            # exactly like engine.mixed_trace (host arithmetic here; the
+            # counting pass itself runs sharded with a psum merge).
+            d2a = np.where(answer, d2, np.inf)
+            k_eff = max(1, min(int(k), d2a.shape[-1]))
+            kth = np.partition(d2a, k_eff - 1, axis=-1)[:, k_eff - 1]
+            eps_knn = np.sqrt(np.maximum(kth, 0.0))
+            eps_knn = np.where(np.isfinite(eps_knn), eps_knn, _SEED_EPS_MAX)
+            eps_f = np.where(is_knn, eps_knn, eps).astype(np.float32)
+            trace = distributed_cascade_trace(
+                self.index, q, eps_f, self.mesh, axis=self.axis,
+                normalize_queries=self.cfg.normalize_queries,
+                n_valid=self.n_valid)
+            n_ans = np.isfinite(d2a).sum(axis=-1).astype(np.int32)
+            answers = np.where(is_knn, np.minimum(n_ans, k_eff), n_ans)
+            trace = dataclasses.replace(trace,
+                                        answers=answers.astype(np.int32))
+        return gidx, answer, d2, trace
 
 
 class SearchService:
@@ -255,9 +377,20 @@ class SearchService:
         self._ids = None if ids is None else np.asarray(ids, dtype=np.int64)
         self.mutable = mutable
         self.stats = StatsTracker()
+        # Backends report host-side events (escalations, demotions,
+        # certificate outcomes) into the shared tracker — cheap counter
+        # bumps, recorded whether or not tracing is on.
+        backend.stats = self.stats
+        # Tracing surfaces (DESIGN.md §10): a bounded span ring and the
+        # cost-model calibration log, allocated only when cfg.trace — the
+        # untraced service carries no observability state beyond counters.
+        self.tracer = SpanRecorder(cfg.trace_ring) if cfg.trace else None
+        self.calibration = (CalibrationLog(cfg.calibration_ring)
+                            if cfg.trace else None)
         self._batcher = MicroBatcher(
             self._dispatch, max_batch=cfg.max_batch, max_queue=cfg.max_queue,
-            max_wait_ms=cfg.max_wait_ms, stats=self.stats)
+            max_wait_ms=cfg.max_wait_ms, stats=self.stats,
+            tracer=self.tracer)
         # Serializes the (index, ids) swap against in-flight dispatches so
         # a batch never maps one generation's row positions through
         # another generation's ids (see _dispatch / refresh).
@@ -406,7 +539,8 @@ class SearchService:
             for kb in sorted(set(k_buckets)):
                 is_knn = np.zeros(qb, dtype=bool)
                 is_knn[: max(1, qb // 2)] = True
-                self.backend.dispatch(q, eps, is_knn, kb)
+                self.backend.dispatch(q, eps, is_knn, kb,
+                                      want_trace=bool(self.cfg.trace))
         return self
 
     # --- submission ---------------------------------------------------------
@@ -528,13 +662,42 @@ class SearchService:
         k_bucket = _pow2_at_least(max(max_k, self._k_floor),
                                   self.backend.size)
         self.stats.on_batch(len(live), qb, self._batcher.depth)
+        tracing = self.tracer is not None
         # Hold the refresh lock across dispatch + ids snapshot: a
         # concurrent refresh() must not swap in a new generation's ids
         # between the device pass and the id mapping.
         with self._refresh_lock:
-            idx, answer, d2 = self.backend.dispatch(q, eps, is_knn,
-                                                    k_bucket)
+            t0 = time.perf_counter()
+            with profiler_capture(self.cfg.profile_dir):
+                idx, answer, d2, trace = self.backend.dispatch(
+                    q, eps, is_knn, k_bucket, want_trace=tracing)
+            t1 = time.perf_counter()
             ids = self._ids
+        if tracing:
+            # The dispatch outputs are host numpy already (the backends
+            # materialise them), so t1 − t0 covers the full device pass —
+            # no extra sync was added to measure it.
+            self.tracer.record("dispatch", t0, t1, batch=len(live),
+                               bucket=qb, k=k_bucket)
+            try:
+                estimate = self.backend.cost_estimate(qb, k_bucket)
+            except Exception:   # cost model gaps must never fail serving
+                estimate = None
+            self.calibration.record(
+                batch=len(live), k=k_bucket,
+                backend=type(self.backend).__name__,
+                measured_s=t1 - t0, estimate=estimate)
+            if trace is not None:
+                with self.tracer.span("verify", batch=len(live)):
+                    live_trace = select_queries(trace,
+                                                [i for i, _ in live])
+                    totals = trace_totals(live_trace, self.backend.size)
+                    totals.update(self.backend.trace_bytes(live_trace))
+                    self.stats.on_cascade(totals)
+            with self.tracer.span("reply", batch=len(live)):
+                for i, req in live:
+                    self._finish(req, idx[i], answer[i], d2[i], ids)
+            return
         for i, req in live:
             self._finish(req, idx[i], answer[i], d2[i], ids)
 
@@ -565,6 +728,20 @@ class SearchService:
         exactness contract (replay bit-equality) is preserved."""
         return rows, dist
 
+    # --- observability surface ----------------------------------------------
+
+    def metrics_text(self) -> str:
+        """The live Prometheus text exposition for this service — the
+        render function ``launch/serve.py --metrics`` serves and the CI
+        smoke job scrapes.  Rebuilt per call from the stats snapshot
+        (plus calibration/span aggregates when tracing): zero hot-path
+        work."""
+        from ..obs.metrics import build_registry
+
+        cal = self.calibration.summary() if self.calibration else None
+        spans = self.tracer.counts() if self.tracer else None
+        return build_registry(self.stats.snapshot(), cal, spans).render()
+
     # --- unbatched reference path -------------------------------------------
 
     def direct_query(self, kind: str, query, epsilon: float = 0.0,
@@ -586,7 +763,7 @@ class SearchService:
         kk = _pow2_at_least(max(int(k), 1, self._k_floor),
                             self.backend.size)
         with self._refresh_lock:
-            idx, answer, d2 = self.backend.dispatch(q, eps, is_knn, kk)
+            idx, answer, d2, _ = self.backend.dispatch(q, eps, is_knn, kk)
             ids = self._ids
         req = Request(kind=kind, query=q[0], epsilon=epsilon,
                       k=max(int(k), 1), meta=meta)

@@ -5,6 +5,19 @@ the submitting client threads and the dispatcher thread.  Percentiles are
 computed over a bounded ring of recent samples (the service is long-lived;
 an unbounded list would grow with every request ever served), so the
 snapshot reports *recent* latency, which is what an operator watches.
+
+The snapshot contract (DESIGN.md §10): every key is ALWAYS present with a
+clean zero before any traffic — a tracker that has formed zero batches
+reports ``mean_batch_size: 0.0`` and an all-zero ``latency_ms`` block,
+never a missing key, NaN, or empty-percentile artifact — and rejection /
+failure are reported as *rates* over submissions, not just counts, so a
+dashboard can alert on them without keeping its own denominators.
+
+Beyond the PR-3 request counters, the tracker carries the observability
+counters of DESIGN.md §10: backend events (capacity escalations, Pallas→
+XLA demotions, exactness-certificate outcomes) and — when the service
+runs with tracing enabled — the accumulated cascade pruning totals and
+per-tier bytes from the engines' ``QueryTrace`` counters.
 """
 from __future__ import annotations
 
@@ -16,16 +29,25 @@ import numpy as np
 
 _RING = 8192   # latency / occupancy samples kept for percentile estimation
 
+# Cascade accumulator keys — fixed so the snapshot (and the Prometheus
+# families built from it) exposes clean zeros before the first traced
+# dispatch, not a shape that changes when tracing turns on.
+CASCADE_KEYS = ("queries", "rows_screened", "after_c9", "after_c10",
+                "excluded_c9", "excluded_c10", "screen_survivors",
+                "verified", "answers", "bytes_screen", "bytes_verify")
+
 
 class StatsTracker:
-    """Thread-safe request/batch accounting (DESIGN.md §6).
+    """Thread-safe request/batch accounting (DESIGN.md §6, §10).
 
     Counters: ``submitted``, ``served``, ``rejected_queue_full`` (admission
     control), ``rejected_deadline`` (expired before dispatch — never served
-    stale), ``failed`` (dispatch raised).  Gauges: queue depth (sampled at
-    every batch formation), batch occupancy (actual requests / padded
-    bucket slots — the cost of shape bucketing).  Latency is measured
-    submit→result per request, in seconds, and reported as p50/p95/p99 ms.
+    stale), ``failed`` (dispatch raised), plus the backend event counters
+    (``escalations``, ``demotions``, certificate outcomes).  Gauges: queue
+    depth (sampled at every batch formation), batch occupancy (actual
+    requests / padded bucket slots — the cost of shape bucketing).  Latency
+    is measured submit→result per request, in seconds, and reported as
+    p50/p95/p99 ms.
     """
 
     def __init__(self):
@@ -37,6 +59,11 @@ class StatsTracker:
         self.rejected_deadline = 0
         self.failed = 0
         self.batches = 0
+        self.escalations = 0
+        self.demotions = 0
+        self.certified_exact = 0
+        self.certified_total = 0
+        self.cascade = collections.Counter({k: 0 for k in CASCADE_KEYS})
         self._latency = collections.deque(maxlen=_RING)
         self._occupancy = collections.deque(maxlen=_RING)
         self._queue_depth = collections.deque(maxlen=_RING)
@@ -70,15 +97,39 @@ class StatsTracker:
             self.served += 1
             self._latency.append(latency_s)
 
+    def on_escalation(self, n: int = 1):
+        with self._lock:
+            self.escalations += n
+
+    def on_demotion(self, n: int = 1):
+        with self._lock:
+            self.demotions += n
+
+    def on_certificates(self, exact: int, total: int):
+        with self._lock:
+            self.certified_exact += int(exact)
+            self.certified_total += int(total)
+
+    def on_cascade(self, totals: dict):
+        """Accumulate one traced dispatch's ``obs.trace.trace_totals`` /
+        ``tier_bytes`` figures (any numeric keys; unknown keys are kept,
+        so callers can extend the surface without touching this class)."""
+        with self._lock:
+            for key, val in totals.items():
+                self.cascade[key] += int(val)
+
     # --- reading -----------------------------------------------------------
 
     def snapshot(self) -> dict:
-        """A point-in-time summary; all latencies in milliseconds."""
+        """A point-in-time summary; all latencies in milliseconds.  Every
+        key present from construction — clean zeros, never NaN."""
         with self._lock:
             lat = np.asarray(self._latency, dtype=np.float64) * 1e3
             occ = np.asarray(self._occupancy, dtype=np.float64)
             depth = np.asarray(self._queue_depth, dtype=np.float64)
             elapsed = time.perf_counter() - self.t_start
+            rejected = self.rejected_queue_full + self.rejected_deadline
+            denom = max(1, self.submitted)
             out = {
                 "submitted": self.submitted,
                 "served": self.served,
@@ -88,19 +139,28 @@ class StatsTracker:
                 "batches": self.batches,
                 "elapsed_s": round(elapsed, 3),
                 "qps": round(self.served / elapsed, 1) if elapsed > 0 else 0.0,
+                "reject_rate": round(rejected / denom, 6),
+                "failure_rate": round(self.failed / denom, 6),
+                "mean_batch_size":
+                    round(self.served / self.batches, 2) if self.batches
+                    else 0.0,
+                "events": {
+                    "escalations": self.escalations,
+                    "demotions": self.demotions,
+                    "certified_exact": self.certified_exact,
+                    "certified_total": self.certified_total,
+                },
+                "cascade": dict(self.cascade),
             }
-            if self.batches:
-                out["mean_batch_size"] = round(self.served / self.batches, 2)
-        if lat.size:
-            out["latency_ms"] = {
-                "p50": round(float(np.percentile(lat, 50)), 3),
-                "p95": round(float(np.percentile(lat, 95)), 3),
-                "p99": round(float(np.percentile(lat, 99)), 3),
-                "mean": round(float(lat.mean()), 3),
-            }
-        if occ.size:
-            out["batch_occupancy"] = round(float(occ.mean()), 3)
-        if depth.size:
-            out["queue_depth_mean"] = round(float(depth.mean()), 2)
-            out["queue_depth_max"] = int(depth.max())
+        out["latency_ms"] = {
+            "p50": round(float(np.percentile(lat, 50)), 3) if lat.size else 0.0,
+            "p95": round(float(np.percentile(lat, 95)), 3) if lat.size else 0.0,
+            "p99": round(float(np.percentile(lat, 99)), 3) if lat.size else 0.0,
+            "mean": round(float(lat.mean()), 3) if lat.size else 0.0,
+        }
+        out["batch_occupancy"] = round(float(occ.mean()), 3) if occ.size \
+            else 0.0
+        out["queue_depth_mean"] = round(float(depth.mean()), 2) if depth.size \
+            else 0.0
+        out["queue_depth_max"] = int(depth.max()) if depth.size else 0
         return out

@@ -283,3 +283,64 @@ def test_distributed_pallas_backend_matches_xla():
     """)
     assert r.returncode == 0, r.stderr[-4000:]
     assert "OK" in r.stdout
+
+
+@pytest.mark.slow
+def test_distributed_trace_bit_agrees_with_host():
+    """The psum-merged per-shard trace over a padded 8-shard database
+    equals the op-counted host engine over the unsharded rows — pad rows
+    must never leak into any counter (DESIGN.md §10)."""
+    r = _run("""
+        import numpy as np, jax
+        from repro.core.dist_search import (distributed_build,
+            distributed_knn_query_traced, distributed_range_query_traced,
+            make_data_mesh, pad_database)
+        from repro.core.fastsax import (FastSAXConfig, build_index,
+            represent_query)
+        from repro.core.search import fastsax_range_query
+        from repro.data.timeseries import make_wafer_like, make_queries
+        from repro.obs.trace import excluded_c9, excluded_c10
+
+        B = 997   # pads to 1000 over 8 shards
+        db = make_wafer_like(n_series=B, length=128, seed=0)
+        qs = make_queries(db, 4, seed=3)
+        mesh = make_data_mesh()
+        padded, n_valid = pad_database(db, 8)
+        didx = distributed_build(padded, (8, 16), 10, mesh,
+                                 n_valid=n_valid)
+        cfg = FastSAXConfig(n_segments=(8, 16), alphabet=10)
+        hidx = build_index(db, cfg, normalize=False)
+
+        def host(q, eps):
+            r = fastsax_range_query(
+                hidx, represent_query(q, cfg, normalize=False), eps)
+            return (r.excluded_c9, r.excluded_c10, r.candidates,
+                    r.answers.size)
+
+        for eps in (1.5, 2.5):
+            _g, ans, _d2, _ov, tr = distributed_range_query_traced(
+                didx, qs, eps, mesh, capacity_per_shard=64,
+                normalize_queries=False, n_valid=n_valid)
+            c9 = excluded_c9(tr, B).sum(axis=-1)
+            c10 = excluded_c10(tr).sum(axis=-1)
+            n_ans = np.asarray(ans).sum(axis=-1)
+            for qi in range(4):
+                got = (int(c9[qi]), int(c10[qi]),
+                       int(tr.candidates[qi]), int(n_ans[qi]))
+                assert got == host(qs[qi], eps), (eps, qi, got)
+
+        k = 5
+        _ni, nn_d2, exact, ktr = distributed_knn_query_traced(
+            didx, qs, k, mesh, n_valid=n_valid, normalize_queries=False)
+        assert bool(np.asarray(exact).all())
+        kc9 = excluded_c9(ktr, B).sum(axis=-1)
+        kc10 = excluded_c10(ktr).sum(axis=-1)
+        for qi in range(4):
+            d_k = float(np.sqrt(max(np.asarray(nn_d2)[qi, k - 1], 0.0)))
+            hc9, hc10, hcand, _ = host(qs[qi], d_k)
+            assert (int(kc9[qi]), int(kc10[qi]),
+                    int(ktr.candidates[qi])) == (hc9, hc10, hcand)
+        print("OK")
+    """)
+    assert r.returncode == 0, r.stderr[-4000:]
+    assert "OK" in r.stdout
