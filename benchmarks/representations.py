@@ -1,0 +1,96 @@
+"""Beyond-paper ablation: what does a registered extra level buy?
+
+Runs the host (op-counted) cascade over a *trending* database
+(``data.timeseries.make_trending``: tight low-frequency prototypes +
+per-series piecewise-linear trends — the regime where segment means are
+weakly selective but per-segment slopes are not) with two registered
+stacks:
+
+  * ``base``  — the paper cascade ``(linfit_residual, sax_word)``;
+  * ``trend`` — the same plus the ``trend_slope`` level (DESIGN.md §11).
+
+Per ε it records both stacks' candidate counts and model latency, plus
+two gated flags on the ``trend`` record: ``exact=True`` (answer sets
+identical — adding a sound level can only prune, never drop) and
+``better=True`` (strictly fewer Euclidean verifies than the base stack).
+A final record demonstrates the cost-model probe
+(``search.advise_stack``) keeping the trend level enabled on this
+dataset.
+
+All metrics are deterministic functions of the seeded dataset, so the
+bench gate diffs them (suite ``repr`` is in the gate's DETERMINISTIC
+set and ``better`` in MUST_BE_TRUE).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.fastsax import FastSAXConfig, build_index, represent_query
+from repro.core.representation import DEFAULT_STACK
+from repro.core.search import advise_stack, fastsax_range_query
+from repro.data.timeseries import make_queries, make_trending
+
+from .common import SMOKE, emit
+
+EPSILONS = (1.0, 2.0) if SMOKE else (1.0, 2.0, 3.0)
+TREND_STACK = DEFAULT_STACK + ("trend_slope",)
+N_QUERIES = 12      # never trimmed: metrics are sums over the workload
+DB_SIZE = 4096
+ALPHA = 10
+LEVELS = (8, 16)
+
+
+def _run_stack(idx, cfg, qs, eps):
+    latency = 0.0
+    candidates = 0
+    answer_sets = []
+    for q in qs:
+        r = fastsax_range_query(idx, represent_query(q, cfg,
+                                                     normalize=False), eps)
+        latency += r.latency
+        candidates += int(r.candidates)
+        answer_sets.append(r.answers)
+    return latency, candidates, answer_sets
+
+
+def main() -> None:
+    db = make_trending(n_series=DB_SIZE, length=128)
+    qs = make_queries(db, N_QUERIES, seed=1)
+    B = db.shape[0]
+
+    indexes = {}
+    for tag, stack in (("base", DEFAULT_STACK), ("trend", TREND_STACK)):
+        cfg = FastSAXConfig(n_segments=LEVELS, alphabet=ALPHA, stack=stack)
+        indexes[tag] = (cfg, build_index(db, cfg, normalize=False))
+
+    print("# trending database: candidates / pruning per stack")
+    print("eps,stack,candidates,prune,latency")
+    for eps in EPSILONS:
+        out = {}
+        for tag, (cfg, idx) in indexes.items():
+            out[tag] = _run_stack(idx, cfg, qs, eps)
+        for tag in ("base", "trend"):
+            lat, cand, answers = out[tag]
+            prune = 1.0 - cand / (B * N_QUERIES)
+            print(f"{eps:.0f},{tag},{cand},{prune:.4f},{lat:.4E}")
+            derived = f"prune={prune:.4f};cand={cand}"
+            if tag == "trend":
+                exact = all(np.array_equal(a, b) for a, b in
+                            zip(out["base"][2], out["trend"][2]))
+                better = cand < out["base"][1]
+                derived += f";exact={exact};better={better}"
+            emit(f"repr/eps{eps:.0f}/{tag}", lat, derived)
+
+    # Cost-model probe: on this dataset the expected exclusion gain of
+    # the trend level beats its per-candidate test cost, so the advised
+    # stack keeps it (search.advise_stack — the same probe mechanism the
+    # adaptive k-NN C10 gate uses).
+    cfg, idx = indexes["trend"]
+    advised = advise_stack(idx, qs, min(EPSILONS))
+    print(f"\n# advise_stack -> {advised}")
+    emit("repr/advise", 0.0,
+         f"enabled={'+'.join(advised)};kept={'trend_slope' in advised}")
+
+
+if __name__ == "__main__":
+    main()

@@ -25,8 +25,8 @@ import re
 import sys
 import time
 
-SUITES = ("table1", "figure2", "tightness", "pruning", "engine", "knn",
-          "index_io", "serve", "subseq", "quantized", "obs")
+SUITES = ("table1", "figure2", "tightness", "pruning", "repr", "engine",
+          "knn", "index_io", "serve", "subseq", "quantized", "obs")
 
 _CSV_LINE = re.compile(r"^([a-z0-9_][a-z0-9_/.+-]*),(-?[0-9.eE+]+),(.*)$")
 
@@ -76,9 +76,11 @@ def main() -> None:
 
     from . import (engine_throughput, figure2_curves, index_io, knn_latency,
                    obs_overhead, pruning_power, quantized_memory,
-                   serve_load, subseq_latency, table1_latency, tightness)
+                   representations, serve_load, subseq_latency,
+                   table1_latency, tightness)
     mains = {"table1": table1_latency.main, "figure2": figure2_curves.main,
              "tightness": tightness.main, "pruning": pruning_power.main,
+             "repr": representations.main,
              "engine": engine_throughput.main, "knn": knn_latency.main,
              "index_io": index_io.main, "serve": serve_load.main,
              "subseq": subseq_latency.main,

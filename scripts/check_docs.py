@@ -16,6 +16,13 @@ facts instead of habits:
   3. **CHANGES.md moves with the PR.**  A line starting ``PR <N>`` must
      exist for the current PR number, so the next session always finds a
      record of this one.
+  4. **The representation registry is fully documented and fully
+     conformance-tested.**  Every ``name = "..."`` registered in
+     ``core/representation.py`` must appear in DESIGN.md §11 and in
+     ``tests/test_representations.py`` (whose property grid runs over
+     ``registered_names()`` automatically — this check catches the
+     suite being bypassed, e.g. a registration moved out of the
+     module the tests import).
 
 Pure stdlib; run from anywhere:
 
@@ -31,7 +38,7 @@ REPO = pathlib.Path(__file__).resolve().parents[1]
 
 # The PR this checkout is being built as — bump alongside the CHANGES.md
 # entry (the gate exists precisely so forgetting one of the two fails).
-CURRENT_PR = 7
+CURRENT_PR = 8
 
 DESIGN_HEADING = re.compile(r"^#{2,3} §([0-9]+(?:\.[0-9]+)?)\b",
                             re.MULTILINE)
@@ -89,6 +96,38 @@ def check_repo_map(errors: list):
     print(f"[docs] README repo map covers {len(modules)} modules")
 
 
+REP_NAME = re.compile(r'^\s+name\s*=\s*"([a-z][a-z0-9_]*)"', re.MULTILINE)
+
+
+def check_registry(errors: list):
+    """Every registered representation name must appear in DESIGN.md §11
+    and in the conformance suite (tests/test_representations.py)."""
+    reg_src = (REPO / "src/repro/core/representation.py").read_text()
+    names = REP_NAME.findall(reg_src)
+    if not names:
+        fail(errors, "no registered representation names parsed from "
+                     "core/representation.py")
+        return
+    design = (REPO / "DESIGN.md").read_text()
+    sec11 = design.split("## §11", 1)
+    sec11 = sec11[1] if len(sec11) == 2 else ""
+    tests_path = REPO / "tests" / "test_representations.py"
+    tests = tests_path.read_text() if tests_path.exists() else ""
+    if not tests:
+        fail(errors, "tests/test_representations.py missing — the "
+                     "registry conformance suite is the soundness gate")
+    for name in names:
+        if f"`{name}`" not in sec11 and name not in sec11:
+            fail(errors, f"representation {name!r} not documented in "
+                         f"DESIGN.md §11")
+        if tests and name not in tests \
+                and "registered_names()" not in tests:
+            fail(errors, f"representation {name!r} not covered by "
+                         f"tests/test_representations.py")
+    print(f"[docs] registry complete: {len(names)} representation(s) "
+          f"documented in DESIGN.md §11 and conformance-tested")
+
+
 def check_changes(errors: list):
     changes = (REPO / "CHANGES.md").read_text()
     if not re.search(rf"^PR {CURRENT_PR}\b", changes, re.MULTILINE):
@@ -102,6 +141,7 @@ def main() -> int:
     errors: list = []
     check_section_refs(errors)
     check_repo_map(errors)
+    check_registry(errors)
     check_changes(errors)
     if errors:
         print(f"[docs] {len(errors)} failure(s)")

@@ -192,6 +192,22 @@ def c10_skip_advised(kill_frac: float, n: int, N: int,
     return gain < latency_of(mindist_cost(N), weights)
 
 
+def level_enable_advised(kill_frac: float, n: int, exclude_cost: dict,
+                         weights: OpWeights = DEFAULT_WEIGHTS) -> bool:
+    """Should a registered *extra* representation level be enabled?
+
+    The per-dataset twin of :func:`c10_skip_advised`, generic over the
+    representation registry (``core/representation.py``): an extra level
+    costs ``exclude_cost`` per surviving candidate and saves (at least)
+    one ``euclidean_cost(n)`` verification per exclusion.  With the
+    probe-estimated exclusion probability ``kill_frac``, enable when
+    ``kill_frac · gain > cost``.  Either answer is sound — registered
+    bounds only ever remove candidates the verify would reject.
+    """
+    gain = float(kill_frac) * latency_of(euclidean_cost(n), weights)
+    return gain > latency_of(exclude_cost, weights)
+
+
 # ---------------------------------------------------------------------------
 # Fused top-k kernel: unroll budget for the in-kernel selection.
 #

@@ -29,14 +29,46 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from . import representation as repr_registry
 from .engine import (_SEED_EPS_MAX, DeviceIndex, QueryReprDev,
                      build_device_index, cascade_mask, cascade_trace,
                      compact_answers, knn_query, knn_query_pallas,
                      mixed_query, mixed_query_pallas, range_query_compact,
                      range_query_pallas, represent_queries, resolve_backend,
-                     resolve_knn_backend)
+                     resolve_knn_backend, stack_backend)
+from .options import SearchOptions, resolve_options
+from .representation import DEFAULT_STACK
 
 _PAD_RESIDUAL = 1e30  # sentinel: C9 kills padded rows for any finite epsilon
+
+
+def _stack_of(index) -> tuple:
+    return tuple(getattr(index, "stack", DEFAULT_STACK))
+
+
+def _extra_specs(stack: tuple, levels: tuple, axis: str):
+    """shard_map spec trees for the stack's extra columns, (index-side,
+    query-side): word columns are (B, N) → ``P(axis, None)``, gap columns
+    (B,) → ``P(axis)``; the query side is replicated.  Both are ``()``
+    for the default paper stack (matching the empty ``extra`` tuples)."""
+    reps = [repr_registry.get(nm)
+            for nm in repr_registry.extra_names(stack)]
+    if not reps:
+        return (), ()
+    lvl_ix = {r.name: (P(axis) if r.kind == "gap" else P(axis, None))
+              for r in reps}
+    lvl_q = {r.name: P() for r in reps}
+    return (tuple(dict(lvl_ix) for _ in levels),
+            tuple(dict(lvl_q) for _ in levels))
+
+
+def _coerce_dist_options(options, legacy: dict):
+    """Legacy positional ``capacity_per_shard`` (int) in the ``options``
+    slot routes through the deprecation shim."""
+    if isinstance(options, int):
+        legacy["capacity_per_shard"] = options
+        return None
+    return options
 
 
 def pad_database(series: np.ndarray, shards: int):
@@ -58,9 +90,15 @@ def distributed_build(
     mesh: Mesh,
     axis: str = "data",
     n_valid: int | None = None,
+    stack: tuple = DEFAULT_STACK,
 ) -> DeviceIndex:
-    """Offline phase on the mesh: every shard indexes its own rows."""
+    """Offline phase on the mesh: every shard indexes its own rows.
+
+    ``stack`` names the representation stack (``core/representation.py``);
+    extra columns are computed shard-locally and sharded like the
+    canonical ones."""
     levels = tuple(int(N) for N in levels)
+    stack = repr_registry.validate_stack(stack)
     P_sh = mesh.shape[axis]
     B = series.shape[0]
     if B % P_sh != 0:
@@ -69,23 +107,25 @@ def distributed_build(
     b_loc = B // P_sh
 
     def build_local(s):
-        idx = build_device_index(s, levels, alphabet)
+        idx = build_device_index(s, levels, alphabet, stack=stack)
         shard = jax.lax.axis_index(axis)
         rows = shard * b_loc + jnp.arange(b_loc)
         res0 = jnp.where(rows < n_valid, idx.residuals[0], _PAD_RESIDUAL)
         return (idx.series, idx.norms_sq,
-                (res0,) + tuple(idx.residuals[1:]), idx.words)
+                (res0,) + tuple(idx.residuals[1:]), idx.words, idx.extra)
 
+    ex_ix, _ = _extra_specs(stack, levels, axis)
     out_specs = (P(axis, None), P(axis),
                  tuple(P(axis) for _ in levels),
-                 tuple(P(axis, None) for _ in levels))
+                 tuple(P(axis, None) for _ in levels), ex_ix)
     built = shard_map(
         build_local, mesh=mesh,
         in_specs=P(axis, None), out_specs=out_specs, check_rep=False,
     )(jnp.asarray(series, dtype=jnp.float32))
-    s, norms, residuals, words = built
+    s, norms, residuals, words, extra = built
     return DeviceIndex(series=s, norms_sq=norms, words=words,
-                       residuals=residuals, levels=levels, alphabet=alphabet)
+                       residuals=residuals, extra=extra, levels=levels,
+                       alphabet=alphabet, stack=stack)
 
 
 def distributed_range_query(
@@ -94,36 +134,47 @@ def distributed_range_query(
     epsilon,
     mesh: Mesh,
     axis: str = "data",
-    capacity_per_shard: int = 128,
-    normalize_queries: bool = True,
-    backend: str = "auto",
+    options: SearchOptions | None = None,
+    **legacy,
 ):
     """Range query over the sharded database.
 
     Returns (global_idx (Q, P·C), is_answer (Q, P·C), d2 (Q, P·C),
-    overflow (Q, P)): every shard contributes ``capacity_per_shard``
-    candidate slots; ``overflow[q, p]`` flags a shard whose survivors did
-    not fit (re-run with larger capacity — soundness is never silently
-    lost).
+    overflow (Q, P)): every shard contributes ``options.capacity``
+    candidate slots (default 128); ``overflow[q, p]`` flags a shard whose
+    survivors did not fit (re-run with larger capacity — soundness is
+    never silently lost).
 
-    ``backend`` selects the per-shard engine (``engine.resolve_backend``):
-    the XLA cascade or the fused Pallas megakernel, whose dense answers
-    are compacted into the same per-shard buffer convention by the
-    ``compact_answers`` epilogue.
+    Knobs ride in ``options`` (:class:`SearchOptions`) — ``backend``
+    selects the per-shard engine (``engine.resolve_backend``; extended
+    stacks demote Pallas to XLA via ``engine.stack_backend``): the XLA
+    cascade or the fused Pallas megakernel, whose dense answers are
+    compacted into the same per-shard buffer convention by the
+    ``compact_answers`` epilogue.  The old ``capacity_per_shard=`` /
+    ``normalize_queries=`` / ``backend=`` kwargs shim through with a
+    :class:`DeprecationWarning`.
     """
+    options = _coerce_dist_options(options, legacy)
+    opts, rest = resolve_options(options, legacy, "distributed_range_query")
+    if rest:
+        raise TypeError(f"distributed_range_query: unexpected kwargs "
+                        f"{sorted(rest)}")
+    capacity_per_shard = 128 if opts.capacity is None else int(opts.capacity)
     levels, alphabet = index.levels, index.alphabet
+    stack = _stack_of(index)
     P_sh = mesh.shape[axis]
     b_loc = index.series.shape[0] // P_sh
-    be = resolve_backend(backend)
+    be = stack_backend(index, resolve_backend(opts.backend))
     qr = represent_queries(jnp.asarray(queries, dtype=jnp.float32),
-                           levels, alphabet, normalize=normalize_queries)
+                           levels, alphabet, normalize=opts.normalize_queries,
+                           stack=stack)
     eps = jnp.asarray(epsilon, dtype=jnp.float32)
 
-    def local(series, norms, residuals, words, q, qws, qrs, eps_):
+    def local(series, norms, residuals, words, extra, q, qws, qrs, qex, eps_):
         lidx = DeviceIndex(series=series, norms_sq=norms, words=words,
-                           residuals=residuals, levels=levels,
-                           alphabet=alphabet)
-        lqr = QueryReprDev(q=q, words=qws, residuals=qrs)
+                           residuals=residuals, extra=extra, levels=levels,
+                           alphabet=alphabet, stack=stack)
+        lqr = QueryReprDev(q=q, words=qws, residuals=qrs, extra=qex)
         if be == "pallas":
             dense_ans, dense_d2 = range_query_pallas(lidx, lqr, eps_)
             idx, ans, d2, overflow = compact_answers(
@@ -134,16 +185,17 @@ def distributed_range_query(
         gidx = idx + jax.lax.axis_index(axis) * b_loc
         return gidx, ans, d2, overflow[:, None]
 
+    ex_ix, ex_q = _extra_specs(stack, levels, axis)
     in_specs = (P(axis, None), P(axis),
                 tuple(P(axis) for _ in levels),
-                tuple(P(axis, None) for _ in levels),
-                P(), (P(),) * len(levels), (P(),) * len(levels), P())
+                tuple(P(axis, None) for _ in levels), ex_ix,
+                P(), (P(),) * len(levels), (P(),) * len(levels), ex_q, P())
     out_specs = (P(None, axis), P(None, axis), P(None, axis), P(None, axis))
     return shard_map(
         local, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
         check_rep=False,
-    )(index.series, index.norms_sq, index.residuals, index.words,
-      qr.q, qr.words, qr.residuals, eps)
+    )(index.series, index.norms_sq, index.residuals, index.words, index.extra,
+      qr.q, qr.words, qr.residuals, qr.extra, eps)
 
 
 def distributed_range_query_auto(
@@ -152,28 +204,32 @@ def distributed_range_query_auto(
     epsilon,
     mesh: Mesh,
     axis: str = "data",
-    capacity_per_shard: int = 128,
-    normalize_queries: bool = True,
-    max_doublings: int = 8,
-    backend: str = "auto",
+    options: SearchOptions | None = None,
+    **legacy,
 ):
     """Range query with the engine's capacity auto-escalation contract.
 
     Runs :func:`distributed_range_query`; while any shard reports overflow
-    (its survivors did not fit in ``capacity_per_shard`` slots — served
+    (its survivors did not fit in the per-shard capacity slots — served
     answers would be silently truncated), re-runs with 4× the per-shard
     capacity, capped at the shard size where compaction can never overflow.
     Mirrors ``engine.range_query_auto`` for the sharded database; each
-    distinct capacity compiles once and is cached by jit.
+    distinct capacity compiles once and is cached by jit.  Old kwargs
+    shim through with a :class:`DeprecationWarning`.
     """
+    options = _coerce_dist_options(options, legacy)
+    opts, rest = resolve_options(options, legacy,
+                                 "distributed_range_query_auto")
+    if rest:
+        raise TypeError(f"distributed_range_query_auto: unexpected kwargs "
+                        f"{sorted(rest)}")
     P_sh = mesh.shape[axis]
     b_loc = index.series.shape[0] // P_sh
-    cap = min(int(capacity_per_shard), b_loc)
-    for _ in range(max_doublings + 1):
+    cap = min(128 if opts.capacity is None else int(opts.capacity), b_loc)
+    for _ in range(opts.max_doublings + 1):
         gidx, ans, d2, overflow = distributed_range_query(
             index, queries, epsilon, mesh, axis=axis,
-            capacity_per_shard=cap, normalize_queries=normalize_queries,
-            backend=backend)
+            options=dataclasses.replace(opts, capacity=cap))
         if cap >= b_loc or not bool(np.asarray(overflow).any()):
             return gidx, ans, d2, overflow
         cap = min(b_loc, cap * 4)
@@ -188,11 +244,9 @@ def distributed_mixed_query(
     k: int,
     mesh: Mesh,
     axis: str = "data",
-    capacity_per_shard: int = 128,
-    n_iters: int = 2,
-    normalize_queries: bool = True,
+    options: SearchOptions | None = None,
     n_valid: int | None = None,
-    backend: str = "auto",
+    **legacy,
 ):
     """Batched mixed-workload dispatch over the sharded database.
 
@@ -212,28 +266,40 @@ def distributed_mixed_query(
     for k-NN rows it marks candidate slots — finish with
     ``mixed_topk(gidx, d2, k)``.  Any True in ``overflow[q]`` means row q's
     buffer truncated on that shard (range: answers may be missing; k-NN:
-    certificate failed) — escalate ``capacity_per_shard`` and re-dispatch.
+    certificate failed) — escalate the per-shard capacity and re-dispatch.
+    Knobs ride in ``options`` (:class:`SearchOptions`); old kwargs shim
+    through with a :class:`DeprecationWarning`.
     """
+    options = _coerce_dist_options(options, legacy)
+    opts, rest = resolve_options(options, legacy, "distributed_mixed_query")
+    if rest:
+        raise TypeError(f"distributed_mixed_query: unexpected kwargs "
+                        f"{sorted(rest)}")
+    n_iters = opts.n_iters
     levels, alphabet = index.levels, index.alphabet
+    stack = _stack_of(index)
     P_sh = mesh.shape[axis]
     B = index.series.shape[0]
     b_loc = B // P_sh
     n_valid = B if n_valid is None else int(n_valid)
     k_loc = min(int(k), b_loc)
-    cap = min(int(capacity_per_shard), b_loc)
+    cap = min(128 if opts.capacity is None else int(opts.capacity), b_loc)
     # The mixed pallas path's tightening passes unroll the k-NN selection,
-    # so large k demotes per shard exactly like distributed_knn_query.
-    be = resolve_knn_backend(backend, k_loc)
+    # so large k demotes per shard exactly like distributed_knn_query;
+    # extended stacks demote likewise (engine.stack_backend).
+    be = stack_backend(index, resolve_knn_backend(opts.backend, k_loc))
     qr = represent_queries(jnp.asarray(queries, dtype=jnp.float32),
-                           levels, alphabet, normalize=normalize_queries)
+                           levels, alphabet, normalize=opts.normalize_queries,
+                           stack=stack)
     eps = jnp.asarray(epsilon, dtype=jnp.float32)
     knn_mask = jnp.asarray(is_knn, dtype=bool)
 
-    def local(series, norms, residuals, words, q, qws, qrs, eps_, knn_):
+    def local(series, norms, residuals, words, extra, q, qws, qrs, qex,
+              eps_, knn_):
         lidx = DeviceIndex(series=series, norms_sq=norms, words=words,
-                           residuals=residuals, levels=levels,
-                           alphabet=alphabet)
-        lqr = QueryReprDev(q=q, words=qws, residuals=qrs)
+                           residuals=residuals, extra=extra, levels=levels,
+                           alphabet=alphabet, stack=stack)
+        lqr = QueryReprDev(q=q, words=qws, residuals=qrs, extra=qex)
         shard = jax.lax.axis_index(axis)
         rows = shard * b_loc + jnp.arange(b_loc, dtype=jnp.int32)
         vmask = (rows < n_valid) & (residuals[0] < 0.5 * _PAD_RESIDUAL)
@@ -250,16 +316,18 @@ def distributed_mixed_query(
         gidx = jnp.where(answer, idx + shard * b_loc, -1)
         return gidx, answer, d2, overflow[:, None]
 
+    ex_ix, ex_q = _extra_specs(stack, levels, axis)
     in_specs = (P(axis, None), P(axis),
                 tuple(P(axis) for _ in levels),
-                tuple(P(axis, None) for _ in levels),
-                P(), (P(),) * len(levels), (P(),) * len(levels), P(), P())
+                tuple(P(axis, None) for _ in levels), ex_ix,
+                P(), (P(),) * len(levels), (P(),) * len(levels), ex_q,
+                P(), P())
     out_specs = (P(None, axis), P(None, axis), P(None, axis), P(None, axis))
     return shard_map(
         local, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
         check_rep=False,
-    )(index.series, index.norms_sq, index.residuals, index.words,
-      qr.q, qr.words, qr.residuals, eps, knn_mask)
+    )(index.series, index.norms_sq, index.residuals, index.words, index.extra,
+      qr.q, qr.words, qr.residuals, qr.extra, eps, knn_mask)
 
 
 def distributed_mixed_query_auto(
@@ -270,25 +338,27 @@ def distributed_mixed_query_auto(
     k: int,
     mesh: Mesh,
     axis: str = "data",
-    capacity_per_shard: int = 128,
-    n_iters: int = 2,
-    normalize_queries: bool = True,
+    options: SearchOptions | None = None,
     n_valid: int | None = None,
-    max_doublings: int = 8,
-    backend: str = "auto",
+    **legacy,
 ):
     """:func:`distributed_mixed_query` under the capacity auto-escalation
     contract: 4× the per-shard capacity while any shard overflows, capped
-    at the shard size (guaranteed sound there)."""
+    at the shard size (guaranteed sound there).  Old kwargs shim through
+    with a :class:`DeprecationWarning`."""
+    options = _coerce_dist_options(options, legacy)
+    opts, rest = resolve_options(options, legacy,
+                                 "distributed_mixed_query_auto")
+    if rest:
+        raise TypeError(f"distributed_mixed_query_auto: unexpected kwargs "
+                        f"{sorted(rest)}")
     P_sh = mesh.shape[axis]
     b_loc = index.series.shape[0] // P_sh
-    cap = min(int(capacity_per_shard), b_loc)
-    for _ in range(max_doublings + 1):
+    cap = min(128 if opts.capacity is None else int(opts.capacity), b_loc)
+    for _ in range(opts.max_doublings + 1):
         out = distributed_mixed_query(
             index, queries, epsilon, is_knn, k, mesh, axis=axis,
-            capacity_per_shard=cap, n_iters=n_iters,
-            normalize_queries=normalize_queries, n_valid=n_valid,
-            backend=backend)
+            options=dataclasses.replace(opts, capacity=cap), n_valid=n_valid)
         if cap >= b_loc or not bool(np.asarray(out[3]).any()):
             return out
         cap = min(b_loc, cap * 4)
@@ -301,11 +371,9 @@ def distributed_knn_query(
     k: int,
     mesh: Mesh,
     axis: str = "data",
-    capacity_per_shard: int | None = None,
-    n_iters: int = 2,
-    normalize_queries: bool = True,
+    options: SearchOptions | None = None,
     n_valid: int | None = None,
-    backend: str = "auto",
+    **legacy,
 ):
     """Exact k-NN over the sharded database: local top-k, cross-shard merge.
 
@@ -338,26 +406,38 @@ def distributed_knn_query(
     sentinel residual ``distributed_build`` stamps on them (the range path
     relies on the same sentinel), so the k-NN seed sample can never pick
     one up even when the caller does not pass ``n_valid``.
+
+    Knobs ride in ``options`` (:class:`SearchOptions`); the old
+    ``capacity_per_shard=`` / ``n_iters=`` / ``backend=`` kwargs shim
+    through with a :class:`DeprecationWarning`.
     """
+    options = _coerce_dist_options(options, legacy)
+    opts, rest = resolve_options(options, legacy, "distributed_knn_query")
+    if rest:
+        raise TypeError(f"distributed_knn_query: unexpected kwargs "
+                        f"{sorted(rest)}")
+    n_iters = opts.n_iters
     levels, alphabet = index.levels, index.alphabet
+    stack = _stack_of(index)
     P_sh = mesh.shape[axis]
     B = index.series.shape[0]
     b_loc = B // P_sh
     n_valid = B if n_valid is None else int(n_valid)
     k_loc = min(int(k), b_loc)
-    cap = b_loc if capacity_per_shard is None else min(int(capacity_per_shard),
-                                                       b_loc)
+    cap = b_loc if opts.capacity is None else min(int(opts.capacity), b_loc)
     # Large k demotes the per-shard engine to XLA (engine.resolve_knn_backend)
-    # rather than compiling an ever-longer unrolled selection kernel.
-    be = resolve_knn_backend(backend, k_loc)
+    # rather than compiling an ever-longer unrolled selection kernel;
+    # extended stacks demote likewise (engine.stack_backend).
+    be = stack_backend(index, resolve_knn_backend(opts.backend, k_loc))
     qr = represent_queries(jnp.asarray(queries, dtype=jnp.float32),
-                           levels, alphabet, normalize=normalize_queries)
+                           levels, alphabet, normalize=opts.normalize_queries,
+                           stack=stack)
 
-    def local(series, norms, residuals, words, q, qws, qrs):
+    def local(series, norms, residuals, words, extra, q, qws, qrs, qex):
         lidx = DeviceIndex(series=series, norms_sq=norms, words=words,
-                           residuals=residuals, levels=levels,
-                           alphabet=alphabet)
-        lqr = QueryReprDev(q=q, words=qws, residuals=qrs)
+                           residuals=residuals, extra=extra, levels=levels,
+                           alphabet=alphabet, stack=stack)
+        lqr = QueryReprDev(q=q, words=qws, residuals=qrs, extra=qex)
         shard = jax.lax.axis_index(axis)
         rows = shard * b_loc + jnp.arange(b_loc, dtype=jnp.int32)
         # Padded rows carry the _PAD_RESIDUAL sentinel at level 0 — the
@@ -377,16 +457,17 @@ def distributed_knn_query(
         gidx = jnp.where(finite, nn_idx + shard * b_loc, -1)
         return gidx, nn_d2, exact[:, None]
 
+    ex_ix, ex_q = _extra_specs(stack, levels, axis)
     in_specs = (P(axis, None), P(axis),
                 tuple(P(axis) for _ in levels),
-                tuple(P(axis, None) for _ in levels),
-                P(), (P(),) * len(levels), (P(),) * len(levels))
+                tuple(P(axis, None) for _ in levels), ex_ix,
+                P(), (P(),) * len(levels), (P(),) * len(levels), ex_q)
     out_specs = (P(None, axis), P(None, axis), P(None, axis))
     gidx, d2, certs = shard_map(
         local, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
         check_rep=False,
-    )(index.series, index.norms_sq, index.residuals, index.words,
-      qr.q, qr.words, qr.residuals)
+    )(index.series, index.norms_sq, index.residuals, index.words, index.extra,
+      qr.q, qr.words, qr.residuals, qr.extra)
 
     # Cross-shard merge: stable top-k over the concatenated (d², idx) pairs.
     # Slot order is shard-major with each shard ascending by (d², index), so
@@ -410,26 +491,29 @@ def distributed_survivor_count(
     """Phase-1 global survivor count per query (one psum) — used to size the
     compaction capacity and for the host-side level early-exit."""
     levels, alphabet = index.levels, index.alphabet
+    stack = _stack_of(index)
     qr = represent_queries(jnp.asarray(queries, dtype=jnp.float32),
-                           levels, alphabet, normalize=normalize_queries)
+                           levels, alphabet, normalize=normalize_queries,
+                           stack=stack)
     eps = jnp.asarray(epsilon, dtype=jnp.float32)
 
-    def local(series, norms, residuals, words, q, qws, qrs, eps_):
+    def local(series, norms, residuals, words, extra, q, qws, qrs, qex, eps_):
         lidx = DeviceIndex(series=series, norms_sq=norms, words=words,
-                           residuals=residuals, levels=levels,
-                           alphabet=alphabet)
-        lqr = QueryReprDev(q=q, words=qws, residuals=qrs)
+                           residuals=residuals, extra=extra, levels=levels,
+                           alphabet=alphabet, stack=stack)
+        lqr = QueryReprDev(q=q, words=qws, residuals=qrs, extra=qex)
         alive = cascade_mask(lidx, lqr, eps_)
         return jax.lax.psum(alive.sum(axis=-1), axis)
 
+    ex_ix, ex_q = _extra_specs(stack, levels, axis)
     in_specs = (P(axis, None), P(axis),
                 tuple(P(axis) for _ in levels),
-                tuple(P(axis, None) for _ in levels),
-                P(), (P(),) * len(levels), (P(),) * len(levels), P())
+                tuple(P(axis, None) for _ in levels), ex_ix,
+                P(), (P(),) * len(levels), (P(),) * len(levels), ex_q, P())
     return shard_map(
         local, mesh=mesh, in_specs=in_specs, out_specs=P(), check_rep=False,
-    )(index.series, index.norms_sq, index.residuals, index.words,
-      qr.q, qr.words, qr.residuals, eps)
+    )(index.series, index.norms_sq, index.residuals, index.words, index.extra,
+      qr.q, qr.words, qr.residuals, qr.extra, eps)
 
 
 def distributed_cascade_trace(
@@ -456,33 +540,36 @@ def distributed_cascade_trace(
     patch it from their answer buffers.
     """
     levels, alphabet = index.levels, index.alphabet
+    stack = _stack_of(index)
     P_sh = mesh.shape[axis]
     B = index.series.shape[0]
     b_loc = B // P_sh
     n_valid = B if n_valid is None else int(n_valid)
     qr = represent_queries(jnp.asarray(queries, dtype=jnp.float32),
-                           levels, alphabet, normalize=normalize_queries)
+                           levels, alphabet, normalize=normalize_queries,
+                           stack=stack)
     eps = jnp.asarray(epsilon, dtype=jnp.float32)
 
-    def local(series, norms, residuals, words, q, qws, qrs, eps_):
+    def local(series, norms, residuals, words, extra, q, qws, qrs, qex, eps_):
         lidx = DeviceIndex(series=series, norms_sq=norms, words=words,
-                           residuals=residuals, levels=levels,
-                           alphabet=alphabet)
-        lqr = QueryReprDev(q=q, words=qws, residuals=qrs)
+                           residuals=residuals, extra=extra, levels=levels,
+                           alphabet=alphabet, stack=stack)
+        lqr = QueryReprDev(q=q, words=qws, residuals=qrs, extra=qex)
         shard = jax.lax.axis_index(axis)
         rows = shard * b_loc + jnp.arange(b_loc, dtype=jnp.int32)
         vmask = (rows < n_valid) & (residuals[0] < 0.5 * _PAD_RESIDUAL)
         tr = cascade_trace(lidx, lqr, eps_, vmask)
         return jax.tree_util.tree_map(lambda c: jax.lax.psum(c, axis), tr)
 
+    ex_ix, ex_q = _extra_specs(stack, levels, axis)
     in_specs = (P(axis, None), P(axis),
                 tuple(P(axis) for _ in levels),
-                tuple(P(axis, None) for _ in levels),
-                P(), (P(),) * len(levels), (P(),) * len(levels), P())
+                tuple(P(axis, None) for _ in levels), ex_ix,
+                P(), (P(),) * len(levels), (P(),) * len(levels), ex_q, P())
     return shard_map(
         local, mesh=mesh, in_specs=in_specs, out_specs=P(), check_rep=False,
-    )(index.series, index.norms_sq, index.residuals, index.words,
-      qr.q, qr.words, qr.residuals, eps)
+    )(index.series, index.norms_sq, index.residuals, index.words, index.extra,
+      qr.q, qr.words, qr.residuals, qr.extra, eps)
 
 
 def distributed_range_query_traced(
@@ -491,23 +578,25 @@ def distributed_range_query_traced(
     epsilon,
     mesh: Mesh,
     axis: str = "data",
-    capacity_per_shard: int = 128,
-    normalize_queries: bool = True,
-    max_doublings: int = 8,
-    backend: str = "auto",
+    options: SearchOptions | None = None,
     n_valid: int | None = None,
+    **legacy,
 ):
     """:func:`distributed_range_query_auto` + merged trace: ``(gidx, ans,
     d2, overflow, trace)`` — the first four outputs are the unchanged
-    untraced call."""
+    untraced call.  Old kwargs shim through with a
+    :class:`DeprecationWarning`."""
+    options = _coerce_dist_options(options, legacy)
+    opts, rest = resolve_options(options, legacy,
+                                 "distributed_range_query_traced")
+    if rest:
+        raise TypeError(f"distributed_range_query_traced: unexpected kwargs "
+                        f"{sorted(rest)}")
     gidx, ans, d2, overflow = distributed_range_query_auto(
-        index, queries, epsilon, mesh, axis=axis,
-        capacity_per_shard=capacity_per_shard,
-        normalize_queries=normalize_queries, max_doublings=max_doublings,
-        backend=backend)
+        index, queries, epsilon, mesh, axis=axis, options=opts)
     trace = distributed_cascade_trace(
         index, queries, epsilon, mesh, axis=axis,
-        normalize_queries=normalize_queries, n_valid=n_valid)
+        normalize_queries=opts.normalize_queries, n_valid=n_valid)
     answers = jnp.sum(ans, axis=-1, dtype=jnp.int32)
     return gidx, ans, d2, overflow, dataclasses.replace(trace,
                                                         answers=answers)
@@ -519,11 +608,9 @@ def distributed_knn_query_traced(
     k: int,
     mesh: Mesh,
     axis: str = "data",
-    capacity_per_shard: int | None = None,
-    n_iters: int = 2,
-    normalize_queries: bool = True,
+    options: SearchOptions | None = None,
     n_valid: int | None = None,
-    backend: str = "auto",
+    **legacy,
 ):
     """:func:`distributed_knn_query` + merged trace at each query's final
     verified radius: ``(nn_idx, nn_d2, exact, trace)``.
@@ -531,13 +618,17 @@ def distributed_knn_query_traced(
     The radius is the k-th distance of the CROSS-SHARD merged answer (the
     same radius the single-host traced engine reports), so the merged
     counters are comparable across shard counts — and equal the host
-    engine's accounting at ``ε = d_k`` exactly.
+    engine's accounting at ``ε = d_k`` exactly.  Old kwargs shim through
+    with a :class:`DeprecationWarning`.
     """
+    options = _coerce_dist_options(options, legacy)
+    opts, rest = resolve_options(options, legacy,
+                                 "distributed_knn_query_traced")
+    if rest:
+        raise TypeError(f"distributed_knn_query_traced: unexpected kwargs "
+                        f"{sorted(rest)}")
     nn_idx, nn_d2, exact = distributed_knn_query(
-        index, queries, k, mesh, axis=axis,
-        capacity_per_shard=capacity_per_shard, n_iters=n_iters,
-        normalize_queries=normalize_queries, n_valid=n_valid,
-        backend=backend)
+        index, queries, k, mesh, axis=axis, options=opts, n_valid=n_valid)
     B = index.series.shape[0]
     k_eff = min(int(k), nn_d2.shape[-1],
                 B if n_valid is None else int(n_valid))
@@ -545,7 +636,7 @@ def distributed_knn_query_traced(
     eps = jnp.where(jnp.isfinite(eps), eps, _SEED_EPS_MAX)
     trace = distributed_cascade_trace(
         index, queries, eps, mesh, axis=axis,
-        normalize_queries=normalize_queries, n_valid=n_valid)
+        normalize_queries=opts.normalize_queries, n_valid=n_valid)
     answers = jnp.sum(jnp.isfinite(nn_d2[:, :k_eff]), axis=-1,
                       dtype=jnp.int32)
     return nn_idx, nn_d2, exact, dataclasses.replace(trace, answers=answers)
@@ -606,6 +697,8 @@ def distributed_subseq_index(
     levels = tuple(lv.n_segments for lv in hidx.levels)
     alphabet = hidx.config.alphabet
 
+    stack = tuple(getattr(hidx.config, "stack", DEFAULT_STACK))
+
     pad_s = S_p - S
     pad_w = pad_s * W_s
     streams_p = np.concatenate(
@@ -614,7 +707,7 @@ def distributed_subseq_index(
         axis=0) if pad_s else hidx.streams
     mu_p = np.concatenate([hidx.mu, np.zeros(pad_w)])
     sd_p = np.concatenate([hidx.sd, np.ones(pad_w)])
-    res_p, words_p = [], []
+    res_p, words_p, extra_p = [], [], []
     for li, lv in enumerate(hidx.levels):
         fill = _PAD_RESIDUAL if li == 0 else 0.0
         res_p.append(np.concatenate(
@@ -622,27 +715,41 @@ def distributed_subseq_index(
         words_p.append(np.concatenate(
             [lv.words, np.zeros((pad_w, lv.n_segments), np.int32)]).astype(
                 np.int32))
+        # Extra columns pad with zeros — the level-0 sentinel residual
+        # kills padded windows before any extra bound is consulted.
+        d = {}
+        for name, arr in getattr(lv, "extra", {}).items():
+            rep = repr_registry.get(name)
+            pad_shape = (pad_w,) + arr.shape[1:]
+            dt = np.int32 if rep.kind == "word" else np.float32
+            d[name] = np.concatenate(
+                [arr, np.zeros(pad_shape, arr.dtype)]).astype(dt)
+        extra_p.append(d)
+    extra_p = tuple(extra_p) if repr_registry.extra_names(stack) else ()
 
-    def local(streams_loc, mu_loc, sd_loc, residuals_loc, words_loc):
+    def local(streams_loc, mu_loc, sd_loc, residuals_loc, words_loc,
+              extra_loc):
         series = device_windows(streams_loc, window, stride, mu_loc, sd_loc)
         return (series, jnp.sum(series * series, axis=-1),
-                residuals_loc, words_loc)
+                residuals_loc, words_loc, extra_loc)
 
+    ex_ix, _ = _extra_specs(stack, levels, axis)
     in_specs = (P(axis, None), P(axis), P(axis),
                 tuple(P(axis) for _ in levels),
-                tuple(P(axis, None) for _ in levels))
+                tuple(P(axis, None) for _ in levels), ex_ix)
     out_specs = (P(axis, None), P(axis),
                  tuple(P(axis) for _ in levels),
-                 tuple(P(axis, None) for _ in levels))
-    series, norms, residuals, words = shard_map(
+                 tuple(P(axis, None) for _ in levels), ex_ix)
+    series, norms, residuals, words, extra = shard_map(
         local, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
         check_rep=False,
     )(jnp.asarray(streams_p, jnp.float32), jnp.asarray(mu_p, jnp.float32),
       jnp.asarray(sd_p, jnp.float32), tuple(jnp.asarray(r) for r in res_p),
-      tuple(jnp.asarray(w) for w in words_p))
+      tuple(jnp.asarray(w) for w in words_p),
+      jax.tree_util.tree_map(jnp.asarray, extra_p))
     index = DeviceIndex(series=series, norms_sq=norms, words=words,
-                        residuals=residuals, levels=levels,
-                        alphabet=alphabet)
+                        residuals=residuals, extra=extra, levels=levels,
+                        alphabet=alphabet, stack=stack)
     return DistSubseqIndex(index=index, window=window, stride=stride,
                            windows_per_stream=W_s, n_valid=S * W_s)
 
@@ -653,20 +760,24 @@ def distributed_subseq_range_query(
     epsilon,
     mesh: Mesh,
     axis: str = "data",
-    capacity_per_shard: int = 128,
-    normalize_queries: bool = True,
-    backend: str = "auto",
+    options: SearchOptions | None = None,
+    **legacy,
 ):
     """Stream-sharded subsequence range query — exactly
     :func:`distributed_range_query_auto` over the windows-as-rows index
     (the sentinel residual keeps padded-stream windows out at any finite
     ε).  Answers are global window ids; map through
     ``(wid // windows_per_stream, (wid % windows_per_stream) · stride)``.
+    Old kwargs shim through with a :class:`DeprecationWarning`.
     """
+    options = _coerce_dist_options(options, legacy)
+    opts, rest = resolve_options(options, legacy,
+                                 "distributed_subseq_range_query")
+    if rest:
+        raise TypeError(f"distributed_subseq_range_query: unexpected kwargs "
+                        f"{sorted(rest)}")
     return distributed_range_query_auto(
-        dsx.index, queries, epsilon, mesh, axis=axis,
-        capacity_per_shard=capacity_per_shard,
-        normalize_queries=normalize_queries, backend=backend)
+        dsx.index, queries, epsilon, mesh, axis=axis, options=opts)
 
 
 def distributed_subseq_knn_query(
@@ -676,10 +787,8 @@ def distributed_subseq_knn_query(
     mesh: Mesh,
     excl: int | None = None,
     axis: str = "data",
-    capacity_per_shard: int | None = None,
-    n_iters: int = 2,
-    normalize_queries: bool = True,
-    backend: str = "auto",
+    options: SearchOptions | None = None,
+    **legacy,
 ):
     """Exact exclusion-zone k-NN over the stream-sharded windows.
 
@@ -688,17 +797,22 @@ def distributed_subseq_knn_query(
     ascending by (d², global index) — the order the greedy suppression
     needs) and applies the trivial-match suppression on the host, exactly
     like the single-device ``subseq.subseq_knn_query``.  Returns
-    ``(sel_idx (Q, k), sel_d2 (Q, k), exact (Q,))`` host arrays.
+    ``(sel_idx (Q, k), sel_d2 (Q, k), exact (Q,))`` host arrays.  Old
+    kwargs shim through with a :class:`DeprecationWarning`.
     """
     from .subseq import knn_fetch_count, suppress_trivial_matches
 
+    options = _coerce_dist_options(options, legacy)
+    opts, rest = resolve_options(options, legacy,
+                                 "distributed_subseq_knn_query")
+    if rest:
+        raise TypeError(f"distributed_subseq_knn_query: unexpected kwargs "
+                        f"{sorted(rest)}")
     excl = (dsx.window // 2) if excl is None else int(excl)
     kf = knn_fetch_count(k, excl, dsx.stride, dsx.n_valid)
     nn_idx, nn_d2, exact = distributed_knn_query(
-        dsx.index, queries, kf, mesh, axis=axis,
-        capacity_per_shard=capacity_per_shard, n_iters=n_iters,
-        normalize_queries=normalize_queries, n_valid=dsx.n_valid,
-        backend=backend)
+        dsx.index, queries, kf, mesh, axis=axis, options=opts,
+        n_valid=dsx.n_valid)
     W_s = dsx.windows_per_stream
     wid = np.arange(dsx.index.series.shape[0])
     sel_idx, sel_d2 = suppress_trivial_matches(

@@ -33,9 +33,12 @@ from ..kernels import fused_query as _fused
 from ..kernels import ops as kernel_ops
 from ..obs.trace import QueryTrace, screen_row_bytes, tier_bytes
 from . import cost_model as _cost_model
+from . import representation as repr_registry
 from .fastsax import FastSAXIndex
+from .options import SearchOptions, resolve_options
 from .paa import paa, znormalize
 from .polyfit import linfit_residual
+from .representation import DEFAULT_STACK
 from .sax import discretize
 
 
@@ -46,26 +49,36 @@ class DeviceIndex:
 
     ``words[l]``: (B, N_l) int32, ``residuals[l]``: (B,) f32, ``series``:
     (B, n) f32, ``norms_sq``: (B,) f32 precomputed ‖u‖².
+
+    ``extra[l]`` carries the columns of registered representations beyond
+    the canonical paper pair (``core/representation.py``), one
+    ``{name: array}`` dict per level; ``stack`` is the static tuple of
+    registered names the index was built with (the default paper stack
+    leaves ``extra`` empty).
     """
 
     series: jnp.ndarray
     norms_sq: jnp.ndarray
     words: tuple
     residuals: tuple
+    extra: tuple = ()
     # static:
     levels: tuple = dataclasses.field(default=())
     alphabet: int = 10
+    stack: tuple = DEFAULT_STACK
 
     def tree_flatten(self):
-        children = (self.series, self.norms_sq, self.words, self.residuals)
-        aux = (self.levels, self.alphabet)
+        children = (self.series, self.norms_sq, self.words, self.residuals,
+                    self.extra)
+        aux = (self.levels, self.alphabet, self.stack)
         return children, aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        series, norms_sq, words, residuals = children
+        series, norms_sq, words, residuals, extra = children
         return cls(series=series, norms_sq=norms_sq, words=words,
-                   residuals=residuals, levels=aux[0], alphabet=aux[1])
+                   residuals=residuals, extra=extra, levels=aux[0],
+                   alphabet=aux[1], stack=aux[2])
 
     @property
     def n(self) -> int:
@@ -117,16 +130,44 @@ class DeviceIndex:
         return (dev, ids) if with_ids else dev
 
 
+def _dev_extra_levels(x, levels, alphabet: int, stack: tuple) -> tuple:
+    """Per-level ``{name: column}`` dicts for the stack's extra
+    representations of a (B, n) batch (word-kind → int32, gap-kind →
+    f32); () for the default paper stack."""
+    extras = repr_registry.extra_names(stack)
+    if not extras:
+        return ()
+    out = []
+    for N in levels:
+        d = {}
+        for name in extras:
+            rep = repr_registry.get(name)
+            col = rep.symbolize_dev(x, int(N), alphabet)
+            d[name] = (col.astype(jnp.int32) if rep.kind == "word"
+                       else col.astype(jnp.float32))
+        out.append(d)
+    return tuple(out)
+
+
 def device_index_from_host(index: FastSAXIndex, dtype=jnp.float32) -> DeviceIndex:
     series = jnp.asarray(index.series, dtype=dtype)
+    stack = tuple(index.config.stack)
     return DeviceIndex(
         series=series,
         norms_sq=jnp.sum(series * series, axis=-1),
         words=tuple(jnp.asarray(lv.words, dtype=jnp.int32) for lv in index.levels),
         residuals=tuple(jnp.asarray(lv.residuals, dtype=dtype)
                         for lv in index.levels),
+        extra=tuple(
+            {name: jnp.asarray(
+                lv.extra[name],
+                jnp.int32 if repr_registry.get(name).kind == "word"
+                else jnp.float32)
+             for name in repr_registry.extra_names(stack)}
+            for lv in index.levels),
         levels=tuple(lv.n_segments for lv in index.levels),
         alphabet=index.config.alphabet,
+        stack=stack,
     )
 
 
@@ -135,12 +176,14 @@ def build_device_index(
     levels: Sequence[int],
     alphabet: int,
     normalize: bool = True,
+    stack: tuple = DEFAULT_STACK,
 ) -> DeviceIndex:
     """Offline phase, fully on device (jit-able) — used by the distributed
     builder in ``dist_search.py`` where each shard indexes its own slice."""
     if normalize:
         series = znormalize(series)
     series = series.astype(jnp.float32)
+    stack = repr_registry.validate_stack(stack)
     words, residuals = [], []
     for N in levels:
         words.append(discretize(paa(series, N), alphabet))
@@ -150,37 +193,48 @@ def build_device_index(
         norms_sq=jnp.sum(series * series, axis=-1),
         words=tuple(words),
         residuals=tuple(residuals),
+        extra=_dev_extra_levels(series, levels, alphabet, stack),
         levels=tuple(int(N) for N in levels),
         alphabet=alphabet,
+        stack=stack,
     )
 
 
 @dataclasses.dataclass(frozen=True)
 class QueryReprDev:
-    """Device query representation (pytree via dataclass fields order)."""
+    """Device query representation (pytree via dataclass fields order).
+
+    ``extra`` mirrors ``DeviceIndex.extra``: per level, ``{name: column}``
+    for the stack's registered extras (empty for the paper stack)."""
 
     q: jnp.ndarray
     words: tuple
     residuals: tuple
+    extra: tuple = ()
 
 
 jax.tree_util.register_pytree_node(
     QueryReprDev,
-    lambda r: ((r.q, r.words, r.residuals), None),
+    lambda r: ((r.q, r.words, r.residuals, r.extra), None),
     lambda _, c: QueryReprDev(*c),
 )
 
 
 def represent_queries(
-    q: jnp.ndarray, levels: Sequence[int], alphabet: int, normalize: bool = True
+    q: jnp.ndarray, levels: Sequence[int], alphabet: int,
+    normalize: bool = True, stack: tuple = DEFAULT_STACK,
 ) -> QueryReprDev:
-    """Represent a batch of queries (Q, n) at every level (jit-able)."""
+    """Represent a batch of queries (Q, n) at every level (jit-able).
+
+    ``stack`` must match the index's stack (static tuple of registered
+    representation names); the default paper stack adds no extras."""
     if normalize:
         q = znormalize(q)
     q = q.astype(jnp.float32)
     words = tuple(discretize(paa(q, N), alphabet) for N in levels)
     residuals = tuple(linfit_residual(q, N).astype(jnp.float32) for N in levels)
-    return QueryReprDev(q=q, words=words, residuals=residuals)
+    return QueryReprDev(q=q, words=words, residuals=residuals,
+                        extra=_dev_extra_levels(q, levels, alphabet, stack))
 
 
 def _mindist_sq_tab(alphabet: int) -> jnp.ndarray:
@@ -195,6 +249,27 @@ def _eps_qcol(epsilon, Q: int) -> jnp.ndarray:
     if eps.ndim == 0:
         eps = jnp.broadcast_to(eps, (Q,))
     return eps.reshape(Q, 1)
+
+
+def _extra_reps(index) -> tuple:
+    """The index stack's extra representations, split (gap, word)."""
+    reps = [repr_registry.get(name)
+            for name in repr_registry.extra_names(
+                getattr(index, "stack", DEFAULT_STACK))]
+    return ([r for r in reps if r.kind == "gap"],
+            [r for r in reps if r.kind == "word"])
+
+
+def stack_backend(index, backend: str) -> str:
+    """Demote Pallas to XLA for extended stacks: the fused megakernels
+    hard-code the canonical two-representation cascade (words+residuals in
+    VMEM panels), so an index carrying registered extras runs the XLA
+    engine — answers are identical either way, only the execution model
+    moves.  A no-op for the default paper stack."""
+    if backend == "pallas" and \
+            tuple(getattr(index, "stack", DEFAULT_STACK)) != DEFAULT_STACK:
+        return "xla"
+    return backend
 
 
 def cascade_mask(
@@ -213,16 +288,24 @@ def cascade_mask(
     eps2 = eps * eps
     alive = jnp.ones((Q, index.series.shape[0]), dtype=bool)
     tab = _mindist_sq_tab(index.alphabet)
+    gap_extras, word_extras = _extra_reps(index)
     for li, N in enumerate(index.levels):
         # C9: |d(u,ū) − d(q,q̄)| > ε  → kill.
         gap = jnp.abs(index.residuals[li][None, :] - qr.residuals[li][:, None])
         alive &= gap <= eps
+        for rep in gap_extras:        # registered gap-kind extras after C9
+            alive &= rep.dev_gap(index.extra[li][rep.name],
+                                 qr.extra[li][rep.name]) <= eps
         # C10 under mask: MINDIST²(q̃,ũ) > ε² → kill.  (lookup-table gather;
         # the Pallas kernel variant uses a per-query (α, N) slice, see
         # kernels/fused_prune.py.)
         cell = tab[index.words[li][None, :, :], qr.words[li][:, None, :]]
         md_sq = (n / N) * jnp.sum(cell * cell, axis=-1)
         alive &= md_sq <= eps2
+        for rep in word_extras:       # registered word-kind extras after C10
+            alive &= rep.dev_bound_sq(index.extra[li][rep.name],
+                                      qr.extra[li][rep.name],
+                                      n=n, N=N, tab=tab) <= eps2
     return alive
 
 
@@ -1063,20 +1146,40 @@ def compact_answers(answer: jnp.ndarray, d2: jnp.ndarray, capacity: int):
     return idx, valid, d2c, answer.sum(axis=-1) > capacity
 
 
+def _coerce_options(options, legacy: dict):
+    """Accept a legacy positional ``backend`` string where ``options`` now
+    sits (pre-PR-8 call sites passed ``backend`` as the 4th positional
+    argument); route it through the deprecation shim."""
+    if isinstance(options, str):
+        legacy["backend"] = options
+        return None
+    return options
+
+
 def range_query_backend(
-    index: DeviceIndex, qr: QueryReprDev, epsilon, backend: str = "auto",
-    **pallas_kw,
+    index: DeviceIndex, qr: QueryReprDev, epsilon,
+    options: SearchOptions | None = None, **legacy,
 ):
-    """Backend-dispatched dense range query (same convention both ways)."""
-    if resolve_backend(backend) == "pallas":
+    """Backend-dispatched dense range query (same convention both ways).
+
+    ``options`` is the one knob surface (:class:`SearchOptions`); the old
+    ``backend=`` kwarg still works through a :class:`DeprecationWarning`
+    shim.  Unrecognised kwargs pass through to the Pallas kernel (expert
+    block overrides).  Extended representation stacks demote Pallas to
+    XLA (:func:`stack_backend` — the fused megakernels hard-code the
+    canonical pair).
+    """
+    options = _coerce_options(options, legacy)
+    opts, pallas_kw = resolve_options(options, legacy, "range_query_backend")
+    if stack_backend(index, resolve_backend(opts.backend)) == "pallas":
         return range_query_pallas(index, qr, epsilon, **pallas_kw)
     return range_query(index, qr, epsilon)
 
 
 def knn_query_backend(
-    index: DeviceIndex, qr: QueryReprDev, k: int, backend: str = "auto",
-    capacity: int | None = None, n_iters: int = 2,
-    valid_mask: jnp.ndarray | None = None, **pallas_kw,
+    index: DeviceIndex, qr: QueryReprDev, k: int,
+    options: SearchOptions | None = None,
+    valid_mask: jnp.ndarray | None = None, **legacy,
 ):
     """Backend-dispatched exact k-NN: ``(nn_idx, nn_d2, exact)``.
 
@@ -1085,19 +1188,27 @@ def knn_query_backend(
     near-tie detector (see :func:`knn_query_pallas` — on a rare False,
     re-issue the query with ``backend="xla"``).  Large k auto-demotes to
     XLA (:func:`resolve_knn_backend`): past the ~100-sweep unroll
-    threshold the fused selection costs more to compile than it saves.
+    threshold the fused selection costs more to compile than it saves;
+    extended representation stacks demote likewise (:func:`stack_backend`).
+    Knobs ride in ``options`` (:class:`SearchOptions`); the old
+    ``backend=``/``capacity=``/``n_iters=`` kwargs shim through with a
+    :class:`DeprecationWarning`.  ``valid_mask`` is data, not an option,
+    and stays an explicit kwarg.
     """
-    if resolve_knn_backend(backend, k) == "pallas":
-        return knn_query_pallas(index, qr, k, n_iters=n_iters,
+    options = _coerce_options(options, legacy)
+    opts, pallas_kw = resolve_options(options, legacy, "knn_query_backend")
+    if stack_backend(index, resolve_knn_backend(opts.backend, k)) == "pallas":
+        return knn_query_pallas(index, qr, k, n_iters=opts.n_iters,
                                 valid_mask=valid_mask, **pallas_kw)
-    return knn_query_auto(index, qr, k, capacity=capacity, n_iters=n_iters,
-                          valid_mask=valid_mask)
+    return knn_query_auto(index, qr, k, capacity=opts.capacity,
+                          n_iters=opts.n_iters, valid_mask=valid_mask,
+                          max_doublings=opts.max_doublings)
 
 
 def mixed_query_backend(
     index: DeviceIndex, qr: QueryReprDev, epsilon, is_knn, k: int,
-    backend: str = "auto", capacity: int | None = None, n_iters: int = 2,
-    valid_mask: jnp.ndarray | None = None, **pallas_kw,
+    options: SearchOptions | None = None,
+    valid_mask: jnp.ndarray | None = None, **legacy,
 ):
     """Backend-dispatched mixed batch: ``(idx, answer, d2, overflow)``.
 
@@ -1108,14 +1219,19 @@ def mixed_query_backend(
     selection as the dedicated k-NN kernel, so large k demotes to XLA
     under the same :func:`resolve_knn_backend` advice — a deterministic
     function of (backend, k), so every batch of a (Q, k) bucket takes
-    the same float path.
+    the same float path.  Extended representation stacks demote to XLA
+    too (:func:`stack_backend`).  Knobs ride in ``options``
+    (:class:`SearchOptions`) with the old kwargs shimmed through a
+    :class:`DeprecationWarning`.
     """
-    if resolve_knn_backend(backend, k) == "pallas":
+    options = _coerce_options(options, legacy)
+    opts, pallas_kw = resolve_options(options, legacy, "mixed_query_backend")
+    if stack_backend(index, resolve_knn_backend(opts.backend, k)) == "pallas":
         return mixed_query_pallas(index, qr, epsilon, is_knn, k,
-                                  n_iters=n_iters, valid_mask=valid_mask,
-                                  **pallas_kw)
+                                  n_iters=opts.n_iters,
+                                  valid_mask=valid_mask, **pallas_kw)
     return mixed_query_auto(index, qr, epsilon, is_knn, k,
-                            capacity=capacity, n_iters=n_iters,
+                            capacity=opts.capacity, n_iters=opts.n_iters,
                             valid_mask=valid_mask)
 
 
@@ -1197,22 +1313,28 @@ class QuantizedDeviceIndex:
     resid_scale: tuple
     resid_zero: tuple
     resid_err: tuple
+    #: per level {name: (B, N_l) int8 codes} for word-kind stack extras
+    #: (lossless — symbols fit int8; gap-kind extras are rejected at
+    #: quantize time, so the widened C9 stays canonical-only)
+    extra: tuple = ()
     # static:
     levels: tuple = dataclasses.field(default=())
     alphabet: int = 10
     mode: str = "int8"
+    stack: tuple = DEFAULT_STACK
 
     def tree_flatten(self):
         children = (self.series, self.series_scale, self.series_zero,
                     self.series_err, self.norms_sq, self.words,
                     self.residuals, self.resid_scale, self.resid_zero,
-                    self.resid_err)
-        aux = (self.levels, self.alphabet, self.mode)
+                    self.resid_err, self.extra)
+        aux = (self.levels, self.alphabet, self.mode, self.stack)
         return children, aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, levels=aux[0], alphabet=aux[1], mode=aux[2])
+        return cls(*children, levels=aux[0], alphabet=aux[1], mode=aux[2],
+                   stack=aux[3])
 
     @property
     def n(self) -> int:
@@ -1251,9 +1373,13 @@ def quantized_device_index(qhost) -> QuantizedDeviceIndex:
         resid_zero=tuple(col(lv.zero) if int8 else None
                          for lv in qhost.levels),
         resid_err=tuple(col(lv.err) for lv in qhost.levels),
+        extra=tuple({name: jnp.asarray(arr, jnp.int8)
+                     for name, arr in getattr(lv, "extra", {}).items()}
+                    for lv in qhost.levels),
         levels=tuple(lv.n_segments for lv in qhost.levels),
         alphabet=qhost.alphabet,
         mode=qhost.mode,
+        stack=tuple(getattr(qhost, "stack", DEFAULT_STACK)),
     )
 
 
@@ -1297,7 +1423,9 @@ def quantized_cascade_mask(
     C9 widens to ``|r̂(u) − r(q)| ≤ ε + e_blk`` (|r̂ − r| ≤ e_blk, so the
     widened compare can never kill a true answer); C10 runs UNWIDENED —
     the symbol columns are stored losslessly in int8, so MINDIST is the
-    exact full-precision bound.
+    exact full-precision bound.  Word-kind stack extras screen unwidened
+    for the same reason (lossless int8 symbols); gap-kind extras never
+    reach this tier (``index.quantized`` rejects them).
     """
     n = qindex.n
     Q = qr.q.shape[0]
@@ -1306,6 +1434,7 @@ def quantized_cascade_mask(
     B = qindex.series.shape[0]
     alive = jnp.ones((Q, B), dtype=bool)
     tab = _mindist_sq_tab(qindex.alphabet)
+    _, word_extras = _extra_reps(qindex)
     for li, N in enumerate(qindex.levels):
         res = _dequant_residuals_dev(qindex, li)
         err = _expand_block_col(qindex.resid_err[li], B)
@@ -1315,6 +1444,10 @@ def quantized_cascade_mask(
                    qr.words[li][:, None, :]]
         md_sq = (n / N) * jnp.sum(cell * cell, axis=-1)
         alive &= md_sq <= eps2
+        for rep in word_extras:
+            col = qindex.extra[li][rep.name].astype(jnp.int32)
+            alive &= rep.dev_bound_sq(col, qr.extra[li][rep.name],
+                                      n=n, N=N, tab=tab) <= eps2
     return alive
 
 
@@ -1459,8 +1592,9 @@ class TieredIndex:
 def _quantized_screen_backend(tindex: TieredIndex, qr: QueryReprDev,
                               eps_col, backend: str):
     """Dispatch the dense quantized screen: XLA oracle or the fused
-    dequantize-in-kernel Pallas form (bit-identical — tested)."""
-    if resolve_backend(backend) == "pallas":
+    dequantize-in-kernel Pallas form (bit-identical — tested).  Extended
+    stacks demote to the XLA oracle (:func:`stack_backend`)."""
+    if stack_backend(tindex.dev, resolve_backend(backend)) == "pallas":
         from ..kernels.fused_query import fused_quant_range_pallas
 
         Q = qr.q.shape[0]
@@ -1493,10 +1627,18 @@ def _raw_rows(tindex: TieredIndex, idx) -> jnp.ndarray:
     return jnp.asarray(rows, dtype=jnp.float32)
 
 
+def _coerce_quant_options(options, legacy: dict):
+    """Legacy positional ``capacity`` (int) in the ``options`` slot of the
+    ``quantized_*`` entrypoints routes through the deprecation shim."""
+    if isinstance(options, int):
+        legacy["capacity"] = options
+        return None
+    return options
+
+
 def quantized_range_query(
     tindex: TieredIndex, qr: QueryReprDev, epsilon,
-    capacity: int | None = None, backend: str = "auto",
-    max_doublings: int = 8,
+    options: SearchOptions | None = None, **legacy,
 ):
     """Exact range query over the tiered index.
 
@@ -1507,11 +1649,20 @@ def quantized_range_query(
     compaction cannot overflow), so the certificate is always True on
     return.  Returns ``(idx (Q, C), answer (Q, C), d2 (Q, C), exact (Q,))``
     — set-identical to :func:`range_query` / ``range_query_compact``
-    (property-tested in tests/test_quantized.py).
+    (property-tested in tests/test_quantized.py).  Knobs ride in
+    ``options`` (:class:`SearchOptions`); the old ``capacity=`` /
+    ``backend=`` / ``max_doublings=`` kwargs shim through with a
+    :class:`DeprecationWarning`.
     """
+    options = _coerce_quant_options(options, legacy)
+    opts, rest = resolve_options(options, legacy, "quantized_range_query")
+    if rest:
+        raise TypeError(f"quantized_range_query: unexpected kwargs "
+                        f"{sorted(rest)}")
+    capacity, max_doublings = opts.capacity, opts.max_doublings
     Q, B = qr.q.shape[0], tindex.size
     eps = _eps_qcol(epsilon, Q)
-    keep, _ = _quantized_screen_backend(tindex, qr, eps, backend)
+    keep, _ = _quantized_screen_backend(tindex, qr, eps, opts.backend)
     cap = min(B, 64 if capacity is None else max(1, int(capacity)))
     for _ in range(max_doublings + 1):
         idx, valid, overflow = _compact_mask(keep, cap)
@@ -1547,8 +1698,7 @@ def _tiered_seed_eps(tindex: TieredIndex, qr: QueryReprDev,
 
 def quantized_knn_query(
     tindex: TieredIndex, qr: QueryReprDev, k: int,
-    capacity: int | None = None, backend: str = "auto",
-    max_doublings: int = 8,
+    options: SearchOptions | None = None, **legacy,
 ):
     """Exact k-NN over the tiered index: ``(nn_idx, nn_d2, exact)``.
 
@@ -1559,12 +1709,21 @@ def quantized_knn_query(
     then exact-verifies the surviving candidates from the raw tier and
     takes their top-k (ties to the lowest index, the engine-wide order).
     Capacity escalates on overflow up to B, so ``exact`` is always True
-    on return: the answer provably equals brute force.
+    on return: the answer provably equals brute force.  Knobs ride in
+    ``options`` (:class:`SearchOptions`); old kwargs shim through with a
+    :class:`DeprecationWarning`.
     """
+    options = _coerce_quant_options(options, legacy)
+    opts, rest = resolve_options(options, legacy, "quantized_knn_query")
+    if rest:
+        raise TypeError(f"quantized_knn_query: unexpected kwargs "
+                        f"{sorted(rest)}")
+    capacity, max_doublings = opts.capacity, opts.max_doublings
     Q, B = qr.q.shape[0], tindex.size
     k_eff = min(int(k), B)
     eps = _tiered_seed_eps(tindex, qr, k_eff)                # (Q, 1)
-    keep, _ = _quantized_screen_backend(tindex, qr, _slacked(eps), backend)
+    keep, _ = _quantized_screen_backend(tindex, qr, _slacked(eps),
+                                        opts.backend)
     cap = min(B, max(4 * k_eff, 64) if capacity is None else int(capacity))
     cap = max(cap, k_eff)
     for _ in range(max_doublings + 1):
@@ -1582,8 +1741,7 @@ def quantized_knn_query(
 
 def quantized_mixed_query(
     tindex: TieredIndex, qr: QueryReprDev, epsilon, is_knn, k: int,
-    capacity: int | None = None, backend: str = "auto",
-    max_doublings: int = 8,
+    options: SearchOptions | None = None, **legacy,
 ):
     """Mixed range/k-NN batch over the tiered index, serving-layer layout.
 
@@ -1594,15 +1752,23 @@ def quantized_mixed_query(
     ``overflow`` all-False after escalation — for k-NN rows ``answer``
     marks valid candidate slots (a verified superset of the true top-k),
     extracted per row via :func:`mixed_topk` exactly like the other
-    serving backends.
+    serving backends.  Knobs ride in ``options``
+    (:class:`SearchOptions`); old kwargs shim through with a
+    :class:`DeprecationWarning`.
     """
+    options = _coerce_quant_options(options, legacy)
+    opts, rest = resolve_options(options, legacy, "quantized_mixed_query")
+    if rest:
+        raise TypeError(f"quantized_mixed_query: unexpected kwargs "
+                        f"{sorted(rest)}")
+    capacity, max_doublings = opts.capacity, opts.max_doublings
     Q, B = qr.q.shape[0], tindex.size
     k_eff = min(int(k), B)
     knn_col = jnp.asarray(is_knn, dtype=bool).reshape(Q, 1)
     eps_req = _eps_qcol(epsilon, Q)
     eps = jnp.where(knn_col, _slacked(_tiered_seed_eps(tindex, qr, k_eff)),
                     eps_req)
-    keep, _ = _quantized_screen_backend(tindex, qr, eps, backend)
+    keep, _ = _quantized_screen_backend(tindex, qr, eps, opts.backend)
     cap = min(B, max(4 * k_eff, 64) if capacity is None else int(capacity))
     cap = max(cap, k_eff)
     for _ in range(max_doublings + 1):
@@ -1653,14 +1819,22 @@ def _cascade_counting(index: DeviceIndex, qr: QueryReprDev, eps, valid_mask):
     if valid_mask is not None:
         alive &= valid_mask[None, :]
     tab = _mindist_sq_tab(index.alphabet)
+    gap_extras, word_extras = _extra_reps(index)
     after_c9, after_c10 = [], []
     for li, N in enumerate(index.levels):
         gap = jnp.abs(index.residuals[li][None, :] - qr.residuals[li][:, None])
         alive &= gap <= eps
+        for rep in gap_extras:    # extra gap kills count under after_c9
+            alive &= rep.dev_gap(index.extra[li][rep.name],
+                                 qr.extra[li][rep.name]) <= eps
         after_c9.append(_count_alive(alive))
         cell = tab[index.words[li][None, :, :], qr.words[li][:, None, :]]
         md_sq = (n / N) * jnp.sum(cell * cell, axis=-1)
         alive &= md_sq <= eps2
+        for rep in word_extras:   # extra word kills count under after_c10
+            alive &= rep.dev_bound_sq(index.extra[li][rep.name],
+                                      qr.extra[li][rep.name],
+                                      n=n, N=N, tab=tab) <= eps2
         after_c10.append(_count_alive(alive))
     return alive, jnp.stack(after_c9, axis=-1), jnp.stack(after_c10, axis=-1)
 
@@ -1886,6 +2060,7 @@ def quantized_cascade_trace(
     B = qindex.series.shape[0]
     alive = jnp.ones((Q, B), dtype=bool)
     tab = _mindist_sq_tab(qindex.alphabet)
+    _, word_extras = _extra_reps(qindex)
     after_c9, after_c10 = [], []
     for li, N in enumerate(qindex.levels):
         res = _dequant_residuals_dev(qindex, li)
@@ -1897,6 +2072,10 @@ def quantized_cascade_trace(
                    qr.words[li][:, None, :]]
         md_sq = (n / N) * jnp.sum(cell * cell, axis=-1)
         alive &= md_sq <= eps2
+        for rep in word_extras:   # extra word kills count under after_c10
+            col = qindex.extra[li][rep.name].astype(jnp.int32)
+            alive &= rep.dev_bound_sq(col, qr.extra[li][rep.name],
+                                      n=n, N=N, tab=tab) <= eps2
         after_c10.append(_count_alive(alive))
     u = _dequant_series_dev(qindex)
     qn = jnp.sum(qr.q * qr.q, axis=-1)
@@ -1943,8 +2122,9 @@ def quantized_range_query_traced(
     """:func:`quantized_range_query` + trace: ``(idx, answer, d2, exact,
     trace)``."""
     idx, answer, d2, exact = quantized_range_query(
-        tindex, qr, epsilon, capacity=capacity, backend=backend,
-        max_doublings=max_doublings)
+        tindex, qr, epsilon,
+        options=SearchOptions(capacity=capacity, backend=backend,
+                              max_doublings=max_doublings))
     trace = quantized_cascade_trace(tindex.dev, qr, epsilon)
     trace = dataclasses.replace(trace, answers=_count_alive(answer))
     return idx, answer, d2, exact, trace
@@ -1958,8 +2138,9 @@ def quantized_knn_query_traced(
     """:func:`quantized_knn_query` + trace at the final verified radius:
     ``(nn_idx, nn_d2, exact, trace)``."""
     nn_idx, nn_d2, exact = quantized_knn_query(
-        tindex, qr, k, capacity=capacity, backend=backend,
-        max_doublings=max_doublings)
+        tindex, qr, k,
+        options=SearchOptions(capacity=capacity, backend=backend,
+                              max_doublings=max_doublings))
     k_eff = min(int(k), tindex.size)
     eps = jnp.sqrt(jnp.maximum(nn_d2[:, k_eff - 1:k_eff], 0.0))
     eps = jnp.where(jnp.isfinite(eps), eps, _SEED_EPS_MAX)

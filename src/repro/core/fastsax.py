@@ -28,8 +28,10 @@ from typing import Sequence
 
 import numpy as np
 
+from . import representation as repr_registry
 from .paa import paa_np, znormalize_np
 from .polyfit import linfit_residual_np
+from .representation import DEFAULT_STACK
 from .sax import MAX_ALPHABET, MIN_ALPHABET, discretize_np
 
 
@@ -39,11 +41,15 @@ class FastSAXConfig:
 
     ``n_segments`` is listed coarse→fine (fewest segments first); each entry
     is one representation level and must divide the series length.
+    ``stack`` names the registered representations every level carries
+    (``core/representation.py``); the default is the paper's pair, and
+    every stack must contain it — extras augment the cascade.
     """
 
     n_segments: tuple
     alphabet: int = 10
     level_order: str = "coarse_first"  # "coarse_first" | "paper" (fine first)
+    stack: tuple = DEFAULT_STACK
 
     def __post_init__(self):
         if not MIN_ALPHABET <= self.alphabet <= MAX_ALPHABET:
@@ -60,6 +66,13 @@ class FastSAXConfig:
                 f"(no duplicates), got {tuple(self.n_segments)}")
         if self.level_order not in ("coarse_first", "paper"):
             raise ValueError(f"bad level_order {self.level_order!r}")
+        object.__setattr__(self, "stack",
+                           repr_registry.validate_stack(self.stack))
+
+    @property
+    def extra_stack(self) -> tuple:
+        """Stack names beyond the canonical paper pair (build order)."""
+        return repr_registry.extra_names(self.stack)
 
     @property
     def levels(self) -> tuple:
@@ -71,11 +84,17 @@ class FastSAXConfig:
 
 @dataclasses.dataclass
 class LevelData:
-    """Per-level precomputed representations for a batch of series."""
+    """Per-level precomputed representations for a batch of series.
+
+    ``words``/``residuals`` are the canonical paper columns (every stack
+    carries them); ``extra`` holds the columns of any additional
+    registered representations, keyed by representation name.
+    """
 
     n_segments: int
     words: np.ndarray      # (B, N_l) int32 SAX symbols
     residuals: np.ndarray  # (B,) float64 d(u, ū_l)
+    extra: dict = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -101,11 +120,16 @@ class FastSAXIndex:
         raise KeyError(f"no level with N={n_segments}")
 
 
-def _represent(series: np.ndarray, n_segments: int, alphabet: int) -> LevelData:
+def _represent(series: np.ndarray, n_segments: int, alphabet: int,
+               stack: tuple = DEFAULT_STACK) -> LevelData:
     p = paa_np(series, n_segments)
     words = discretize_np(p, alphabet)
     residuals = linfit_residual_np(series, n_segments).astype(np.float64)
-    return LevelData(n_segments=n_segments, words=words, residuals=residuals)
+    extra = {name: repr_registry.get(name).symbolize_np(
+                 series, n_segments, alphabet)
+             for name in repr_registry.extra_names(stack)}
+    return LevelData(n_segments=n_segments, words=words, residuals=residuals,
+                     extra=extra)
 
 
 def build_index(
@@ -123,17 +147,23 @@ def build_index(
             raise ValueError(f"level N={N} does not divide series length n={n}")
     if normalize:
         series = znormalize_np(series)
-    levels = [_represent(series, N, config.alphabet) for N in config.levels]
+    levels = [_represent(series, N, config.alphabet, config.stack)
+              for N in config.levels]
     return FastSAXIndex(config=config, series=series, levels=levels)
 
 
 @dataclasses.dataclass
 class QueryRepr:
-    """The online representation of one query, mirroring the index levels."""
+    """The online representation of one query, mirroring the index levels.
+
+    ``extra`` mirrors ``LevelData.extra``: per level, a dict keyed by
+    representation name (empty for the default stack).
+    """
 
     q: np.ndarray            # (n,) z-normalised query
     words: list              # per level: (N_l,) int32
     residuals: list          # per level: scalar d(q, q̄_l)
+    extra: list = dataclasses.field(default_factory=list)
 
 
 def represent_query(
@@ -144,8 +174,12 @@ def represent_query(
         raise ValueError("query must be a single (n,) series")
     if normalize:
         q = znormalize_np(q)
-    words, residuals = [], []
+    words, residuals, extra = [], [], []
+    extras = config.extra_stack
     for N in config.levels:
         words.append(discretize_np(paa_np(q, N), config.alphabet))
         residuals.append(float(linfit_residual_np(q, N)))
-    return QueryRepr(q=q, words=words, residuals=residuals)
+        extra.append({name: repr_registry.get(name).query_repr_np(
+                          q, N, config.alphabet)
+                      for name in extras})
+    return QueryRepr(q=q, words=words, residuals=residuals, extra=extra)

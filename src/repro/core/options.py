@@ -1,0 +1,84 @@
+"""One unified query-options surface (DESIGN.md §11).
+
+Seven PRs grew the public ``*_query_*`` families a sprawling per-call
+keyword surface — ``backend=``, ``quantization=``, ``trace=``, capacity
+and escalation knobs threaded separately through ``core/engine.py``,
+``core/dist_search.py``, ``core/search.py`` and ``serve/service.py``.
+:class:`SearchOptions` collapses them into one frozen dataclass accepted
+uniformly by every public query entrypoint; the old kwargs keep working
+through thin shims (:func:`resolve_options`) that forward them into the
+dataclass and emit a :class:`DeprecationWarning`.
+
+The internal jitted engines keep their explicit keyword signatures —
+they are compilation entry points, not user surface; the options object
+is unpacked at the public dispatch layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchOptions:
+    """Uniform knobs of one search call.
+
+    ``backend``: ``"auto" | "xla" | "pallas"`` engine selection
+    (``engine.resolve_backend``).  ``quantization``: ``"none" | "int8" |
+    "bf16"`` memory tier.  ``trace``: attach cascade telemetry
+    (DESIGN.md §10).  ``capacity``: initial compaction capacity
+    (``None`` = engine default) — escalation from it is automatic.
+    ``n_iters``: k-NN tightening passes.  ``seed_factor`` /
+    ``adaptive_c10``: host k-NN engine knobs (``search.fastsax_knn_query``).
+    ``normalize_queries``: z-normalise incoming queries.
+    ``max_doublings``: cap on the 4× capacity-escalation loop.
+    """
+
+    backend: str = "auto"
+    quantization: str = "none"
+    trace: bool = False
+    capacity: int | None = None
+    n_iters: int = 2
+    seed_factor: int = 2
+    adaptive_c10: bool = True
+    normalize_queries: bool = True
+    max_doublings: int = 8
+
+
+#: Legacy kwarg name -> SearchOptions field, for the deprecation shims.
+_LEGACY_FIELDS = {
+    "backend": "backend",
+    "quantization": "quantization",
+    "trace": "trace",
+    "capacity": "capacity",
+    "capacity_per_shard": "capacity",
+    "n_iters": "n_iters",
+    "seed_factor": "seed_factor",
+    "adaptive_c10": "adaptive_c10",
+    "normalize_queries": "normalize_queries",
+    "max_doublings": "max_doublings",
+}
+
+
+def resolve_options(options: SearchOptions | None, legacy: dict,
+                    caller: str = "query"):
+    """Merge legacy kwargs into a :class:`SearchOptions` (shim helper).
+
+    ``legacy`` is the caller's ``**kwargs`` dict; every key recognised in
+    :data:`_LEGACY_FIELDS` is popped, applied over ``options`` (or the
+    defaults) and collectively warned about once; unrecognised keys are
+    returned untouched for pass-through (e.g. expert Pallas block
+    overrides).  Returns ``(options, remaining_kwargs)``.
+    """
+    taken = {k: legacy.pop(k) for k in list(legacy)
+             if k in _LEGACY_FIELDS}
+    opts = options if options is not None else SearchOptions()
+    if taken:
+        warnings.warn(
+            f"{caller}: keyword(s) {sorted(taken)} are deprecated — pass "
+            f"SearchOptions({', '.join(sorted(_LEGACY_FIELDS[k] + '=...' for k in taken))}) "
+            "via options= instead",
+            DeprecationWarning, stacklevel=3)
+        opts = dataclasses.replace(
+            opts, **{_LEGACY_FIELDS[k]: v for k, v in taken.items()})
+    return opts, legacy

@@ -75,7 +75,10 @@ def linfit_residual(x: jnp.ndarray, n_segments: int) -> jnp.ndarray:
 
 # NumPy twins (sequential op-count engine) ----------------------------------
 
-def linfit_residual_np(x: np.ndarray, n_segments: int) -> np.ndarray:
+def linfit_residual_sq_np(x: np.ndarray, n_segments: int) -> np.ndarray:
+    """Squared residual distance, host dtype-preserving twin of
+    :func:`linfit_residual_sq` — the registry's ``backend="numpy"``
+    dispatch target (``core/representation.linfit_residual_sq``)."""
     n = x.shape[-1]
     if n % n_segments != 0:
         raise ValueError(f"n_segments must divide n: n={n}, N={n_segments}")
@@ -94,4 +97,8 @@ def linfit_residual_np(x: np.ndarray, n_segments: int) -> np.ndarray:
     else:
         sxy = segs @ xc
         per_seg = np.maximum(sum_y2 - L * mean * mean - (sxy * sxy) / sxx, 0.0)
-    return np.sqrt(per_seg.sum(axis=-1))
+    return per_seg.sum(axis=-1)
+
+
+def linfit_residual_np(x: np.ndarray, n_segments: int) -> np.ndarray:
+    return np.sqrt(linfit_residual_sq_np(x, n_segments))

@@ -27,9 +27,11 @@ import dataclasses
 import numpy as np
 
 from . import cost_model as cm
+from . import representation as repr_registry
 from .cost_model import OpCounter
 from .fastsax import FastSAXIndex, QueryRepr, represent_query
-from .sax import mindist_table
+from .options import SearchOptions, resolve_options
+from .representation import DEFAULT_STACK
 
 
 def _scale(cost: dict, k: int) -> dict:
@@ -39,11 +41,34 @@ def _scale(cost: dict, k: int) -> dict:
 def _mindist_sq_np(
     words: np.ndarray, qword: np.ndarray, n: int, alphabet: int
 ) -> np.ndarray:
-    """Squared MINDIST of one query word against (B, N) database words."""
-    N = words.shape[-1]
-    tab = mindist_table(alphabet)
-    cell = tab[words, qword[None, :]]
-    return (n / N) * np.sum(cell * cell, axis=-1)
+    """Squared MINDIST of one query word against (B, N) database words
+    (delegates to the registered ``sax_word`` bound — one expression)."""
+    return repr_registry.get("sax_word").host_bound_sq(
+        words, qword, n=n, N=words.shape[-1], alphabet=alphabet)
+
+
+def _stack_reps(config) -> tuple:
+    """(gap_reps, word_reps) of the index's stack, cascade order."""
+    reps = [repr_registry.get(name) for name in
+            getattr(config, "stack", DEFAULT_STACK)]
+    return ([r for r in reps if r.kind == "gap"],
+            [r for r in reps if r.kind == "word"])
+
+
+def _level_column(level, rep) -> np.ndarray:
+    """The stored column of ``rep`` at one index level."""
+    if rep.canonical_field is not None:
+        return getattr(level, rep.canonical_field)
+    return level.extra[rep.name]
+
+
+def _query_value(qr: QueryRepr, li: int, rep):
+    """The query-side value of ``rep`` at level ``li``."""
+    if rep.canonical_field == "residuals":
+        return qr.residuals[li]
+    if rep.canonical_field == "words":
+        return qr.words[li]
+    return qr.extra[li][rep.name]
 
 
 def _euclidean_np(series: np.ndarray, q: np.ndarray) -> np.ndarray:
@@ -123,11 +148,15 @@ def sax_range_query(
     )
 
 
-def _query_transform_cost_fastsax(n: int, N: int, alphabet: int) -> dict:
-    """Online query cost for one FAST_SAX level: PAA+discretise+residual."""
-    out = _query_transform_cost_sax(n, N, alphabet)
-    for k, v in cm.linfit_residual_cost(n, N).items():
-        out[k] = out.get(k, 0) + v
+def _query_transform_cost_fastsax(n: int, N: int, alphabet: int,
+                                  stack: tuple = DEFAULT_STACK) -> dict:
+    """Online query cost for one FAST_SAX level: the summed query-side
+    transforms of every stack representation (PAA+discretise+residual
+    for the default paper stack)."""
+    out: dict = {}
+    for name in stack:
+        for k, v in repr_registry.get(name).query_cost(n, N, alphabet).items():
+            out[k] = out.get(k, 0) + v
     return out
 
 
@@ -149,6 +178,7 @@ def fastsax_range_query(
     n, alphabet = index.n, index.config.alphabet
     qr = (query if isinstance(query, QueryRepr)
           else represent_query(query, index.config))
+    gap_reps, word_reps = _stack_reps(index.config)
 
     B = index.size
     alive = np.ones(B, dtype=bool)
@@ -163,23 +193,36 @@ def fastsax_range_query(
         levels_visited += 1
         N = level.n_segments
         if lazy_query_levels or li == 0:
-            counter.count(**_query_transform_cost_fastsax(n, N, alphabet))
+            counter.count(**_query_transform_cost_fastsax(
+                n, N, alphabet, index.config.stack))
 
-        alive_idx = np.nonzero(alive)[0]
-        # --- C9 (eq. 9): |d(u,ū) − d(q,q̄)| > ε  (precomputed residuals) ---
-        c9_kill = np.abs(level.residuals[alive_idx] - qr.residuals[li]) > eps
-        counter.count(**_scale(cm.c9_cost(), alive_idx.size))
-        excluded_c9 += int(c9_kill.sum())
-        survivors = alive_idx[~c9_kill]
+        survivors = np.nonzero(alive)[0]
+        # --- gap-kind exclusions: |col(u) − col(q)| > ε.  The canonical
+        # linfit residual is C9 (eq. 9, precomputed residuals). ---
+        for rep in gap_reps:
+            if not survivors.size:
+                break
+            gap = rep.host_gap(_level_column(level, rep)[survivors],
+                               _query_value(qr, li, rep))
+            counter.count(**_scale(rep.exclude_cost(n, N, alphabet),
+                                   survivors.size))
+            kill = gap > eps
+            excluded_c9 += int(kill.sum())
+            survivors = survivors[~kill]
 
-        # --- C10 (eq. 10): MINDIST(q̃,ũ) > ε  only for C9 survivors ---
-        if survivors.size:
-            md_sq = _mindist_sq_np(level.words[survivors], qr.words[li],
-                                   n, alphabet)
-            counter.count(**_scale(cm.mindist_cost(N), survivors.size))
-            c10_kill = md_sq > eps * eps
-            excluded_c10 += int(c10_kill.sum())
-            survivors = survivors[~c10_kill]
+        # --- word-kind exclusions: bound²(ũ,q̃) > ε² only for gap
+        # survivors.  The canonical SAX word is C10 (eq. 10, MINDIST). ---
+        for rep in word_reps:
+            if not survivors.size:
+                break
+            b_sq = rep.host_bound_sq(
+                _level_column(level, rep)[survivors],
+                _query_value(qr, li, rep), n=n, N=N, alphabet=alphabet)
+            counter.count(**_scale(rep.exclude_cost(n, N, alphabet),
+                                   survivors.size))
+            kill = b_sq > eps * eps
+            excluded_c10 += int(kill.sum())
+            survivors = survivors[~kill]
 
         alive[:] = False
         alive[survivors] = True
@@ -198,6 +241,59 @@ def fastsax_range_query(
         excluded_c10=excluded_c10,
         levels_visited=levels_visited,
     )
+
+
+# Rows probed per (query, extra representation) when advising a stack.
+_STACK_PROBE = 256
+
+
+def advise_stack(index: FastSAXIndex,
+                 queries: np.ndarray,
+                 epsilon: float,
+                 probe_rows: int = _STACK_PROBE) -> tuple:
+    """Cost-model probe: which registered extras should this dataset enable?
+
+    For every extra representation in the index's stack, measure — on a
+    deterministic strided row probe of level 0, the first cascade level —
+    the fraction of probe rows the representation's bound *alone* would
+    kill at radius ``epsilon``, averaged over ``queries``; the extra is
+    kept iff :func:`cost_model.level_enable_advised` says the expected
+    exclusion gain (saved Euclidean verifies) beats the test's own
+    per-candidate cost.  Mirrors the ``_C10_PROBE`` mechanism of the
+    adaptive k-NN cascade, lifted to per-dataset level selection.
+
+    Returns the advised stack (always containing the paper backbone) —
+    pass it to a new :class:`~repro.core.fastsax.FastSAXConfig`.
+    """
+    config = index.config
+    if not config.extra_stack:
+        return config.stack
+    queries = np.atleast_2d(np.asarray(queries, dtype=np.float64))
+    n, alphabet = index.n, config.alphabet
+    lv0 = index.levels[0]
+    N = lv0.n_segments
+    B = index.size
+    P = min(int(probe_rows), B)
+    rows = (np.arange(P, dtype=np.int64) * B) // P   # strided, deterministic
+    eps = float(epsilon)
+    qrs = [represent_query(q, config) for q in queries]
+    keep = []
+    for name in config.stack:
+        rep = repr_registry.get(name)
+        if rep.canonical_field is not None:
+            keep.append(name)     # the backbone is never disabled
+            continue
+        col = _level_column(lv0, rep)[rows]
+        kills = 0
+        for qr in qrs:
+            lbs = rep.host_lower_bound(col, _query_value(qr, 0, rep),
+                                       n=n, N=N, alphabet=alphabet)
+            kills += int((lbs > eps).sum())
+        kill_frac = kills / float(P * len(qrs))
+        if cm.level_enable_advised(kill_frac, n,
+                                   rep.exclude_cost(n, N, alphabet)):
+            keep.append(name)
+    return tuple(keep)
 
 
 # ---------------------------------------------------------------------------
@@ -367,8 +463,8 @@ def fastsax_knn_query(
     query: np.ndarray | QueryRepr,
     k: int,
     counter: OpCounter | None = None,
-    seed_factor: int = 2,
-    adaptive_c10: bool = True,
+    options: SearchOptions | None = None,
+    **legacy,
 ) -> KNNResult:
     """FAST_SAX exact k-NN: seeded best-so-far radius + exclusion cascade.
 
@@ -401,9 +497,20 @@ def fastsax_knn_query(
     cells where FAST_SAX lost to plain SAX in BENCH_knn_pr1.json: there
     the coarse level's MINDIST excluded almost nothing yet was charged for
     every survivor.
+
+    Knobs (``seed_factor``, ``adaptive_c10``) live on
+    :class:`~repro.core.options.SearchOptions`; passing them as bare
+    keywords still works through the deprecation shim.
     """
+    opts, rest = resolve_options(options, legacy, "fastsax_knn_query")
+    if rest:
+        raise TypeError(
+            f"fastsax_knn_query: unexpected keyword(s) {sorted(rest)}")
+    seed_factor = opts.seed_factor
+    adaptive_c10 = opts.adaptive_c10
     counter = counter or OpCounter()
     n, alphabet = index.n, index.config.alphabet
+    gap_reps, word_reps = _stack_reps(index.config)
     qr = (query if isinstance(query, QueryRepr)
           else represent_query(query, index.config))
     B = index.size
@@ -412,7 +519,8 @@ def fastsax_knn_query(
 
     # --- Phase 1: seed the best-so-far radius from level-0 gaps ------------
     lv0 = index.levels[0]
-    counter.count(**_query_transform_cost_fastsax(n, lv0.n_segments, alphabet))
+    counter.count(**_query_transform_cost_fastsax(
+        n, lv0.n_segments, alphabet, index.config.stack))
     gaps0 = np.abs(lv0.residuals - qr.residuals[0])
     counter.count(**_scale(cm.residual_gap_cost(), B))
     n_seed = min(B, max(k_eff, int(seed_factor) * k_eff))
@@ -442,28 +550,40 @@ def fastsax_knn_query(
         levels_visited += 1
         N = level.n_segments
         if li > 0:  # level 0's query transform was charged by the seed phase
-            counter.count(**_query_transform_cost_fastsax(n, N, alphabet))
+            counter.count(**_query_transform_cost_fastsax(
+                n, N, alphabet, index.config.stack))
 
-        alive_idx = np.nonzero(alive)[0]
-        if li == 0:
-            # The seed phase already computed (and charged) level-0 gaps;
-            # only the threshold compare is new work here.
-            gap = gaps0[alive_idx]
-            counter.count(cmp=alive_idx.size)
-        else:
-            gap = np.abs(level.residuals[alive_idx] - qr.residuals[li])
-            counter.count(**_scale(cm.c9_cost(), alive_idx.size))
-        lb[alive_idx] = np.maximum(lb[alive_idx], gap)
-        c9_kill = gap > eps
-        excluded_c9 += int(c9_kill.sum())
-        survivors = alive_idx[~c9_kill]
+        survivors = np.nonzero(alive)[0]
+        # --- gap-kind exclusions (canonical: C9, eq. 9) --------------------
+        for rep in gap_reps:
+            if not survivors.size:
+                break
+            if rep.canonical_field == "residuals" and li == 0:
+                # The seed phase already computed (and charged) level-0
+                # gaps; only the threshold compare is new work here.
+                gap = gaps0[survivors]
+                counter.count(cmp=survivors.size)
+            else:
+                gap = rep.host_gap(_level_column(level, rep)[survivors],
+                                   _query_value(qr, li, rep))
+                counter.count(**_scale(rep.exclude_cost(n, N, alphabet),
+                                       survivors.size))
+            lb[survivors] = np.maximum(lb[survivors], gap)
+            kill = gap > eps
+            excluded_c9 += int(kill.sum())
+            survivors = survivors[~kill]
 
-        if survivors.size:
+        # --- word-kind exclusions (canonical: C10, eq. 10) -----------------
+        for rep in word_reps:
+            if not survivors.size:
+                break
+            col = _level_column(level, rep)
+            qv = _query_value(qr, li, rep)
             m = survivors.size
             kill = np.zeros(m, dtype=bool)
             probe_pos = np.arange(m)
             # Only non-final levels are skippable: the finest level's
-            # MINDIST is the tightest lower bound and drives the phase-3
+            # bound is the tightest lower bound and drives the phase-3
             # verify ordering — dropping it trades a small test cost for
             # far more Euclidean verifications (measured; EXPERIMENTS.md
             # §kNN).  A coarse level's bound is superseded by the finest
@@ -471,14 +591,15 @@ def fastsax_knn_query(
             last_level = li == len(index.levels) - 1
             if adaptive_c10 and not last_level and m > _C10_PROBE:
                 # Evenly-spread probe (deterministic) to estimate this
-                # level's MINDIST exclusion rate before paying for it on
-                # every survivor.
+                # level's exclusion rate before paying for it on every
+                # survivor.
                 probe_pos = np.unique(
                     np.linspace(0, m - 1, _C10_PROBE).astype(np.int64))
             probe = survivors[probe_pos]
-            md_p = np.sqrt(_mindist_sq_np(level.words[probe], qr.words[li],
-                                          n, alphabet))
-            counter.count(**_scale(cm.mindist_cost(N), probe.size))
+            md_p = np.sqrt(rep.host_bound_sq(col[probe], qv,
+                                             n=n, N=N, alphabet=alphabet))
+            counter.count(**_scale(rep.exclude_cost(n, N, alphabet),
+                                   probe.size))
             lb[probe] = np.maximum(lb[probe], md_p)
             kill[probe_pos] = md_p > eps
             if probe.size < m:
@@ -487,14 +608,15 @@ def fastsax_knn_query(
                     rest_pos = np.setdiff1d(np.arange(m), probe_pos,
                                             assume_unique=True)
                     rest = survivors[rest_pos]
-                    md_r = np.sqrt(_mindist_sq_np(
-                        level.words[rest], qr.words[li], n, alphabet))
-                    counter.count(**_scale(cm.mindist_cost(N), rest.size))
+                    md_r = np.sqrt(rep.host_bound_sq(
+                        col[rest], qv, n=n, N=N, alphabet=alphabet))
+                    counter.count(**_scale(rep.exclude_cost(n, N, alphabet),
+                                           rest.size))
                     lb[rest] = np.maximum(lb[rest], md_r)
                     kill[rest_pos] = md_r > eps
                 # else: the level's expected exclusion gain is below the
-                # test's cost — the remaining survivors skip MINDIST here
-                # (sound: C10 only removes rows the verify would reject).
+                # test's cost — the remaining survivors skip the bound here
+                # (sound: it only removes rows the verify would reject).
             excluded_c10 += int(kill.sum())
             survivors = survivors[~kill]
 
@@ -626,6 +748,9 @@ def quantized_fastsax_range_query(
     levels_visited = 0
     eps = float(epsilon)
     extra = _dequant_c9_extra(qindex.mode)
+    stack = tuple(getattr(qindex, "stack", DEFAULT_STACK))
+    word_reps = [repr_registry.get(nm) for nm in stack
+                 if repr_registry.get(nm).kind == "word"]
 
     for li, lv in enumerate(qindex.levels):
         if not alive.any():
@@ -633,12 +758,15 @@ def quantized_fastsax_range_query(
         levels_visited += 1
         N = lv.n_segments
         if lazy_query_levels or li == 0:
-            counter.count(**_query_transform_cost_fastsax(n, N, alphabet))
+            counter.count(**_query_transform_cost_fastsax(
+                n, N, alphabet, stack))
 
         alive_idx = np.nonzero(alive)[0]
         res = lv.dequant_residuals()
         err = lv.row_err()
         # --- widened C9: |r̂(u) − r(q)| > ε + e_blk(u) ---------------------
+        # Gap-kind columns beyond the canonical residual are rejected at
+        # quantize time (index/quantized.py), so C9 stays canonical here.
         gap = np.abs(res[alive_idx] - qr.residuals[li])
         c9_kill = gap > eps + err[alive_idx]
         counter.count(**_scale(cm.c9_cost(), alive_idx.size))
@@ -646,12 +774,19 @@ def quantized_fastsax_range_query(
         excluded_c9 += int(c9_kill.sum())
         survivors = alive_idx[~c9_kill]
 
-        # --- C10, unwidened (int8 symbols are lossless) --------------------
-        if survivors.size:
-            md_sq = _mindist_sq_np(lv.words[survivors].astype(np.int64),
-                                   qr.words[li], n, alphabet)
-            counter.count(**_scale(cm.mindist_cost(N), survivors.size))
-            c10_kill = md_sq > eps * eps
+        # --- word-kind bounds, unwidened (int8 symbols are lossless) -------
+        for rep in word_reps:
+            if not survivors.size:
+                break
+            col = (lv.words if rep.canonical_field == "words"
+                   else lv.extra[rep.name])
+            qv = (qr.words[li] if rep.canonical_field == "words"
+                  else qr.extra[li][rep.name])
+            b_sq = rep.host_bound_sq(col[survivors].astype(np.int64), qv,
+                                     n=n, N=N, alphabet=alphabet)
+            counter.count(**_scale(rep.exclude_cost(n, N, alphabet),
+                                   survivors.size))
+            c10_kill = b_sq > eps * eps
             excluded_c10 += int(c10_kill.sum())
             survivors = survivors[~c10_kill]
 

@@ -51,9 +51,12 @@ import numpy as np
 from ..kernels import fused_query as _fused
 from ..kernels import ops as kernel_ops
 from . import engine as _engine
+from . import representation as repr_registry
 from .engine import DeviceIndex, QueryReprDev, represent_queries
 from .fastsax import FastSAXConfig, FastSAXIndex, LevelData
+from .options import SearchOptions, resolve_options
 from .paa import znormalize_np
+from .representation import DEFAULT_STACK
 from .sax import discretize_np
 
 # Same floor as paa.znormalize / znormalize_np: a (near-)constant window
@@ -96,6 +99,22 @@ def _window_moments(c0, c1, starts, window: int):
     return mu, np.maximum(sd, ZNORM_EPS)
 
 
+@dataclasses.dataclass
+class WindowStats:
+    """Amortised per-window segment statistics of one level, handed to a
+    representation's ``window_symbolize_np`` hook (``core/representation``)
+    so extra stack columns are computed from the same O(N)-per-window
+    cumsum lookups as the canonical ones.  ``sxy`` is None when L == 1
+    (a one-sample segment has no slope)."""
+
+    sum_y: np.ndarray          # (S, W_s, N) raw segment sums
+    sxy: np.ndarray | None     # (S, W_s, N) raw Σ xc·y per segment
+    L: int                     # samples per segment
+    sxx: float                 # Σ xc² of the centred abscissa (0 if L == 1)
+    sd: np.ndarray             # (S, W_s) guarded per-window std
+    alphabet: int
+
+
 def _window_level(c0, c1, c2, starts, window, mu, sd, N, alphabet):
     """One representation level for every window of every stream, O(W·N).
 
@@ -105,7 +124,8 @@ def _window_level(c0, c1, c2, starts, window, mu, sd, N, alphabet):
     piecewise-linear class is closed under affine maps, and a uniform
     scale multiplies every pointwise error by 1/σ — so the optimal raw
     fit maps onto the optimal z fit with ‖resid_z‖ = ‖resid_raw‖/σ.
-    Returns (words (S, W_s, N) i32, residuals (S, W_s) f64).
+    Returns (words (S, W_s, N) i32, residuals (S, W_s) f64,
+    :class:`WindowStats` for the extra-representation hooks).
     """
     L = window // N
     # Segment boundaries of every window: (W_s, N+1) absolute indices.
@@ -116,7 +136,9 @@ def _window_level(c0, c1, c2, starts, window, mu, sd, N, alphabet):
     paa_z = (mean - mu[..., None]) / sd[..., None]
     words = discretize_np(paa_z, alphabet)
     if L == 1:                                   # exact fit per sample
-        return words, np.zeros(mu.shape)
+        ws = WindowStats(sum_y=sum_y, sxy=None, L=1, sxx=0.0, sd=sd,
+                         alphabet=alphabet)
+        return words, np.zeros(mu.shape), ws
     # Residual: with centred abscissa xc = t − b − (L−1)/2 per segment,
     # Σxc·y = (Σ t·y) − (b + (L−1)/2)·Σy — two more cumsum lookups.
     g1 = c1[:, bounds]
@@ -129,7 +151,9 @@ def _window_level(c0, c1, c2, starts, window, mu, sd, N, alphabet):
     sxy = t_sum - off[None, :, :] * sum_y
     per_seg = np.maximum(sum_y2 - L * mean * mean - (sxy * sxy) / sxx, 0.0)
     resid_raw = np.sqrt(per_seg.sum(axis=-1))
-    return words, resid_raw / sd
+    ws = WindowStats(sum_y=sum_y, sxy=sxy, L=L, sxx=sxx, sd=sd,
+                     alphabet=alphabet)
+    return words, resid_raw / sd, ws
 
 
 @dataclasses.dataclass
@@ -198,13 +222,28 @@ def build_subseq_index(
     starts = np.arange(W_s) * stride
     c0, c1, c2 = _cumsums(streams)
     mu, sd = _window_moments(c0, c1, starts, window)
+    extras = config.extra_stack
+    for name in extras:
+        if getattr(repr_registry.get(name), "window_symbolize_np",
+                   None) is None:
+            raise NotImplementedError(
+                f"representation {name!r} defines no window_symbolize_np "
+                "hook — it cannot be amortised over sliding windows; drop "
+                "it from the stack for the subsequence workload")
     levels = []
     for N in config.levels:
-        words, resid = _window_level(c0, c1, c2, starts, window, mu, sd, N,
-                                     config.alphabet)
+        words, resid, ws = _window_level(c0, c1, c2, starts, window, mu, sd,
+                                         N, config.alphabet)
+        extra = {}
+        for name in extras:
+            rep = repr_registry.get(name)
+            col = rep.window_symbolize_np(ws)
+            extra[name] = (col.reshape(-1, col.shape[-1])
+                           if rep.column.per_segment else col.reshape(-1))
         levels.append(LevelData(n_segments=N,
                                 words=words.reshape(-1, N),
-                                residuals=resid.reshape(-1)))
+                                residuals=resid.reshape(-1),
+                                extra=extra))
     return SubseqHostIndex(config=config, window=window, stride=stride,
                            streams=streams, mu=mu.reshape(-1),
                            sd=sd.reshape(-1), levels=levels)
@@ -414,6 +453,13 @@ def subseq_device_index(hidx: SubseqHostIndex,
     mu = jnp.asarray(hidx.mu, dtype=dtype)
     sd = jnp.asarray(hidx.sd, dtype=dtype)
     series = device_windows(streams, hidx.window, hidx.stride, mu, sd)
+    stack = tuple(getattr(hidx.config, "stack", DEFAULT_STACK))
+    extra = tuple(
+        {name: jnp.asarray(arr,
+                           jnp.int32 if repr_registry.get(name).kind == "word"
+                           else jnp.float32)
+         for name, arr in lv.extra.items()}
+        for lv in hidx.levels) if repr_registry.extra_names(stack) else ()
     index = DeviceIndex(
         series=series,
         norms_sq=jnp.sum(series * series, axis=-1),
@@ -421,8 +467,10 @@ def subseq_device_index(hidx: SubseqHostIndex,
                     for lv in hidx.levels),
         residuals=tuple(jnp.asarray(lv.residuals, dtype=dtype)
                         for lv in hidx.levels),
+        extra=extra,
         levels=tuple(lv.n_segments for lv in hidx.levels),
         alphabet=hidx.config.alphabet,
+        stack=stack,
     )
     return SubseqDeviceIndex(index=index, streams=streams, mu=mu, sd=sd,
                              window=hidx.window, stride=hidx.stride)
@@ -440,7 +488,9 @@ def represent_subseq_queries(sidx: SubseqDeviceIndex, queries,
         raise ValueError(f"subseq queries must be length window="
                          f"{sidx.window}, got {q.shape[-1]}")
     return represent_queries(q, sidx.levels, sidx.alphabet,
-                             normalize=normalize)
+                             normalize=normalize,
+                             stack=tuple(getattr(sidx.index, "stack",
+                                                 DEFAULT_STACK)))
 
 
 # ---------------------------------------------------------------------------
@@ -493,15 +543,23 @@ def subseq_range_query_pallas(
 
 def subseq_range_query(
     sidx: SubseqDeviceIndex, qr: QueryReprDev, epsilon,
-    backend: str = "auto", **pallas_kw,
+    options: SearchOptions | None = None, **legacy,
 ):
     """Every window within ε of each query: ``(answer_mask (Q, W),
     d2 (Q, W))`` with +inf outside the answer set — the whole-series
     ``engine.range_query`` convention, window ids as row positions
     (map through :meth:`SubseqDeviceIndex.window_meta`).  Range answers
     carry no exclusion zone: the classical definition reports every
-    qualifying window."""
-    if _engine.resolve_backend(backend) == "pallas":
+    qualifying window.  Knobs ride in ``options``
+    (:class:`SearchOptions`); the old ``backend=`` kwarg shims through
+    with a :class:`DeprecationWarning`; unrecognised kwargs pass to the
+    Pallas kernel.  Extended representation stacks demote Pallas to XLA
+    (the streaming kernel hard-codes the canonical pair)."""
+    options = _engine._coerce_options(options, legacy)
+    opts, pallas_kw = resolve_options(options, legacy, "subseq_range_query")
+    if _engine.stack_backend(sidx.index,
+                             _engine.resolve_backend(opts.backend)) \
+            == "pallas":
         return subseq_range_query_pallas(sidx, qr, epsilon, **pallas_kw)
     return _engine.range_query(sidx.index, qr, epsilon)
 
@@ -539,12 +597,25 @@ def _subseq_knn_pallas(sidx: SubseqDeviceIndex, qr: QueryReprDev, k: int,
     return nn_idx, nn_d2, exact
 
 
+def _subseq_knn_fetch(sidx, qr, kf, opts,
+                      block_q, block_w, interpret):
+    """Shared fetch for the k-NN entrypoints: the whole-series exact
+    k-NN path at the provably-sufficient fetch count, with extended
+    stacks demoting Pallas to XLA."""
+    be = _engine.stack_backend(sidx.index,
+                               _engine.resolve_knn_backend(opts.backend, kf))
+    if be == "pallas":
+        return _subseq_knn_pallas(sidx, qr, kf, opts.n_iters,
+                                  block_q, block_w, interpret)
+    return _engine.knn_query_auto(
+        sidx.index, qr, kf, capacity=opts.capacity, n_iters=opts.n_iters)
+
+
 def subseq_knn_query(
     sidx: SubseqDeviceIndex, qr: QueryReprDev, k: int,
-    excl: int | None = None, backend: str = "auto",
-    capacity: int | None = None, n_iters: int = 2,
+    excl: int | None = None, options: SearchOptions | None = None,
     block_q: int | None = None, block_w: int | None = None,
-    interpret: bool | None = None,
+    interpret: bool | None = None, **legacy,
 ):
     """Exact k nearest *non-trivial* windows per query.
 
@@ -564,15 +635,15 @@ def subseq_knn_query(
     exist.  ``exact`` is the underlying fetch's exactness certificate:
     the greedy is exact whenever its candidate list is.
     """
+    options = _engine._coerce_options(options, legacy)
+    opts, rest = resolve_options(options, legacy, "subseq_knn_query")
+    if rest:
+        raise TypeError(f"subseq_knn_query: unexpected kwargs {sorted(rest)}")
     W = sidx.n_windows
     excl = (sidx.window // 2) if excl is None else int(excl)
     kf = knn_fetch_count(k, excl, sidx.stride, W)
-    if _engine.resolve_knn_backend(backend, kf) == "pallas":
-        idx, d2, exact = _subseq_knn_pallas(sidx, qr, kf, n_iters,
-                                            block_q, block_w, interpret)
-    else:
-        idx, d2, exact = _engine.knn_query_auto(
-            sidx.index, qr, kf, capacity=capacity, n_iters=n_iters)
+    idx, d2, exact = _subseq_knn_fetch(sidx, qr, kf, opts,
+                                       block_q, block_w, interpret)
     W_s = sidx.windows_per_stream
     wid_all = np.arange(W)
     stream_of = wid_all // W_s
@@ -584,14 +655,17 @@ def subseq_knn_query(
 
 def subseq_range_query_traced(
     sidx: SubseqDeviceIndex, qr: QueryReprDev, epsilon,
-    backend: str = "auto", **pallas_kw,
+    options: SearchOptions | None = None, **legacy,
 ):
     """:func:`subseq_range_query` + cascade telemetry: ``(answer_mask,
     d2, trace)``.  Windows are rows, so the trace is the whole-series
     ``engine.cascade_trace`` over the windows-as-rows index — its
     counters bit-agree with the host engine over the materialised-window
     host index at the same ε (tests/test_obs.py)."""
-    ans, d2 = subseq_range_query(sidx, qr, epsilon, backend=backend,
+    options = _engine._coerce_options(options, legacy)
+    opts, pallas_kw = resolve_options(options, legacy,
+                                      "subseq_range_query_traced")
+    ans, d2 = subseq_range_query(sidx, qr, epsilon, options=opts,
                                  **pallas_kw)
     trace = _engine.cascade_trace(sidx.index, qr, epsilon)
     answers = jnp.sum(ans, axis=-1, dtype=jnp.int32)
@@ -600,10 +674,9 @@ def subseq_range_query_traced(
 
 def subseq_knn_query_traced(
     sidx: SubseqDeviceIndex, qr: QueryReprDev, k: int,
-    excl: int | None = None, backend: str = "auto",
-    capacity: int | None = None, n_iters: int = 2,
+    excl: int | None = None, options: SearchOptions | None = None,
     block_q: int | None = None, block_w: int | None = None,
-    interpret: bool | None = None,
+    interpret: bool | None = None, **legacy,
 ):
     """:func:`subseq_knn_query` + cascade telemetry at the FETCH radius:
     ``(sel_idx, sel_d2, exact, trace)``.
@@ -615,15 +688,16 @@ def subseq_knn_query_traced(
     touches no further device memory).  ``answers`` reports the
     post-suppression answer count per query.
     """
+    options = _engine._coerce_options(options, legacy)
+    opts, rest = resolve_options(options, legacy, "subseq_knn_query_traced")
+    if rest:
+        raise TypeError(
+            f"subseq_knn_query_traced: unexpected kwargs {sorted(rest)}")
     W = sidx.n_windows
     excl = (sidx.window // 2) if excl is None else int(excl)
     kf = knn_fetch_count(k, excl, sidx.stride, W)
-    if _engine.resolve_knn_backend(backend, kf) == "pallas":
-        idx, d2, exact = _subseq_knn_pallas(sidx, qr, kf, n_iters,
-                                            block_q, block_w, interpret)
-    else:
-        idx, d2, exact = _engine.knn_query_auto(
-            sidx.index, qr, kf, capacity=capacity, n_iters=n_iters)
+    idx, d2, exact = _subseq_knn_fetch(sidx, qr, kf, opts,
+                                       block_q, block_w, interpret)
     trace = _engine.knn_radius_trace(sidx.index, qr, d2,
                                      min(int(kf), int(d2.shape[-1])))
     W_s = sidx.windows_per_stream

@@ -81,6 +81,48 @@ def make_wafer_like(
     return znormalize_np(x) if normalize else x
 
 
+def make_trending(
+    n_series: int = 4096,
+    length: int = DEFAULT_LENGTH,
+    n_prototypes: int = 16,
+    n_pieces: int = 8,
+    slope_scale: float = 2.5,
+    noise: float = 0.08,
+    seed: int = 7,
+    normalize: bool = True,
+) -> np.ndarray:
+    """Trending database: (n_series, length) float64.
+
+    Series share a small set of smooth low-frequency prototypes (so their
+    PAA *means* cluster tightly and the SAX word is weakly selective) but
+    carry per-series piecewise-linear trends — ``n_pieces`` independent
+    within-piece slopes each.  Segment means barely see a within-piece
+    slope; the per-segment least-squares slope sees exactly it.  This is
+    the regime the ``trend_slope`` representation is built for
+    (EXPERIMENTS.md §Representations); the pruning comparison in
+    ``benchmarks/representations.py`` runs on this generator.
+    """
+    rng = np.random.default_rng(seed)
+    t = np.linspace(0.0, 1.0, length)
+
+    protos = np.empty((n_prototypes, length))
+    for k in range(n_prototypes):
+        protos[k] = (rng.uniform(0.5, 1.5)
+                     * np.sin(2 * np.pi * rng.uniform(0.5, 1.5) * t
+                              + rng.uniform(0, 2 * np.pi)))
+
+    assign = rng.integers(0, n_prototypes, size=n_series)
+    # Per-series piecewise-linear trend: continuous, with independent
+    # slopes on each of n_pieces equal pieces.
+    piece_slopes = slope_scale * rng.standard_normal((n_series, n_pieces))
+    steps = np.repeat(piece_slopes, length // n_pieces, axis=-1) / length
+    trend = np.cumsum(steps, axis=-1)
+    trend -= trend.mean(axis=-1, keepdims=True)
+    x = (protos[assign] + trend
+         + noise * rng.standard_normal((n_series, length)))
+    return znormalize_np(x) if normalize else x
+
+
 def make_queries(
     database: np.ndarray,
     n_queries: int,

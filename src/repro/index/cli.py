@@ -42,8 +42,9 @@ def _parse_levels(s: str) -> tuple:
 
 
 def cmd_build(args) -> None:
+    stack = tuple(p.strip() for p in args.stack.split(",") if p.strip())
     cfg = FastSAXConfig(n_segments=_parse_levels(args.levels),
-                        alphabet=args.alphabet)
+                        alphabet=args.alphabet, stack=stack)
     rows = _rows(args)
     t0 = time.perf_counter()
     mi = MutableIndex.create(args.dir, rows, cfg,
@@ -155,6 +156,9 @@ def main(argv=None) -> None:
     p.add_argument("--levels", default="8,16",
                    help="comma-separated segment counts, coarse→fine")
     p.add_argument("--alphabet", type=int, default=10)
+    p.add_argument("--stack", default="linfit_residual,sax_word",
+                   help="comma-separated registered representation names "
+                        "(core/representation registry, DESIGN.md §11)")
     p.add_argument("--quantization", default="none",
                    choices=("none", "bf16", "int8"),
                    help="quantized resident tier written with every "

@@ -195,13 +195,24 @@ class MutableIndex:
         return names
 
     def info(self) -> dict:
+        cfg = self.config
         return {"root": str(self.root), "gen": self._epoch["gen"],
                 "base": self._epoch["base"],
                 "n_deltas": len(self._epoch["deltas"]),
                 "rows": self.n_rows, "live": self.n_live,
                 "tombstoned": int(self._tomb.sum()),
                 "next_id": self._epoch["next_id"],
-                "config": self._epoch["config"]}
+                "config": self._epoch["config"],
+                # The cascade's level stack, spelled out per level: which
+                # registered representations screen, at which segment
+                # counts, and which quantization tier the segments carry.
+                "stack": {
+                    "representations": list(cfg.stack),
+                    "levels": [{"n_segments": int(N),
+                                "representations": list(cfg.stack)}
+                               for N in cfg.levels],
+                    "quantization": self.quantization,
+                }}
 
     # --- refresh hook (the serve layer's live-ingest signal) ----------------
 
@@ -296,11 +307,11 @@ class MutableIndex:
     def _concat_rows(self):
         """Concatenate every segment's precomputed per-row arrays, in
         physical (= id) order: ``(series, words_per_level,
-        resid_per_level)``.  The one place that knows the segment layout —
-        compaction and both search views build on it."""
+        resid_per_level, extra_per_level)``.  The one place that knows the
+        segment layout — compaction and both search views build on it."""
         series = np.concatenate(
             [np.asarray(idx.series) for _, idx, _ in self._segments])
-        words, resid = [], []
+        words, resid, extra = [], [], []
         for li in range(len(self.config.levels)):
             words.append(np.concatenate(
                 [np.asarray(idx.levels[li].words)
@@ -308,16 +319,23 @@ class MutableIndex:
             resid.append(np.concatenate(
                 [np.asarray(idx.levels[li].residuals)
                  for _, idx, _ in self._segments]))
-        return series, words, resid
+            extra.append({
+                name: np.concatenate(
+                    [np.asarray(idx.levels[li].extra[name])
+                     for _, idx, _ in self._segments])
+                for name in self.config.extra_stack})
+        return series, words, resid, extra
 
     def _assemble(self, keep) -> FastSAXIndex:
         """A FastSAXIndex over ``keep``-selected physical rows."""
         cfg = self.config
-        series, words, resid = self._concat_rows()
+        series, words, resid, extra = self._concat_rows()
         return FastSAXIndex(
             config=cfg, series=series[keep],
             levels=[LevelData(n_segments=N, words=words[li][keep],
-                              residuals=resid[li][keep])
+                              residuals=resid[li][keep],
+                              extra={name: col[keep]
+                                     for name, col in extra[li].items()})
                     for li, N in enumerate(cfg.levels)])
 
     def compact(self, gc: bool = True) -> dict:

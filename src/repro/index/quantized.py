@@ -60,6 +60,9 @@ try:                                    # ml_dtypes ships with jax
 except ImportError:                     # pragma: no cover - jax guarantees it
     _BF16 = None
 
+from ..core import representation as repr_registry
+from ..core.representation import DEFAULT_STACK
+
 #: Rows per int8 residual scale block.  Divides every fused-kernel
 #: ``block_b`` candidate (kernels/ops.FUSED_BLOCK_B), so a kernel block
 #: always covers whole scale blocks.
@@ -245,6 +248,9 @@ class QuantizedLevel:
     scale: Optional[np.ndarray]    # (nb,) f32 (int8 only)
     zero: Optional[np.ndarray]     # (nb,) f32 (int8 only)
     err: np.ndarray            # (nb,) f32 — per-block |r̂ − r| bound
+    #: Extra word-kind stack columns {name: (B, N) int8} — losslessly
+    #: narrowed like ``words``, so their bounds need no widening.
+    extra: dict = dataclasses.field(default_factory=dict)
 
     def dequant_residuals(self) -> np.ndarray:
         if self.residuals.dtype == np.uint16:
@@ -275,6 +281,7 @@ class QuantizedHostIndex:
     series_err: np.ndarray     # (B,) f32 — per-row ‖u − û‖₂ bound
     norms_sq: np.ndarray       # (B,) f32 — ‖û‖² of dequantized rows
     levels: Tuple[QuantizedLevel, ...]
+    stack: Tuple[str, ...] = DEFAULT_STACK
 
     @property
     def size(self) -> int:
@@ -297,6 +304,8 @@ class QuantizedHostIndex:
             total += lv.words.nbytes + lv.residuals.nbytes + lv.err.nbytes
             if lv.scale is not None:
                 total += lv.scale.nbytes + lv.zero.nbytes
+            for col in lv.extra.values():
+                total += col.nbytes
         return total
 
 
@@ -316,6 +325,14 @@ def quantize_host_index(index, mode: str) -> QuantizedHostIndex:
     if index.config.alphabet > 126:
         raise QuantizationError(
             f"alphabet {index.config.alphabet} exceeds int8 symbol range")
+    stack = tuple(getattr(index.config, "stack", DEFAULT_STACK))
+    for name in repr_registry.extra_names(stack):
+        if repr_registry.get(name).kind != "word":
+            raise QuantizationError(
+                f"representation {name!r} is gap-kind — its float gap "
+                f"column has no lossless narrow form and widened affine "
+                f"bounds for it are not implemented; quantize the "
+                f"canonical stack or a word-kind extension instead")
     s_codes, s_scale, s_zero, s_err, norms = quantize_series(
         np.asarray(index.series, np.float64), mode)
     qlevels = []
@@ -324,11 +341,14 @@ def quantize_host_index(index, mode: str) -> QuantizedHostIndex:
             np.asarray(lv.residuals, np.float64), mode)
         qlevels.append(QuantizedLevel(
             n_segments=lv.n_segments, words=narrow_words(lv.words),
-            residuals=r_codes, scale=r_scale, zero=r_zero, err=r_err))
+            residuals=r_codes, scale=r_scale, zero=r_zero, err=r_err,
+            extra={name: narrow_words(col)
+                   for name, col in getattr(lv, "extra", {}).items()}))
     return QuantizedHostIndex(
         mode=mode, n=index.series.shape[1], alphabet=index.config.alphabet,
         series=s_codes, series_scale=s_scale, series_zero=s_zero,
-        series_err=s_err, norms_sq=norms, levels=tuple(qlevels))
+        series_err=s_err, norms_sq=norms, levels=tuple(qlevels),
+        stack=stack)
 
 
 # ---------------------------------------------------------------------------
@@ -350,6 +370,9 @@ def quant_arrays(q: QuantizedHostIndex) -> dict:
         if lv.scale is not None:
             arrays[f"qresid_scale_N{N}"] = lv.scale
             arrays[f"qresid_zero_N{N}"] = lv.zero
+        for name, col in lv.extra.items():
+            prefix = repr_registry.get(name).column.prefix
+            arrays[f"q{prefix}_N{N}"] = col
     return arrays
 
 
@@ -362,13 +385,16 @@ def quant_meta(q: QuantizedHostIndex, source_sha: dict) -> dict:
 
 
 def quant_from_arrays(mode: str, n: int, alphabet: int,
-                      levels: Sequence[int], get) -> QuantizedHostIndex:
+                      levels: Sequence[int], get,
+                      stack: Tuple[str, ...] = DEFAULT_STACK,
+                      ) -> QuantizedHostIndex:
     """Rebuild a :class:`QuantizedHostIndex` from store columns.
 
     ``get(name)`` returns the named array (mmap or in-memory).
     """
     check_mode(mode)
     int8 = mode == "int8"
+    extras = tuple(repr_registry.extra_names(stack))
     qlevels = []
     for N in levels:
         qlevels.append(QuantizedLevel(
@@ -376,11 +402,14 @@ def quant_from_arrays(mode: str, n: int, alphabet: int,
             residuals=get(f"qresid_N{N}"),
             scale=get(f"qresid_scale_N{N}") if int8 else None,
             zero=get(f"qresid_zero_N{N}") if int8 else None,
-            err=get(f"qresid_err_N{N}")))
+            err=get(f"qresid_err_N{N}"),
+            extra={name:
+                   get(f"q{repr_registry.get(name).column.prefix}_N{N}")
+                   for name in extras}))
     return QuantizedHostIndex(
         mode=mode, n=int(n), alphabet=int(alphabet),
         series=get("qseries"),
         series_scale=get("qseries_scale") if int8 else None,
         series_zero=get("qseries_zero") if int8 else None,
         series_err=get("qseries_err"), norms_sq=get("qnorms"),
-        levels=tuple(qlevels))
+        levels=tuple(qlevels), stack=tuple(stack))

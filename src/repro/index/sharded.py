@@ -27,17 +27,42 @@ import pathlib
 import numpy as np
 
 from . import store
+from ..core import representation as repr_registry
+from ..core.representation import DEFAULT_STACK
 
 MANIFEST = store.MANIFEST
 _KIND = "fastsax-index-sharded"
 
 
+def _index_stack(index) -> tuple:
+    return tuple(getattr(index, "stack", DEFAULT_STACK))
+
+
+def _check_stack(manifest: dict, path) -> tuple:
+    """Loud failure when a manifest's level stack names a representation
+    this process has not registered (DESIGN.md §11)."""
+    stack = tuple(manifest.get("stack", DEFAULT_STACK))
+    known = set(repr_registry.registered_names())
+    unknown = [name for name in stack if name not in known]
+    if unknown:
+        raise IOError(
+            f"{path}: manifest level stack {list(stack)} names "
+            f"unregistered representation(s) {unknown} — this reader "
+            f"knows {sorted(known)}")
+    return stack
+
+
 def _device_leaves(index) -> dict:
     """DeviceIndex -> {leaf name: jax.Array} (per-level layout of store.py)."""
     leaves = {"series": index.series, "norms_sq": index.norms_sq}
-    for N, w, r in zip(index.levels, index.words, index.residuals):
+    extra = getattr(index, "extra", ())
+    for li, (N, w, r) in enumerate(zip(index.levels, index.words,
+                                       index.residuals)):
         leaves[f"words_N{N}"] = w
         leaves[f"resid_N{N}"] = r
+        for name, col in (extra[li] if extra else {}).items():
+            prefix = repr_registry.get(name).column.prefix
+            leaves[f"{prefix}_N{N}"] = col
     return leaves
 
 
@@ -90,6 +115,7 @@ def store_sharded(
                 "alphabet": int(index.alphabet), "size": int(B),
                 "n": int(index.series.shape[-1]),
                 "n_valid": int(B if n_valid is None else n_valid),
+                "stack": list(_index_stack(index)),
                 "extra": extra_meta or {}}
     (tmp / MANIFEST).write_text(json.dumps(manifest, indent=1))
     return store.commit_dir(tmp, path)
@@ -148,6 +174,15 @@ def load_sharded(
         return jax.make_array_from_single_device_arrays(
             shape, NamedSharding(mesh, spec), parts)
 
+    stack = _check_stack(manifest, path)
+    extra_names = repr_registry.extra_names(stack)
+    extra = tuple(
+        {name: leaf(
+            f"{repr_registry.get(name).column.prefix}_N{N}",
+            P(axis, None) if repr_registry.get(name).column.per_segment
+            else P(axis))
+         for name in extra_names}
+        for N in levels) if extra_names else ()
     index = DeviceIndex(
         series=leaf("series", P(axis, None)),
         norms_sq=leaf("norms_sq", P(axis)),
@@ -155,6 +190,8 @@ def load_sharded(
         residuals=tuple(leaf(f"resid_N{N}", P(axis)) for N in levels),
         levels=levels,
         alphabet=int(manifest["alphabet"]),
+        extra=extra,
+        stack=stack,
     )
     return index, int(manifest["n_valid"])
 
@@ -191,6 +228,7 @@ def _tiered_leaves(qdev) -> dict:
     if int8:
         leaves["qseries_scale"] = flat(qdev.series_scale)
         leaves["qseries_zero"] = flat(qdev.series_zero)
+    qextra = getattr(qdev, "extra", ())
     for li, N in enumerate(qdev.levels):
         leaves[f"qwords_N{N}"] = np.asarray(qdev.words[li])
         leaves[f"qresid_N{N}"] = codes(qdev.residuals[li])
@@ -198,6 +236,9 @@ def _tiered_leaves(qdev) -> dict:
         if int8:
             leaves[f"qresid_scale_N{N}"] = flat(qdev.resid_scale[li])
             leaves[f"qresid_zero_N{N}"] = flat(qdev.resid_zero[li])
+        for name, col in (qextra[li] if qextra else {}).items():
+            prefix = repr_registry.get(name).column.prefix
+            leaves[f"q{prefix}_N{N}"] = np.asarray(col)
     return leaves
 
 
@@ -251,6 +292,7 @@ def store_sharded_quantized(
                 "alphabet": int(qdev.alphabet), "size": B,
                 "n": int(raw.shape[-1]), "quantization": qdev.mode,
                 "n_valid": int(B if n_valid is None else n_valid),
+                "stack": list(_index_stack(qdev)),
                 "extra": extra_meta or {}}
     (tmp / MANIFEST).write_text(json.dumps(manifest, indent=1))
     return store.commit_dir(tmp, path)
@@ -291,7 +333,8 @@ def load_sharded_quantized(
         return parts[0] if P_sh == 1 else np.concatenate(parts)
 
     qhost = _q.quant_from_arrays(mode, int(manifest["n"]),
-                                 int(manifest["alphabet"]), levels, get)
+                                 int(manifest["alphabet"]), levels, get,
+                                 stack=_check_stack(manifest, path))
     raws = [store.read_array(d, "series", mmap=mmap, verify=verify)
             for d in shard_dirs]
     raw = raws[0] if P_sh == 1 else np.concatenate(

@@ -33,7 +33,9 @@ import shutil
 
 import numpy as np
 
+from ..core import representation as repr_registry
 from ..core.fastsax import FastSAXConfig, FastSAXIndex, LevelData
+from ..core.representation import DEFAULT_STACK
 
 FORMAT_VERSION = 1
 MANIFEST = "manifest.json"
@@ -172,13 +174,26 @@ def verify_store(path: str | os.PathLike) -> dict:
 def _config_to_json(config: FastSAXConfig) -> dict:
     return {"n_segments": list(config.n_segments),
             "alphabet": int(config.alphabet),
-            "level_order": config.level_order}
+            "level_order": config.level_order,
+            "stack": list(getattr(config, "stack", DEFAULT_STACK))}
 
 
-def _config_from_json(d: dict) -> FastSAXConfig:
+def _config_from_json(d: dict, where: str = "store") -> FastSAXConfig:
+    # Manifests written before the registry carry no "stack" key — those
+    # stores are by construction canonical two-level cascades.
+    stack = tuple(d.get("stack", DEFAULT_STACK))
+    known = set(repr_registry.registered_names())
+    unknown = [name for name in stack if name not in known]
+    if unknown:
+        raise IOError(
+            f"{where}: manifest level stack {list(stack)} names "
+            f"unregistered representation(s) {unknown} — this reader "
+            f"knows {sorted(known)}; register the representation before "
+            f"loading (DESIGN.md §11)")
     return FastSAXConfig(n_segments=tuple(int(N) for N in d["n_segments"]),
                          alphabet=int(d["alphabet"]),
-                         level_order=d["level_order"])
+                         level_order=d["level_order"],
+                         stack=stack)
 
 
 def index_arrays(index: FastSAXIndex) -> dict:
@@ -193,6 +208,9 @@ def index_arrays(index: FastSAXIndex) -> dict:
     for lv in index.levels:
         arrays[f"words_N{lv.n_segments}"] = lv.words
         arrays[f"resid_N{lv.n_segments}"] = lv.residuals
+        for name, col in getattr(lv, "extra", {}).items():
+            prefix = repr_registry.get(name).column.prefix
+            arrays[f"{prefix}_N{lv.n_segments}"] = col
     return arrays
 
 
@@ -266,7 +284,7 @@ def load_index(
     if manifest["format"] > FORMAT_VERSION:
         raise IOError(f"{path}: format {manifest['format']} is newer than "
                       f"this reader ({FORMAT_VERSION})")
-    config = _config_from_json(manifest["config"])
+    config = _config_from_json(manifest["config"], where=str(path))
     declared = manifest.get("dtypes", {})
     series = read_array(path, "series", manifest, mmap=mmap, verify=verify)
     _check_column_dtype(path, "series", "series", str(series.dtype),
@@ -281,8 +299,20 @@ def load_index(
                             declared.get("words"))
         _check_column_dtype(path, f"resid_N{N}", "resid",
                             str(residuals.dtype), declared.get("resid"))
+        extra = {}
+        for name in config.extra_stack:
+            rep = repr_registry.get(name)
+            col_name = f"{rep.column.prefix}_N{N}"
+            col = read_array(path, col_name, manifest, mmap=mmap,
+                             verify=verify)
+            if str(col.dtype) not in rep.column.dtypes:
+                raise StoreDtypeError(
+                    f"{path}/{col_name}: stored dtype {col.dtype} is not a "
+                    f"valid {name!r} column dtype "
+                    f"(expected one of {rep.column.dtypes})")
+            extra[name] = col
         levels.append(LevelData(n_segments=N, words=words,
-                                residuals=residuals))
+                                residuals=residuals, extra=extra))
     return FastSAXIndex(config=config, series=series, levels=levels)
 
 
@@ -357,9 +387,10 @@ def load_quantized(
                 f"violates the {stored_mode} contract ({want})")
         return a
 
-    config = _config_from_json(manifest["config"])
+    config = _config_from_json(manifest["config"], where=str(path))
     return _q.quant_from_arrays(stored_mode, manifest["n"], config.alphabet,
-                                config.levels, get)
+                                config.levels, get,
+                                stack=tuple(config.stack))
 
 
 def store_info(path: str | os.PathLike) -> dict:
@@ -373,8 +404,11 @@ def store_info(path: str | os.PathLike) -> dict:
         total += nbytes
         arrays[name] = {"shape": entry["shape"], "dtype": entry["dtype"],
                         "bytes": nbytes}
+    config = manifest.get("config") or {}
     return {"path": str(path), "format": manifest["format"],
-            "kind": manifest.get("kind"), "config": manifest.get("config"),
+            "kind": manifest.get("kind"), "config": config,
             "size": manifest.get("size"), "n": manifest.get("n"),
+            "stack": list(config.get("stack", DEFAULT_STACK)),
+            "quantization": quantized_mode(manifest),
             "extra": manifest.get("extra", {}),
             "arrays": arrays, "total_bytes": total}

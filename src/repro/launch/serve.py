@@ -86,6 +86,7 @@ def serve_subseq_search(args):
                                     distributed_subseq_range_query,
                                     make_data_mesh)
     from ..core.fastsax import FastSAXConfig
+    from ..core.options import SearchOptions
     from ..core.subseq import build_subseq_index
     from ..data.timeseries import make_subseq_queries, make_wafer_like
 
@@ -108,7 +109,8 @@ def serve_subseq_search(args):
     if args.knn:
         t0 = time.perf_counter()
         sel_idx, sel_d2, exact = distributed_subseq_knn_query(
-            dsx, queries, args.knn, mesh, excl=excl, backend=args.backend)
+            dsx, queries, args.knn, mesh, excl=excl,
+            options=SearchOptions(backend=args.backend))
         dt = time.perf_counter() - t0
         W_s = dsx.windows_per_stream
         for qi in range(min(4, args.queries)):
@@ -123,7 +125,8 @@ def serve_subseq_search(args):
         return
     t0 = time.perf_counter()
     gidx, ans, d2, overflow = distributed_subseq_range_query(
-        dsx, queries, args.epsilon, mesh, backend=args.backend)
+        dsx, queries, args.epsilon, mesh,
+        options=SearchOptions(backend=args.backend))
     jax.block_until_ready(ans)
     dt = time.perf_counter() - t0
     ans = np.asarray(ans)
@@ -149,6 +152,7 @@ def serve_search(args):
                                     distributed_range_query_auto,
                                     load_sharded, make_data_mesh,
                                     pad_database, store_sharded)
+    from ..core.options import SearchOptions
     from ..data.timeseries import make_queries, make_wafer_like
 
     n_dev = len(jax.devices())
@@ -204,7 +208,8 @@ def serve_search(args):
         t0 = time.perf_counter()
         nn_idx, nn_d2, exact = distributed_knn_query(
             index, queries, k, mesh, n_valid=n_valid,
-            normalize_queries=False, backend=args.backend)
+            options=SearchOptions(backend=args.backend,
+                                  normalize_queries=False))
         jax.block_until_ready(nn_d2)
         dt = time.perf_counter() - t0
         nn_idx = np.asarray(nn_idx)[:, :k]
@@ -221,8 +226,9 @@ def serve_search(args):
     # candidate buffer is re-queried at 4x capacity (up to the shard size),
     # so served answers are never silently truncated.
     gidx, ans, d2, overflow = distributed_range_query_auto(
-        index, queries, args.epsilon, mesh, capacity_per_shard=128,
-        normalize_queries=False, backend=args.backend)
+        index, queries, args.epsilon, mesh,
+        options=SearchOptions(backend=args.backend, capacity=128,
+                              normalize_queries=False))
     jax.block_until_ready(ans)
     dt = time.perf_counter() - t0
     ans = np.asarray(ans)

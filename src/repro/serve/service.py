@@ -43,7 +43,9 @@ from ..core.engine import (DeviceIndex, build_device_index,
                            mixed_query_dense, mixed_query_dense_and_trace,
                            mixed_query_pallas, mixed_trace,
                            represent_queries, resolve_backend,
-                           resolve_knn_backend)
+                           resolve_knn_backend, stack_backend)
+from ..core.options import SearchOptions
+from ..core.representation import DEFAULT_STACK
 from ..obs.calibration import CalibrationLog
 from ..obs.spans import SpanRecorder, profiler_capture
 from ..obs.trace import select_queries, trace_totals
@@ -60,6 +62,7 @@ class ServeConfig:
 
     levels: Sequence[int] = (8, 16)
     alphabet: int = 10
+    stack: Sequence[str] = DEFAULT_STACK   # registered representation stack
     normalize_queries: bool = True
     backend: str = "auto"          # auto|xla|pallas (engine.resolve_backend)
     quantization: str = "none"     # none|bf16|int8 — tiered resident index
@@ -78,6 +81,21 @@ class ServeConfig:
     trace_ring: int = 4096         # span ring capacity (bounded memory)
     calibration_ring: int = 2048   # dispatch-record ring capacity
     profile_dir: str = ""          # jax.profiler capture dir ("" = off)
+
+    @classmethod
+    def from_options(cls, options: SearchOptions, **overrides):
+        """Build a ServeConfig from the unified query-options surface:
+        the :class:`SearchOptions` fields that have a serving-level
+        counterpart map across, everything else keeps its default (or the
+        explicit ``overrides``)."""
+        mapped = dict(backend=options.backend,
+                      quantization=options.quantization,
+                      trace=options.trace,
+                      n_iters=options.n_iters,
+                      capacity0=options.capacity,
+                      normalize_queries=options.normalize_queries)
+        mapped.update(overrides)
+        return cls(**mapped)
 
 
 def _pow2_at_least(n: int, cap: int) -> int:
@@ -108,7 +126,9 @@ class _SingleBackend:
     def __init__(self, index: DeviceIndex, cfg: ServeConfig):
         self.index = index
         self.cfg = cfg
-        self.backend = resolve_backend(cfg.backend)
+        # Extended representation stacks demote the fused Pallas path to
+        # XLA (the megakernels hard-code the canonical level pair).
+        self.backend = stack_backend(index, resolve_backend(cfg.backend))
         self._cap: Optional[int] = None   # learned capacity or _DENSE
         self.stats: Optional[StatsTracker] = None   # set by SearchService
 
@@ -125,6 +145,8 @@ class _SingleBackend:
         committed live view (whole-reference replacement — in-flight
         batches finish on the old index)."""
         self.index = device_index_from_host(host)
+        self.backend = stack_backend(self.index,
+                                     resolve_backend(self.cfg.backend))
 
     def _note_demotion(self, k: int):
         if (self.stats is not None and self.backend == "pallas"
@@ -151,7 +173,9 @@ class _SingleBackend:
         B = self.size
         qr = represent_queries(jnp.asarray(q, jnp.float32),
                                self.index.levels, self.index.alphabet,
-                               normalize=self.cfg.normalize_queries)
+                               normalize=self.cfg.normalize_queries,
+                               stack=tuple(getattr(self.index, "stack",
+                                                   DEFAULT_STACK)))
         eps_j = jnp.asarray(eps, jnp.float32)
         knn_j = jnp.asarray(is_knn)
         self._note_demotion(k)
@@ -261,13 +285,15 @@ class _QuantizedBackend:
         qr = represent_queries(jnp.asarray(q, jnp.float32),
                                self.tindex.dev.levels,
                                self.tindex.dev.alphabet,
-                               normalize=self.cfg.normalize_queries)
+                               normalize=self.cfg.normalize_queries,
+                               stack=tuple(getattr(self.tindex.dev, "stack",
+                                                   DEFAULT_STACK)))
         eps_j = jnp.asarray(eps, jnp.float32)
         knn_j = jnp.asarray(is_knn)
         cap = self._cap or self.cfg.capacity0 or max(4 * k, 64)
         idx, answer, d2, overflow = quantized_mixed_query(
-            self.tindex, qr, eps_j, knn_j, k, capacity=cap,
-            backend=self.cfg.backend)
+            self.tindex, qr, eps_j, knn_j, k,
+            options=SearchOptions(backend=self.cfg.backend, capacity=cap))
         self._cap = max(cap, self._cap or 0)
         if self.stats is not None:
             bad = int(np.asarray(overflow).sum())
@@ -330,9 +356,11 @@ class _ShardedBackend:
         while True:
             gidx, answer, d2, overflow = distributed_mixed_query(
                 self.index, q, eps, is_knn, k, self.mesh, axis=self.axis,
-                capacity_per_shard=cap, n_iters=self.cfg.n_iters,
-                normalize_queries=self.cfg.normalize_queries,
-                n_valid=self.n_valid, backend=self.cfg.backend)
+                options=SearchOptions(
+                    backend=self.cfg.backend, capacity=cap,
+                    n_iters=self.cfg.n_iters,
+                    normalize_queries=self.cfg.normalize_queries),
+                n_valid=self.n_valid)
             if cap >= b_loc or not bool(np.asarray(overflow).any()):
                 break
             if self.stats is not None:
@@ -422,7 +450,8 @@ class SearchService:
             padded, n_valid = pad_database(np.asarray(series),
                                            mesh.shape["data"])
             index = distributed_build(padded, tuple(cfg.levels), cfg.alphabet,
-                                      mesh, n_valid=n_valid)
+                                      mesh, n_valid=n_valid,
+                                      stack=tuple(cfg.stack))
             return cls(_ShardedBackend(index, mesh, n_valid, cfg), cfg)
         if cfg.quantization != "none":
             from ..core.engine import TieredIndex
@@ -431,13 +460,15 @@ class SearchService:
             host = build_index(
                 np.asarray(series),
                 FastSAXConfig(n_segments=tuple(cfg.levels),
-                              alphabet=cfg.alphabet),
+                              alphabet=cfg.alphabet,
+                              stack=tuple(cfg.stack)),
                 normalize=normalize)
             tiered = TieredIndex.from_host(host, cfg.quantization)
             return cls(_QuantizedBackend(tiered, cfg), cfg)
         index = build_device_index(jnp.asarray(series, jnp.float32),
                                    tuple(cfg.levels), cfg.alphabet,
-                                   normalize=normalize)
+                                   normalize=normalize,
+                                   stack=tuple(cfg.stack))
         return cls(_SingleBackend(index, cfg), cfg)
 
     @classmethod
@@ -812,7 +843,7 @@ class SubseqSearchService(SearchService):
         hidx = build_subseq_index(
             np.asarray(streams),
             FastSAXConfig(n_segments=tuple(cfg.levels),
-                          alphabet=cfg.alphabet),
+                          alphabet=cfg.alphabet, stack=tuple(cfg.stack)),
             window, stride)
         return cls(subseq_device_index(hidx), cfg, excl=excl)
 

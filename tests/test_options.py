@@ -1,0 +1,235 @@
+"""The unified query-options surface (DESIGN.md §11).
+
+Every public ``*_query_*`` entrypoint takes one :class:`SearchOptions`
+object; the pre-PR-8 per-call kwargs (``backend=``, ``capacity=``,
+``n_iters=``, ...) keep working through deprecation shims.  These tests
+pin the shim contract: (a) a legacy kwarg emits exactly one
+DeprecationWarning naming the replacement, (b) the legacy call returns
+the SAME answer as the equivalent ``options=`` call, (c) positional
+pre-PR-8 call shapes (``backend`` string / ``capacity`` int in the
+options slot) coerce through the same shim, and (d) strict entrypoints
+reject unknown kwargs loudly.
+"""
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core.fastsax import FastSAXConfig, build_index, represent_query
+from repro.core.options import SearchOptions, resolve_options
+from repro.core.search import fastsax_knn_query
+from repro.data.timeseries import make_queries, make_wafer_like
+
+LEVELS, ALPHA = (8, 16), 10
+
+
+@pytest.fixture(scope="module")
+def case():
+    db = make_wafer_like(n_series=200, length=128, seed=0)
+    cfg = FastSAXConfig(n_segments=LEVELS, alphabet=ALPHA)
+    idx = build_index(db, cfg, normalize=False)
+    dev = engine.device_index_from_host(idx)
+    qs = make_queries(db, 3, seed=5)
+    qr = engine.represent_queries(jnp.asarray(qs, jnp.float32), LEVELS,
+                                  ALPHA, normalize=False)
+    return db, cfg, idx, dev, qs, qr
+
+
+def _one_deprecation(record):
+    assert len(record) == 1, [str(w.message) for w in record]
+    return str(record[0].message)
+
+
+# ---------------------------------------------------------------------------
+# resolve_options itself.
+# ---------------------------------------------------------------------------
+
+def test_resolve_options_defaults():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")            # no warning on clean call
+        opts, rest = resolve_options(None, {}, "f")
+    assert opts == SearchOptions() and rest == {}
+
+
+def test_resolve_options_merges_and_warns_once():
+    legacy = {"backend": "xla", "capacity_per_shard": 7, "block_q": 8}
+    with pytest.warns(DeprecationWarning) as record:
+        opts, rest = resolve_options(SearchOptions(n_iters=3), legacy, "f")
+    msg = _one_deprecation(record)
+    assert "f:" in msg and "backend" in msg and "SearchOptions" in msg
+    assert opts.backend == "xla"
+    assert opts.capacity == 7                     # capacity_per_shard alias
+    assert opts.n_iters == 3                      # explicit options survive
+    assert rest == {"block_q": 8}                 # pass-through untouched
+
+
+def test_search_options_frozen():
+    with pytest.raises(Exception):
+        SearchOptions().backend = "pallas"
+
+
+# ---------------------------------------------------------------------------
+# Engine dispatchers.
+# ---------------------------------------------------------------------------
+
+def test_range_query_backend_shim(case):
+    _, _, _, dev, _, qr = case
+    want, want_d2 = engine.range_query_backend(
+        dev, qr, 2.0, options=SearchOptions(backend="xla"))
+    with pytest.warns(DeprecationWarning):
+        got, got_d2 = engine.range_query_backend(dev, qr, 2.0, backend="xla")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(got_d2), np.asarray(want_d2))
+
+
+def test_range_query_backend_positional_coercion(case):
+    _, _, _, dev, _, qr = case
+    want, _ = engine.range_query_backend(
+        dev, qr, 2.0, options=SearchOptions(backend="xla"))
+    with pytest.warns(DeprecationWarning):
+        got, _ = engine.range_query_backend(dev, qr, 2.0, "xla")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_knn_query_backend_shim(case):
+    _, _, _, dev, _, qr = case
+    want = engine.knn_query_backend(
+        dev, qr, 5, options=SearchOptions(backend="xla", capacity=16,
+                                          n_iters=3))
+    with pytest.warns(DeprecationWarning):
+        got = engine.knn_query_backend(dev, qr, 5, backend="xla",
+                                       capacity=16, n_iters=3)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_quantized_shims(case):
+    _, _, idx, _, _, qr = case
+    tindex = engine.TieredIndex.from_host(idx, "int8")
+    want = engine.quantized_range_query(
+        tindex, qr, 2.0, options=SearchOptions(capacity=8))
+    with pytest.warns(DeprecationWarning):
+        got = engine.quantized_range_query(tindex, qr, 2.0, capacity=8)
+    with pytest.warns(DeprecationWarning):
+        pos = engine.quantized_range_query(tindex, qr, 2.0, 8)  # legacy slot
+    for g, p, w in zip(got, pos, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+        np.testing.assert_array_equal(np.asarray(p), np.asarray(w))
+    wk = engine.quantized_knn_query(tindex, qr, 3,
+                                    options=SearchOptions(capacity=3))
+    with pytest.warns(DeprecationWarning):
+        gk = engine.quantized_knn_query(tindex, qr, 3, capacity=3)
+    for g, w in zip(gk, wk):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_quantized_rejects_unknown_kwargs(case):
+    _, _, idx, _, _, qr = case
+    tindex = engine.TieredIndex.from_host(idx, "int8")
+    with pytest.raises(TypeError, match="unexpected kwargs"):
+        engine.quantized_range_query(tindex, qr, 2.0, capasity=8)
+
+
+# ---------------------------------------------------------------------------
+# Host reference engine (search.fastsax_knn_query).
+# ---------------------------------------------------------------------------
+
+def test_host_knn_shim(case):
+    _, cfg, idx, _, qs, _ = case
+    qrh = represent_query(np.asarray(qs[0], np.float64), cfg,
+                          normalize=False)
+    want = fastsax_knn_query(
+        idx, qrh, 5, options=SearchOptions(seed_factor=3,
+                                           adaptive_c10=False))
+    with pytest.warns(DeprecationWarning):
+        got = fastsax_knn_query(idx, qrh, 5, seed_factor=3,
+                                adaptive_c10=False)
+    np.testing.assert_array_equal(got.indices, want.indices)
+    np.testing.assert_allclose(got.distances, want.distances)
+
+
+# ---------------------------------------------------------------------------
+# Distributed entrypoints (1-device mesh).
+# ---------------------------------------------------------------------------
+
+def test_distributed_shims(case):
+    from repro.core.dist_search import (distributed_build,
+                                        distributed_knn_query,
+                                        distributed_range_query_auto,
+                                        make_data_mesh)
+
+    db, _, _, _, qs, _ = case
+    mesh = make_data_mesh(1)
+    didx = distributed_build(db, LEVELS, ALPHA, mesh)
+    want = distributed_range_query_auto(
+        didx, qs, 2.0, mesh,
+        options=SearchOptions(capacity=32, normalize_queries=False))
+    with pytest.warns(DeprecationWarning):
+        got = distributed_range_query_auto(
+            didx, qs, 2.0, mesh, capacity_per_shard=32,
+            normalize_queries=False)
+    with pytest.warns(DeprecationWarning):
+        pos = distributed_range_query_auto(
+            didx, qs, 2.0, mesh, "data", 32, normalize_queries=False)
+    for g, p, w in zip(got, pos, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+        np.testing.assert_array_equal(np.asarray(p), np.asarray(w))
+    wk = distributed_knn_query(
+        didx, qs, 3, mesh,
+        options=SearchOptions(n_iters=3, normalize_queries=False))
+    with pytest.warns(DeprecationWarning):
+        gk = distributed_knn_query(didx, qs, 3, mesh, n_iters=3,
+                                   normalize_queries=False)
+    for g, w in zip(gk, wk):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    with pytest.raises(TypeError, match="unexpected kwargs"):
+        distributed_knn_query(didx, qs, 3, mesh, capasity=4)
+
+
+# ---------------------------------------------------------------------------
+# Subsequence entrypoints.
+# ---------------------------------------------------------------------------
+
+def test_subseq_shims():
+    from repro.core.subseq import (build_subseq_index, represent_subseq_queries,
+                                   subseq_device_index, subseq_knn_query,
+                                   subseq_range_query)
+
+    rng = np.random.default_rng(3)
+    streams = np.cumsum(rng.standard_normal((2, 260)), axis=-1)
+    cfg = FastSAXConfig(n_segments=(4, 8), alphabet=8)
+    sidx = subseq_device_index(build_subseq_index(streams, cfg, 64, 2))
+    q = rng.standard_normal((1, 64))
+    qr = represent_subseq_queries(sidx, q)
+    want = subseq_range_query(sidx, qr, 3.0,
+                              options=SearchOptions(backend="xla"))
+    with pytest.warns(DeprecationWarning):
+        got = subseq_range_query(sidx, qr, 3.0, backend="xla")
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    wk = subseq_knn_query(sidx, qr, 3,
+                          options=SearchOptions(backend="xla", capacity=16))
+    with pytest.warns(DeprecationWarning):
+        gk = subseq_knn_query(sidx, qr, 3, backend="xla", capacity=16)
+    for g, w in zip(gk, wk):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    with pytest.raises(TypeError, match="unexpected kwargs"):
+        subseq_knn_query(sidx, qr, 3, capasity=16)
+
+
+# ---------------------------------------------------------------------------
+# Serving config bridge.
+# ---------------------------------------------------------------------------
+
+def test_serve_config_from_options():
+    from repro.serve.service import ServeConfig
+
+    cfg = ServeConfig.from_options(
+        SearchOptions(backend="xla", quantization="int8", trace=True,
+                      n_iters=4, capacity=64, normalize_queries=False),
+        max_batch=4)
+    assert cfg.backend == "xla" and cfg.quantization == "int8"
+    assert cfg.trace and cfg.n_iters == 4 and cfg.capacity0 == 64
+    assert not cfg.normalize_queries and cfg.max_batch == 4

@@ -1,0 +1,309 @@
+"""Conformance suite for the pluggable representation registry
+(DESIGN.md §11).
+
+Two property families run over EVERY registered representation
+automatically — registering a new representation makes it subject to
+these with no test edits:
+
+  * **lower-bound soundness** — ``host_lower_bound(u, q) ≤ d(u, q)`` on
+    hypothesis-sampled z-normalised pairs, so an exclusion can never
+    drop a true answer;
+  * **set identity** — a cascade whose stack includes the
+    representation returns exactly the f64 brute-force answer set, on
+    the host engine and on the device engine.
+
+Plus the registry structure contract (backbone required, kind ordering,
+loud unknown-name failures) and the deduplicated ``linfit_residual_sq``
+backend-dispatch parity (numpy / xla / pallas-interpret).
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    from _mini_hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import engine
+from repro.core import representation as R
+from repro.core.fastsax import FastSAXConfig, build_index, represent_query
+from repro.core.paa import znormalize_np
+from repro.core.search import advise_stack, fastsax_range_query
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+ALL_NAMES = R.registered_names()
+
+
+def _stack_with(name: str) -> tuple:
+    """A valid stack containing ``name`` (kind ordering respected)."""
+    if name in R.DEFAULT_STACK:
+        return R.DEFAULT_STACK
+    if R.get(name).kind == "gap":
+        return ("linfit_residual", name, "sax_word")
+    return ("linfit_residual", "sax_word", name)
+
+
+def _trending_batch(rng, B, n):
+    """Random walks + per-row linear trends — exercises slope symbols."""
+    t = np.arange(n) / n
+    x = (np.cumsum(rng.standard_normal((B, n)), axis=-1) / np.sqrt(n)
+         + rng.uniform(-4.0, 4.0, (B, 1)) * t[None, :])
+    return znormalize_np(x)
+
+
+# ---------------------------------------------------------------------------
+# Registry structure.
+# ---------------------------------------------------------------------------
+
+def test_backbone_registered():
+    for name in R.DEFAULT_STACK:
+        assert name in ALL_NAMES
+    assert "trend_slope" in ALL_NAMES
+
+
+def test_registry_get_unknown_is_loud():
+    with pytest.raises(KeyError, match="unregistered"):
+        R.get("no_such_representation")
+
+
+def test_validate_stack_requires_backbone():
+    with pytest.raises(ValueError, match="backbone"):
+        R.validate_stack(("sax_word",))
+    with pytest.raises(ValueError, match="duplicate"):
+        R.validate_stack(("linfit_residual", "sax_word", "sax_word"))
+    with pytest.raises(KeyError, match="unregistered"):
+        R.validate_stack(("linfit_residual", "sax_word", "nope"))
+
+
+def test_validate_stack_kind_ordering():
+    # gap-kind after word-kind violates the C9 -> C10 cascade order
+    import unittest.mock as um
+    trend = R.get("trend_slope")
+    with um.patch.object(type(trend), "kind", "gap"):
+        with pytest.raises(ValueError, match="gap-kind"):
+            R.validate_stack(("linfit_residual", "sax_word", "trend_slope"))
+
+
+def test_extra_names_and_column_contract():
+    assert R.extra_names(R.DEFAULT_STACK) == ()
+    assert R.extra_names(_stack_with("trend_slope")) == ("trend_slope",)
+    for name in ALL_NAMES:
+        rep = R.get(name)
+        assert rep.kind in ("gap", "word")
+        assert rep.column is not None and rep.column.prefix
+        assert rep.residual_rule
+        per_seg = rep.column.per_segment
+        assert per_seg == (rep.kind == "word")
+
+
+def test_config_rejects_invalid_stack():
+    with pytest.raises((ValueError, KeyError)):
+        FastSAXConfig(n_segments=(8,), alphabet=8, stack=("sax_word",))
+
+
+# ---------------------------------------------------------------------------
+# Lower-bound soundness for EVERY registered representation.
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([4, 8, 16]),
+       st.sampled_from([4, 8, 16]))
+def test_lower_bound_soundness_all_registered(seed, N, alphabet):
+    rng = np.random.default_rng(seed)
+    n = 64
+    B = 48
+    x = _trending_batch(rng, B, n)
+    q = _trending_batch(rng, 1, n)[0]
+    d_true = np.sqrt(np.sum((x - q[None, :]) ** 2, axis=-1))
+    for name in ALL_NAMES:
+        rep = R.get(name)
+        col = rep.symbolize_np(x, N, alphabet)
+        qval = rep.query_repr_np(q, N, alphabet)
+        lb = rep.host_lower_bound(col, qval, n=n, N=N, alphabet=alphabet)
+        assert np.all(lb <= d_true + 1e-9), (
+            f"{name}: lower bound exceeds the true distance "
+            f"(max violation {np.max(lb - d_true)})")
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([4, 8]))
+def test_device_bound_soundness_all_registered(seed, alphabet):
+    """The device (jnp) bound forms obey the same inequality."""
+    from repro.core.sax import mindist_table
+
+    rng = np.random.default_rng(seed)
+    n, N, B, Q = 64, 8, 32, 3
+    x = _trending_batch(rng, B, n)
+    qs = _trending_batch(rng, Q, n)
+    d_true = np.sqrt(((qs[:, None, :] - x[None, :, :]) ** 2).sum(-1))
+    tab = jnp.asarray(mindist_table(alphabet), jnp.float32)
+    for name in ALL_NAMES:
+        rep = R.get(name)
+        col = rep.symbolize_dev(jnp.asarray(x, jnp.float32), N, alphabet)
+        qcol = rep.symbolize_dev(jnp.asarray(qs, jnp.float32), N, alphabet)
+        if rep.kind == "gap":
+            lb = np.asarray(rep.dev_gap(col, qcol))
+        else:
+            lb = np.sqrt(np.asarray(
+                rep.dev_bound_sq(col, qcol, n=n, N=N, tab=tab)))
+        assert lb.shape == (Q, B)
+        assert np.all(lb <= d_true + 1e-3), (
+            f"{name}: device bound exceeds the true distance")
+
+
+# ---------------------------------------------------------------------------
+# Set identity: cascade answers == f64 brute force, host and device,
+# for a stack containing each registered representation.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ALL_NAMES)
+def test_set_identity_host_engine(name):
+    rng = np.random.default_rng(hash(name) % (2 ** 31))
+    B, n = 200, 64
+    x = _trending_batch(rng, B, n)
+    cfg = FastSAXConfig(n_segments=(4, 8), alphabet=8,
+                        stack=_stack_with(name))
+    idx = build_index(x, cfg, normalize=False)
+    for qi in (0, 7, 33):
+        q = x[qi] + 0.2 * rng.standard_normal(n)
+        qz = znormalize_np(q)
+        d2 = np.sum((x - qz[None, :]) ** 2, axis=-1)
+        for quant in (0.02, 0.1, 0.3):
+            eps = float(np.quantile(np.sqrt(d2), quant))
+            truth = np.nonzero(d2 <= eps * eps)[0]
+            r = fastsax_range_query(idx, represent_query(q, cfg), eps)
+            assert np.array_equal(r.answers, truth), (
+                f"{name}: answer set diverged from brute force at eps="
+                f"{eps}")
+
+
+@pytest.mark.parametrize("name", ALL_NAMES)
+def test_set_identity_device_engine(name):
+    """Adding a registered level never changes the device answer set —
+    extended-stack answers are bit-identical to the canonical stack's
+    (same verify arithmetic, so this is pure set identity)."""
+    rng = np.random.default_rng(hash(name) % (2 ** 31) + 1)
+    B, n, Q = 160, 64, 4
+    x = _trending_batch(rng, B, n)
+    qs = znormalize_np(x[:Q] + 0.2 * rng.standard_normal((Q, n)))
+    d2 = ((qs[:, None, :] - x[None, :, :]) ** 2).sum(-1)
+    eps = float(np.quantile(np.sqrt(d2), 0.1))
+    masks = {}
+    for stack in (R.DEFAULT_STACK, _stack_with(name)):
+        dev = engine.build_device_index(jnp.asarray(x, jnp.float32), (4, 8),
+                                        8, normalize=False, stack=stack)
+        qr = engine.represent_queries(jnp.asarray(qs, jnp.float32), (4, 8),
+                                      8, normalize=False, stack=stack)
+        ans, _ = engine.range_query(dev, qr, eps)
+        masks[stack] = np.asarray(ans)
+    assert np.array_equal(masks[R.DEFAULT_STACK], masks[_stack_with(name)]), (
+        f"{name}: extended-stack device answers diverged from canonical")
+
+
+def test_extended_stack_prunes_at_least_as_hard():
+    """The trend level can only add kills — the survivor set with the
+    extended stack is a subset of the canonical one (same answers)."""
+    rng = np.random.default_rng(11)
+    B, n = 300, 128
+    x = _trending_batch(rng, B, n)
+    q = znormalize_np(x[5] + 0.2 * rng.standard_normal(n))
+    d2 = np.sum((x - q[None, :]) ** 2, axis=-1)
+    eps = float(np.quantile(np.sqrt(d2), 0.1))
+    res = {}
+    for stack in (R.DEFAULT_STACK, _stack_with("trend_slope")):
+        cfg = FastSAXConfig(n_segments=(8, 16), alphabet=8, stack=stack)
+        idx = build_index(x, cfg, normalize=False)
+        res[stack] = fastsax_range_query(idx, represent_query(q, cfg,
+                                                              normalize=True),
+                                         eps)
+    base, ext = res[R.DEFAULT_STACK], res[_stack_with("trend_slope")]
+    assert np.array_equal(base.answers, ext.answers)
+    assert ext.candidates <= base.candidates
+
+
+# ---------------------------------------------------------------------------
+# Cost-model probe: advise_stack enables the trend level on trending data.
+# ---------------------------------------------------------------------------
+
+def test_advise_stack_on_trending_data():
+    rng = np.random.default_rng(4)
+    B, n = 512, 128
+    t = np.arange(n) / n
+    x = znormalize_np(rng.uniform(-6, 6, (B, 1)) * t[None, :]
+                      + 0.15 * rng.standard_normal((B, n)))
+    cfg = FastSAXConfig(n_segments=(8, 16), alphabet=8,
+                        stack=_stack_with("trend_slope"))
+    idx = build_index(x, cfg, normalize=False)
+    qs = znormalize_np(x[:8] + 0.1 * rng.standard_normal((8, n)))
+    d2 = ((qs[:, None, :] - x[None, :, :]) ** 2).sum(-1)
+    eps = float(np.quantile(np.sqrt(d2), 0.02))
+    advised = advise_stack(idx, qs, eps)
+    assert "trend_slope" in advised
+
+
+# ---------------------------------------------------------------------------
+# Deduplicated linfit residual: one entrypoint, three backends, parity.
+# ---------------------------------------------------------------------------
+
+def test_linfit_residual_backend_parity():
+    rng = np.random.default_rng(9)
+    x = rng.standard_normal((64, 128))
+    for N in (4, 8, 16):
+        ref = R.linfit_residual_sq(x, N, backend="numpy")
+        via_xla = np.asarray(R.linfit_residual_sq(
+            jnp.asarray(x, jnp.float32), N, backend="xla"))
+        via_pallas = np.asarray(R.linfit_residual_sq(
+            jnp.asarray(x, jnp.float32), N, backend="pallas"))
+        np.testing.assert_allclose(via_xla, ref, rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(via_pallas, ref, rtol=2e-4, atol=2e-4)
+    with pytest.raises(ValueError, match="unknown linfit backend"):
+        R.linfit_residual_sq(x, 8, backend="cuda")
+
+
+# ---------------------------------------------------------------------------
+# Amortised window hook consistency (subsequence builder).
+# ---------------------------------------------------------------------------
+
+def test_window_symbolize_matches_direct():
+    """Every representation with a window hook must produce the SAME
+    symbols the direct path assigns to the materialised z-normalised
+    windows — otherwise subsequence bounds silently diverge."""
+    from repro.core.subseq import build_subseq_index, materialize_windows_np
+
+    rng = np.random.default_rng(21)
+    S, T, w, stride = 3, 220, 48, 4
+    streams = (np.cumsum(rng.standard_normal((S, T)), axis=-1)
+               + 0.05 * np.arange(T)[None, :])
+    hooked = [name for name in ALL_NAMES
+              if getattr(R.get(name), "window_symbolize_np", None)
+              is not None and name not in R.DEFAULT_STACK]
+    assert "trend_slope" in hooked
+    stack = tuple(R.DEFAULT_STACK) + tuple(
+        n for n in hooked if R.get(n).kind == "word")
+    cfg = FastSAXConfig(n_segments=(4, 8), alphabet=8, stack=stack)
+    hidx = build_subseq_index(streams, cfg, w, stride)
+    wins = materialize_windows_np(hidx)
+    for li, N in enumerate(cfg.levels):
+        for name in hooked:
+            rep = R.get(name)
+            direct = rep.symbolize_np(wins, N, cfg.alphabet)
+            np.testing.assert_array_equal(
+                np.asarray(hidx.levels[li].extra[name]), direct,
+                err_msg=f"{name}: window hook diverged at N={N}")
+
+
+def test_subseq_rejects_hookless_extra():
+    from repro.core.subseq import build_subseq_index
+    import unittest.mock as um
+
+    rng = np.random.default_rng(2)
+    streams = rng.standard_normal((2, 120))
+    cfg = FastSAXConfig(n_segments=(4,), alphabet=8,
+                        stack=_stack_with("trend_slope"))
+    trend = R.get("trend_slope")
+    with um.patch.object(type(trend), "window_symbolize_np", None):
+        with pytest.raises(NotImplementedError, match="window_symbolize_np"):
+            build_subseq_index(streams, cfg, 24, 4)
