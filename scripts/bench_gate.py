@@ -44,7 +44,7 @@ REPO = pathlib.Path(__file__).resolve().parents[1]
 # reference distances, HBM-model ratios); its wall-clock lives in
 # non-gated derived keys (wall_us/vs_brute).
 DETERMINISTIC = {"table1", "figure2", "tightness", "pruning", "repr",
-                 "knn", "subseq", "quantized"}
+                 "knn", "subseq", "quantized", "chaos"}
 
 REL_TOL = 0.25          # generous: catches 'broken', ignores jitter/drift
 ABS_TOL = 0.05          # floor for fraction-valued metrics
@@ -57,8 +57,14 @@ LOWER_IS_WORSE = ("speedup", "qps", "c9", "c10", "mean", "vs_seq",
 # IDENTICAL to full precision, 'within10' pins its pruning power to
 # within 10% of the full-precision cascade and 'ge2x' the >= 2x
 # resident-bytes reduction — all hold outright, never merely 'close'.
+# The chaos suite's flags are availability contracts: 'oracle' (degraded
+# answers equal the f64 reference over surviving rows), 'partial' /
+# 'recovered' (the coverage trajectory degrades and heals), 'replay'
+# (FaultPlan seed determinism), 'storm_capped' (the breaker sheds
+# instead of FAILED-storming).
 MUST_BE_TRUE = ("exact", "below", "parity", "within10", "ge2x", "ge95",
-                "better", "kept")
+                "better", "kept", "oracle", "partial", "recovered",
+                "replay", "storm_capped")
 MUST_BE_ZERO = ("dropped",)
 # parity fractions (engine suite): the fused megakernel must answer
 # identically to the XLA oracle for EVERY query, every run — 0.999 is a

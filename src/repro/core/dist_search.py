@@ -19,9 +19,13 @@ finite ε — they can never reach the answer set.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
-from typing import Sequence
+import statistics
+import time
+from concurrent import futures as _futures
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +42,8 @@ from .engine import (_SEED_EPS_MAX, DeviceIndex, QueryReprDev,
                      resolve_knn_backend, stack_backend)
 from .options import SearchOptions, resolve_options
 from .representation import DEFAULT_STACK
+from ..runtime import chaos
+from ..runtime.fault_tolerance import StepWatchdog
 
 _PAD_RESIDUAL = 1e30  # sentinel: C9 kills padded rows for any finite epsilon
 
@@ -841,3 +847,316 @@ def load_sharded(path, mesh: Mesh, axis: str = "data", verify: bool = False):
     axis size."""
     from ..index.sharded import load_sharded as _load
     return _load(path, mesh, axis=axis, verify=verify)
+
+
+# ---------------------------------------------------------------------------
+# Failover serving engine — PR 9, DESIGN.md §12.
+#
+# ``shard_map`` is the right execution model when every device is healthy:
+# one collective jit, zero per-shard overhead.  It is exactly the wrong
+# model for fault tolerance — the global array couples the shards, so one
+# dead device poisons the whole dispatch.  ``FailoverShards`` trades the
+# collective for independence: each shard is its own single-device
+# ``DeviceIndex`` queried on its own thread with its own timeout, retry
+# budget, and health state, and the cross-shard merge happens on the host.
+# When every shard answers, the merged result is bit-identical to the
+# single-index engines (same per-shard ``mixed_query``, same shard-major
+# ascending tie-break as ``distributed_knn_query``); when a shard is lost,
+# the survivors still merge into a *certified-partial* answer whose
+# ``ShardCoverage`` says exactly what fraction of the database it covers.
+# ---------------------------------------------------------------------------
+
+
+class FailoverError(RuntimeError):
+    """No shard produced an answer for a dispatch (all down/failed)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCoverage:
+    """The degraded-answer certificate: which part of the database this
+    answer actually covers.  ``exact`` iff every shard answered — the
+    serve layer propagates it onto each request (DESIGN.md §12)."""
+
+    shards_ok: int
+    shards_total: int
+    rows_ok: int
+    rows_total: int
+
+    @property
+    def exact(self) -> bool:
+        return self.shards_ok == self.shards_total
+
+    def as_dict(self) -> dict:
+        return {"exact": self.exact,
+                "shards_ok": self.shards_ok,
+                "shards_total": self.shards_total,
+                "rows_ok": self.rows_ok,
+                "rows_total": self.rows_total}
+
+
+class FailoverShards:
+    """Per-shard query execution with timeouts, retries, and failover.
+
+    Health model (all counting is in dispatches/attempts, never wall
+    clock, so chaos replays are deterministic):
+
+      * every live shard is queried concurrently (thread pool); a shard's
+        attempt is bounded by a per-shard timeout — the base ``timeout_s``
+        until the shard's ``StepWatchdog`` rolling-median latency window
+        has ``min_samples``, then ``slow_factor × median`` (straggler
+        hedging: a slow shard is re-dispatched rather than awaited);
+      * a failed/timed-out attempt is retried up to ``retries`` times
+        with exponential backoff (``backoff_s · 2^attempt``) — transient
+        faults (``chaos.FaultInjected``, flaky reads) heal here;
+      * ``down_threshold`` consecutive exhausted dispatches mark the
+        shard **down**: it is skipped (not awaited) until every
+        ``probe_every``-th dispatch sends a single probe; a probe success
+        marks it up again — recovery back to ``exact=True`` answers;
+      * the surviving shards' ``(gidx, answer, d2)`` buffers concatenate
+        shard-major ascending (the same (d², lowest-index) tie-break as
+        the collective engine), and the dispatch returns a
+        :class:`ShardCoverage` naming what was covered.  Zero survivors
+        raises :class:`FailoverError` — the serve layer's circuit breaker
+        counts those.
+
+    Per-shard capacity defaults to the full shard size, so a surviving
+    shard's rows are answered *exactly* (no overflow, no escalation) and
+    the partial answer equals brute force restricted to covered rows.
+    """
+
+    def __init__(
+        self,
+        shards: Sequence,
+        offsets: Optional[Sequence[int]] = None,
+        n_valid: Optional[int] = None,
+        *,
+        timeout_s: float = 30.0,
+        retries: int = 2,
+        backoff_s: float = 0.02,
+        slow_factor: float = 4.0,
+        down_threshold: int = 3,
+        probe_every: int = 4,
+        capacity: Optional[int] = None,
+        n_iters: int = 2,
+        normalize_queries: bool = False,
+        on_event: Optional[Callable[[str, int], None]] = None,
+    ):
+        if not shards:
+            raise ValueError("need at least one shard")
+        self.shards = list(shards)
+        P_sh = len(self.shards)
+        sizes = [int(s.series.shape[0]) for s in self.shards]
+        if offsets is None:
+            offsets = list(np.cumsum([0] + sizes[:-1]))
+        self.offsets = [int(o) for o in offsets]
+        self.n_valid = int(sum(sizes) if n_valid is None else n_valid)
+        ref = self.shards[0]
+        self.levels = tuple(ref.levels)
+        self.alphabet = int(ref.alphabet)
+        self.stack = tuple(getattr(ref, "stack", DEFAULT_STACK))
+        for s in self.shards[1:]:
+            if (tuple(s.levels) != self.levels
+                    or int(s.alphabet) != self.alphabet
+                    or tuple(getattr(s, "stack", DEFAULT_STACK))
+                    != self.stack):
+                raise ValueError("shards disagree on (levels, alphabet, "
+                                 "stack) — not one index")
+        self.timeout_s = float(timeout_s)
+        self.retries = int(retries)
+        self.backoff_s = float(backoff_s)
+        self.down_threshold = int(down_threshold)
+        self.probe_every = max(1, int(probe_every))
+        self.capacity = capacity
+        self.n_iters = int(n_iters)
+        self.normalize_queries = bool(normalize_queries)
+        self.on_event = on_event
+        self.events: collections.Counter = collections.Counter()
+
+        # Valid-row masks: rows past n_valid or carrying the pad sentinel
+        # must never answer (same rule as the collective engines).  None
+        # when every row is real — keeps the unmasked jit signature.
+        self._vmask, self._rows = [], []
+        for si, s in enumerate(self.shards):
+            B_s = sizes[si]
+            live = np.arange(B_s) < max(
+                0, min(B_s, self.n_valid - self.offsets[si]))
+            live &= np.asarray(s.residuals[0]) < 0.5 * _PAD_RESIDUAL
+            self._rows.append(int(live.sum()))
+            self._vmask.append(None if live.all() else jnp.asarray(live))
+
+        self._wd = [StepWatchdog(slow_factor=slow_factor, window=64,
+                                 min_samples=5) for _ in range(P_sh)]
+        self._fail_streak = [0] * P_sh
+        self._down = [False] * P_sh
+        self._down_at = [0] * P_sh
+        self._dispatch_no = 0
+        self._pool = _futures.ThreadPoolExecutor(
+            max_workers=max(2, 2 * P_sh),
+            thread_name_prefix="repro-failover")
+
+    # --- construction -------------------------------------------------------
+
+    @classmethod
+    def from_series(cls, series: np.ndarray, shards: int,
+                    levels: Sequence[int], alphabet: int,
+                    normalize: bool = False, stack: tuple = DEFAULT_STACK,
+                    **kw) -> "FailoverShards":
+        """Build per-shard indexes from contiguous row splits of a host
+        database (shards may be unequal — no padding rows needed)."""
+        series = np.asarray(series, np.float32)
+        parts = np.array_split(series, int(shards))
+        offsets = list(np.cumsum([0] + [p.shape[0] for p in parts[:-1]]))
+        devs = [build_device_index(jnp.asarray(p), levels, alphabet,
+                                   normalize=normalize, stack=stack)
+                for p in parts]
+        return cls(devs, offsets=offsets, **kw)
+
+    @classmethod
+    def from_store(cls, path, verify: bool = False,
+                   **kw) -> "FailoverShards":
+        """Warm-start from a sharded store, keeping each ``shard_*/`` a
+        separately-queryable index (``index.sharded.load_shard_indexes``)."""
+        from ..index.sharded import load_shard_indexes
+        devs, offsets, n_valid = load_shard_indexes(path, verify=verify)
+        return cls(devs, offsets=offsets, n_valid=n_valid, **kw)
+
+    # --- introspection ------------------------------------------------------
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def size(self) -> int:
+        return self.n_valid
+
+    @property
+    def n(self) -> int:
+        return int(self.shards[0].series.shape[-1])
+
+    def shard_states(self) -> list:
+        return ["down" if d else "up" for d in self._down]
+
+    def close(self):
+        self._pool.shutdown(wait=False)
+
+    # --- health bookkeeping -------------------------------------------------
+
+    def _emit(self, kind: str, n: int = 1):
+        self.events[kind] += n
+        if self.on_event is not None:
+            self.on_event(kind, n)
+
+    def _on_shard_ok(self, si: int):
+        self._fail_streak[si] = 0
+        if self._down[si]:
+            self._down[si] = False
+            self._emit("shard_up")
+
+    def _on_shard_fail(self, si: int):
+        self._fail_streak[si] += 1
+        if (not self._down[si]
+                and self._fail_streak[si] >= self.down_threshold):
+            self._down[si] = True
+            self._down_at[si] = self._dispatch_no
+            self._emit("shard_down")
+
+    def _timeout(self, si: int) -> float:
+        wd = self._wd[si]
+        if len(wd.window) >= wd.min_samples:
+            return max(0.05, wd.slow_factor * statistics.median(wd.window))
+        return self.timeout_s
+
+    # --- per-shard execution ------------------------------------------------
+
+    def _query_shard(self, si: int, qr, eps_j, knn_j, k: int):
+        chaos.maybe_fire("shard_query", key=str(si))
+        wd = self._wd[si]
+        wd.start(self._dispatch_no)
+        idx = self.shards[si]
+        B_s = int(idx.series.shape[0])
+        k_s = max(1, min(int(k), B_s))
+        cap = B_s if self.capacity is None else int(self.capacity)
+        cap = max(min(cap, B_s), k_s)
+        ridx, answer, d2, overflow = mixed_query(
+            idx, qr, eps_j, knn_j, k_s, capacity=cap,
+            n_iters=self.n_iters, valid_mask=self._vmask[si])
+        answer = np.asarray(answer)
+        gidx = np.where(answer, np.asarray(ridx) + self.offsets[si], -1)
+        out = (gidx, answer, np.asarray(d2), np.asarray(overflow))
+        wd.stop()
+        return out
+
+    def _collect(self, si: int, fut, probe: bool, qr, eps_j, knn_j,
+                 k: int):
+        """Await one shard with its timeout; retry transient failures
+        with exponential backoff.  Returns the shard result or None."""
+        attempts = 1 if probe else self.retries + 1
+        for a in range(attempts):
+            try:
+                out = fut.result(timeout=self._timeout(si))
+                self._on_shard_ok(si)
+                return out
+            except _futures.TimeoutError:
+                fut.cancel()
+                self._emit("hedges")   # straggler: re-dispatch, don't wait
+            except Exception:          # noqa: BLE001 — any shard-local
+                pass                   # failure is survivable by design
+            if a + 1 < attempts:
+                self._emit("retries")
+                time.sleep(self.backoff_s * (2 ** a))
+                fut = self._pool.submit(self._query_shard, si, qr, eps_j,
+                                        knn_j, k)
+        self._on_shard_fail(si)
+        return None
+
+    # --- the dispatch -------------------------------------------------------
+
+    def query(self, q: np.ndarray, eps: np.ndarray, is_knn: np.ndarray,
+              k: int):
+        """One batch over every live shard.
+
+        Returns ``(gidx, answer, d2, overflow, coverage)`` — the merged
+        host buffers ((Q, ΣC_s) over surviving shards, global row ids,
+        -1 in dead slots), the per-query overflow OR across survivors,
+        and the :class:`ShardCoverage` certificate.
+        """
+        self._dispatch_no += 1
+        qr = represent_queries(jnp.asarray(q, jnp.float32), self.levels,
+                               self.alphabet,
+                               normalize=self.normalize_queries,
+                               stack=self.stack)
+        eps_j = jnp.asarray(eps, jnp.float32)
+        knn_j = jnp.asarray(is_knn)
+
+        plan = []   # (shard, is_probe)
+        for si in range(self.n_shards):
+            if not self._down[si]:
+                plan.append((si, False))
+            elif (self._dispatch_no - self._down_at[si]) \
+                    % self.probe_every == 0:
+                plan.append((si, True))
+        futs = {si: self._pool.submit(self._query_shard, si, qr, eps_j,
+                                      knn_j, k)
+                for si, _probe in plan}
+        results = {}
+        for si, probe in plan:
+            out = self._collect(si, futs[si], probe, qr, eps_j, knn_j, k)
+            if out is not None:
+                results[si] = out
+
+        ok = sorted(results)
+        if not ok:
+            raise FailoverError(
+                f"no shard answered dispatch {self._dispatch_no} "
+                f"({self.n_shards} total, "
+                f"{sum(self._down)} marked down)")
+        gidx = np.concatenate([results[si][0] for si in ok], axis=-1)
+        answer = np.concatenate([results[si][1] for si in ok], axis=-1)
+        d2 = np.concatenate([results[si][2] for si in ok], axis=-1)
+        overflow = np.logical_or.reduce([results[si][3] for si in ok])
+        coverage = ShardCoverage(
+            shards_ok=len(ok), shards_total=self.n_shards,
+            rows_ok=int(sum(self._rows[si] for si in ok)),
+            rows_total=int(sum(self._rows)))
+        return gidx, answer, d2, overflow, coverage

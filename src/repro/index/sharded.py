@@ -196,6 +196,68 @@ def load_sharded(
     return index, int(manifest["n_valid"])
 
 
+def load_shard_indexes(
+    path: str | os.PathLike,
+    verify: bool = False,
+):
+    """Warm-start the *failover* engine (DESIGN.md §12): every
+    ``shard_*/`` dir becomes its own independent single-device
+    ``DeviceIndex`` instead of one leaf of a ``shard_map`` global array.
+
+    The distinction matters for fault tolerance: ``load_sharded`` builds
+    one collective array where a single dead device poisons every query,
+    while this loader keeps the shards separable so
+    ``core.dist_search.FailoverShards`` can query, retry, and drop them
+    *individually* and still merge a certified-partial answer from the
+    survivors.
+
+    Returns ``(shards, offsets, n_valid)`` — per-shard indexes, each
+    shard's global row offset, and the live row count of the whole store.
+    """
+    from ..core.engine import DeviceIndex
+
+    import jax.numpy as jnp
+
+    path = pathlib.Path(path)
+    manifest = sharded_info(path)
+    if manifest.get("kind") != _KIND:
+        raise IOError(f"{path}: not a {_KIND} store")
+    levels = tuple(int(N) for N in manifest["levels"])
+    stack = _check_stack(manifest, path)
+    extra_names = repr_registry.extra_names(stack)
+    P_sh = int(manifest["shards"])
+
+    shards, offsets = [], []
+    for si in range(P_sh):
+        d = path / f"shard_{si:05d}"
+        smf = store.read_manifest(d)
+        offsets.append(int(smf.get("row_offset", 0)))
+
+        def leaf(name):
+            return jnp.asarray(np.asarray(
+                store.read_array(d, name, manifest=smf, mmap=not verify,
+                                 verify=verify)))
+
+        extra = tuple(
+            {name: leaf(f"{repr_registry.get(name).column.prefix}_N{N}")
+             for name in extra_names}
+            for N in levels) if extra_names else ()
+        shards.append(DeviceIndex(
+            series=leaf("series"),
+            norms_sq=leaf("norms_sq"),
+            words=tuple(leaf(f"words_N{N}") for N in levels),
+            residuals=tuple(leaf(f"resid_N{N}") for N in levels),
+            extra=extra,
+            levels=levels,
+            alphabet=int(manifest["alphabet"]),
+            stack=stack,
+        ))
+    order = np.argsort(offsets)
+    shards = [shards[i] for i in order]
+    offsets = [offsets[i] for i in order]
+    return shards, offsets, int(manifest["n_valid"])
+
+
 # ---------------------------------------------------------------------------
 # Tiered (quantized) sharded persistence — DESIGN.md §9.
 #

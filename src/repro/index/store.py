@@ -36,6 +36,7 @@ import numpy as np
 from ..core import representation as repr_registry
 from ..core.fastsax import FastSAXConfig, FastSAXIndex, LevelData
 from ..core.representation import DEFAULT_STACK
+from ..runtime import chaos
 
 FORMAT_VERSION = 1
 MANIFEST = "manifest.json"
@@ -152,6 +153,10 @@ def read_array(
     if entry is None:
         raise KeyError(f"store {path} has no array {name!r}")
     a = np.load(path / entry["file"], mmap_mode="r" if mmap else None)
+    # Chaos injection site "store_read" (DESIGN.md §12): a truncate fault
+    # shears rows *here*, before the manifest shape check below, so the
+    # store's own validation is exactly what fails loudly on a torn read.
+    a = chaos.apply("store_read", name, a)
     if list(a.shape) != entry["shape"] or str(a.dtype) != entry["dtype"]:
         raise IOError(f"{path}/{name}: header {a.shape}/{a.dtype} does not "
                       f"match manifest {entry['shape']}/{entry['dtype']}")

@@ -248,10 +248,32 @@ def _obs_start(args, service):
         return None
     from ..obs.metrics import start_metrics_server
 
-    server = start_metrics_server(service.metrics_text, args.metrics)
+    server = start_metrics_server(service.metrics_text, args.metrics,
+                                  health_fn=getattr(service, "health",
+                                                    None))
     print(f"[serve] metrics at "
-          f"http://127.0.0.1:{server.server_address[1]}/metrics")
+          f"http://127.0.0.1:{server.server_address[1]}/metrics "
+          f"(readiness at /healthz)")
     return server
+
+
+def _drain_on_preempt(ph, service):
+    """Arm a watcher that gracefully drains the service when the
+    :class:`~repro.runtime.fault_tolerance.PreemptionHandler` catches
+    SIGTERM: new submits shed, accepted requests finish, then the
+    dispatcher stops — preemption never drops an accepted request."""
+    import threading
+
+    def watch():
+        ph.requested.wait()
+        print("[serve] SIGTERM: draining (new submits shed)")
+        ok = service.drain(timeout_s=30.0)
+        print(f"[serve] drain {'complete' if ok else 'TIMED OUT'}")
+
+    t = threading.Thread(target=watch, name="repro-drain-watch",
+                         daemon=True)
+    t.start()
+    return t
 
 
 def _obs_finish(args, service, server):
@@ -310,6 +332,7 @@ def serve_subseq_service(args):
     import json
 
     from ..data.timeseries import make_subseq_queries, make_wafer_like
+    from ..runtime.fault_tolerance import PreemptionHandler
     from ..serve import (ServeConfig, SubseqSearchService, WorkloadSpec,
                          check_exactness, make_workload, run_closed_loop)
 
@@ -337,7 +360,8 @@ def serve_subseq_service(args):
                         deadline_ms=args.deadline_ms or None)
     workload = make_workload(queries, spec)
     shim = _SubseqLoadShim(service)
-    with service:
+    with PreemptionHandler() as ph, service:
+        _drain_on_preempt(ph, service)
         server = _obs_start(args, service)
         result = run_closed_loop(shim, workload, clients=args.clients,
                                  deadline_ms=spec.deadline_ms,
@@ -368,6 +392,7 @@ def serve_service(args):
     import json
 
     from ..data.timeseries import make_queries, make_wafer_like
+    from ..runtime.fault_tolerance import PreemptionHandler
     from ..serve import (SearchService, ServeConfig, WorkloadSpec,
                          check_exactness, make_workload, run_closed_loop)
 
@@ -375,7 +400,8 @@ def serve_service(args):
                       max_wait_ms=args.max_wait_ms, alphabet=args.alphabet,
                       default_deadline_ms=args.deadline_ms or None,
                       backend=args.backend, quantization=args.quantization,
-                      trace=args.trace, profile_dir=args.profile_dir)
+                      trace=args.trace, profile_dir=args.profile_dir,
+                      failover_shards=args.failover_shards)
     if args.index_dir:
         t0 = time.perf_counter()
         service = SearchService.from_store(args.index_dir, cfg)
@@ -405,7 +431,8 @@ def serve_service(args):
                         epsilon=args.epsilon,
                         deadline_ms=args.deadline_ms or None)
     workload = make_workload(queries, spec)
-    with service:
+    with PreemptionHandler() as ph, service:
+        _drain_on_preempt(ph, service)
         server = _obs_start(args, service)
         result = run_closed_loop(service, workload, clients=args.clients,
                                  deadline_ms=spec.deadline_ms,
@@ -481,6 +508,12 @@ def main(argv=None):
                          "TPU and uses the XLA engine elsewhere; 'pallas' "
                          "off-TPU runs the kernels in interpret mode "
                          "(slow — parity/debug only)")
+    ap.add_argument("--failover-shards", type=int, default=0, metavar="P",
+                    help="with --serve: split the database over P "
+                         "independently-queried shards with timeout/retry "
+                         "failover — shard loss degrades to a certified-"
+                         "partial answer (exact=False + coverage) instead "
+                         "of an outage (0 = off; full precision only)")
     ap.add_argument("--quantization", default="none",
                     choices=("none", "bf16", "int8"),
                     help="with --serve: quantized resident tier for the "

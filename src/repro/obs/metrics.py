@@ -16,6 +16,7 @@ CI smoke job asserts against the scraped endpoint.
 """
 from __future__ import annotations
 
+import json
 import threading
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
@@ -33,6 +34,13 @@ REQUIRED_FAMILIES = (
     "repro_events_total",
     "repro_calibration_rel_err",
     "repro_roofline_fraction",
+    # Fault-tolerance surface (PR 9, DESIGN.md §12): degraded (partial-
+    # coverage) answers, circuit-breaker state, failover retries/hedges,
+    # and background generation-swap outcomes.
+    "repro_degraded_total",
+    "repro_breaker_state",
+    "repro_retries_total",
+    "repro_refresh_swaps_total",
 )
 
 _LABEL_ESC = str.maketrans({"\\": r"\\", '"': r"\"", "\n": r"\n"})
@@ -79,7 +87,7 @@ def build_registry(snapshot: dict, calibration: dict | None = None,
     shape when tracing is off."""
     reg = MetricsRegistry()
     for outcome in ("served", "rejected_queue_full", "rejected_deadline",
-                    "failed"):
+                    "rejected_shed", "failed"):
         reg.add("repro_requests_total", snapshot.get(outcome, 0),
                 kind="counter", labels={"outcome": outcome},
                 help_text="Requests by terminal outcome")
@@ -125,6 +133,25 @@ def build_registry(snapshot: dict, calibration: dict | None = None,
                 labels={"kind": kind},
                 help_text="Backend events: capacity escalations, "
                           "pallas->xla demotions, exactness certificates")
+    reg.add("repro_degraded_total", events.get("degraded", 0),
+            kind="counter",
+            help_text="Answers served with exact=False (partial shard "
+                      "coverage under failover)")
+    reg.add("repro_breaker_state", snapshot.get("breaker_state_code", 0),
+            labels={"state": snapshot.get("breaker_state", "closed")},
+            help_text="Dispatch circuit breaker: 0=closed 1=half_open "
+                      "2=open")
+    for kind in ("retries", "hedges"):
+        reg.add("repro_retries_total", events.get(kind, 0), kind="counter",
+                labels={"kind": kind},
+                help_text="Failover re-attempts: transient-fault retries "
+                          "and straggler hedges")
+    for result in ("swap", "failure"):
+        reg.add("repro_refresh_swaps_total",
+                events.get(f"refresh_{result}s", 0), kind="counter",
+                labels={"result": result},
+                help_text="Background generation-swap outcomes "
+                          "(non-blocking live-ingest refresh)")
     cal = calibration or {}
     reg.add("repro_calibration_rel_err", cal.get("mean_abs_rel_err", 0.0),
             labels={"agg": "mean_abs"},
@@ -142,9 +169,14 @@ def build_registry(snapshot: dict, calibration: dict | None = None,
 
 class _MetricsHandler(BaseHTTPRequestHandler):
     render_fn = staticmethod(lambda: "")
+    health_fn = None   # () -> (ready: bool, body: dict) | None
 
     def do_GET(self):  # noqa: N802  (http.server API)
-        if self.path.split("?")[0].rstrip("/") not in ("", "/metrics"):
+        path = self.path.split("?")[0].rstrip("/")
+        if path == "/healthz":
+            self._do_healthz()
+            return
+        if path not in ("", "/metrics"):
             self.send_error(404)
             return
         body = type(self).render_fn().encode()
@@ -155,17 +187,38 @@ class _MetricsHandler(BaseHTTPRequestHandler):
         self.end_headers()
         self.wfile.write(body)
 
+    def _do_healthz(self):
+        """Readiness: 200 while the service can accept work, 503 while
+        the breaker is open or a drain is in progress — the signal a
+        load balancer uses to route around a degraded replica."""
+        health_fn = type(self).health_fn
+        if health_fn is None:
+            self.send_error(404)
+            return
+        ready, detail = health_fn()
+        body = json.dumps(detail).encode()
+        self.send_response(200 if ready else 503)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
     def log_message(self, *args):  # silence per-scrape stderr noise
         pass
 
 
-def start_metrics_server(render_fn, port: int, host: str = "127.0.0.1"):
+def start_metrics_server(render_fn, port: int, host: str = "127.0.0.1",
+                         health_fn=None):
     """Serve ``render_fn()`` at ``http://host:port/metrics`` from a daemon
-    thread.  Returns the ``ThreadingHTTPServer`` — call ``.shutdown()``
+    thread.  When ``health_fn`` is given (``() -> (ready, detail_dict)``),
+    ``/healthz`` answers 200/503 readiness with the detail as JSON.
+    Returns the ``ThreadingHTTPServer`` — call ``.shutdown()``
     to stop; ``.server_address[1]`` carries the bound port (pass 0 to let
     the OS pick one, as the tests do)."""
     handler = type("_BoundMetricsHandler", (_MetricsHandler,),
-                   {"render_fn": staticmethod(render_fn)})
+                   {"render_fn": staticmethod(render_fn),
+                    "health_fn": staticmethod(health_fn)
+                    if health_fn is not None else None})
     server = ThreadingHTTPServer((host, int(port)), handler)
     thread = threading.Thread(target=server.serve_forever,
                               name="repro-metrics", daemon=True)

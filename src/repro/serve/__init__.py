@@ -6,8 +6,10 @@ micro-batching into shape-bucketed device passes, warm start from any
 committed ``repro.index`` store, live ingest through ``MutableIndex``
 with commit-triggered refresh, and p50/p95/p99 latency accounting.
 """
-from .batcher import (FAILED, KIND_KNN, KIND_RANGE, OK, REJECTED_DEADLINE,
-                      REJECTED_QUEUE_FULL, MicroBatcher, Request)
+from .batcher import (BREAKER_CLOSED, BREAKER_HALF_OPEN, BREAKER_OPEN,
+                      FAILED, KIND_KNN, KIND_RANGE, OK, REJECTED_DEADLINE,
+                      REJECTED_QUEUE_FULL, REJECTED_SHED, CircuitBreaker,
+                      MicroBatcher, Request)
 from .loadgen import (LoadResult, WorkloadSpec, check_exactness,
                       make_workload, run_closed_loop, run_saturated,
                       run_sequential)
@@ -15,9 +17,11 @@ from .service import SearchService, ServeConfig, SubseqSearchService
 from .stats import StatsTracker
 
 __all__ = [
-    "FAILED", "KIND_KNN", "KIND_RANGE", "OK", "REJECTED_DEADLINE",
-    "REJECTED_QUEUE_FULL", "MicroBatcher", "Request", "LoadResult",
-    "WorkloadSpec", "check_exactness", "make_workload", "run_closed_loop",
-    "run_saturated", "run_sequential", "SearchService", "ServeConfig",
+    "BREAKER_CLOSED", "BREAKER_HALF_OPEN", "BREAKER_OPEN", "FAILED",
+    "KIND_KNN", "KIND_RANGE", "OK", "REJECTED_DEADLINE",
+    "REJECTED_QUEUE_FULL", "REJECTED_SHED", "CircuitBreaker",
+    "MicroBatcher", "Request", "LoadResult", "WorkloadSpec",
+    "check_exactness", "make_workload", "run_closed_loop", "run_saturated",
+    "run_sequential", "SearchService", "ServeConfig",
     "SubseqSearchService", "StatsTracker",
 ]

@@ -22,7 +22,7 @@ from typing import Optional
 
 import numpy as np
 
-from .batcher import KIND_KNN, KIND_RANGE, OK
+from .batcher import FAILED, KIND_KNN, KIND_RANGE, OK, REJECTED_SHED
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,6 +74,9 @@ class LoadResult:
                 1 for s in self.statuses if s == "rejected_deadline"),
             "rejected_queue_full": sum(
                 1 for s in self.statuses if s == "rejected_queue_full"),
+            "rejected_shed": sum(
+                1 for s in self.statuses if s == REJECTED_SHED),
+            "failed": sum(1 for s in self.statuses if s == FAILED),
             "dropped_in_deadline": self.dropped_in_deadline,
             "wall_s": round(self.wall_s, 3),
             "qps": round(self.qps, 1),
@@ -117,7 +120,12 @@ def run_closed_loop(service, workload: list, clients: int = 8,
             else:
                 req = service.submit_range(q, eps, deadline_ms=deadline_ms)
             requests[i] = req
-            req.wait(timeout_s)
+            try:
+                req.wait(timeout_s)
+            except Exception:   # noqa: BLE001 — FAILED re-raise / timeout
+                pass            # must not kill the worker: the terminal
+            #                     status (or lack of one) is the record,
+            #                     and the rest of the workload still runs.
             t_done[i] = time.perf_counter()
 
     threads = [threading.Thread(target=worker, daemon=True)
@@ -157,7 +165,10 @@ def run_saturated(service, workload: list, timeout_s: float = 120.0,
             requests[i] = service.submit_range(q, eps,
                                                deadline_ms=deadline_ms)
     for i, req in enumerate(requests):
-        req.wait(timeout_s)
+        try:
+            req.wait(timeout_s)
+        except Exception:       # noqa: BLE001 — see run_closed_loop
+            pass
         t_done[i] = time.perf_counter()
     wall = time.perf_counter() - t0
     return _load_result(workload, requests, t_done, wall, jsonl_path)
@@ -171,7 +182,8 @@ def _load_result(workload: list, requests: list, t_done: list,
     # be served or rejected-for-deadline *before* its deadline — anything
     # else is a drop the operator must see.
     dropped = sum(1 for s in statuses if s not in
-                  (OK, "rejected_deadline", "rejected_queue_full"))
+                  (OK, "rejected_deadline", "rejected_queue_full",
+                   REJECTED_SHED, FAILED))
     served = sum(1 for s in statuses if s == OK)
     if jsonl_path is not None:
         _write_request_log(jsonl_path, workload, requests, t_done)

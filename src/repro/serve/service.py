@@ -34,6 +34,7 @@ import threading
 import time
 from typing import Optional, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -49,8 +50,9 @@ from ..core.representation import DEFAULT_STACK
 from ..obs.calibration import CalibrationLog
 from ..obs.spans import SpanRecorder, profiler_capture
 from ..obs.trace import select_queries, trace_totals
-from .batcher import (FAILED, KIND_KNN, KIND_RANGE, OK, MicroBatcher,
-                      Request)
+from ..runtime import chaos
+from .batcher import (BREAKER_OPEN, FAILED, KIND_KNN, KIND_RANGE, OK,
+                      REJECTED_SHED, CircuitBreaker, MicroBatcher, Request)
 from .stats import StatsTracker
 
 
@@ -75,6 +77,19 @@ class ServeConfig:
     dense_fallback_frac: float = 0.125   # capacity > frac·B → dense dispatch
     refresh_min_interval_s: float = 0.0   # live-ingest refresh throttle
     warmup_ks: Sequence[int] = (8,)       # k buckets to precompile
+    # --- fault tolerance (DESIGN.md §12) — defaults keep today's behavior
+    # except the breaker (pure win: sheds instead of FAILED-storming) and
+    # the non-blocking generation swap (commit-refresh no longer stalls
+    # the dispatch loop; refresh(force=True) stays synchronous).
+    failover_shards: int = 0       # >0: serve through FailoverShards
+    #                                (from_series splits into this many;
+    #                                from_store uses the store's count)
+    shard_timeout_s: float = 30.0  # per-shard attempt timeout floor
+    shard_retries: int = 2         # transient-fault retries per shard
+    shard_backoff_s: float = 0.02  # exponential-backoff base
+    breaker_threshold: int = 5     # consecutive dispatch failures → open
+    breaker_cooldown: int = 8      # shed batches before half-open probe
+    async_refresh: bool = True     # background device upload on commit
     # --- observability (DESIGN.md §10) — all OFF by default: the untraced
     # hot path is byte-for-byte the pre-observability code path.
     trace: bool = False            # cascade counters + spans + calibration
@@ -140,13 +155,25 @@ class _SingleBackend:
     def size(self) -> int:
         return self.index.series.shape[0]
 
-    def reload_from_host(self, host, ids=None):
-        """Live-ingest refresh hook: swap in a fresh upload of the
-        committed live view (whole-reference replacement — in-flight
-        batches finish on the old index)."""
-        self.index = device_index_from_host(host)
+    def prepare_from_host(self, host):
+        """Heavy half of a generation swap: build + upload the device
+        index and block until the transfer lands.  Runs off the dispatch
+        thread (the non-blocking swap, DESIGN.md §12) — nothing here
+        touches the serving state."""
+        index = device_index_from_host(host)
+        jax.block_until_ready(index.series)
+        return index
+
+    def install(self, prepared):
+        """Cheap half: whole-reference swap (caller holds the refresh
+        lock; in-flight batches finished on the old index)."""
+        self.index = prepared
         self.backend = stack_backend(self.index,
                                      resolve_backend(self.cfg.backend))
+
+    def reload_from_host(self, host, ids=None):
+        """Live-ingest refresh hook: synchronous prepare + install."""
+        self.install(self.prepare_from_host(host))
 
     def _note_demotion(self, k: int):
         if (self.stats is not None and self.backend == "pallas"
@@ -261,10 +288,18 @@ class _QuantizedBackend:
     def size(self) -> int:
         return int(self.tindex.size)
 
-    def reload_from_host(self, host, ids=None):
+    def prepare_from_host(self, host):
         from ..core.engine import TieredIndex
 
-        self.tindex = TieredIndex.from_host(host, self.tindex.mode)
+        tiered = TieredIndex.from_host(host, self.tindex.mode)
+        jax.block_until_ready(tiered.dev.series)
+        return tiered
+
+    def install(self, prepared):
+        self.tindex = prepared
+
+    def reload_from_host(self, host, ids=None):
+        self.install(self.prepare_from_host(host))
 
     def trace_bytes(self, trace) -> dict:
         from ..core.engine import tiered_trace_bytes
@@ -395,6 +430,74 @@ class _ShardedBackend:
         return gidx, answer, d2, trace
 
 
+class _FailoverBackend:
+    """Fault-tolerant sharded serving (DESIGN.md §12): wraps
+    ``core.dist_search.FailoverShards`` — per-shard timeouts, retries,
+    down-marking and probing — behind the backend dispatch interface.
+
+    Unlike the collective ``_ShardedBackend``, a dispatch here can
+    *partially* succeed: the merged answer covers only the surviving
+    shards, and ``last_coverage`` carries the ShardCoverage certificate
+    the service attaches to every request of the batch (``exact=False``
+    + coverage fields when any shard was lost)."""
+
+    def __init__(self, engine, cfg: ServeConfig):
+        self.engine = engine
+        self.cfg = cfg
+        self._stats: Optional[StatsTracker] = None
+        self.last_coverage = None
+
+    @property
+    def stats(self):
+        return self._stats
+
+    @stats.setter
+    def stats(self, tracker):
+        self._stats = tracker
+        if tracker is not None:
+            def _on_event(kind, n=1):
+                if kind == "retries":
+                    tracker.on_retry(n)
+                elif kind == "hedges":
+                    tracker.on_hedge(n)
+            self.engine.on_event = _on_event
+
+    @property
+    def n(self) -> int:
+        return self.engine.n
+
+    @property
+    def size(self) -> int:
+        return self.engine.size
+
+    def cost_estimate(self, Q: int, k: int) -> dict:
+        from ..core.cost_model import fused_pass_estimate
+
+        b_max = max(int(s.series.shape[0]) for s in self.engine.shards)
+        return fused_pass_estimate(Q, b_max, self.n, self.engine.levels,
+                                   self.engine.alphabet, k=int(k))
+
+    def trace_bytes(self, trace) -> dict:
+        from ..obs.trace import screen_row_bytes, tier_bytes
+
+        rb = screen_row_bytes(self.engine.levels, self.engine.alphabet)
+        return tier_bytes(trace, self.size, rb, self.n)
+
+    def dispatch(self, q: np.ndarray, eps: np.ndarray, is_knn: np.ndarray,
+                 k: int, want_trace: bool = False):
+        gidx, answer, d2, overflow, cov = self.engine.query(
+            q, eps, np.asarray(is_knn), k)
+        self.last_coverage = cov
+        if self._stats is not None:
+            # Per-query certificate: capacity covers each full shard, so
+            # overflow is structurally False — a query is exact iff every
+            # shard answered.
+            bad = int(np.asarray(overflow).sum()) if cov.exact \
+                else gidx.shape[0]
+            self._stats.on_certificates(gidx.shape[0] - bad, gidx.shape[0])
+        return gidx, answer, d2, None
+
+
 class SearchService:
     """Online range/k-NN service with dynamic micro-batching."""
 
@@ -419,6 +522,11 @@ class SearchService:
             self._dispatch, max_batch=cfg.max_batch, max_queue=cfg.max_queue,
             max_wait_ms=cfg.max_wait_ms, stats=self.stats,
             tracer=self.tracer)
+        # Dispatch circuit breaker (DESIGN.md §12): driven only by the
+        # dispatcher thread; read by /healthz and the metrics snapshot.
+        self.breaker = CircuitBreaker(threshold=cfg.breaker_threshold,
+                                      cooldown=cfg.breaker_cooldown)
+        self._refresh_thread: Optional[threading.Thread] = None
         # Serializes the (index, ids) swap against in-flight dispatches so
         # a batch never maps one generation's row positions through
         # another generation's ids (see _dispatch / refresh).
@@ -453,6 +561,19 @@ class SearchService:
                                       mesh, n_valid=n_valid,
                                       stack=tuple(cfg.stack))
             return cls(_ShardedBackend(index, mesh, n_valid, cfg), cfg)
+        if cfg.failover_shards:
+            if cfg.quantization != "none":
+                raise ValueError("failover serving is full-precision — "
+                                 "set quantization='none'")
+            from ..core.dist_search import FailoverShards
+            engine = FailoverShards.from_series(
+                np.asarray(series), cfg.failover_shards,
+                tuple(cfg.levels), cfg.alphabet, normalize=normalize,
+                stack=tuple(cfg.stack), timeout_s=cfg.shard_timeout_s,
+                retries=cfg.shard_retries, backoff_s=cfg.shard_backoff_s,
+                n_iters=cfg.n_iters,
+                normalize_queries=cfg.normalize_queries)
+            return cls(_FailoverBackend(engine, cfg), cfg)
         if cfg.quantization != "none":
             from ..core.engine import TieredIndex
             from ..core.fastsax import FastSAXConfig, build_index
@@ -512,12 +633,20 @@ class SearchService:
             tiered, _n_valid = _sharded.load_sharded_quantized(path)
             return cls(_QuantizedBackend(tiered, cfg), cfg)
         if manifest.get("kind") == _sharded._KIND:
-            from ..core.dist_search import load_sharded, make_data_mesh
             if quant:
                 raise ValueError(
                     "quantized serving of a full-precision sharded store "
                     "is not supported — restore it with "
                     "store_sharded_quantized, or set quantization='none'")
+            if cfg.failover_shards:
+                from ..core.dist_search import FailoverShards
+                engine = FailoverShards.from_store(
+                    path, timeout_s=cfg.shard_timeout_s,
+                    retries=cfg.shard_retries,
+                    backoff_s=cfg.shard_backoff_s, n_iters=cfg.n_iters,
+                    normalize_queries=cfg.normalize_queries)
+                return cls(_FailoverBackend(engine, cfg), cfg)
+            from ..core.dist_search import load_sharded, make_data_mesh
             mesh = mesh or make_data_mesh()
             index, n_valid = load_sharded(path, mesh)
             return cls(_ShardedBackend(index, mesh, n_valid, cfg), cfg)
@@ -541,6 +670,37 @@ class SearchService:
         if self._unsubscribe is not None:
             self._unsubscribe()
             self._unsubscribe = None
+
+    def drain(self, timeout_s: float = 30.0) -> bool:
+        """Graceful shutdown: refuse new work (submits resolve
+        REJECTED_SHED), let queued and in-flight batches finish, then
+        stop the dispatcher.  The SIGTERM path in ``launch/serve.py``
+        calls this so preemption never drops an accepted request.
+        Returns False if in-flight work did not finish in time."""
+        drained = self._batcher.drain(timeout_s=timeout_s)
+        if self._unsubscribe is not None:
+            self._unsubscribe()
+            self._unsubscribe = None
+        return drained
+
+    def health(self):
+        """Readiness probe body for ``/healthz``: ``(ready, detail)``.
+        Not ready while the dispatcher is down, a drain is in progress,
+        or the circuit breaker is open — the signal a load balancer uses
+        to route around this replica while it sheds."""
+        detail = {
+            "running": self._batcher.running,
+            "draining": self._batcher.draining,
+            "breaker": self.breaker.state,
+            "generation": self._loaded_gen,
+            "stale": self._stale,
+        }
+        cov = getattr(self.backend, "last_coverage", None)
+        if cov is not None:
+            detail["coverage"] = cov.as_dict()
+        ready = (self._batcher.running and not self._batcher.draining
+                 and self.breaker.state != BREAKER_OPEN)
+        return ready, detail
 
     def __enter__(self) -> "SearchService":
         return self.start()
@@ -636,6 +796,26 @@ class SearchService:
         mi = self.mutable
         if mi is None or not (self._stale or force):
             return
+        if not force and self.cfg.async_refresh \
+                and hasattr(self.backend, "prepare_from_host"):
+            # Non-blocking generation swap (DESIGN.md §12): the
+            # dispatcher only *kicks* the background upload and keeps
+            # serving the current generation; _refresh_bg installs the
+            # prepared index under the lock when the transfer is done.
+            if self._refresh_thread is not None \
+                    and self._refresh_thread.is_alive():
+                return
+            if (time.perf_counter() - self._last_refresh
+                    < self.cfg.refresh_min_interval_s):
+                return
+            if mi.generation == self._loaded_gen:
+                self._stale = False
+                return
+            self._refresh_thread = threading.Thread(
+                target=self._refresh_bg, name="repro-serve-refresh",
+                daemon=True)
+            self._refresh_thread.start()
+            return
         with self._refresh_lock:
             if mi.generation == self._loaded_gen:
                 self._stale = False
@@ -645,17 +825,52 @@ class SearchService:
                               < self.cfg.refresh_min_interval_s):
                 return
             gen = mi.generation
-            host, ids = mi.live_index()
-            self.backend.reload_from_host(host)
+            try:
+                host, ids = mi.live_index()
+                chaos.maybe_fire("device_upload", key=str(gen))
+                self.backend.reload_from_host(host)
+            except BaseException:
+                self.stats.on_refresh_failure()
+                self._stale = True
+                raise
             self._ids = np.asarray(ids, dtype=np.int64)
             self._loaded_gen = gen
             self._last_refresh = now
             # A commit racing with the upload re-flags via the hook; only
             # clear staleness if the generation we loaded is still current.
             self._stale = mi.generation != gen
+        self.stats.on_refresh_swap()
+
+    def _refresh_bg(self):
+        """Background half of the non-blocking swap: snapshot + upload
+        happen here with NO lock held (the dispatch loop keeps serving);
+        only the final whole-reference install takes the refresh lock.
+        A failed upload (e.g. an injected ``device_upload`` fault) keeps
+        serving the old generation and re-flags staleness — the next
+        batch boundary kicks a fresh attempt."""
+        mi = self.mutable
+        gen = mi.generation
+        try:
+            host, ids = mi.live_index()
+            chaos.maybe_fire("device_upload", key=str(gen))
+            prepared = self.backend.prepare_from_host(host)
+        except BaseException:   # noqa: BLE001 — serving must survive
+            self.stats.on_refresh_failure()
+            self._stale = True
+            return
+        with self._refresh_lock:
+            if gen <= self._loaded_gen:
+                return   # a forced refresh() overtook this upload
+            self.backend.install(prepared)
+            self._ids = np.asarray(ids, dtype=np.int64)
+            self._loaded_gen = gen
+            self._last_refresh = time.perf_counter()
+            self._stale = mi.generation != gen
+        self.stats.on_refresh_swap()
 
     def refresh(self):
-        """Force the device index to the committed epoch right now."""
+        """Force the device index to the committed epoch right now
+        (synchronous — returns only once served answers reflect it)."""
         self._maybe_refresh(force=True)
 
     # --- dispatch -----------------------------------------------------------
@@ -663,6 +878,19 @@ class SearchService:
     def _dispatch(self, batch: list):
         """MicroBatcher callback: one padded, bucketed device pass."""
         self._maybe_refresh()
+        if not self.breaker.allow():
+            # Breaker open: shed the whole batch with a *rejected* status
+            # — controlled backpressure, not a FAILED storm against a
+            # backend we already know is down (DESIGN.md §12).
+            n_shed = 0
+            for req in batch:
+                if not req._done.is_set():
+                    req._resolve(REJECTED_SHED)
+                    n_shed += 1
+            self.stats.on_shed(n_shed)
+            self.stats.set_breaker(self.breaker.state,
+                                   self.breaker.state_code)
+            return
         Q = len(batch)
         qb = _pow2_at_least(Q, self.cfg.max_batch)
         n = self.backend.n
@@ -697,13 +925,25 @@ class SearchService:
         # Hold the refresh lock across dispatch + ids snapshot: a
         # concurrent refresh() must not swap in a new generation's ids
         # between the device pass and the id mapping.
-        with self._refresh_lock:
-            t0 = time.perf_counter()
-            with profiler_capture(self.cfg.profile_dir):
-                idx, answer, d2, trace = self.backend.dispatch(
-                    q, eps, is_knn, k_bucket, want_trace=tracing)
-            t1 = time.perf_counter()
-            ids = self._ids
+        try:
+            with self._refresh_lock:
+                t0 = time.perf_counter()
+                chaos.maybe_fire("serve_dispatch")
+                with profiler_capture(self.cfg.profile_dir):
+                    idx, answer, d2, trace = self.backend.dispatch(
+                        q, eps, is_knn, k_bucket, want_trace=tracing)
+                t1 = time.perf_counter()
+                ids = self._ids
+                coverage = getattr(self.backend, "last_coverage", None)
+        except BaseException:
+            # The batcher resolves the batch FAILED; here we only feed
+            # the breaker so a persistent backend failure opens it.
+            self.breaker.on_failure()
+            self.stats.set_breaker(self.breaker.state,
+                                   self.breaker.state_code)
+            raise
+        self.breaker.on_success()
+        self.stats.set_breaker(self.breaker.state, self.breaker.state_code)
         if tracing:
             # The dispatch outputs are host numpy already (the backends
             # materialise them), so t1 − t0 covers the full device pass —
@@ -727,12 +967,14 @@ class SearchService:
                     self.stats.on_cascade(totals)
             with self.tracer.span("reply", batch=len(live)):
                 for i, req in live:
-                    self._finish(req, idx[i], answer[i], d2[i], ids)
+                    self._finish(req, idx[i], answer[i], d2[i], ids,
+                                 coverage)
             return
         for i, req in live:
-            self._finish(req, idx[i], answer[i], d2[i], ids)
+            self._finish(req, idx[i], answer[i], d2[i], ids, coverage)
 
-    def _finish(self, req: Request, idx_row, answer_row, d2_row, ids_map):
+    def _finish(self, req: Request, idx_row, answer_row, d2_row, ids_map,
+                coverage=None):
         if req.kind == KIND_KNN:
             finite = np.isfinite(d2_row)
             # Ascending (d², slot); slots are low-index compacted, so ties
@@ -748,6 +990,14 @@ class SearchService:
             dist = np.sqrt(d2_row[mask])
         rows, dist = self._postprocess(req, rows, dist)
         ids = rows if ids_map is None else ids_map[rows]
+        if coverage is not None:
+            # Certified-partial answer: the result is exact over the
+            # surviving shards only; the caller sees the gap instead of a
+            # silently-wrong "exact" answer (DESIGN.md §12).
+            req.exact = bool(coverage.exact)
+            req.coverage = coverage.as_dict()
+            if not req.exact:
+                self.stats.on_degraded()
         req._resolve(OK, ids=np.asarray(ids, dtype=np.int64),
                      distances=dist.astype(np.float64))
 
@@ -796,9 +1046,10 @@ class SearchService:
         with self._refresh_lock:
             idx, answer, d2, _ = self.backend.dispatch(q, eps, is_knn, kk)
             ids = self._ids
+            coverage = getattr(self.backend, "last_coverage", None)
         req = Request(kind=kind, query=q[0], epsilon=epsilon,
                       k=max(int(k), 1), meta=meta)
-        self._finish(req, idx[0], answer[0], d2[0], ids)
+        self._finish(req, idx[0], answer[0], d2[0], ids, coverage)
         return req.ids, req.distances
 
 

@@ -63,6 +63,19 @@ class StatsTracker:
         self.demotions = 0
         self.certified_exact = 0
         self.certified_total = 0
+        # Fault-tolerance counters (DESIGN.md §12): shed = breaker-open /
+        # draining rejections; degraded = answers served with exact=False
+        # (partial shard coverage); retries / hedges = transient-fault
+        # re-attempts and straggler re-dispatches in the failover engine;
+        # refresh swaps/failures = background generation-swap outcomes.
+        self.shed = 0
+        self.degraded = 0
+        self.retries = 0
+        self.hedges = 0
+        self.refresh_swaps = 0
+        self.refresh_failures = 0
+        self.breaker_state = "closed"
+        self.breaker_state_code = 0
         self.cascade = collections.Counter({k: 0 for k in CASCADE_KEYS})
         self._latency = collections.deque(maxlen=_RING)
         self._occupancy = collections.deque(maxlen=_RING)
@@ -110,6 +123,35 @@ class StatsTracker:
             self.certified_exact += int(exact)
             self.certified_total += int(total)
 
+    def on_shed(self, n: int = 1):
+        with self._lock:
+            self.shed += n
+
+    def on_degraded(self, n: int = 1):
+        with self._lock:
+            self.degraded += n
+
+    def on_retry(self, n: int = 1):
+        with self._lock:
+            self.retries += n
+
+    def on_hedge(self, n: int = 1):
+        with self._lock:
+            self.hedges += n
+
+    def on_refresh_swap(self):
+        with self._lock:
+            self.refresh_swaps += 1
+
+    def on_refresh_failure(self):
+        with self._lock:
+            self.refresh_failures += 1
+
+    def set_breaker(self, state: str, code: int):
+        with self._lock:
+            self.breaker_state = state
+            self.breaker_state_code = int(code)
+
     def on_cascade(self, totals: dict):
         """Accumulate one traced dispatch's ``obs.trace.trace_totals`` /
         ``tier_bytes`` figures (any numeric keys; unknown keys are kept,
@@ -128,14 +170,18 @@ class StatsTracker:
             occ = np.asarray(self._occupancy, dtype=np.float64)
             depth = np.asarray(self._queue_depth, dtype=np.float64)
             elapsed = time.perf_counter() - self.t_start
-            rejected = self.rejected_queue_full + self.rejected_deadline
+            rejected = (self.rejected_queue_full + self.rejected_deadline
+                        + self.shed)
             denom = max(1, self.submitted)
             out = {
                 "submitted": self.submitted,
                 "served": self.served,
                 "rejected_queue_full": self.rejected_queue_full,
                 "rejected_deadline": self.rejected_deadline,
+                "rejected_shed": self.shed,
                 "failed": self.failed,
+                "breaker_state": self.breaker_state,
+                "breaker_state_code": self.breaker_state_code,
                 "batches": self.batches,
                 "elapsed_s": round(elapsed, 3),
                 "qps": round(self.served / elapsed, 1) if elapsed > 0 else 0.0,
@@ -149,6 +195,11 @@ class StatsTracker:
                     "demotions": self.demotions,
                     "certified_exact": self.certified_exact,
                     "certified_total": self.certified_total,
+                    "degraded": self.degraded,
+                    "retries": self.retries,
+                    "hedges": self.hedges,
+                    "refresh_swaps": self.refresh_swaps,
+                    "refresh_failures": self.refresh_failures,
                 },
                 "cascade": dict(self.cascade),
             }

@@ -1,0 +1,667 @@
+"""Fault-tolerant serving tests (DESIGN.md §12).
+
+Covers the chaos harness and every recovery layer built on it:
+  * ``runtime/chaos``: windowed, seeded, bit-replayable fault decisions;
+    zero-surprise no-op when no plan is installed;
+  * ``core/dist_search.FailoverShards``: healthy parity with the
+    single-index engine (and the f64 oracle), retry-heals-transient,
+    certified-partial answers under shard loss, down-marking + probe
+    revival, straggler timeout hedging, total-loss FailoverError;
+  * the serving layer: degraded certificates on Requests, circuit-breaker
+    shedding instead of FAILED storms, graceful drain, loud batcher
+    failure modes (hung dispatcher, dispatch that forgets to resolve),
+    synchronous + background generation swap under injected upload
+    faults;
+  * the store: injected truncation trips the manifest shape validation
+    (never a silent short read), for both the full-precision and the
+    quantized reader;
+  * the observability surface: /healthz readiness and the new metric
+    families.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.core.dist_search import (FailoverError, FailoverShards,
+                                    ShardCoverage)
+from repro.core.engine import (build_device_index, mixed_query,
+                               represent_queries)
+from repro.data.timeseries import make_queries, make_wafer_like
+from repro.runtime import chaos
+from repro.serve import (BREAKER_CLOSED, BREAKER_HALF_OPEN, BREAKER_OPEN,
+                         FAILED, OK, REJECTED_SHED, CircuitBreaker,
+                         MicroBatcher, Request, SearchService, ServeConfig)
+from repro.serve.batcher import KIND_KNN
+
+B, N, LEVELS, ALPHA = 64, 128, (4, 8), 8
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_plan():
+    yield
+    chaos.uninstall()
+
+
+@pytest.fixture(scope="module")
+def db():
+    return make_wafer_like(B, N, seed=0, normalize=False)
+
+
+@pytest.fixture(scope="module")
+def queries(db):
+    return make_queries(db, 3, seed=1)
+
+
+def _shards(db, **kw):
+    kw.setdefault("retries", 1)
+    kw.setdefault("backoff_s", 0.001)
+    return FailoverShards.from_series(db, 4, LEVELS, ALPHA,
+                                      normalize=False,
+                                      normalize_queries=False, **kw)
+
+
+def _query(eng, queries, eps=2.0, k=5):
+    Q = queries.shape[0]
+    eps_v = np.full(Q, eps, np.float32)
+    is_knn = np.zeros(Q, dtype=bool)
+    is_knn[-1] = True
+    return eng.query(queries, eps_v, is_knn, k), is_knn
+
+
+def _sets(gidx, answer, d2, is_knn, k=5):
+    out = []
+    for i in range(gidx.shape[0]):
+        if is_knn[i]:
+            dd = np.asarray(d2[i])
+            fin = np.isfinite(dd)
+            order = np.lexsort((np.arange(dd.size), dd))
+            out.append(set(np.asarray(gidx[i])[order[fin[order]][:k]]
+                           .tolist()))
+        else:
+            m = np.asarray(answer[i]) & np.isfinite(np.asarray(d2[i]))
+            out.append(set(np.asarray(gidx[i])[m].tolist()))
+    return out
+
+
+def _oracle(db, queries, rows, eps=2.0, k=5):
+    d2 = ((queries[:, None, :].astype(np.float64)
+           - db[None, rows, :].astype(np.float64)) ** 2).sum(-1)
+    gids = np.asarray(rows)
+    return ([set(gids[d2[i] <= eps * eps + 1e-9].tolist())
+             for i in range(queries.shape[0])],
+            [set(gids[np.argsort(d2[i], kind="stable")[:k]].tolist())
+             for i in range(queries.shape[0])])
+
+
+# ---------------------------------------------------------------------------
+# The harness itself.
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_window_and_first_match():
+    plan = chaos.FaultPlan(seed=0, specs=[
+        chaos.FaultSpec(site="s", key="a", start=2, stop=4),
+        chaos.FaultSpec(site="s", mode="slow")])
+    # key "a": windowed raise wins inside [2, 4), the any-key slow
+    # spec catches everything else.
+    hits = [plan.decide("s", "a").mode for _ in range(6)]
+    assert hits == ["slow", "slow", "raise", "raise", "slow", "slow"]
+    assert plan.decide("s", "b").mode == "slow"
+    assert plan.invocations("s", "a") == 6
+    assert plan.fired_count("s") == 7
+
+
+def test_fault_plan_probability_is_seed_deterministic():
+    def fires(seed):
+        p = chaos.FaultPlan(seed=seed, specs=[
+            chaos.FaultSpec(site="s", p=0.5)])
+        return [p.decide("s", None) is not None for _ in range(64)]
+
+    a, b, c = fires(1), fires(1), fires(2)
+    assert a == b, "same seed must replay bit-identically"
+    assert a != c, "different seeds must differ"
+    assert 10 < sum(a) < 54, "p=0.5 should fire roughly half the time"
+
+
+def test_disabled_harness_is_a_no_op():
+    assert not chaos.active()
+    chaos.maybe_fire("anything", key="x")        # must not raise
+    a = np.arange(7)
+    assert chaos.apply("anything", "x", a) is a  # identity, same object
+
+
+def test_injected_context_installs_and_always_uninstalls():
+    plan = chaos.FaultPlan(seed=0, specs=[chaos.FaultSpec(site="s")])
+    with pytest.raises(chaos.FaultInjected):
+        with chaos.injected(plan):
+            assert chaos.active()
+            chaos.maybe_fire("s")
+    assert not chaos.active()
+
+
+def test_truncate_shears_values_and_raises_without_one():
+    plan = chaos.FaultPlan(seed=0, specs=[
+        chaos.FaultSpec(site="s", mode="truncate", frac=0.5)])
+    with chaos.injected(plan):
+        out = chaos.apply("s", None, np.arange(10))
+        assert out.shape == (5,)
+        with pytest.raises(chaos.FaultInjected):
+            chaos.maybe_fire("s")   # no value to shear -> loud
+
+
+# ---------------------------------------------------------------------------
+# Failover engine.
+# ---------------------------------------------------------------------------
+
+def test_failover_healthy_parity_with_single_index(db, queries):
+    eng = _shards(db)
+    (gidx, answer, d2, _ovf, cov), is_knn = _query(eng, queries)
+    eng.close()
+    assert cov.exact and cov.rows_ok == B
+    ref = build_device_index(db, LEVELS, ALPHA, normalize=False)
+    qr = represent_queries(queries, LEVELS, ALPHA, normalize=False)
+    ridx, rans, rd2, _ = mixed_query(ref, qr, np.full(3, 2.0, np.float32),
+                                     is_knn, 5, capacity=B, n_iters=2)
+    ridx, rans, rd2 = map(np.asarray, (ridx, rans, rd2))
+    assert _sets(gidx, answer, d2, is_knn) == _sets(ridx, rans, rd2, is_knn)
+    r_or, k_or = _oracle(db, queries, np.arange(B))
+    got = _sets(gidx, answer, d2, is_knn)
+    assert got[:2] == r_or[:2] and got[2] == k_or[2]
+
+
+def test_failover_shard_loss_gives_certified_partial_answer(db, queries):
+    eng = _shards(db)
+    per = B // 4
+    survivors = np.r_[np.arange(0, per), np.arange(2 * per, B)]
+    r_or, k_or = _oracle(db, queries, survivors)
+    plan = chaos.FaultPlan(seed=5, specs=[
+        chaos.FaultSpec(site="shard_query", key="1")])
+    with chaos.injected(plan):
+        (gidx, answer, d2, _ovf, cov), is_knn = _query(eng, queries)
+    assert not cov.exact
+    assert (cov.shards_ok, cov.shards_total) == (3, 4)
+    assert (cov.rows_ok, cov.rows_total) == (B - per, B)
+    got = _sets(gidx, answer, d2, is_knn)
+    assert got[:2] == r_or[:2] and got[2] == k_or[2], \
+        "degraded answers must be exact over the surviving rows"
+    # Fault cleared: the very next dispatch is exact again.
+    (_, _, _, _, cov2), _ = _query(eng, queries)
+    eng.close()
+    assert cov2.exact and cov2.rows_ok == B
+
+
+def test_failover_retry_heals_single_transient_fault(db, queries):
+    eng = _shards(db, retries=2)
+    # Exactly one faulted attempt: the retry resubmission must recover
+    # full coverage within the same dispatch.
+    plan = chaos.FaultPlan(seed=5, specs=[
+        chaos.FaultSpec(site="shard_query", key="2", start=0, stop=1)])
+    with chaos.injected(plan):
+        (_, _, _, _, cov), _ = _query(eng, queries)
+    assert cov.exact, "a transient fault must be healed by retry"
+    assert eng.events["retries"] >= 1
+    assert eng.shard_states() == ["up"] * 4
+    eng.close()
+
+
+def test_failover_down_marking_and_probe_revival(db, queries):
+    eng = _shards(db, retries=0, down_threshold=2, probe_every=2)
+    plan = chaos.FaultPlan(seed=5, specs=[
+        chaos.FaultSpec(site="shard_query", key="3")])
+    with chaos.injected(plan):
+        for _ in range(3):
+            (_, _, _, _, cov), _ = _query(eng, queries)
+    assert eng.shard_states()[3] == "down"
+    assert eng.events["shard_down"] == 1
+    # Fault cleared: probes bring the shard back within probe_every
+    # dispatches, and coverage returns to exact.
+    for _ in range(2 * 2):
+        (_, _, _, _, cov), _ = _query(eng, queries)
+    eng.close()
+    assert eng.shard_states()[3] == "up"
+    assert cov.exact and cov.rows_ok == B
+
+
+def test_failover_straggler_timeout_hedges(db, queries):
+    eng = _shards(db, retries=1, timeout_s=0.15)
+    # Warm the jit cache first so the slow-injection sleep dominates.
+    _query(eng, queries)
+    plan = chaos.FaultPlan(seed=5, specs=[
+        chaos.FaultSpec(site="shard_query", key="0", mode="slow",
+                        delay_s=5.0)])
+    t0 = time.perf_counter()
+    with chaos.injected(plan):
+        (_, _, _, _, cov), _ = _query(eng, queries)
+    dt = time.perf_counter() - t0
+    eng.close()
+    assert not cov.exact and cov.shards_ok == 3
+    assert eng.events["hedges"] >= 1
+    assert dt < 4.0, "the dispatch must not wait out a 5s straggler"
+
+
+def test_failover_total_loss_raises(db, queries):
+    eng = _shards(db, retries=0)
+    plan = chaos.FaultPlan(seed=5, specs=[
+        chaos.FaultSpec(site="shard_query")])
+    with chaos.injected(plan):
+        with pytest.raises(FailoverError):
+            _query(eng, queries)
+    eng.close()
+
+
+def test_failover_from_store_round_trip(tmp_path, db, queries):
+    from repro.core.dist_search import (distributed_build, make_data_mesh,
+                                        pad_database, store_sharded)
+    from repro.core.paa import znormalize_np
+
+    mesh = make_data_mesh()
+    padded, n_valid = pad_database(db, mesh.shape["data"])
+    # distributed_build always z-normalizes, so the oracle lives in
+    # normalized space and queries go through the normalizing path too.
+    index = distributed_build(padded, LEVELS, ALPHA, mesh, n_valid=n_valid)
+    store_sharded(index, tmp_path / "idx", n_valid=n_valid)
+    eng = FailoverShards.from_store(tmp_path / "idx",
+                                    normalize_queries=True)
+    (gidx, answer, d2, _ovf, cov), is_knn = _query(eng, queries)
+    eng.close()
+    assert cov.exact and cov.rows_total == B
+    r_or, k_or = _oracle(znormalize_np(db), znormalize_np(queries),
+                         np.arange(B))
+    got = _sets(gidx, answer, d2, is_knn)
+    assert got[:2] == r_or[:2] and got[2] == k_or[2]
+
+
+def test_shard_coverage_dict_shape():
+    cov = ShardCoverage(shards_ok=2, shards_total=4, rows_ok=10,
+                        rows_total=20)
+    assert not cov.exact
+    assert cov.as_dict() == {"exact": False, "shards_ok": 2,
+                             "shards_total": 4, "rows_ok": 10,
+                             "rows_total": 20}
+
+
+# ---------------------------------------------------------------------------
+# Circuit breaker.
+# ---------------------------------------------------------------------------
+
+def test_breaker_state_machine():
+    br = CircuitBreaker(threshold=2, cooldown=2)
+    assert br.state == BREAKER_CLOSED and br.allow()
+    br.on_failure()
+    assert br.state == BREAKER_CLOSED, "one failure is not a streak"
+    br.on_failure()
+    assert br.state == BREAKER_OPEN
+    assert not br.allow() and not br.allow()     # two cooldown denials
+    assert br.allow(), "after cooldown the probe goes through"
+    assert br.state == BREAKER_HALF_OPEN
+    assert not br.allow(), "only one probe may be in flight"
+    br.on_failure()
+    assert br.state == BREAKER_OPEN, "failed probe re-opens"
+    [br.allow() for _ in range(2)]
+    assert br.allow() and br.state == BREAKER_HALF_OPEN
+    br.on_success()
+    assert br.state == BREAKER_CLOSED and br.allow()
+
+
+def test_breaker_threshold_zero_disables():
+    br = CircuitBreaker(threshold=0, cooldown=1)
+    for _ in range(50):
+        br.on_failure()
+        assert br.state == BREAKER_CLOSED and br.allow()
+
+
+def _one_request(svc, q, k=5):
+    req = svc.submit_knn(q, k)
+    try:
+        req.wait(30.0)
+    except Exception:   # noqa: BLE001 — FAILED re-raises by contract
+        pass
+    return req
+
+
+def test_service_breaker_sheds_instead_of_failed_storm(db):
+    cfg = ServeConfig(max_batch=4, max_wait_ms=0.5, levels=LEVELS,
+                      alphabet=ALPHA, normalize_queries=False,
+                      breaker_threshold=2, breaker_cooldown=3)
+    svc = SearchService.from_series(db, cfg, normalize=False)
+    svc.warmup(qs=(1,), ks=(5,))
+    q = db[3] + 0.01
+    plan = chaos.FaultPlan(seed=7, specs=[
+        chaos.FaultSpec(site="serve_dispatch")])
+    with svc:
+        with chaos.injected(plan):
+            statuses = [_one_request(svc, q).status for _ in range(8)]
+        # 2 failures trip the breaker; then 3 sheds, a failed probe,
+        # then sheds again — never another FAILED run.
+        assert statuses[:2] == [FAILED, FAILED]
+        assert statuses[2:5] == [REJECTED_SHED] * 3
+        assert statuses[5] == FAILED, "half-open probe hits the fault"
+        assert statuses[6:] == [REJECTED_SHED] * 2
+        assert svc.stats.snapshot()["breaker_state"] == BREAKER_OPEN
+        # Fault cleared: sheds continue only until the next probe, which
+        # succeeds and re-closes the breaker.
+        recovered = []
+        for _ in range(6):
+            recovered.append(_one_request(svc, q).status)
+            if recovered[-1] == OK:
+                break
+        assert recovered[-1] == OK
+        assert svc.stats.snapshot()["breaker_state"] == BREAKER_CLOSED
+        snap = svc.stats.snapshot()
+        assert snap["events"]["degraded"] == 0
+        assert snap["rejected_shed"] >= 5
+
+
+def test_service_failover_degraded_certificate(db):
+    cfg = ServeConfig(max_batch=4, max_wait_ms=0.5, levels=LEVELS,
+                      alphabet=ALPHA, normalize_queries=False,
+                      failover_shards=4, shard_retries=1,
+                      shard_backoff_s=0.001)
+    svc = SearchService.from_series(db, cfg, normalize=False)
+    q = db[3] + 0.01
+    with svc:
+        req = _one_request(svc, q)
+        assert req.status == OK and req.exact
+        assert req.coverage["rows_ok"] == B
+        plan = chaos.FaultPlan(seed=5, specs=[
+            chaos.FaultSpec(site="shard_query", key="1")])
+        with chaos.injected(plan):
+            req = _one_request(svc, q)
+        assert req.status == OK and not req.exact
+        assert req.coverage["shards_ok"] == 3
+        assert req.coverage["rows_ok"] == B - B // 4
+        req = _one_request(svc, q)
+        assert req.status == OK and req.exact
+    snap = svc.stats.snapshot()
+    assert snap["events"]["degraded"] == 1
+    assert snap["events"]["retries"] >= 1
+
+
+def test_quantized_plus_failover_is_rejected(db):
+    cfg = ServeConfig(failover_shards=2, quantization="int8")
+    with pytest.raises(ValueError, match="full-precision"):
+        SearchService.from_series(db, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Batcher failure paths (satellites).
+# ---------------------------------------------------------------------------
+
+def _req(q=None):
+    return Request(kind=KIND_KNN,
+                   query=np.zeros(4, np.float32) if q is None else q, k=1)
+
+
+def test_dispatch_that_forgets_a_request_fails_loudly():
+    def forgetful(batch):
+        batch[0]._resolve(OK, ids=np.empty(0, np.int64),
+                          distances=np.empty(0))
+        # ... and silently drops the rest of the batch.
+
+    b = MicroBatcher(forgetful, max_batch=4, max_wait_ms=0.0)
+    b.start()
+    r1, r2 = _req(), _req()
+    b.submit(r1)
+    b.submit(r2)
+    assert r1.wait(5.0) == OK
+    with pytest.raises(RuntimeError, match="without resolving"):
+        r2.wait(5.0)
+    assert r2.status == FAILED
+    b.stop()
+
+
+def test_dispatch_exception_fails_whole_batch():
+    def broken(batch):
+        raise ValueError("engine exploded")
+
+    b = MicroBatcher(broken, max_batch=4, max_wait_ms=0.0)
+    b.start()
+    r = b.submit(_req())
+    with pytest.raises(ValueError, match="engine exploded"):
+        r.wait(5.0)
+    assert b.stats.snapshot()["failed"] == 1
+    b.stop()
+
+
+def test_stop_raises_on_hung_dispatcher_and_is_idempotent():
+    release = threading.Event()
+
+    def hang(batch):
+        release.wait(10.0)
+        for r in batch:
+            r._resolve(OK, ids=np.empty(0, np.int64),
+                       distances=np.empty(0))
+
+    b = MicroBatcher(hang, max_batch=4, max_wait_ms=0.0,
+                     join_timeout_s=0.2)
+    b.start()
+    req = b.submit(_req())
+    time.sleep(0.05)        # let the dispatcher claim the batch
+    with pytest.raises(RuntimeError, match="hung"):
+        b.stop()
+    release.set()           # un-hang; the retried stop must now succeed
+    req.wait(5.0)
+    b.stop()
+    assert not b.running
+    b.stop()                # idempotent once cleanly stopped
+
+
+def test_drain_completes_queued_work_and_sheds_new_submits():
+    def slow_ok(batch):
+        time.sleep(0.1)
+        for r in batch:
+            r._resolve(OK, ids=np.empty(0, np.int64),
+                       distances=np.empty(0))
+
+    b = MicroBatcher(slow_ok, max_batch=8, max_wait_ms=20.0)
+    b.start()
+    accepted = [b.submit(_req()) for _ in range(3)]
+    out = {}
+    t = threading.Thread(
+        target=lambda: out.setdefault("drained", b.drain(5.0)))
+    t.start()
+    time.sleep(0.02)
+    assert b.draining
+    shed = b.submit(_req())
+    assert shed.status == REJECTED_SHED
+    t.join(10.0)
+    assert out["drained"] is True
+    assert [r.status for r in accepted] == [OK] * 3
+    assert not b.running
+
+
+def test_loadgen_workers_survive_failures_and_count_them(db):
+    from repro.serve import WorkloadSpec, make_workload, run_closed_loop
+
+    class _Stub:
+        def __init__(self, batcher):
+            self.b = batcher
+
+        def submit_knn(self, q, k, deadline_ms=None):
+            return self.b.submit(Request(kind=KIND_KNN, query=q, k=k))
+
+        def submit_range(self, q, eps, deadline_ms=None):
+            return self.b.submit(Request(kind="range", query=q,
+                                         epsilon=eps))
+
+    def broken(batch):
+        raise RuntimeError("backend down")
+
+    b = MicroBatcher(broken, max_batch=8, max_wait_ms=0.5)
+    b.start()
+    workload = make_workload(db[:4], WorkloadSpec(n_requests=12, seed=0))
+    # FAILED requests re-raise inside Request.wait — the worker threads
+    # must swallow that and keep the closed loop going.
+    result = run_closed_loop(_Stub(b), workload, clients=4, timeout_s=10.0)
+    b.stop()
+    summary = result.summary()
+    assert summary["failed"] == 12
+    assert summary["served"] == 0
+    assert summary["dropped_in_deadline"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Generation swap under injected upload faults.
+# ---------------------------------------------------------------------------
+
+def _mutable_service(tmp_path, db, **cfg_kw):
+    from repro.core.fastsax import FastSAXConfig
+    from repro.index.mutable import MutableIndex
+
+    root = tmp_path / "idx"
+    MutableIndex.create(root, db[:48], FastSAXConfig(n_segments=LEVELS,
+                                                     alphabet=ALPHA))
+    cfg = ServeConfig(max_batch=8, max_wait_ms=1.0, levels=LEVELS,
+                      alphabet=ALPHA, **cfg_kw)
+    return SearchService.from_store(root, cfg)
+
+
+def test_sync_refresh_fault_keeps_serving_then_recovers(tmp_path, db):
+    svc = _mutable_service(tmp_path, db, async_refresh=False)
+    with svc:
+        ids = svc.insert(db[48:50])
+        plan = chaos.FaultPlan(seed=5, specs=[
+            chaos.FaultSpec(site="device_upload")])
+        with chaos.injected(plan):
+            with pytest.raises(chaos.FaultInjected):
+                svc.refresh()
+        assert svc._stale, "failed upload must keep the staleness flag"
+        assert svc.stats.snapshot()["events"]["refresh_failures"] == 1
+        # Old generation still serves.
+        got, _ = svc.knn(db[3], 1)
+        assert got.size == 1
+        # Fault cleared: the forced refresh lands the new generation.
+        svc.refresh()
+        got, _ = svc.knn(db[48], 1)
+        assert got[0] == ids[0]
+        assert svc.stats.snapshot()["events"]["refresh_swaps"] == 1
+
+
+def test_async_refresh_swaps_in_background(tmp_path, db):
+    svc = _mutable_service(tmp_path, db, async_refresh=True)
+    with svc:
+        ids = svc.insert(db[48:50])
+        deadline = time.perf_counter() + 30.0
+        got = None
+        while time.perf_counter() < deadline:
+            got, _ = svc.knn(db[48], 1)      # each batch kicks the swap
+            if got.size and got[0] == ids[0]:
+                break
+            time.sleep(0.02)
+        assert got is not None and got[0] == ids[0]
+        assert svc.stats.snapshot()["events"]["refresh_swaps"] >= 1
+        assert svc._loaded_gen == svc.mutable.generation
+
+
+# ---------------------------------------------------------------------------
+# Store read faults: loud, never silent.
+# ---------------------------------------------------------------------------
+
+def _saved_index(tmp_path, db, quantization="none"):
+    from repro.core.fastsax import FastSAXConfig, build_index
+    from repro.index.store import save_index
+
+    built = build_index(db, FastSAXConfig(n_segments=LEVELS,
+                                          alphabet=ALPHA),
+                        normalize=False)
+    return save_index(built, tmp_path / "store", quantization=quantization)
+
+
+def test_store_read_truncation_trips_shape_validation(tmp_path, db):
+    from repro.index.store import load_index
+
+    path = _saved_index(tmp_path, db)
+    plan = chaos.FaultPlan(seed=5, specs=[
+        chaos.FaultSpec(site="store_read", key="series", mode="truncate",
+                        frac=0.5)])
+    with chaos.injected(plan):
+        with pytest.raises(IOError, match="does not match manifest"):
+            load_index(path)
+    # No plan: the same store loads clean.
+    assert load_index(path).size == B
+
+
+def test_quantized_load_faults_are_loud(tmp_path, db):
+    from repro.index.store import load_quantized
+
+    path = _saved_index(tmp_path, db, quantization="int8")
+    plan = chaos.FaultPlan(seed=5, specs=[
+        chaos.FaultSpec(site="store_read", key="qnorms", mode="truncate",
+                        frac=0.5)])
+    with chaos.injected(plan):
+        with pytest.raises(IOError, match="does not match manifest"):
+            load_quantized(path)
+    plan = chaos.FaultPlan(seed=5, specs=[
+        chaos.FaultSpec(site="store_read", key="qnorms")])
+    with chaos.injected(plan):
+        with pytest.raises(chaos.FaultInjected):
+            load_quantized(path)
+    assert load_quantized(path).mode == "int8"
+
+
+# ---------------------------------------------------------------------------
+# Observability: /healthz + the new metric families.
+# ---------------------------------------------------------------------------
+
+def test_healthz_readiness_and_new_metric_families(db):
+    import urllib.error
+    import urllib.request
+
+    from repro.obs.metrics import REQUIRED_FAMILIES, start_metrics_server
+
+    cfg = ServeConfig(max_batch=4, max_wait_ms=0.5, levels=LEVELS,
+                      alphabet=ALPHA, normalize_queries=False)
+    svc = SearchService.from_series(db, cfg, normalize=False)
+    server = start_metrics_server(svc.metrics_text, 0,
+                                  health_fn=svc.health)
+    port = server.server_address[1]
+    try:
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(f"http://127.0.0.1:{port}/healthz")
+        assert ei.value.code == 503, "not started -> not ready"
+        with svc:
+            resp = urllib.request.urlopen(
+                f"http://127.0.0.1:{port}/healthz")
+            assert resp.status == 200
+            body = urllib.request.urlopen(
+                f"http://127.0.0.1:{port}/metrics").read().decode()
+            for fam in REQUIRED_FAMILIES:
+                assert f"# TYPE {fam} " in body, f"missing family {fam}"
+            assert 'repro_breaker_state{state="closed"} 0' in body
+    finally:
+        server.shutdown()
+
+
+def test_healthz_404_without_health_fn():
+    import urllib.error
+    import urllib.request
+
+    from repro.obs.metrics import start_metrics_server
+
+    server = start_metrics_server(lambda: "", 0)
+    port = server.server_address[1]
+    try:
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(f"http://127.0.0.1:{port}/healthz")
+        assert ei.value.code == 404
+    finally:
+        server.shutdown()
+
+
+def test_service_drain_sheds_and_reports_health(db):
+    cfg = ServeConfig(max_batch=4, max_wait_ms=0.5, levels=LEVELS,
+                      alphabet=ALPHA, normalize_queries=False)
+    svc = SearchService.from_series(db, cfg, normalize=False)
+    svc.start()
+    ready, detail = svc.health()
+    assert ready and detail["breaker"] == BREAKER_CLOSED
+    req = _one_request(svc, db[3] + 0.01)
+    assert req.status == OK
+    assert svc.drain(timeout_s=10.0) is True
+    ready, detail = svc.health()
+    assert not ready and detail["draining"]
+    shed = svc.submit_knn(db[3], 1)
+    assert shed.status in (REJECTED_SHED, FAILED)
