@@ -1,0 +1,107 @@
+"""Distributed quantized screen (DESIGN.md §13): cross-host bytes moved
+and set-identity of the shard-resident int8/bf16 screen vs the
+full-precision distributed screen.
+
+The PR-10 acceptance claims, recorded per mode and ε:
+
+  * the record value is the quantized path's cross-host survivor-gather
+    bytes per query — the only buffers that leave a shard are the
+    compacted ``(gidx int32, valid bool)`` pair (5 B/slot), because the
+    exact distances are produced host-side from the raw verify tier;
+  * ``ratio_bytes`` — full-precision distributed screen bytes
+    (``gidx + answer + d2`` = 9 B/slot over ITS survivor buffers)
+    divided by the quantized path's, gated lower-is-worse: the
+    distributed tier must keep moving strictly fewer bytes cross-host;
+  * ``recall=1.0`` and ``exact=True`` — the distributed quantized
+    answers are SET-IDENTICAL to the single-host tiered engine and the
+    f64 brute-force oracle, with an always-exact certificate.
+
+Byte counts, answer sets, and escalated capacities are deterministic
+functions of the seeded dataset, so the smoke tier emits the same values
+and the bench gate diffs them against this file's committed baseline
+(``BENCH_dist_quant_pr10.json``).  Runs on however many devices the
+process sees (the CI gate sees one; the subprocess parity tests force
+eight) — the per-slot byte ratio is device-count-independent.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import dist_search as ds
+from repro.core.engine import (TieredIndex, quantized_range_query,
+                               represent_queries)
+from repro.core.fastsax import FastSAXConfig, build_index
+from repro.core.options import SearchOptions
+
+from .common import EPSILONS, LEVELS, database, emit, queries
+
+MODES = ("bf16", "int8")
+ALPHA = 10
+
+_FULL_SLOT = 4 + 1 + 4   # gidx int32 + answer bool + d2 f32, per slot
+_QUANT_SLOT = 4 + 1      # gidx int32 + valid bool — d2 comes from the
+#                          host-side raw verify, never from the wire
+
+
+def _answer_sets(gidx, answer):
+    gidx, answer = np.asarray(gidx), np.asarray(answer)
+    return [frozenset(gidx[i][answer[i]].tolist())
+            for i in range(gidx.shape[0])]
+
+
+def main() -> None:
+    import jax.numpy as jnp
+
+    db = np.asarray(database(), np.float32)
+    qs = np.asarray(queries(), np.float32)
+    Q = qs.shape[0]
+    mesh = ds.make_data_mesh()
+    P_sh = mesh.shape["data"]
+
+    host = build_index(db, FastSAXConfig(n_segments=LEVELS, alphabet=ALPHA),
+                       normalize=False)
+    padded, n_valid = ds.pad_database(db, P_sh)
+    full_index = ds.distributed_build(padded, LEVELS, ALPHA, mesh,
+                                      n_valid=n_valid)
+
+    d2_o = ((db[None, :, :].astype(np.float64)
+             - qs[:, None, :].astype(np.float64)) ** 2).sum(-1)
+
+    print("# cross-host survivor-gather bytes: quantized vs full precision")
+    print("# mode,eps,quant_bytes_per_q,full_bytes_per_q,ratio,recall,exact")
+    for mode in MODES:
+        tix = TieredIndex.from_host(host, mode)
+        dti = ds.distributed_tiered_index(tix, mesh)
+        qr = represent_queries(jnp.asarray(qs), LEVELS, ALPHA,
+                               normalize=False, stack=tix.dev.stack)
+        for eps in EPSILONS:
+            oracle = [frozenset(np.nonzero(d2_o[i] <= eps * eps)[0].tolist())
+                      for i in range(Q)]
+            gidx, ans, _d2, exact = ds.distributed_quantized_range_query(
+                dti, qs, eps, mesh,
+                options=SearchOptions(normalize_queries=False))
+            si, sa, _sd, _se = quantized_range_query(
+                tix, qr, eps, options=SearchOptions())
+            fg, fa, _fd, _fo = ds.distributed_range_query_auto(
+                full_index, qs, eps, mesh,
+                options=SearchOptions(normalize_queries=False))
+
+            got = _answer_sets(gidx, ans)
+            identical = (got == _answer_sets(si, sa)
+                         and got == _answer_sets(fg, fa)
+                         and bool(np.asarray(exact).all()))
+            hits = sum(len(g & o) for g, o in zip(got, oracle))
+            recall = hits / max(sum(len(o) for o in oracle), 1)
+
+            quant_bytes = int(np.asarray(gidx).shape[-1]) * _QUANT_SLOT
+            full_bytes = int(np.asarray(fg).shape[-1]) * _FULL_SLOT
+            ratio = full_bytes / quant_bytes
+            print(f"# {mode},{eps:.0f},{quant_bytes},{full_bytes},"
+                  f"{ratio:.2f},{recall:.3f},{identical}")
+            emit(f"dist_quantized/{mode}/eps{eps:.0f}", quant_bytes,
+                 f"ratio_bytes={ratio:.2f};recall={recall:.1f};"
+                 f"exact={identical};shards={P_sh}")
+
+
+if __name__ == "__main__":
+    main()

@@ -27,7 +27,7 @@ import time
 
 SUITES = ("table1", "figure2", "tightness", "pruning", "repr", "engine",
           "knn", "index_io", "serve", "subseq", "quantized", "obs",
-          "chaos")
+          "chaos", "dist_quantized")
 
 _CSV_LINE = re.compile(r"^([a-z0-9_][a-z0-9_/.+-]*),(-?[0-9.eE+]+),(.*)$")
 
@@ -75,10 +75,10 @@ def main() -> None:
         # Must land before the suite modules import benchmarks.common.
         os.environ["REPRO_BENCH_SMOKE"] = "1"
 
-    from . import (chaos_recovery, engine_throughput, figure2_curves,
-                   index_io, knn_latency, obs_overhead, pruning_power,
-                   quantized_memory, representations, serve_load,
-                   subseq_latency, table1_latency, tightness)
+    from . import (chaos_recovery, dist_quantized, engine_throughput,
+                   figure2_curves, index_io, knn_latency, obs_overhead,
+                   pruning_power, quantized_memory, representations,
+                   serve_load, subseq_latency, table1_latency, tightness)
     mains = {"table1": table1_latency.main, "figure2": figure2_curves.main,
              "tightness": tightness.main, "pruning": pruning_power.main,
              "repr": representations.main,
@@ -87,7 +87,8 @@ def main() -> None:
              "subseq": subseq_latency.main,
              "quantized": quantized_memory.main,
              "obs": obs_overhead.main,
-             "chaos": chaos_recovery.main}
+             "chaos": chaos_recovery.main,
+             "dist_quantized": dist_quantized.main}
     for name in chosen:
         if name not in mains:
             print(f"unknown suite {name!r}", file=sys.stderr)

@@ -44,7 +44,7 @@ REPO = pathlib.Path(__file__).resolve().parents[1]
 # reference distances, HBM-model ratios); its wall-clock lives in
 # non-gated derived keys (wall_us/vs_brute).
 DETERMINISTIC = {"table1", "figure2", "tightness", "pruning", "repr",
-                 "knn", "subseq", "quantized", "chaos"}
+                 "knn", "subseq", "quantized", "chaos", "dist_quantized"}
 
 REL_TOL = 0.25          # generous: catches 'broken', ignores jitter/drift
 ABS_TOL = 0.05          # floor for fraction-valued metrics

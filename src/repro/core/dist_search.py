@@ -34,10 +34,13 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from . import representation as repr_registry
-from .engine import (_SEED_EPS_MAX, DeviceIndex, QueryReprDev,
+from .engine import (_KNN_SEED_SAMPLE, _SEED_EPS_MAX, DeviceIndex,
+                     QuantizedDeviceIndex, QueryReprDev, _compact_mask,
+                     _eps_qcol, _sample_eps, _slacked, _verify_tier,
                      build_device_index, cascade_mask, cascade_trace,
                      compact_answers, knn_query, knn_query_pallas,
-                     mixed_query, mixed_query_pallas, range_query_compact,
+                     mixed_query, mixed_query_pallas, quantized_mixed_query,
+                     quantized_screen, range_query_compact,
                      range_query_pallas, represent_queries, resolve_backend,
                      resolve_knn_backend, stack_backend)
 from .options import SearchOptions, resolve_options
@@ -850,6 +853,347 @@ def load_sharded(path, mesh: Mesh, axis: str = "data", verify: bool = False):
 
 
 # ---------------------------------------------------------------------------
+# Distributed quantized screen — PR 10, DESIGN.md §13.
+#
+# The quantized resident tier (DESIGN.md §9) runs *inside* shard_map:
+# every shard holds its own slice of the int8/bf16 screen columns and
+# evaluates the widened C9/series bounds shard-locally, then compacts its
+# survivors into a fixed-capacity (global id, valid) buffer.  Only those
+# survivor ids cross shards — 5 bytes/slot (int32 id + bool) against the
+# full-precision distributed screen's 9 bytes/slot (id + bool + f32 d²),
+# and no screen column ever leaves its device.  The raw verify tier stays
+# on the host (per-shard mmaps — never concatenated), and the final exact
+# verify gathers only the surviving rows, optionally double-buffered
+# (``SearchOptions.verify_prefetch``).  Certificates are always exact on
+# return: per-shard capacity escalates 4× on overflow up to the shard
+# size, where compaction cannot overflow.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class DistTieredIndex:
+    """Mesh-resident tiered index: quantized screen sharded, raw on host.
+
+    ``dev`` is a :class:`engine.QuantizedDeviceIndex` whose leaves are
+    global arrays sharded row-wise over the mesh axis (block-scale
+    columns shard per block — row counts are padded to a multiple of
+    ``shards × RESID_BLOCK`` so blocks never straddle a shard boundary).
+    ``raw`` is the host-side full-precision verify tier — an ndarray,
+    ``np.memmap``, or ``index.sharded.ShardedRaw`` — holding ONLY real
+    rows (no padding): pad rows carry the level-0 sentinel code, the
+    shard-local screen provably kills them, and the verify gather clamps
+    ids, so they can never be fetched as answers.
+    """
+
+    dev: QuantizedDeviceIndex
+    raw: object
+    n_valid: int
+
+    @property
+    def size(self) -> int:
+        return int(self.dev.series.shape[0])
+
+    @property
+    def mode(self) -> str:
+        return self.dev.mode
+
+
+def _pad_rows(a, rows: int, fill=0) -> np.ndarray:
+    """Pad the leading axis of a host copy of ``a`` up to ``rows``."""
+    a = np.asarray(a)
+    if a.shape[0] >= rows:
+        return a
+    pad = np.full((rows - a.shape[0],) + a.shape[1:], fill, dtype=a.dtype)
+    return np.concatenate([a, pad], axis=0)
+
+
+def distributed_tiered_index(
+    tindex,
+    mesh: Mesh,
+    axis: str = "data",
+    n_valid: int | None = None,
+) -> DistTieredIndex:
+    """Reshard a single-host ``engine.TieredIndex`` onto a mesh.
+
+    Rows pad to a multiple of ``shards × RESID_BLOCK`` so (a) every
+    shard owns whole scale blocks (the per-block (nb, 1) columns shard
+    cleanly) and (b) shard sizes are equal.  Pad rows — and rows at or
+    past ``n_valid`` — are stamped with the level-0 sentinel residual
+    code, so condition C9 kills them inside the shard-local screen for
+    any finite radius; the raw tier is NOT padded (ids clamp at the
+    verify gather, and dead slots are masked).
+    """
+    from ..index import quantized as _q
+
+    qdev = tindex.dev
+    int8 = qdev.mode == "int8"
+    B = int(qdev.series.shape[0])
+    R = int(tindex.raw.shape[0])
+    n_valid = min(B, R) if n_valid is None else int(n_valid)
+    P_sh = mesh.shape[axis]
+    quantum = P_sh * _q.RESID_BLOCK
+    Bp = -(-B // quantum) * quantum
+    nbp = Bp // _q.RESID_BLOCK
+    live = np.arange(Bp) < n_valid
+
+    def put(a, spec):
+        return jax.device_put(np.asarray(a), NamedSharding(mesh, spec))
+
+    def rows2(a, fill=0):
+        return put(_pad_rows(a, Bp, fill), P(axis, None))
+
+    def rows1(a, fill=0):
+        return put(_pad_rows(a, Bp, fill), P(axis))
+
+    def blocks(a, fill=0):
+        return put(_pad_rows(a, nbp, fill), P(axis, None))
+
+    res0 = np.array(_pad_rows(qdev.residuals[0], Bp))   # writable copy
+    if int8:
+        res0[~live] = _q.SENTINEL_CODE
+    else:
+        res0[~live] = res0.dtype.type(_q.PAD_RESIDUAL)
+    residuals = (put(res0, P(axis)),) + tuple(
+        rows1(r) for r in qdev.residuals[1:])
+    none_t = tuple(None for _ in qdev.levels)
+    dev = QuantizedDeviceIndex(
+        series=rows2(qdev.series),
+        series_scale=rows2(qdev.series_scale, 1.0) if int8 else None,
+        series_zero=rows2(qdev.series_zero, 0.0) if int8 else None,
+        series_err=rows1(qdev.series_err),
+        norms_sq=rows1(qdev.norms_sq),
+        words=tuple(rows2(w) for w in qdev.words),
+        residuals=residuals,
+        resid_scale=tuple(blocks(s, 1.0) for s in qdev.resid_scale)
+        if int8 else none_t,
+        resid_zero=tuple(blocks(z, 0.0) for z in qdev.resid_zero)
+        if int8 else none_t,
+        resid_err=tuple(blocks(e) for e in qdev.resid_err),
+        extra=tuple({name: rows2(col) for name, col in lvl.items()}
+                    for lvl in qdev.extra),
+        levels=qdev.levels, alphabet=qdev.alphabet, mode=qdev.mode,
+        stack=qdev.stack)
+    return DistTieredIndex(dev=dev, raw=tindex.raw, n_valid=n_valid)
+
+
+def store_sharded_tiered(dti: DistTieredIndex, path):
+    """Persist the mesh-resident tiered index, one store dir per shard —
+    quantized columns written from device-local shards, the raw tier
+    sliced per shard (``index.sharded.store_sharded_quantized``)."""
+    from ..index.sharded import store_sharded_quantized as _store
+    return _store(dti, path, n_valid=dti.n_valid)
+
+
+def load_sharded_tiered(path, mesh: Mesh, axis: str = "data",
+                        verify: bool = False) -> DistTieredIndex:
+    """Warm-start the distributed quantized engine from a tiered sharded
+    store: shard file *i*'s quantized columns map onto mesh shard *i*
+    with no host-side concatenation, and the raw verify tier stays a set
+    of per-shard host mmaps (``index.sharded.load_sharded_tiered``)."""
+    from ..index.sharded import load_sharded_tiered as _load
+    dev, raw, n_valid = _load(path, mesh, axis=axis, verify=verify)
+    return DistTieredIndex(dev=dev, raw=raw, n_valid=n_valid)
+
+
+def _shard_tree_specs(tree, axis: str):
+    """Leafwise shard_map specs: 1-D leaves shard rows (``P(axis)``),
+    2-D leaves shard rows and replicate columns (``P(axis, None)``)."""
+    return jax.tree_util.tree_map(
+        lambda a: P(axis) if a.ndim == 1 else P(axis, None), tree)
+
+
+def _replicated_specs(tree):
+    return jax.tree_util.tree_map(lambda a: P(), tree)
+
+
+def _dist_quantized_screen(dti: DistTieredIndex, qr, eps_col,
+                           mesh: Mesh, axis: str, capacity: int):
+    """One shard_map round of the quantized screen: every shard runs the
+    widened screen on its own resident columns (``engine.quantized_screen``
+    — the same jitted oracle as the single-host tier, so the kept set is
+    identical by construction) and compacts survivors into a
+    ``capacity``-slot (global id, valid) buffer.  Returns
+    ``(gidx (Q, P·C), valid (Q, P·C), overflow (Q, P))`` — the only
+    arrays that cross shards.
+    """
+    qdev = dti.dev
+    b_loc = dti.size // mesh.shape[axis]
+    cap = int(capacity)
+    children, aux = qdev.tree_flatten()
+    qleaves = (qr.q, qr.words, qr.residuals, qr.extra)
+
+    def local(ix_children, ql, eps_):
+        lq = QuantizedDeviceIndex.tree_unflatten(aux, ix_children)
+        lqr = QueryReprDev(q=ql[0], words=ql[1], residuals=ql[2],
+                           extra=ql[3])
+        keep, _ = quantized_screen(lq, lqr, eps_)
+        idx, valid, overflow = _compact_mask(keep, cap)
+        gidx = idx + jax.lax.axis_index(axis) * b_loc
+        return gidx, valid, overflow[:, None]
+
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(_shard_tree_specs(children, axis),
+                  _replicated_specs(qleaves), P()),
+        out_specs=(P(None, axis), P(None, axis), P(None, axis)),
+        check_rep=False,
+    )(children, qleaves, eps_col)
+
+
+def _dist_quant_candidates(dti, qr, eps_col, mesh, axis, opts,
+                           cap0: int):
+    """Escalating screen rounds: re-run with 4× per-shard capacity while
+    any shard overflows, capped at the shard size where compaction cannot
+    overflow — so the certificate is always exact on return."""
+    b_loc = dti.size // mesh.shape[axis]
+    cap = min(b_loc, max(1, int(cap0)))
+    for _ in range(opts.max_doublings + 1):
+        gidx, valid, overflow = _dist_quantized_screen(
+            dti, qr, eps_col, mesh, axis, cap)
+        if cap >= b_loc or not bool(np.asarray(overflow).any()):
+            break
+        cap = min(b_loc, cap * 4)
+    return gidx, valid, overflow
+
+
+def _dist_qr(dti, queries, opts):
+    return represent_queries(jnp.asarray(queries, dtype=jnp.float32),
+                             dti.dev.levels, dti.dev.alphabet,
+                             normalize=opts.normalize_queries,
+                             stack=dti.dev.stack)
+
+
+def _dist_seed_eps(dti: DistTieredIndex, qr, k: int) -> jnp.ndarray:
+    """k-NN seed radius: strided verified sample from the host raw tier.
+    The stride runs over the raw tier's own (unpadded, real) rows, so the
+    sampled k-th distance is a true upper bound of the global k-th."""
+    R = int(dti.raw.shape[0])
+    S = min(R, max(k, _KNN_SEED_SAMPLE))
+    sample = (np.arange(S) * R) // S
+    rows = jnp.asarray(np.asarray(dti.raw[sample]), jnp.float32)
+    return _sample_eps(rows, qr.q, k)
+
+
+def distributed_quantized_range_query(
+    dti: DistTieredIndex,
+    queries,
+    epsilon,
+    mesh: Mesh,
+    axis: str = "data",
+    options: SearchOptions | None = None,
+    **legacy,
+):
+    """Exact range query with the quantized screen inside shard_map.
+
+    Returns ``(gidx (Q, P·C), answer (Q, P·C), d2 (Q, P·C), exact (Q,))``
+    — set-identical to ``engine.quantized_range_query`` on the same data
+    and to the f64 brute-force oracle (tests/test_dist_quantized.py).
+    ``exact`` is always True after escalation.  Knobs ride in ``options``
+    (:class:`SearchOptions`, including ``verify_prefetch``); the old
+    ``capacity_per_shard=`` kwarg shims through with a
+    :class:`DeprecationWarning`.
+    """
+    options = _coerce_dist_options(options, legacy)
+    opts, rest = resolve_options(options, legacy,
+                                 "distributed_quantized_range_query")
+    if rest:
+        raise TypeError(f"distributed_quantized_range_query: unexpected "
+                        f"kwargs {sorted(rest)}")
+    qr = _dist_qr(dti, queries, opts)
+    Q = qr.q.shape[0]
+    eps = _eps_qcol(epsilon, Q)
+    cap0 = 64 if opts.capacity is None else int(opts.capacity)
+    gidx, valid, overflow = _dist_quant_candidates(
+        dti, qr, eps, mesh, axis, opts, cap0)
+    d2 = _verify_tier(dti.raw, gidx, qr.q, valid, opts)
+    answer = valid & (d2 <= eps * eps)
+    exact = ~jnp.any(overflow, axis=-1)
+    return gidx, answer, jnp.where(answer, d2, jnp.inf), exact
+
+
+def distributed_quantized_knn_query(
+    dti: DistTieredIndex,
+    queries,
+    k: int,
+    mesh: Mesh,
+    axis: str = "data",
+    options: SearchOptions | None = None,
+    **legacy,
+):
+    """Exact k-NN with the quantized screen inside shard_map.
+
+    Seeds a verified radius from the host raw tier, screens every shard
+    at the slacked radius, gathers only surviving ids cross-shard,
+    exact-verifies them against the raw tier, and takes the global top-k
+    (ties to the lowest global index — the engine-wide order).  Returns
+    ``(nn_idx (Q, k), nn_d2 (Q, k), exact (Q,))``; ``exact`` is always
+    True after escalation.
+    """
+    options = _coerce_dist_options(options, legacy)
+    opts, rest = resolve_options(options, legacy,
+                                 "distributed_quantized_knn_query")
+    if rest:
+        raise TypeError(f"distributed_quantized_knn_query: unexpected "
+                        f"kwargs {sorted(rest)}")
+    qr = _dist_qr(dti, queries, opts)
+    k_eff = max(1, min(int(k), dti.n_valid))
+    eps = _dist_seed_eps(dti, qr, k_eff)                     # (Q, 1)
+    cap0 = max(4 * k_eff, 64) if opts.capacity is None else int(opts.capacity)
+    gidx, valid, overflow = _dist_quant_candidates(
+        dti, qr, _slacked(eps), mesh, axis, opts, max(cap0, k_eff))
+    d2 = _verify_tier(dti.raw, gidx, qr.q, valid, opts)
+    neg, pos = jax.lax.top_k(-d2, k_eff)                     # ascending d2
+    nn_d2 = -neg
+    nn_idx = jnp.take_along_axis(gidx, pos, axis=-1)
+    nn_idx = jnp.where(jnp.isfinite(nn_d2), nn_idx, -1)
+    return nn_idx, nn_d2, ~jnp.any(overflow, axis=-1)
+
+
+def distributed_quantized_mixed_query(
+    dti: DistTieredIndex,
+    queries,
+    epsilon,
+    is_knn,
+    k: int,
+    mesh: Mesh,
+    axis: str = "data",
+    options: SearchOptions | None = None,
+    **legacy,
+):
+    """Mixed range/k-NN batch over the mesh-resident tiered index —
+    serving-layer layout, the distributed twin of
+    ``engine.quantized_mixed_query``.
+
+    Returns ``(gidx (Q, P·C), answer (Q, P·C), d2 (Q, P·C), overflow
+    (Q,))`` with ``overflow`` all-False after escalation; k-NN rows'
+    ``answer`` marks verified candidate slots (a superset of the true
+    top-k) — finish with ``engine.mixed_topk(gidx, d2, k)`` exactly like
+    the other serving backends.
+    """
+    options = _coerce_dist_options(options, legacy)
+    opts, rest = resolve_options(options, legacy,
+                                 "distributed_quantized_mixed_query")
+    if rest:
+        raise TypeError(f"distributed_quantized_mixed_query: unexpected "
+                        f"kwargs {sorted(rest)}")
+    qr = _dist_qr(dti, queries, opts)
+    Q = qr.q.shape[0]
+    k_eff = max(1, min(int(k), dti.n_valid))
+    knn_col = jnp.asarray(is_knn, dtype=bool).reshape(Q, 1)
+    eps_req = _eps_qcol(epsilon, Q)
+    eps = jnp.where(knn_col, _slacked(_dist_seed_eps(dti, qr, k_eff)),
+                    eps_req)
+    cap0 = max(4 * k_eff, 64) if opts.capacity is None else int(opts.capacity)
+    gidx, valid, overflow = _dist_quant_candidates(
+        dti, qr, eps, mesh, axis, opts, max(cap0, k_eff))
+    d2 = _verify_tier(dti.raw, gidx, qr.q, valid, opts)
+    answer = jnp.where(knn_col, valid, valid & (d2 <= eps_req * eps_req))
+    gidx = jnp.where(answer, gidx, -1)
+    return (gidx, answer, jnp.where(answer, d2, jnp.inf),
+            jnp.any(overflow, axis=-1))
+
+
+# ---------------------------------------------------------------------------
 # Failover serving engine — PR 9, DESIGN.md §12.
 #
 # ``shard_map`` is the right execution model when every device is healthy:
@@ -869,6 +1213,13 @@ def load_sharded(path, mesh: Mesh, axis: str = "data", verify: bool = False):
 
 class FailoverError(RuntimeError):
     """No shard produced an answer for a dispatch (all down/failed)."""
+
+
+def _screen_of(shard):
+    """The screen-tier index of a failover shard: a full-precision shard
+    IS its screen (``DeviceIndex``); a quantized tiered shard
+    (``engine.TieredIndex``) screens through ``.dev``."""
+    return shard.dev if hasattr(shard, "dev") else shard
 
 
 @dataclasses.dataclass(frozen=True)
@@ -945,16 +1296,16 @@ class FailoverShards:
             raise ValueError("need at least one shard")
         self.shards = list(shards)
         P_sh = len(self.shards)
-        sizes = [int(s.series.shape[0]) for s in self.shards]
+        sizes = [int(_screen_of(s).series.shape[0]) for s in self.shards]
         if offsets is None:
             offsets = list(np.cumsum([0] + sizes[:-1]))
         self.offsets = [int(o) for o in offsets]
         self.n_valid = int(sum(sizes) if n_valid is None else n_valid)
-        ref = self.shards[0]
+        ref = _screen_of(self.shards[0])
         self.levels = tuple(ref.levels)
         self.alphabet = int(ref.alphabet)
         self.stack = tuple(getattr(ref, "stack", DEFAULT_STACK))
-        for s in self.shards[1:]:
+        for s in map(_screen_of, self.shards[1:]):
             if (tuple(s.levels) != self.levels
                     or int(s.alphabet) != self.alphabet
                     or tuple(getattr(s, "stack", DEFAULT_STACK))
@@ -978,8 +1329,18 @@ class FailoverShards:
         self._vmask, self._rows = [], []
         for si, s in enumerate(self.shards):
             B_s = sizes[si]
-            live = np.arange(B_s) < max(
-                0, min(B_s, self.n_valid - self.offsets[si]))
+            hi = max(0, min(B_s, self.n_valid - self.offsets[si]))
+            if hasattr(s, "dev"):
+                # Quantized tiered shard: pad rows carry the level-0
+                # sentinel CODE and the tiered engine's screen kills them
+                # internally — no host-side mask.  Live rows = raw-tier
+                # rows within n_valid (the raw slice is trimmed to the
+                # live range at load, so the k-NN seed never samples a
+                # pad row).
+                self._rows.append(int(min(hi, int(s.raw.shape[0]))))
+                self._vmask.append(None)
+                continue
+            live = np.arange(B_s) < hi
             live &= np.asarray(s.residuals[0]) < 0.5 * _PAD_RESIDUAL
             self._rows.append(int(live.sum()))
             self._vmask.append(None if live.all() else jnp.asarray(live))
@@ -1032,7 +1393,7 @@ class FailoverShards:
 
     @property
     def n(self) -> int:
-        return int(self.shards[0].series.shape[-1])
+        return int(_screen_of(self.shards[0]).series.shape[-1])
 
     def shard_states(self) -> list:
         return ["down" if d else "up" for d in self._down]
@@ -1074,13 +1435,23 @@ class FailoverShards:
         wd = self._wd[si]
         wd.start(self._dispatch_no)
         idx = self.shards[si]
-        B_s = int(idx.series.shape[0])
+        B_s = int(_screen_of(idx).series.shape[0])
         k_s = max(1, min(int(k), B_s))
         cap = B_s if self.capacity is None else int(self.capacity)
         cap = max(min(cap, B_s), k_s)
-        ridx, answer, d2, overflow = mixed_query(
-            idx, qr, eps_j, knn_j, k_s, capacity=cap,
-            n_iters=self.n_iters, valid_mask=self._vmask[si])
+        if hasattr(idx, "dev"):
+            # Quantized tiered shard (PR 6 × PR 9): the same per-shard
+            # exactness story — quantized_mixed_query escalates until no
+            # overflow and exact-verifies survivors against the shard's
+            # raw mmap slice, so a surviving shard's rows are answered
+            # exactly and the partial-answer certificate holds unchanged.
+            ridx, answer, d2, overflow = quantized_mixed_query(
+                idx, qr, eps_j, knn_j, k_s,
+                options=SearchOptions(capacity=cap))
+        else:
+            ridx, answer, d2, overflow = mixed_query(
+                idx, qr, eps_j, knn_j, k_s, capacity=cap,
+                n_iters=self.n_iters, valid_mask=self._vmask[si])
         answer = np.asarray(answer)
         gidx = np.where(answer, np.asarray(ridx) + self.offsets[si], -1)
         out = (gidx, answer, np.asarray(d2), np.asarray(overflow))

@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+from concurrent import futures as _futures
 from typing import Sequence
 
 import jax
@@ -29,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..index import quantized as _quant
+from ..index import store as _store
 from ..kernels import fused_query as _fused
 from ..kernels import ops as kernel_ops
 from ..obs.trace import QueryTrace, screen_row_bytes, tier_bytes
@@ -1619,12 +1621,73 @@ def _fused_blocks_quant(qdev: QuantizedDeviceIndex, Q: int,
         Q, 0, block_q, block_b)
 
 
-def _raw_rows(tindex: TieredIndex, idx) -> jnp.ndarray:
+def _raw_rows(raw, idx, key: str = "0") -> jnp.ndarray:
     """Gather candidate rows from the host mmap tier and upload as f32 —
-    the only touch of full-precision data on the query path."""
+    the only touch of full-precision data on the query path.  The read
+    goes through ``index.store.gather_rows``: ids clamp into the raw
+    tier's row range (the raw tier may hold fewer rows than the padded
+    screen tier — padded rows are sentinel-killed and their slots are
+    masked), and the ``verify_fetch`` chaos site fires on it."""
     idx_np = np.asarray(jax.device_get(idx))
-    rows = np.asarray(tindex.raw)[idx_np]
-    return jnp.asarray(rows, dtype=jnp.float32)
+    return jnp.asarray(_store.gather_rows(raw, idx_np, key=key))
+
+
+#: Double-buffer depth of the prefetched verify path: chunk i+1's mmap
+#: read runs on the prefetch thread while chunk i's upload + verify is in
+#: flight on device.
+_PREFETCH_CHUNKS = 2
+_prefetch_pool_singleton = None
+
+
+def _prefetch_pool() -> _futures.ThreadPoolExecutor:
+    global _prefetch_pool_singleton
+    if _prefetch_pool_singleton is None:
+        _prefetch_pool_singleton = _futures.ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="repro-verify-prefetch")
+    return _prefetch_pool_singleton
+
+
+def _verify_prefetched(raw, idx, q, valid, key: str = "") -> jnp.ndarray:
+    """Double-buffered raw-tier verify (DESIGN.md §13).
+
+    Splits the candidate columns into :data:`_PREFETCH_CHUNKS` spans;
+    span j+1's host mmap read runs on the prefetch executor while span
+    j's rows are uploading and verifying on device (device dispatch is
+    async, so the next read genuinely overlaps the compute).  The diff²
+    verify is row-local, so the chunked result is bit-identical to the
+    synchronous gather — property-tested in tests/test_dist_quantized.py.
+    A fault raised inside the prefetch thread (``verify_fetch`` site)
+    re-raises at ``result()`` — loud, never silently-wrong.
+    """
+    C = int(idx.shape[-1])
+    nchunks = max(1, min(_PREFETCH_CHUNKS, C))
+    bounds = [(C * i) // nchunks for i in range(nchunks + 1)]
+    spans = [(lo, hi) for lo, hi in zip(bounds, bounds[1:]) if hi > lo]
+    idx_np = np.asarray(jax.device_get(idx))
+    pool = _prefetch_pool()
+
+    def fetch(j: int, lo: int, hi: int) -> np.ndarray:
+        return _store.gather_rows(raw, idx_np[:, lo:hi], key=f"{key}{j}")
+
+    fut = pool.submit(fetch, 0, *spans[0])
+    parts = []
+    for j, (lo, hi) in enumerate(spans):
+        rows = fut.result()
+        if j + 1 < len(spans):
+            fut = pool.submit(fetch, j + 1, *spans[j + 1])
+        parts.append(_verify_gathered(jnp.asarray(rows), q,
+                                      valid[:, lo:hi]))
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=-1)
+
+
+def _verify_tier(raw, idx, q, valid, opts: SearchOptions,
+                 key: str = "") -> jnp.ndarray:
+    """The raw-tier exact verify behind every tiered engine: synchronous
+    single gather, or the double-buffered prefetch path when
+    ``opts.verify_prefetch`` — same d2, bit for bit."""
+    if opts.verify_prefetch:
+        return _verify_prefetched(raw, idx, q, valid, key=key)
+    return _verify_gathered(_raw_rows(raw, idx, key=key or "0"), q, valid)
 
 
 def _coerce_quant_options(options, legacy: dict):
@@ -1669,7 +1732,7 @@ def quantized_range_query(
         if cap >= B or not bool(jax.device_get(overflow).any()):
             break
         cap = min(B, cap * 4)
-    d2 = _verify_gathered(_raw_rows(tindex, idx), qr.q, valid)
+    d2 = _verify_tier(tindex.raw, idx, qr.q, valid, opts)
     answer = valid & (d2 <= eps * eps)
     return idx, answer, jnp.where(answer, d2, jnp.inf), ~overflow
 
@@ -1688,11 +1751,19 @@ def _tiered_seed_eps(tindex: TieredIndex, qr: QueryReprDev,
                      k: int) -> jnp.ndarray:
     """k-NN seed radius for the tiered engine: the strided sample is
     fetched from the RAW tier (same strided positions as
-    :func:`_seed_eps`), so the radius is a true verified upper bound."""
-    B = tindex.size
-    S = min(B, max(k, _KNN_SEED_SAMPLE))
-    sample = (np.arange(S) * B) // S
-    rows = jnp.asarray(np.asarray(tindex.raw)[sample], jnp.float32)
+    :func:`_seed_eps`), so the radius is a true verified upper bound.
+    The sample strides over the raw tier's OWN row count — the screen
+    tier may carry trailing sentinel padding the raw tier does not, and
+    sampling a pad row would shrink the radius below the true k-th
+    distance (unsound)."""
+    R = int(tindex.raw.shape[0])
+    if R == 0:
+        # All-pad shard (failover fleet past n_valid): no row can answer
+        # — any radius screens an empty candidate set, 0 is cheapest.
+        return jnp.zeros((qr.q.shape[0], 1), jnp.float32)
+    S = min(R, max(k, _KNN_SEED_SAMPLE))
+    sample = (np.arange(S) * R) // S
+    rows = jnp.asarray(np.asarray(tindex.raw[sample]), jnp.float32)
     return _sample_eps(rows, qr.q, k)
 
 
@@ -1731,7 +1802,7 @@ def quantized_knn_query(
         if cap >= B or not bool(jax.device_get(overflow).any()):
             break
         cap = min(B, cap * 4)
-    d2 = _verify_gathered(_raw_rows(tindex, idx), qr.q, valid)
+    d2 = _verify_tier(tindex.raw, idx, qr.q, valid, opts)
     neg, pos = jax.lax.top_k(-d2, k_eff)                     # ascending d2
     nn_d2 = -neg
     nn_idx = jnp.take_along_axis(idx, pos, axis=-1)
@@ -1776,7 +1847,7 @@ def quantized_mixed_query(
         if cap >= B or not bool(jax.device_get(overflow).any()):
             break
         cap = min(B, cap * 4)
-    d2 = _verify_gathered(_raw_rows(tindex, idx), qr.q, valid)
+    d2 = _verify_tier(tindex.raw, idx, qr.q, valid, opts)
     answer = jnp.where(knn_col, valid, valid & (d2 <= eps_req * eps_req))
     return idx, answer, jnp.where(answer, d2, jnp.inf), overflow
 

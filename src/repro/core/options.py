@@ -32,6 +32,9 @@ class SearchOptions:
     ``adaptive_c10``: host k-NN engine knobs (``search.fastsax_knn_query``).
     ``normalize_queries``: z-normalise incoming queries.
     ``max_doublings``: cap on the 4× capacity-escalation loop.
+    ``verify_prefetch``: overlap the raw-tier verify fetch with device
+    compute (double-buffered host-mmap reads, DESIGN.md §13) — answers
+    are bit-identical to the synchronous path.
     """
 
     backend: str = "auto"
@@ -43,6 +46,7 @@ class SearchOptions:
     adaptive_c10: bool = True
     normalize_queries: bool = True
     max_doublings: int = 8
+    verify_prefetch: bool = False
 
 
 #: Legacy kwarg name -> SearchOptions field, for the deprecation shims.
@@ -57,6 +61,7 @@ _LEGACY_FIELDS = {
     "adaptive_c10": "adaptive_c10",
     "normalize_queries": "normalize_queries",
     "max_doublings": "max_doublings",
+    "verify_prefetch": "verify_prefetch",
 }
 
 

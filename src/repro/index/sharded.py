@@ -220,6 +220,28 @@ def load_shard_indexes(
 
     path = pathlib.Path(path)
     manifest = sharded_info(path)
+    if manifest.get("kind") == _TIERED_KIND:
+        # PR 9 × PR 6: a failover fleet warm-started from a *quantized*
+        # sharded store — each shard dir becomes an independent
+        # ``engine.TieredIndex`` (its own screen columns + raw mmap
+        # slice), so ``FailoverShards`` can drop/retry shards
+        # individually with exactly the same certified-partial
+        # semantics as the full-precision path.
+        from ..core.engine import TieredIndex, quantized_device_index
+
+        tiers, n_valid, _mf = load_tier_shards(path, mmap=not verify,
+                                               verify=verify)
+        shards = []
+        for t in tiers:
+            # Trim the raw tier to this shard's live rows: screen rows
+            # past ``n_valid`` carry the level-0 sentinel (killed inside
+            # the screen), and the k-NN seed strides over the raw rows
+            # only — a pad row sampled there would shrink the verified
+            # seed radius below the true k-th distance.
+            live = max(0, min(int(t.raw.shape[0]), n_valid - t.offset))
+            shards.append(TieredIndex(
+                dev=quantized_device_index(t.qhost), raw=t.raw[:live]))
+        return shards, [t.offset for t in tiers], n_valid
     if manifest.get("kind") != _KIND:
         raise IOError(f"{path}: not a {_KIND} store")
     levels = tuple(int(N) for N in manifest["levels"])
@@ -271,37 +293,45 @@ _TIERED_KIND = "fastsax-tiered-sharded"
 
 
 def _tiered_leaves(qdev) -> dict:
-    """QuantizedDeviceIndex -> host store columns, quant-tier names.
+    """QuantizedDeviceIndex -> {quant-tier column name: (leaf, kind)}.
 
-    Device column vectors ((m, 1)) flatten back to the host layout
-    ((m,)); bf16 codes are stored as their uint16 bit patterns, exactly
-    like ``store.save_index``'s quantized tier."""
-    def codes(a):
-        a = np.asarray(a)
-        return a.view(np.uint16) if a.dtype.name == "bfloat16" else a
-
-    def flat(a):
-        return np.asarray(a, np.float32).reshape(-1)
-
+    The leaves stay *device* arrays — :func:`store_sharded_quantized`
+    reads their addressable shards before any host conversion, so a
+    mesh-sharded index (``dist_search.DistTieredIndex``) writes one dir
+    per device shard instead of silently collapsing to one.  ``kind``
+    names the per-shard host transform (:func:`_tiered_host`): device
+    column vectors ((m, 1)) flatten back to the host layout ((m,)); bf16
+    codes are stored as their uint16 bit patterns, exactly like
+    ``store.save_index``'s quantized tier."""
     int8 = qdev.mode == "int8"
-    leaves = {"qseries": codes(qdev.series),
-              "qseries_err": flat(qdev.series_err),
-              "qnorms": flat(qdev.norms_sq)}
+    leaves = {"qseries": (qdev.series, "codes"),
+              "qseries_err": (qdev.series_err, "flat"),
+              "qnorms": (qdev.norms_sq, "flat")}
     if int8:
-        leaves["qseries_scale"] = flat(qdev.series_scale)
-        leaves["qseries_zero"] = flat(qdev.series_zero)
+        leaves["qseries_scale"] = (qdev.series_scale, "flat")
+        leaves["qseries_zero"] = (qdev.series_zero, "flat")
     qextra = getattr(qdev, "extra", ())
     for li, N in enumerate(qdev.levels):
-        leaves[f"qwords_N{N}"] = np.asarray(qdev.words[li])
-        leaves[f"qresid_N{N}"] = codes(qdev.residuals[li])
-        leaves[f"qresid_err_N{N}"] = flat(qdev.resid_err[li])
+        leaves[f"qwords_N{N}"] = (qdev.words[li], "plain")
+        leaves[f"qresid_N{N}"] = (qdev.residuals[li], "codes")
+        leaves[f"qresid_err_N{N}"] = (qdev.resid_err[li], "flat")
         if int8:
-            leaves[f"qresid_scale_N{N}"] = flat(qdev.resid_scale[li])
-            leaves[f"qresid_zero_N{N}"] = flat(qdev.resid_zero[li])
+            leaves[f"qresid_scale_N{N}"] = (qdev.resid_scale[li], "flat")
+            leaves[f"qresid_zero_N{N}"] = (qdev.resid_zero[li], "flat")
         for name, col in (qextra[li] if qextra else {}).items():
             prefix = repr_registry.get(name).column.prefix
-            leaves[f"q{prefix}_N{N}"] = np.asarray(col)
+            leaves[f"q{prefix}_N{N}"] = (col, "plain")
     return leaves
+
+
+def _tiered_host(a: np.ndarray, kind: str) -> np.ndarray:
+    """Per-shard host transform for a quant-tier column (see
+    :func:`_tiered_leaves`)."""
+    if kind == "codes":
+        return a.view(np.uint16) if a.dtype.name == "bfloat16" else a
+    if kind == "flat":
+        return np.asarray(a, np.float32).reshape(-1)
+    return a
 
 
 def store_sharded_quantized(
@@ -318,13 +348,22 @@ def store_sharded_quantized(
     multiple of ``quantized.RESID_BLOCK`` — otherwise the per-block
     scales of a shard quantized in isolation would not describe the
     concatenated row order a single-host reload sees.
+
+    The raw tier may hold fewer rows than the screen tier (a
+    ``dist_search.DistTieredIndex`` pads the screen to the shard x
+    RESID_BLOCK quantum but keeps the raw rows unpadded): each shard
+    stores only its *live* raw slice, so trailing shards of a heavily
+    padded index may carry an empty ``series`` — those screen rows are
+    sentinel-killed and never verified.
     """
     from . import quantized as _q
 
     path = pathlib.Path(path)
     qdev = tindex.dev
     B = int(qdev.series.shape[0])
-    per_leaf = {name: _shards(a) for name, a in _tiered_leaves(qdev).items()}
+    per_leaf = {
+        name: [(start, _tiered_host(part, kind)) for start, part in _shards(a)]
+        for name, (a, kind) in _tiered_leaves(qdev).items()}
     n_shards = {len(s) for s in per_leaf.values()}
     if len(n_shards) != 1:
         raise ValueError(f"inconsistent shard counts across leaves: "
@@ -339,10 +378,12 @@ def store_sharded_quantized(
             f"misalign on reload — repad the database")
 
     raw = np.asarray(tindex.raw)
+    R = int(raw.shape[0])
     tmp = store.make_tmp_dir(path)
     for si in range(P_sh):
         arrays = {name: per_leaf[name][si][1] for name in per_leaf}
-        arrays["series"] = raw[offsets[si]:offsets[si] + rows[si]]
+        arrays["series"] = raw[min(offsets[si], R):
+                               min(offsets[si] + rows[si], R)]
         store.write_arrays(
             tmp / f"shard_{si:05d}", arrays,
             {"kind": "fastsax-tiered-shard", "shard": si, "shards": P_sh,
@@ -360,23 +401,40 @@ def store_sharded_quantized(
     return store.commit_dir(tmp, path)
 
 
-def load_sharded_quantized(
+class TierShard:
+    """One shard of a tiered sharded store, loaded in isolation:
+    its quantized screen columns (``QuantizedHostIndex``), its live raw
+    rows (mmap), and its global row offset."""
+
+    def __init__(self, qhost, raw, offset: int):
+        self.qhost = qhost
+        self.raw = raw
+        self.offset = int(offset)
+        self.rows = int(np.asarray(qhost.norms_sq).shape[0])
+
+
+def load_tier_shards(
     path: str | os.PathLike,
     mmap: bool = True,
     verify: bool = False,
 ):
-    """Reassemble a tiered sharded store on a single host.
+    """Load a tiered sharded store shard-by-shard — no host-side concat.
 
-    Returns ``(engine.TieredIndex, n_valid)``.  The quantized screen
-    columns concatenate across shards (sound because
-    :func:`store_sharded_quantized` enforced RESID_BLOCK-aligned shard
-    sizes); the raw series stays an ``np.memmap`` for a single-shard
-    store and concatenates otherwise.  Distributed (shard_map) execution
-    of the quantized screen is not implemented — ROADMAP open item; this
-    loader is the warm-start path for single-host tiered serving from a
-    fleet-written store.
+    Returns ``(shards, n_valid, manifest)`` where ``shards`` is a list
+    of :class:`TierShard`, sorted by global row offset.  This is the
+    common substrate of every tiered reload path: the single-host
+    concatenating loader (:func:`load_sharded_quantized`), the mesh
+    loader for the distributed quantized screen
+    (:func:`load_sharded_tiered`), and the per-shard failover
+    warm-start (:func:`load_shard_indexes`).
+
+    Misaligned stores fail loudly here, before any query can run on
+    them: shard offsets that do not tile ``[0, size)`` exactly,
+    non-final shards whose row count is not a RESID_BLOCK multiple
+    (their per-block scales would describe the wrong rows after any
+    concatenation), a shard whose raw slice is *larger* than its screen
+    slice, or live raw rows that are not a prefix of the screen rows.
     """
-    from ..core import engine as _engine
     from . import quantized as _q
 
     path = pathlib.Path(path)
@@ -385,22 +443,211 @@ def load_sharded_quantized(
         raise IOError(f"{path}: not a {_TIERED_KIND} store")
     mode = str(manifest["quantization"])
     levels = tuple(int(N) for N in manifest["levels"])
+    stack = _check_stack(manifest, path)
     P_sh = int(manifest["shards"])
-    shard_dirs = [path / f"shard_{si:05d}" for si in range(P_sh)]
 
-    def get(name):
-        parts = [np.asarray(store.read_array(d, name, mmap=mmap,
-                                             verify=verify))
-                 for d in shard_dirs]
-        return parts[0] if P_sh == 1 else np.concatenate(parts)
+    shards = []
+    for si in range(P_sh):
+        d = path / f"shard_{si:05d}"
+        smf = store.read_manifest(d)
 
-    qhost = _q.quant_from_arrays(mode, int(manifest["n"]),
-                                 int(manifest["alphabet"]), levels, get,
-                                 stack=_check_stack(manifest, path))
-    raws = [store.read_array(d, "series", mmap=mmap, verify=verify)
-            for d in shard_dirs]
-    raw = raws[0] if P_sh == 1 else np.concatenate(
-        [np.asarray(r) for r in raws])
+        def get(name, d=d, smf=smf):
+            return np.asarray(store.read_array(d, name, manifest=smf,
+                                               mmap=mmap, verify=verify))
+
+        qhost = _q.quant_from_arrays(mode, int(manifest["n"]),
+                                     int(manifest["alphabet"]), levels,
+                                     get, stack=stack)
+        raw = store.read_array(d, "series", manifest=smf, mmap=mmap,
+                               verify=verify)
+        shards.append(TierShard(qhost=qhost, raw=raw,
+                                offset=int(smf.get("row_offset", 0))))
+    shards.sort(key=lambda s: s.offset)
+
+    pos, raw_short = 0, False
+    for si, s in enumerate(shards):
+        if s.offset != pos:
+            raise IOError(
+                f"{path}: shard {si} starts at row {s.offset}, expected "
+                f"{pos} — shard offsets do not tile the index; "
+                "mis-sharded store")
+        if si < P_sh - 1 and s.rows % _q.RESID_BLOCK:
+            raise IOError(
+                f"{path}: shard {si} holds {s.rows} rows, not a multiple "
+                f"of RESID_BLOCK={_q.RESID_BLOCK} — its per-block scales "
+                "would misalign against the concatenated row order")
+        r = int(s.raw.shape[0])
+        if r > s.rows:
+            raise IOError(
+                f"{path}: shard {si} raw tier has {r} rows for "
+                f"{s.rows} screen rows — corrupt store")
+        if raw_short and r:
+            raise IOError(
+                f"{path}: shard {si} has live raw rows after an earlier "
+                "short shard — raw tier is not a prefix of the screen "
+                "rows; mis-sharded store")
+        raw_short |= r < s.rows
+        pos += s.rows
+    if pos != int(manifest["size"]):
+        raise IOError(
+            f"{path}: shards cover {pos} rows but the manifest declares "
+            f"size={int(manifest['size'])} — mis-sharded store")
+    return shards, int(manifest["n_valid"]), manifest
+
+
+class ShardedRaw:
+    """Raw verify tier of a mesh-loaded tiered store: one live-row mmap
+    per shard, gathered by global row id without ever concatenating the
+    shards on the host (the point of the per-shard tier load).
+
+    Shard ``si`` owns screen rows ``[si*block, (si+1)*block)``; its part
+    holds the *live prefix* of that range (screen rows past the raw tier
+    are sentinel-killed padding and only ever gathered as dead, masked
+    slots).  ``index.store.gather_rows`` clamps row ids into
+    ``[0, len(self))`` before indexing, so the div/mod shard mapping
+    below never reads past a part.
+    """
+
+    def __init__(self, parts, block: int | None = None):
+        self.parts = list(parts)
+        if not self.parts:
+            raise ValueError("ShardedRaw needs at least one shard")
+        if block is None:
+            block = int(self.parts[0].shape[0])
+        self.block = max(int(block), 1)
+        n_rows = sum(int(p.shape[0]) for p in self.parts)
+        for si, p in enumerate(self.parts):
+            want = min(max(n_rows - si * self.block, 0), self.block)
+            if int(p.shape[0]) != want:
+                raise ValueError(
+                    f"shard {si} holds {int(p.shape[0])} raw rows, "
+                    f"expected {want} (block={self.block}): live raw "
+                    "rows must be a prefix of the screen rows")
+        self.shape = (n_rows,) + tuple(self.parts[0].shape[1:])
+
+    def __len__(self) -> int:
+        return self.shape[0]
+
+    def __getitem__(self, idx):
+        idx = np.asarray(idx)
+        shard = np.clip(idx // self.block, 0, len(self.parts) - 1)
+        local = idx - shard * self.block
+        out = np.empty(idx.shape + self.shape[1:], np.float32)
+        for si, p in enumerate(self.parts):
+            m = shard == si
+            if m.any():
+                out[m] = np.asarray(p[local[m]], np.float32)
+        return out
+
+    def __array__(self, dtype=None):
+        a = (np.asarray(self.parts[0]) if len(self.parts) == 1
+             else np.concatenate([np.asarray(p) for p in self.parts]))
+        return np.asarray(a, np.float32 if dtype is None else dtype)
+
+
+def load_sharded_tiered(
+    path: str | os.PathLike,
+    mesh,
+    axis: str = "data",
+    verify: bool = False,
+):
+    """Map a tiered sharded store onto a mesh for the distributed
+    quantized screen (DESIGN.md §13).
+
+    Returns ``(QuantizedDeviceIndex, ShardedRaw, n_valid)``: each
+    shard's screen columns are uploaded to its own mesh device and
+    assembled leafwise with ``jax.make_array_from_single_device_arrays``
+    (the host never holds the global quantized arrays), while the raw
+    verify tier stays a set of per-shard live-row mmaps behind
+    :class:`ShardedRaw`.  Feed the result to
+    ``core.dist_search.DistTieredIndex``.
+    """
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from ..core.engine import QuantizedDeviceIndex, quantized_device_index
+
+    shards, n_valid, _manifest = load_tier_shards(path, mmap=not verify,
+                                                  verify=verify)
+    P_sh = len(shards)
+    mesh_size = int(mesh.shape[axis])
+    if P_sh != mesh_size:
+        raise ValueError(
+            f"{path}: stored for {P_sh} shard(s) but mesh axis {axis!r} "
+            f"has {mesh_size} — rebuild or re-store for this fleet")
+    rows = {s.rows for s in shards}
+    if len(rows) != 1:
+        raise ValueError(
+            f"{path}: unequal shard row counts {sorted(rows)} — the "
+            "shard_map screen needs equal per-device blocks; re-store "
+            "through core.dist_search.store_sharded_tiered")
+    b_loc = rows.pop()
+    devices = list(mesh.devices.reshape(-1))
+
+    flats = []
+    for s, dev in zip(shards, devices):
+        with jax.default_device(dev):
+            qdev = quantized_device_index(s.qhost)
+        flats.append(qdev.tree_flatten())
+    aux = flats[0][1]
+    for f in flats[1:]:
+        if f[1] != aux:
+            raise ValueError(f"{path}: shards disagree on quantized "
+                             "geometry (levels/alphabet/mode/stack)")
+
+    def glob(*parts):
+        parts = [jax.device_put(p, dev)
+                 for p, dev in zip(parts, devices)]
+        spec = P(axis) if parts[0].ndim == 1 else P(axis, None)
+        shape = ((sum(int(p.shape[0]) for p in parts),)
+                 + tuple(parts[0].shape[1:]))
+        return jax.make_array_from_single_device_arrays(
+            shape, NamedSharding(mesh, spec), parts)
+
+    children = jax.tree_util.tree_map(glob, *[f[0] for f in flats])
+    qdev = QuantizedDeviceIndex.tree_unflatten(aux, children)
+    raw = ShardedRaw([s.raw for s in shards], block=b_loc)
+    return qdev, raw, n_valid
+
+
+def load_sharded_quantized(
+    path: str | os.PathLike,
+    mmap: bool = True,
+    verify: bool = False,
+):
+    """Reassemble a tiered sharded store on a single host.
+
+    Returns ``(engine.TieredIndex, n_valid)``.  Routes through
+    :func:`load_tier_shards`: a single-shard store passes its mmap
+    columns straight through; a multi-shard store concatenates the
+    per-shard quantized columns (sound because
+    :func:`store_sharded_quantized` enforced RESID_BLOCK-aligned shard
+    sizes) and the live raw rows.  The raw tier may come back shorter
+    than the screen tier — the trailing screen rows are sentinel-killed
+    padding, which ``engine.TieredIndex`` queries handle natively.  For
+    distributed (shard_map) execution of the quantized screen use
+    :func:`load_sharded_tiered` with
+    ``core.dist_search.DistTieredIndex`` instead.
+    """
+    from ..core import engine as _engine
+    from . import quantized as _q
+
+    shards, n_valid, manifest = load_tier_shards(path, mmap=mmap,
+                                                 verify=verify)
+    if len(shards) == 1:
+        qhost, raw = shards[0].qhost, shards[0].raw
+    else:
+        dicts = [_q.quant_arrays(s.qhost) for s in shards]
+
+        def get(name):
+            return np.concatenate([d[name] for d in dicts])
+
+        qhost = _q.quant_from_arrays(
+            str(manifest["quantization"]), int(manifest["n"]),
+            int(manifest["alphabet"]),
+            tuple(int(N) for N in manifest["levels"]), get,
+            stack=tuple(manifest.get("stack", DEFAULT_STACK)))
+        raw = np.concatenate([np.asarray(s.raw) for s in shards])
     tiered = _engine.TieredIndex(
         dev=_engine.quantized_device_index(qhost), raw=raw)
-    return tiered, int(manifest["n_valid"])
+    return tiered, n_valid

@@ -165,6 +165,43 @@ def read_array(
     return a
 
 
+def gather_rows(raw, idx, key: str = "0") -> np.ndarray:
+    """Fetch full-precision verify rows from the raw tier by row id.
+
+    The single choke point for every raw-tier verify fetch — synchronous
+    and prefetched (DESIGN.md §13).  ``raw`` is anything with row-major
+    fancy indexing: an ``np.memmap``, a plain array, or a per-shard
+    ``index.sharded.ShardedRaw``.  Row ids clamp into the raw tier's row
+    range (compaction emits arbitrary positions in dead padded slots;
+    they are masked downstream but must never fault the mmap read), the
+    read passes through the ``verify_fetch`` chaos site, and a sheared /
+    short read fails loudly instead of returning a silently truncated
+    candidate set.
+    """
+    n_rows = int(raw.shape[0])
+    idx = np.asarray(idx)
+    if n_rows == 0:
+        # All-pad raw tier (e.g. a failover shard past ``n_valid``): every
+        # candidate slot is dead and masked downstream — serve zeros
+        # rather than fancy-indexing an empty mmap.
+        rows = np.zeros(idx.shape + tuple(raw.shape[1:]), np.float32)
+    else:
+        clamped = np.clip(idx, 0, max(n_rows - 1, 0))
+        rows = np.asarray(raw[clamped], dtype=np.float32)
+    # Chaos injection site "verify_fetch" (DESIGN.md §13): a truncate
+    # fault shears query rows *here*, between the mmap read and the shape
+    # check below, so a torn verify fetch is caught before any distance
+    # is computed from it.
+    rows = chaos.apply("verify_fetch", key, rows)
+    want = idx.shape + tuple(raw.shape[1:])
+    if rows.shape != want:
+        raise IOError(
+            f"verify fetch (key={key!r}) returned shape {rows.shape} for "
+            f"row ids of shape {idx.shape} (expected {want}) — truncated "
+            "raw-tier read")
+    return rows
+
+
 def verify_store(path: str | os.PathLike) -> dict:
     """Re-hash every array against the manifest.  Returns the manifest on
     success; raises ``IOError`` naming the first corrupt array."""

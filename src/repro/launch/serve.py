@@ -400,6 +400,7 @@ def serve_service(args):
                       max_wait_ms=args.max_wait_ms, alphabet=args.alphabet,
                       default_deadline_ms=args.deadline_ms or None,
                       backend=args.backend, quantization=args.quantization,
+                      verify_prefetch=args.verify_prefetch,
                       trace=args.trace, profile_dir=args.profile_dir,
                       failover_shards=args.failover_shards)
     if args.index_dir:
@@ -513,12 +514,17 @@ def main(argv=None):
                          "independently-queried shards with timeout/retry "
                          "failover — shard loss degrades to a certified-"
                          "partial answer (exact=False + coverage) instead "
-                         "of an outage (0 = off; full precision only)")
+                         "of an outage (0 = off; a warm start from a "
+                         "quantized sharded store serves tiered shards)")
     ap.add_argument("--quantization", default="none",
                     choices=("none", "bf16", "int8"),
                     help="with --serve: quantized resident tier for the "
                          "screen columns; survivors verify against the "
                          "full-precision mmap tier (DESIGN.md §9)")
+    ap.add_argument("--verify-prefetch", action="store_true",
+                    help="with --serve + --quantization: double-buffer the "
+                         "raw-tier verify fetch against device compute "
+                         "(DESIGN.md §13) — answers stay bit-identical")
     # --serve knobs
     ap.add_argument("--bench-requests", type=int, default=256,
                     help="with --serve: closed-loop load-generator request "

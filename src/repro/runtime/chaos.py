@@ -23,6 +23,12 @@ Injection sites (grep for ``chaos.maybe_fire`` / ``chaos.apply``):
   ``serve_dispatch`` one fire per formed batch in
                      ``serve/service.SearchService._dispatch``; key=None,
                      so the window counts *dispatches*
+  ``verify_fetch``   raw-tier verify row gather in
+                     ``index/store.gather_rows`` (both the synchronous
+                     path and the double-buffered prefetch path of
+                     DESIGN.md §13); key = fetch chunk label (truncate
+                     mode shears query rows *before* the shape check, so
+                     a torn mmap read fails loudly, never silently-wrong)
 
 Failure modes: ``raise`` (throws ``FaultInjected``, which the failover
 and retry layers treat as transient), ``slow`` (sleeps ``delay_s`` —

@@ -68,6 +68,9 @@ class ServeConfig:
     normalize_queries: bool = True
     backend: str = "auto"          # auto|xla|pallas (engine.resolve_backend)
     quantization: str = "none"     # none|bf16|int8 — tiered resident index
+    verify_prefetch: bool = False  # overlap raw-tier verify fetch with
+    #                                device compute (DESIGN.md §13);
+    #                                bit-identical answers
     max_batch: int = 32            # micro-batch ceiling (and top Q bucket)
     max_queue: int = 256           # admission-control bound
     max_wait_ms: float = 2.0       # coalescing window after first request
@@ -105,6 +108,7 @@ class ServeConfig:
         explicit ``overrides``)."""
         mapped = dict(backend=options.backend,
                       quantization=options.quantization,
+                      verify_prefetch=options.verify_prefetch,
                       trace=options.trace,
                       n_iters=options.n_iters,
                       capacity0=options.capacity,
@@ -328,7 +332,8 @@ class _QuantizedBackend:
         cap = self._cap or self.cfg.capacity0 or max(4 * k, 64)
         idx, answer, d2, overflow = quantized_mixed_query(
             self.tindex, qr, eps_j, knn_j, k,
-            options=SearchOptions(backend=self.cfg.backend, capacity=cap))
+            options=SearchOptions(backend=self.cfg.backend, capacity=cap,
+                                  verify_prefetch=self.cfg.verify_prefetch))
         self._cap = max(cap, self._cap or 0)
         if self.stats is not None:
             bad = int(np.asarray(overflow).sum())
@@ -338,6 +343,68 @@ class _QuantizedBackend:
                                        answer, d2)
                  if want_trace else None)
         return np.asarray(idx), np.asarray(answer), np.asarray(d2), trace
+
+
+class _DistQuantizedBackend:
+    """Distributed tiered serving (DESIGN.md §13): each mesh device holds
+    its own shard's quantized screen columns, the widened screen runs
+    shard-locally inside ``shard_map``, and only the surviving row ids
+    cross hosts — the raw-tier exact verify then gathers just those rows
+    from the host mmap tier (optionally double-buffered against the next
+    chunk's device compute via ``cfg.verify_prefetch``).
+
+    Capacity escalation lives inside
+    ``dist_search.distributed_quantized_mixed_query`` (escalates to the
+    per-shard row count, where compaction cannot overflow), so answers
+    carry an always-exact certificate and are set-identical to the
+    single-host tiered backend."""
+
+    def __init__(self, dti, mesh, cfg: ServeConfig, axis: str = "data"):
+        self.dti = dti
+        self.mesh = mesh
+        self.axis = axis
+        self.cfg = cfg
+        self._cap: Optional[int] = None
+        self.stats: Optional[StatsTracker] = None   # set by SearchService
+
+    @property
+    def n(self) -> int:
+        return int(self.dti.dev.n)
+
+    @property
+    def size(self) -> int:
+        return int(self.dti.n_valid)
+
+    def cost_estimate(self, Q: int, k: int) -> dict:
+        from ..core.cost_model import fused_pass_estimate
+
+        b_loc = (int(self.dti.dev.series.shape[0])
+                 // self.mesh.shape[self.axis])
+        return fused_pass_estimate(Q, b_loc, self.n, self.dti.dev.levels,
+                                   self.dti.dev.alphabet, k=int(k))
+
+    def trace_bytes(self, trace) -> dict:
+        from ..core.engine import tiered_trace_bytes
+
+        return tiered_trace_bytes(self.dti, trace)
+
+    def dispatch(self, q: np.ndarray, eps: np.ndarray, is_knn: np.ndarray,
+                 k: int, want_trace: bool = False):
+        from ..core.dist_search import distributed_quantized_mixed_query
+
+        cap = self._cap or self.cfg.capacity0 or max(4 * k, 64)
+        gidx, answer, d2, overflow = distributed_quantized_mixed_query(
+            self.dti, q, eps, is_knn, k, self.mesh, axis=self.axis,
+            options=SearchOptions(
+                backend=self.cfg.backend, capacity=cap,
+                normalize_queries=self.cfg.normalize_queries,
+                verify_prefetch=self.cfg.verify_prefetch))
+        self._cap = max(cap, self._cap or 0)
+        if self.stats is not None:
+            bad = int(np.asarray(overflow).sum())
+            total = int(np.asarray(overflow).size)
+            self.stats.on_certificates(total - bad, total)
+        return np.asarray(gidx), np.asarray(answer), np.asarray(d2), None
 
 
 class _ShardedBackend:
@@ -472,8 +539,10 @@ class _FailoverBackend:
 
     def cost_estimate(self, Q: int, k: int) -> dict:
         from ..core.cost_model import fused_pass_estimate
+        from ..core.dist_search import _screen_of
 
-        b_max = max(int(s.series.shape[0]) for s in self.engine.shards)
+        b_max = max(int(_screen_of(s).series.shape[0])
+                    for s in self.engine.shards)
         return fused_pass_estimate(Q, b_max, self.n, self.engine.levels,
                                    self.engine.alphabet, k=int(k))
 
@@ -551,10 +620,19 @@ class SearchService:
         if mesh is not None:
             from ..core.dist_search import distributed_build, pad_database
             if cfg.quantization != "none":
-                raise ValueError(
-                    "quantized serving is single-host (the tiered verify "
-                    "gathers from the host mmap tier) — drop mesh= or set "
-                    "quantization='none'")
+                from ..core.dist_search import distributed_tiered_index
+                from ..core.engine import TieredIndex
+                from ..core.fastsax import FastSAXConfig, build_index
+
+                host = build_index(
+                    np.asarray(series),
+                    FastSAXConfig(n_segments=tuple(cfg.levels),
+                                  alphabet=cfg.alphabet,
+                                  stack=tuple(cfg.stack)),
+                    normalize=normalize)
+                tiered = TieredIndex.from_host(host, cfg.quantization)
+                dti = distributed_tiered_index(tiered, mesh)
+                return cls(_DistQuantizedBackend(dti, mesh, cfg), cfg)
             padded, n_valid = pad_database(np.asarray(series),
                                            mesh.shape["data"])
             index = distributed_build(padded, tuple(cfg.levels), cfg.alphabet,
@@ -600,9 +678,11 @@ class SearchService:
         * ``MutableIndex`` root (``CURRENT`` present) — live ingest enabled;
         * sharded store — mapped onto ``mesh`` (default: a 1-D mesh over
           all devices; the stored shard count must match);
-        * tiered sharded store (``store_sharded_quantized``) — always
-          served through the quantized backend (it holds no
-          full-precision screen columns);
+        * tiered sharded store (``store_sharded_quantized``) — served
+          quantized (it holds no full-precision screen columns): through
+          ``FailoverShards`` when ``cfg.failover_shards`` is set, the
+          distributed quantized screen when a ``mesh`` is passed
+          (DESIGN.md §13), and the single-host tiered backend otherwise;
         * plain single store — mmap-opened, uploaded once.
 
         With ``cfg.quantization != "none"`` the single-host cases serve
@@ -630,6 +710,18 @@ class SearchService:
                        mutable=mi)
         manifest = _store.read_manifest(path)
         if manifest.get("kind") == _sharded._TIERED_KIND:
+            if cfg.failover_shards:
+                from ..core.dist_search import FailoverShards
+                engine = FailoverShards.from_store(
+                    path, timeout_s=cfg.shard_timeout_s,
+                    retries=cfg.shard_retries,
+                    backoff_s=cfg.shard_backoff_s, n_iters=cfg.n_iters,
+                    normalize_queries=cfg.normalize_queries)
+                return cls(_FailoverBackend(engine, cfg), cfg)
+            if mesh is not None:
+                from ..core.dist_search import load_sharded_tiered
+                dti = load_sharded_tiered(path, mesh)
+                return cls(_DistQuantizedBackend(dti, mesh, cfg), cfg)
             tiered, _n_valid = _sharded.load_sharded_quantized(path)
             return cls(_QuantizedBackend(tiered, cfg), cfg)
         if manifest.get("kind") == _sharded._KIND:

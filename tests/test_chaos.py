@@ -665,3 +665,124 @@ def test_service_drain_sheds_and_reports_health(db):
     assert not ready and detail["draining"]
     shed = svc.submit_knn(db[3], 1)
     assert shed.status in (REJECTED_SHED, FAILED)
+
+
+# ---------------------------------------------------------------------------
+# Raw-tier verify fetch faults (DESIGN.md §13): loud or certified-partial,
+# never silently wrong.
+# ---------------------------------------------------------------------------
+
+def _tiered(db, mode="int8"):
+    from repro.core.engine import TieredIndex
+    from repro.core.fastsax import FastSAXConfig, build_index
+
+    host = build_index(db, FastSAXConfig(n_segments=LEVELS, alphabet=ALPHA),
+                       normalize=False)
+    return TieredIndex.from_host(host, mode)
+
+
+def test_verify_fetch_truncation_is_loud(db, queries):
+    """A sheared mmap read of the raw verify tier must trip the shape
+    validation in ``store.gather_rows`` — on the synchronous path AND
+    inside the double-buffered prefetch worker (the future re-raises)."""
+    import jax.numpy as jnp
+
+    from repro.core.engine import quantized_range_query
+    from repro.core.options import SearchOptions
+
+    tix = _tiered(db)
+    qr = represent_queries(jnp.asarray(queries), LEVELS, ALPHA,
+                           normalize=False, stack=tix.dev.stack)
+    for opts in (SearchOptions(), SearchOptions(verify_prefetch=True)):
+        plan = chaos.FaultPlan(seed=5, specs=[
+            chaos.FaultSpec(site="verify_fetch", mode="truncate",
+                            frac=0.5)])
+        with chaos.injected(plan):
+            with pytest.raises(IOError, match="truncated raw-tier read"):
+                quantized_range_query(tix, qr, 2.0, options=opts)
+    chaos.uninstall()
+    # No plan: the same index answers clean (both fetch paths).
+    base = quantized_range_query(tix, qr, 2.0, options=SearchOptions())
+    pre = quantized_range_query(
+        tix, qr, 2.0, options=SearchOptions(verify_prefetch=True))
+    for x, y in zip(base, pre):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_verify_fetch_slow_still_exact(db, queries):
+    """An injected-latency verify fetch only delays — answers stay
+    bit-identical to the fault-free run."""
+    import jax.numpy as jnp
+
+    from repro.core.engine import quantized_range_query
+    from repro.core.options import SearchOptions
+
+    tix = _tiered(db, "bf16")
+    qr = represent_queries(jnp.asarray(queries), LEVELS, ALPHA,
+                           normalize=False, stack=tix.dev.stack)
+    base = quantized_range_query(tix, qr, 2.0, options=SearchOptions())
+    plan = chaos.FaultPlan(seed=5, specs=[
+        chaos.FaultSpec(site="verify_fetch", mode="slow", delay_s=0.02)])
+    with chaos.injected(plan):
+        got = quantized_range_query(
+            tix, qr, 2.0, options=SearchOptions(verify_prefetch=True))
+    for x, y in zip(base, got):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_failover_verify_fault_degrades_with_certificate(db, queries):
+    """A verify-fetch fault inside one tiered shard marks that shard
+    failed: the dispatch returns a certified-partial answer whose
+    surviving rows match the f64 oracle — never a silently-wrong set."""
+    from repro.core.dist_search import FailoverShards
+
+    parts = np.array_split(db, 4)
+    offsets = list(np.cumsum([0] + [p.shape[0] for p in parts[:-1]]))
+    shards = [_tiered(p) for p in parts]
+    eng = FailoverShards(shards, offsets=offsets, n_valid=B, retries=0,
+                         backoff_s=0.001, normalize_queries=False)
+
+    (gidx, answer, d2, _o, cov), is_knn = _query(eng, queries)
+    assert cov.exact and cov.rows_ok == B, "healthy tiered fleet is exact"
+    r_or, k_or = _oracle(db, queries, np.arange(B))
+    got = _sets(gidx, answer, d2, is_knn)
+    assert got[:2] == r_or[:2] and got[2] == k_or[2]
+
+    plan = chaos.FaultPlan(seed=5, specs=[
+        chaos.FaultSpec(site="verify_fetch", start=0, stop=1)])
+    with chaos.injected(plan):
+        (gidx, answer, d2, _o, cov), is_knn = _query(eng, queries)
+    eng.close()
+    assert not cov.exact and cov.shards_ok == 3, \
+        "one shard lost -> certified partial"
+    # Covered rows answer exactly: every returned range id is a true
+    # oracle answer over the full database; nothing invented.
+    for i in range(gidx.shape[0]):
+        if not is_knn[i]:
+            ids = set(int(g) for g in np.asarray(gidx[i])[
+                np.asarray(answer[i])] if g >= 0)
+            assert ids <= r_or[i], "degraded range answers invented ids"
+
+
+def test_failover_warm_start_from_quantized_store(tmp_path, db, queries):
+    """Satellite coverage (PR 9 x PR 6): ``FailoverShards.from_store`` on
+    a tiered sharded store serves quantized tiered shards whose healthy
+    answers equal the f64 oracle with an exact certificate."""
+    from repro.core.dist_search import (FailoverShards,
+                                        distributed_tiered_index,
+                                        make_data_mesh,
+                                        store_sharded_tiered)
+
+    mesh = make_data_mesh()
+    dti = distributed_tiered_index(_tiered(db), mesh)
+    path = tmp_path / "tier"
+    store_sharded_tiered(dti, path)
+    eng = FailoverShards.from_store(path, retries=1, backoff_s=0.001,
+                                    normalize_queries=False)
+    assert all(hasattr(s, "dev") for s in eng.shards), "tiered shards"
+    (gidx, answer, d2, _o, cov), is_knn = _query(eng, queries)
+    eng.close()
+    assert cov.exact and cov.rows_ok == B
+    r_or, k_or = _oracle(db, queries, np.arange(B))
+    got = _sets(gidx, answer, d2, is_knn)
+    assert got[:2] == r_or[:2] and got[2] == k_or[2]
